@@ -1,0 +1,142 @@
+//! End-to-end driver (DESIGN.md §3 E2E): the full three-layer system on
+//! a real workload — PJRT numeric-Δ artifacts on the hot path, real
+//! backends, all three policies — reporting the paper's headline
+//! metric (p95 latency, adaptive vs baselines) plus correctness checks
+//! against generator ground truth. Results are recorded in
+//! EXPERIMENTS.md.
+//!
+//!     make artifacts && cargo run --release --example e2e_pipeline
+//!
+//! Run with SDIFF_E2E_ROWS=n to change the workload size.
+
+use std::sync::Arc;
+
+use smartdiff_sched::config::{DeltaPath, PolicyKind, SchedulerConfig};
+use smartdiff_sched::data::generator::{generate_pair, GenSpec};
+use smartdiff_sched::data::io::InMemorySource;
+use smartdiff_sched::data::tpch::{generate_output_pair, TpchQuery};
+use smartdiff_sched::sched::scheduler::{run_job, JobResult};
+
+fn base_cfg() -> SchedulerConfig {
+    let mut cfg = SchedulerConfig::default();
+    cfg.caps.cpu_cap = std::thread::available_parallelism()
+        .map(|n| n.get().max(2))
+        .unwrap_or(2);
+    cfg.caps.mem_cap_bytes = 8_000_000_000;
+    cfg.policy.b_min = 2_000;
+    cfg.engine.atol = 0.0;
+    cfg.engine.delta_path =
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            DeltaPath::Pjrt
+        } else {
+            eprintln!("WARNING: artifacts/ missing, falling back to native Δ");
+            DeltaPath::Native
+        };
+    cfg
+}
+
+fn run_policy(
+    name: &str,
+    kind: PolicyKind,
+    a: &smartdiff_sched::data::table::Table,
+    b: &smartdiff_sched::data::table::Table,
+) -> JobResult {
+    let mut cfg = base_cfg();
+    cfg.policy_kind = kind;
+    cfg.telemetry_path =
+        Some(format!("/tmp/smartdiff_e2e_{}.jsonl", name.replace(' ', "_")));
+    let t0 = std::time::Instant::now();
+    let r = run_job(
+        &cfg,
+        Arc::new(InMemorySource::new(a.clone())),
+        Arc::new(InMemorySource::new(b.clone())),
+    )
+    .expect("job");
+    println!(
+        "  {name:<10} p95={:>7.1} ms  p50={:>7.1} ms  thr={:>9.0} rows/s  \
+         peak={:>6.1} MB  batches={:<4} reconfigs={:<3} wall={:.2}s",
+        r.stats.p95_latency * 1e3,
+        r.stats.p50_latency * 1e3,
+        r.stats.throughput_rows_per_s,
+        r.stats.peak_rss_bytes as f64 / 1e6,
+        r.stats.batches,
+        r.stats.reconfigs,
+        t0.elapsed().as_secs_f64(),
+    );
+    assert_eq!(r.stats.ooms, 0);
+    r
+}
+
+fn main() {
+    let rows: usize = std::env::var("SDIFF_E2E_ROWS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200_000);
+
+    // ---- workload 1: synthetic mixed-type pair (paper §V synthetic) ----
+    println!("== workload 1: synthetic mixed-type, {rows} rows/side ==");
+    let (a, b, truth) = generate_pair(&GenSpec {
+        rows,
+        extra_cols: 7,
+        seed: 2026,
+        ..GenSpec::default()
+    });
+
+    let adaptive = run_policy("adaptive", PolicyKind::Adaptive, &a, &b);
+    let heuristic = run_policy("heuristic", PolicyKind::Heuristic, &a, &b);
+    let fixed = run_policy(
+        "fixed",
+        PolicyKind::Fixed { b: rows / 8, k: 2 },
+        &a,
+        &b,
+    );
+
+    // Correctness: every policy finds exactly the generator's truth.
+    for r in [&adaptive, &heuristic, &fixed] {
+        assert_eq!(r.report.rows.changed_rows as usize, truth.changed_rows);
+        assert_eq!(r.report.rows.added as usize, truth.added);
+        assert_eq!(r.report.rows.removed as usize, truth.removed);
+    }
+    assert!(adaptive.report.same_diff(&heuristic.report));
+    assert!(adaptive.report.same_diff(&fixed.report));
+    println!(
+        "  diff identical across policies; truth recovered exactly \
+         ({} changed / {} added / {} removed)",
+        truth.changed_rows, truth.added, truth.removed
+    );
+    let headline_h = 100.0 * (adaptive.stats.p95_latency / heuristic.stats.p95_latency - 1.0);
+    let headline_f = 100.0 * (adaptive.stats.p95_latency / fixed.stats.p95_latency - 1.0);
+    println!(
+        "  p95 delta on THIS machine: adaptive vs heuristic {headline_h:+.0}%, \
+         vs fixed {headline_f:+.0}%"
+    );
+    println!(
+        "  note: this container exposes {} core(s); the paper's headline \
+         (−23–28% vs heur, −35–40% vs fixed) is reproduced at 32-core \
+         scale by `smartdiff-sched reproduce` (see EXPERIMENTS.md)",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+
+    // ---- workload 2: TPC-H Q3 query outputs (paper §V public data) ----
+    let q3_rows = rows / 2;
+    println!("\n== workload 2: TPC-H Q3 outputs, {q3_rows} rows/side ==");
+    let (qa, qb, qtruth) =
+        generate_output_pair(TpchQuery::Q3, q3_rows, 0.05, 0.02, 7);
+    let r = run_policy("adaptive", PolicyKind::Adaptive, &qa, &qb);
+    assert_eq!(r.report.rows.changed_rows as usize, qtruth.changed_rows);
+    println!(
+        "  Q3 drift detected exactly: {} changed aggregates, {} added, {} \
+         removed result rows",
+        qtruth.changed_rows, qtruth.added, qtruth.removed
+    );
+
+    // ---- workload 3: TPC-H Q10 (wide, string-heavy) ----
+    let q10_rows = rows / 4;
+    println!("\n== workload 3: TPC-H Q10 outputs, {q10_rows} rows/side ==");
+    let (wa, wb, wtruth) =
+        generate_output_pair(TpchQuery::Q10, q10_rows, 0.03, 0.02, 11);
+    let r = run_policy("adaptive", PolicyKind::Adaptive, &wa, &wb);
+    assert_eq!(r.report.rows.changed_rows as usize, wtruth.changed_rows);
+
+    println!("\ne2e_pipeline OK — all layers composed (telemetry in /tmp/smartdiff_e2e_*.jsonl)");
+}

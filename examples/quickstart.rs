@@ -1,0 +1,108 @@
+//! Quickstart: diff two small tables with the adaptive scheduler.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Generates a synthetic pair (B = A + perturbations), runs the full
+//! pipeline — pre-flight profile → working-set gate → adaptive (b,k)
+//! control → Δ → merge — and prints the diff report plus scheduler
+//! stats. Uses the PJRT numeric-Δ path when `artifacts/` is built,
+//! falling back to the native path otherwise.
+
+use std::sync::Arc;
+
+use smartdiff_sched::config::{DeltaPath, SchedulerConfig};
+use smartdiff_sched::data::generator::{generate_pair, GenSpec};
+use smartdiff_sched::data::io::InMemorySource;
+use smartdiff_sched::sched::scheduler::run_job;
+
+fn main() {
+    // 1. Make a workload: 50k rows, mixed types, ~5% changed rows.
+    let spec = GenSpec {
+        rows: 50_000,
+        extra_cols: 7,
+        change_rate: 0.05,
+        add_rate: 0.01,
+        remove_rate: 0.01,
+        seed: 42,
+        ..GenSpec::default()
+    };
+    let (a, b, truth) = generate_pair(&spec);
+    println!(
+        "generated A={} rows, B={} rows (truth: {} changed / {} added / {} removed)",
+        a.nrows(),
+        b.nrows(),
+        truth.changed_rows,
+        truth.added,
+        truth.removed
+    );
+
+    // 2. Configure the scheduler. Caps are per-job budget knobs; the
+    //    defaults are the paper's policy (κ=0.7, η=0.9, γ=0.6, τ=2, m=2).
+    let mut cfg = SchedulerConfig::default();
+    cfg.caps.cpu_cap = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(2);
+    cfg.caps.mem_cap_bytes = 4_000_000_000; // 4 GB job budget
+    cfg.policy.b_min = 1_000;
+    cfg.engine.delta_path =
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            DeltaPath::Pjrt
+        } else {
+            eprintln!("artifacts/ not built; using native Δ path");
+            DeltaPath::Native
+        };
+    cfg.engine.atol = 1e-9; // tolerate float noise below 1e-9
+
+    // 3. Run.
+    let result = run_job(
+        &cfg,
+        Arc::new(InMemorySource::new(a)),
+        Arc::new(InMemorySource::new(b)),
+    )
+    .expect("diff job");
+
+    // 4. Report.
+    println!("\n== diff report ==\n{}", result.report.summary());
+    println!("\nper-column changes:");
+    for (name, agg) in &result.report.columns {
+        if agg.changed > 0 {
+            println!(
+                "  {name}: {} changed (max |Δ| = {:.4})",
+                agg.changed, agg.max_abs_delta
+            );
+        }
+    }
+    println!(
+        "\nfirst diff keys: {:?}",
+        &result.report.diff_keys[..result.report.diff_keys.len().min(10)]
+    );
+
+    let s = &result.stats;
+    println!("\n== scheduler ==");
+    if let Some(g) = &s.gate {
+        println!(
+            "gate: ws={:.2} MB vs threshold {:.2} MB -> {}",
+            g.ws_bytes / 1e6,
+            g.threshold_bytes / 1e6,
+            s.backend
+        );
+    }
+    println!(
+        "batches={} p50={:.1} ms p95={:.1} ms peak_rss={:.1} MB \
+         throughput={:.0} rows/s reconfigs={} final (b,k)=({}, {})",
+        s.batches,
+        s.p50_latency * 1e3,
+        s.p95_latency * 1e3,
+        s.peak_rss_bytes as f64 / 1e6,
+        s.throughput_rows_per_s,
+        s.reconfigs,
+        s.final_b,
+        s.final_k
+    );
+    assert_eq!(s.ooms, 0);
+    assert_eq!(
+        result.report.rows.changed_rows as usize, truth.changed_rows,
+        "engine must find exactly the generator's changed rows"
+    );
+    println!("\nquickstart OK");
+}

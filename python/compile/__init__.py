@@ -1,0 +1,9 @@
+"""Build-time compile package (L1 kernels + L2 graphs + AOT lowering).
+
+f64 artifacts require x64 mode; enable it before any jax import site in
+this package is used (jax reads the flag at array-creation time).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,115 @@
+"""AOT compile path: lower the L2 graphs to HLO text artifacts.
+
+Run once at build time (``make artifacts``); the rust runtime
+(``rust/src/runtime/``) loads the text with
+``HloModuleProto::from_text_file``, compiles on the PJRT CPU client, and
+executes from the L3 hot path. Python never runs at request time.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/gen_hlo.py).
+
+Artifacts (one per shape bucket):
+    diff_r{R}_c{C}_{dtype}.hlo.txt
+    colstats_r{R}_c{C}_{dtype}.hlo.txt
+plus ``manifest.json`` describing every artifact (shapes, dtypes, arg
+order) — the runtime's only source of truth for bucket selection.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax import numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Shape buckets. Batch sizes the controller explores are padded up to the
+# nearest (rows, cols) bucket; cols beyond 32 are processed in column
+# chunks by the rust runtime. Row buckets are multiples of the kernel's
+# TILE_R=256.
+ROW_BUCKETS = (1024, 4096, 16384, 65536)
+COL_BUCKETS = (8, 32)
+DTYPES = {"f32": jnp.float32, "f64": jnp.float64}
+
+DIFF_OUTPUTS = ("verdicts", "counts", "col_changed", "col_maxabs",
+                "changed_rows")
+COLSTATS_OUTPUTS = ("n", "sum", "min", "max", "mean")
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_diff(rows: int, cols: int, dtype) -> str:
+    # tile_r=rows: single-tile lowering for CPU-PJRT execution (the
+    # 256-row tiling is the TPU spec; see model.make_diff_fn docstring).
+    jitted, specs = model.make_diff_fn(rows, cols, dtype, tile_r=rows)
+    return to_hlo_text(jitted.lower(*specs))
+
+
+def lower_colstats(rows: int, cols: int, dtype) -> str:
+    jitted, specs = model.make_colstats_fn(rows, cols, dtype, tile_r=rows)
+    return to_hlo_text(jitted.lower(*specs))
+
+
+def build_all(out_dir: str, row_buckets=ROW_BUCKETS, col_buckets=COL_BUCKETS,
+              dtypes=("f32", "f64"), verbose=True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"version": 1, "tile_r": 256, "artifacts": []}
+    for dt_name in dtypes:
+        dtype = DTYPES[dt_name]
+        for rows in row_buckets:
+            for cols in col_buckets:
+                for kind, lower, outputs in (
+                    ("diff", lower_diff, DIFF_OUTPUTS),
+                    ("colstats", lower_colstats, COLSTATS_OUTPUTS),
+                ):
+                    name = f"{kind}_r{rows}_c{cols}_{dt_name}"
+                    path = f"{name}.hlo.txt"
+                    text = lower(rows, cols, dtype)
+                    with open(os.path.join(out_dir, path), "w") as f:
+                        f.write(text)
+                    manifest["artifacts"].append({
+                        "name": name,
+                        "kind": kind,
+                        "path": path,
+                        "rows": rows,
+                        "cols": cols,
+                        "dtype": dt_name,
+                        "outputs": list(outputs),
+                        "hlo_bytes": len(text),
+                    })
+                    if verbose:
+                        print(f"  {name}: {len(text)} chars")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if verbose:
+        print(f"wrote {len(manifest['artifacts'])} artifacts + manifest "
+              f"to {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--rows", type=int, nargs="*", default=list(ROW_BUCKETS))
+    ap.add_argument("--cols", type=int, nargs="*", default=list(COL_BUCKETS))
+    ap.add_argument("--dtypes", nargs="*", default=["f32", "f64"])
+    args = ap.parse_args()
+    build_all(args.out_dir, tuple(args.rows), tuple(args.cols),
+              tuple(args.dtypes))
+
+
+if __name__ == "__main__":
+    main()

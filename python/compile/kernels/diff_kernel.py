@@ -1,0 +1,247 @@
+"""L1 Pallas kernels: the SmartDiff numeric cell-wise Δ hot-spot.
+
+Two kernels, both tiled over rows with a fixed ``TILE_R`` block so the
+per-step working set fits comfortably in VMEM (see ``vmem_footprint``):
+
+* ``diff_kernel``   — tolerance compare + verdict encode + batch/count
+                      reduction. This is Δ for numeric columns.
+* ``colstats_kernel`` — per-column (n, sum, min, max) masked reduction,
+                      used for the merge step's distribution summaries
+                      and by the pre-flight profiler.
+
+Verdict codes (shared with ``ref.py`` and the rust engine,
+``rust/src/engine/verdict.rs`` — keep in sync):
+
+    0 = EQUAL     aligned row, cell compares equal (incl. null==null,
+                  NaN==NaN, |a-b| <= atol + rtol*|b|)
+    1 = CHANGED   aligned row, cell differs (incl. null vs value)
+    2 = ADDED     row present only on the B side
+    3 = REMOVED   row present only on the A side
+    4 = ABSENT    padding slot (row present on neither side); never
+                  counted toward diff outcomes
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's engine
+is CPU-threaded; there is no GPU kernel to port. We give the dense,
+branch-free part of Δ an accelerator-shaped formulation: elementwise
+(VPU) compare over (TILE_R, C) VMEM tiles, with the count reduction as a
+grid-accumulated partial sum (the revisiting-output pattern). Kernels are
+lowered with ``interpret=True`` — the CPU PJRT client cannot execute
+Mosaic custom-calls; real-TPU numbers are estimated from the VMEM
+footprint + roofline in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile size. 256 rows x 32 cols x 8B = 64 KiB per operand tile; the
+# full per-step VMEM set stays < 1 MiB (see vmem_footprint), leaving the
+# TPU pipeline room to double-buffer HBM->VMEM copies.
+TILE_R = 256
+
+# Verdict codes (must match rust/src/engine/verdict.rs).
+EQUAL, CHANGED, ADDED, REMOVED, ABSENT = 0, 1, 2, 3, 4
+N_VERDICTS = 5
+
+
+def _diff_tile(a, b, na, nb, ra, rb, atol, rtol):
+    """Verdict codes for one (tr, C) tile. Shared by kernel + reference.
+
+    a, b      : (tr, C) values (zeros where null/absent)
+    na, nb    : (tr, C) cell presence masks, 1.0 = non-null
+    ra, rb    : (tr,)  row presence masks, 1.0 = row exists on that side
+    atol/rtol : (C,)   per-column tolerances
+    """
+    ra2 = ra[:, None] > 0.5
+    rb2 = rb[:, None] > 0.5
+    na2 = jnp.logical_and(na > 0.5, ra2)
+    nb2 = jnp.logical_and(nb > 0.5, rb2)
+
+    both_null = jnp.logical_and(~na2, ~nb2)
+    one_null = jnp.logical_xor(na2, nb2)
+
+    nan_eq = jnp.logical_and(jnp.isnan(a), jnp.isnan(b))
+    tol = atol[None, :] + rtol[None, :] * jnp.abs(b)
+    # |a-b| <= tol, with NaN==NaN and exact equality (covers inf==inf,
+    # where a-b is NaN) forced equal. jnp comparisons with NaN are False,
+    # so both must be OR'd in explicitly.
+    num_eq = jnp.logical_or(jnp.abs(a - b) <= tol,
+                            jnp.logical_or(nan_eq, a == b))
+
+    aligned_eq = jnp.logical_or(both_null, jnp.logical_and(
+        jnp.logical_and(na2, nb2), num_eq))
+    aligned = jnp.logical_and(ra2, rb2)
+
+    v = jnp.where(aligned_eq, EQUAL, CHANGED).astype(jnp.int32)
+    # one_null within an aligned row is CHANGED — already covered since
+    # aligned_eq is False there; keep the expression for clarity.
+    del one_null
+    v = jnp.where(jnp.logical_and(ra2, ~rb2), REMOVED, v)
+    v = jnp.where(jnp.logical_and(~ra2, rb2), ADDED, v)
+    v = jnp.where(jnp.logical_and(~ra2, ~rb2), ABSENT, v)
+    v = jnp.where(aligned, jnp.where(aligned_eq, EQUAL, CHANGED), v)
+    return v
+
+
+def _diff_kernel_body(a_ref, b_ref, na_ref, nb_ref, ra_ref, rb_ref,
+                      atol_ref, rtol_ref,
+                      v_ref, counts_ref, colchg_ref, colmax_ref):
+    """Pallas body: one grid step processes a (TILE_R, C) row tile."""
+    i = pl.program_id(0)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    v = _diff_tile(a, b, na_ref[...], nb_ref[...], ra_ref[...], rb_ref[...],
+                   atol_ref[...], rtol_ref[...])
+    v_ref[...] = v
+
+    # Tile-local verdict histogram -> accumulated across the grid into the
+    # same (N_VERDICTS,) output block (revisiting-output pattern). Five
+    # masked sums instead of a materialized (R, C, 5) one-hot — the
+    # one-hot costs ~5x the tile's cells and dominated the CPU profile
+    # (EXPERIMENTS.md §Perf).
+    tile_counts = jnp.stack(
+        [jnp.sum(v == k, dtype=jnp.int32) for k in range(N_VERDICTS)])
+    tile_colchg = jnp.sum((v == CHANGED).astype(jnp.int32), axis=0)
+
+    # Max |a-b| over *numerically compared* cells (both present, non-NaN),
+    # per column; 0 elsewhere so padding never contributes.
+    cmp = jnp.logical_and(na_ref[...] > 0.5, nb_ref[...] > 0.5)
+    cmp = jnp.logical_and(cmp, jnp.logical_and(ra_ref[...][:, None] > 0.5,
+                                               rb_ref[...][:, None] > 0.5))
+    absd = jnp.where(cmp, jnp.abs(a - b), 0.0)
+    absd = jnp.where(jnp.isnan(absd), 0.0, absd)
+    tile_colmax = jnp.max(absd, axis=0)
+
+    @pl.when(i == 0)
+    def _init():
+        counts_ref[...] = tile_counts
+        colchg_ref[...] = tile_colchg
+        colmax_ref[...] = tile_colmax
+
+    @pl.when(i != 0)
+    def _acc():
+        counts_ref[...] += tile_counts
+        colchg_ref[...] += tile_colchg
+        colmax_ref[...] = jnp.maximum(colmax_ref[...], tile_colmax)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _noop(x, interpret=True):  # pragma: no cover - keep jit cache warm
+    return x
+
+
+def diff_batch(a, b, na, nb, ra, rb, atol, rtol, *, interpret=True,
+               tile_r=TILE_R):
+    """Cell-wise Δ over one batch of aligned rows.
+
+    Shapes: a,b,na,nb: (R, C); ra,rb: (R,); atol,rtol: (C,).
+    R must be a multiple of ``tile_r`` (runtime buckets guarantee this;
+    pad with ra=rb=0 rows, which become ABSENT and are never counted).
+
+    Returns (verdicts i32 (R,C), counts i32 (5,), col_changed i32 (C,),
+    col_maxabs dtype (C,)).
+    """
+    r, c = a.shape
+    if r % tile_r != 0:
+        raise ValueError(f"rows {r} not a multiple of tile {tile_r}")
+    grid = (r // tile_r,)
+    dtype = a.dtype
+
+    row_spec = pl.BlockSpec((tile_r, c), lambda i: (i, 0))
+    vec_spec = pl.BlockSpec((tile_r,), lambda i: (i,))
+    col_spec = pl.BlockSpec((c,), lambda i: (0,))
+    cnt_spec = pl.BlockSpec((N_VERDICTS,), lambda i: (0,))
+
+    return pl.pallas_call(
+        _diff_kernel_body,
+        grid=grid,
+        in_specs=[row_spec, row_spec, row_spec, row_spec,
+                  vec_spec, vec_spec, col_spec, col_spec],
+        out_specs=[row_spec, cnt_spec, col_spec, col_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, c), jnp.int32),
+            jax.ShapeDtypeStruct((N_VERDICTS,), jnp.int32),
+            jax.ShapeDtypeStruct((c,), jnp.int32),
+            jax.ShapeDtypeStruct((c,), dtype),
+        ],
+        interpret=interpret,
+    )(a, b, na, nb, ra, rb, atol, rtol)
+
+
+def _colstats_kernel_body(x_ref, m_ref, n_ref, sum_ref, min_ref, max_ref):
+    """Masked per-column stats for one row tile, accumulated across grid."""
+    i = pl.program_id(0)
+    x = x_ref[...]
+    m = m_ref[...] > 0.5
+    big = jnp.asarray(jnp.finfo(x.dtype).max, x.dtype)
+
+    tile_n = jnp.sum(m, axis=0, dtype=jnp.int32)
+    xz = jnp.where(m, x, 0.0)
+    xz = jnp.where(jnp.isnan(xz), 0.0, xz)
+    tile_sum = jnp.sum(xz, axis=0)
+    tile_min = jnp.min(jnp.where(m, x, big), axis=0)
+    tile_max = jnp.max(jnp.where(m, x, -big), axis=0)
+
+    @pl.when(i == 0)
+    def _init():
+        n_ref[...] = tile_n
+        sum_ref[...] = tile_sum
+        min_ref[...] = tile_min
+        max_ref[...] = tile_max
+
+    @pl.when(i != 0)
+    def _acc():
+        n_ref[...] += tile_n
+        sum_ref[...] += tile_sum
+        min_ref[...] = jnp.minimum(min_ref[...], tile_min)
+        max_ref[...] = jnp.maximum(max_ref[...], tile_max)
+
+
+def colstats_batch(x, mask, *, interpret=True, tile_r=TILE_R):
+    """Masked per-column stats: returns (n i32 (C,), sum, min, max (C,)).
+
+    Columns with zero present cells report min=+dtype.max, max=-dtype.max
+    (callers check n first — the rust merge does).
+    """
+    r, c = x.shape
+    if r % tile_r != 0:
+        raise ValueError(f"rows {r} not a multiple of tile {tile_r}")
+    grid = (r // tile_r,)
+    dtype = x.dtype
+
+    row_spec = pl.BlockSpec((tile_r, c), lambda i: (i, 0))
+    col_spec = pl.BlockSpec((c,), lambda i: (0,))
+
+    return pl.pallas_call(
+        _colstats_kernel_body,
+        grid=grid,
+        in_specs=[row_spec, row_spec],
+        out_specs=[col_spec, col_spec, col_spec, col_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((c,), jnp.int32),
+            jax.ShapeDtypeStruct((c,), dtype),
+            jax.ShapeDtypeStruct((c,), dtype),
+            jax.ShapeDtypeStruct((c,), dtype),
+        ],
+        interpret=interpret,
+    )(x, mask)
+
+
+def vmem_footprint(cols: int, dtype_bytes: int, tile_r: int = TILE_R) -> int:
+    """Estimated per-grid-step VMEM bytes for diff_batch (single-buffered).
+
+    Used by DESIGN.md / EXPERIMENTS.md §Perf to reason about the TPU
+    schedule: double-buffering doubles the input-tile share; the budget
+    is ~16 MiB/core on current TPUs.
+    """
+    in_tiles = 4 * tile_r * cols * dtype_bytes          # a, b, na, nb
+    row_vecs = 2 * tile_r * dtype_bytes                 # ra, rb
+    col_vecs = 2 * cols * dtype_bytes                   # atol, rtol
+    out_v = tile_r * cols * 4                           # verdict i32 tile
+    out_small = N_VERDICTS * 4 + cols * 4 + cols * dtype_bytes
+    return in_tiles + row_vecs + col_vecs + out_v + out_small

@@ -1,0 +1,69 @@
+"""Pure-numpy correctness oracles for the L1 kernels.
+
+These are the ground truth the Pallas kernels (and, transitively, the
+rust PJRT path) are validated against. Keep the semantics in lockstep
+with ``diff_kernel.py`` and ``rust/src/engine/verdict.rs``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+EQUAL, CHANGED, ADDED, REMOVED, ABSENT = 0, 1, 2, 3, 4
+N_VERDICTS = 5
+
+
+def diff_ref(a, b, na, nb, ra, rb, atol, rtol):
+    """Reference cell-wise Δ. Same signature/returns as diff_batch.
+
+    All inputs numpy arrays; a,b,na,nb (R,C); ra,rb (R,); atol,rtol (C,).
+    Returns (verdicts i32 (R,C), counts i32 (5,), col_changed i32 (C,),
+    col_maxabs (C,)).
+    """
+    a = np.asarray(a)
+    b = np.asarray(b)
+    r, c = a.shape
+    ra2 = np.asarray(ra)[:, None] > 0.5
+    rb2 = np.asarray(rb)[:, None] > 0.5
+    na2 = np.logical_and(np.asarray(na) > 0.5, ra2)
+    nb2 = np.logical_and(np.asarray(nb) > 0.5, rb2)
+
+    both_null = ~na2 & ~nb2
+    nan_eq = np.isnan(a) & np.isnan(b)
+    with np.errstate(invalid="ignore"):
+        tol = np.asarray(atol)[None, :] + np.asarray(rtol)[None, :] * np.abs(b)
+        num_eq = (np.abs(a - b) <= tol) | nan_eq | (a == b)
+
+    aligned = ra2 & rb2
+    aligned_eq = both_null | (na2 & nb2 & num_eq)
+
+    v = np.full((r, c), CHANGED, dtype=np.int32)
+    v = np.where(aligned & aligned_eq, EQUAL, v)
+    v = np.where(ra2 & ~rb2, REMOVED, v)
+    v = np.where(~ra2 & rb2, ADDED, v)
+    v = np.where(~ra2 & ~rb2, ABSENT, v)
+    v = v.astype(np.int32)
+
+    counts = np.bincount(v.ravel(), minlength=N_VERDICTS).astype(np.int32)
+    col_changed = np.sum(v == CHANGED, axis=0).astype(np.int32)
+
+    cmp = na2 & nb2 & aligned
+    with np.errstate(invalid="ignore"):
+        absd = np.where(cmp, np.abs(a - b), 0.0)
+    absd = np.where(np.isnan(absd), 0.0, absd)
+    col_maxabs = np.max(absd, axis=0).astype(a.dtype)
+    return v, counts, col_changed, col_maxabs
+
+
+def colstats_ref(x, mask):
+    """Reference masked per-column stats: (n i32, sum, min, max)."""
+    x = np.asarray(x)
+    m = np.asarray(mask) > 0.5
+    big = np.finfo(x.dtype).max
+    n = np.sum(m, axis=0).astype(np.int32)
+    xz = np.where(m, x, 0.0)
+    xz = np.where(np.isnan(xz), 0.0, xz)
+    s = np.sum(xz, axis=0).astype(x.dtype)
+    mn = np.min(np.where(m, x, big), axis=0).astype(x.dtype)
+    mx = np.max(np.where(m, x, -big), axis=0).astype(x.dtype)
+    return n, s, mn, mx

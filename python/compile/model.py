@@ -1,0 +1,107 @@
+"""L2: the SmartDiff numeric-Δ compute graph (build-time JAX).
+
+``make_diff_fn`` / ``make_colstats_fn`` return jitted functions for one
+(rows, cols, dtype) *shape bucket*. ``aot.py`` lowers each bucket to HLO
+text once; the rust runtime pads real batches up to the nearest bucket
+(padding rows carry ra=rb=0 and become ABSENT — never counted).
+
+The graph wraps the L1 Pallas kernels with the pre/post normalization
+the paper's Δ applies to numeric cells before comparing:
+
+* canonicalize signed zeros (-0.0 -> +0.0) so -0.0 == +0.0;
+* clamp non-finite sentinels produced by upstream decode (inf stays inf,
+  but masked-out cells are zeroed so garbage never reaches the compare);
+* attach the per-batch summary reduction (counts, per-column changed,
+  max |a-b|) used by the merge step and the scheduler's telemetry.
+
+Python never runs on the request path: everything here exists only to be
+lowered by ``aot.py`` into ``artifacts/*.hlo.txt``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import diff_kernel
+
+
+def _canonicalize(x, mask):
+    """Zero masked cells and fold -0.0 into +0.0."""
+    x = jnp.where(mask > 0.5, x, jnp.zeros_like(x))
+    # x + 0.0 maps -0.0 to +0.0 and leaves every other value (incl. NaN,
+    # inf) bit-compatible for comparison purposes.
+    return x + jnp.zeros_like(x)
+
+
+def diff_graph(a, b, na, nb, ra, rb, atol, rtol, *, interpret=True,
+               tile_r=None):
+    """Full numeric-Δ graph for one batch: normalize -> kernel -> summaries.
+
+    Returns a flat tuple (verdicts, counts, col_changed, col_maxabs,
+    changed_rows) — changed_rows is the per-row any-changed indicator the
+    engine uses to materialize row-level diff records without re-scanning
+    the verdict matrix on the rust side.
+    """
+    a = _canonicalize(a, na * (ra[:, None]))
+    b = _canonicalize(b, nb * (rb[:, None]))
+    verdicts, counts, col_changed, col_maxabs = diff_kernel.diff_batch(
+        a, b, na, nb, ra, rb, atol, rtol, interpret=interpret,
+        tile_r=tile_r if tile_r is not None else diff_kernel.TILE_R)
+    changed_rows = jnp.any(
+        jnp.logical_or(verdicts == diff_kernel.CHANGED,
+                       jnp.logical_or(verdicts == diff_kernel.ADDED,
+                                      verdicts == diff_kernel.REMOVED)),
+        axis=1).astype(jnp.int32)
+    return verdicts, counts, col_changed, col_maxabs, changed_rows
+
+
+def colstats_graph(x, mask, *, interpret=True, tile_r=None):
+    """Masked column-stats graph (pre-flight profiling + merge summaries)."""
+    x = _canonicalize(x, mask)
+    n, s, mn, mx = diff_kernel.colstats_batch(
+        x, mask, interpret=interpret,
+        tile_r=tile_r if tile_r is not None else diff_kernel.TILE_R)
+    mean = jnp.where(n > 0, s / jnp.maximum(n, 1).astype(x.dtype),
+                     jnp.zeros_like(s))
+    return n, s, mn, mx, mean
+
+
+def make_diff_fn(rows: int, cols: int, dtype=jnp.float32, interpret=True,
+                 tile_r=None):
+    """Jitted diff graph specialized to one shape bucket.
+
+    tile_r: Pallas row-tile. The default (256) is the TPU VMEM tiling;
+    the AOT CPU artifacts use tile_r=rows (single tile) because the
+    interpret-mode grid lowers to a while-loop of dynamic slices that
+    the CPU backend executes pathologically slowly (EXPERIMENTS.md
+    §Perf: ~25-100x). Both tilings are verified equivalent in pytest.
+    """
+    fn = functools.partial(diff_graph, interpret=interpret, tile_r=tile_r)
+    jitted = jax.jit(fn)
+    specs = diff_arg_specs(rows, cols, dtype)
+    return jitted, specs
+
+
+def make_colstats_fn(rows: int, cols: int, dtype=jnp.float32, interpret=True,
+                     tile_r=None):
+    """Jitted colstats graph specialized to one shape bucket."""
+    fn = functools.partial(colstats_graph, interpret=interpret, tile_r=tile_r)
+    jitted = jax.jit(fn)
+    specs = colstats_arg_specs(rows, cols, dtype)
+    return jitted, specs
+
+
+def diff_arg_specs(rows: int, cols: int, dtype=jnp.float32):
+    """ShapeDtypeStructs for diff_graph, in argument order."""
+    mat = jax.ShapeDtypeStruct((rows, cols), dtype)
+    vec_r = jax.ShapeDtypeStruct((rows,), dtype)
+    vec_c = jax.ShapeDtypeStruct((cols,), dtype)
+    return (mat, mat, mat, mat, vec_r, vec_r, vec_c, vec_c)
+
+
+def colstats_arg_specs(rows: int, cols: int, dtype=jnp.float32):
+    mat = jax.ShapeDtypeStruct((rows, cols), dtype)
+    return (mat, mat)

@@ -1,0 +1,72 @@
+"""AOT path tests: HLO text artifacts + manifest integrity.
+
+The rust runtime trusts manifest.json blindly; these tests are the
+contract check on the python side of that interface.
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_lowered_hlo_is_text_with_entry():
+    text = aot.lower_diff(1024, 8, jnp.float32)
+    assert "ENTRY" in text and "HloModule" in text
+    # 8 params (a,b,na,nb,ra,rb,atol,rtol)
+    assert text.count("parameter(") >= 8
+
+
+def test_lowered_hlo_size_independent_of_rows():
+    """Grid must lower to a loop, not unroll: artifact size ~constant."""
+    small = aot.lower_diff(1024, 8, jnp.float32)
+    large = aot.lower_diff(16384, 8, jnp.float32)
+    assert len(large) < 2 * len(small)
+
+
+def test_colstats_lowering():
+    text = aot.lower_colstats(1024, 8, jnp.float64)
+    assert "ENTRY" in text
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART_DIR,
+                                                    "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_manifest_matches_files():
+    with open(os.path.join(ART_DIR, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["version"] == 1
+    arts = manifest["artifacts"]
+    assert len(arts) > 0
+    kinds = {a["kind"] for a in arts}
+    assert kinds == {"diff", "colstats"}
+    for a in arts:
+        path = os.path.join(ART_DIR, a["path"])
+        assert os.path.exists(path), a["path"]
+        assert os.path.getsize(path) > 0
+        assert a["rows"] % 256 == 0
+        assert a["dtype"] in ("f32", "f64")
+        if a["kind"] == "diff":
+            assert a["outputs"] == ["verdicts", "counts", "col_changed",
+                                    "col_maxabs", "changed_rows"]
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART_DIR,
+                                                    "manifest.json")),
+                    reason="artifacts not built")
+def test_manifest_covers_runtime_buckets():
+    """Every (row,col,dtype) bucket the rust runtime may request exists."""
+    with open(os.path.join(ART_DIR, "manifest.json")) as f:
+        manifest = json.load(f)
+    have = {(a["kind"], a["rows"], a["cols"], a["dtype"])
+            for a in manifest["artifacts"]}
+    for rows in aot.ROW_BUCKETS:
+        for cols in aot.COL_BUCKETS:
+            for dt in ("f32", "f64"):
+                assert ("diff", rows, cols, dt) in have
+                assert ("colstats", rows, cols, dt) in have

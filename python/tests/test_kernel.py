@@ -1,0 +1,223 @@
+"""L1 correctness: Pallas kernels vs the pure-numpy oracle.
+
+This is the core correctness signal for the whole stack — the rust PJRT
+path executes exactly the HLO these kernels lower to.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import diff_kernel, ref
+
+TILE = diff_kernel.TILE_R
+DTYPES = [np.float32, np.float64]
+
+
+def make_case(rng, r, c, dtype, null_p=0.05, row_p=0.03, change_scale=0.01,
+              nan_p=0.0):
+    a = rng.normal(size=(r, c)).astype(dtype)
+    b = (a + rng.normal(scale=change_scale, size=(r, c))).astype(dtype)
+    if nan_p > 0:
+        a = np.where(rng.random((r, c)) < nan_p, np.nan, a).astype(dtype)
+        b = np.where(rng.random((r, c)) < nan_p, np.nan, b).astype(dtype)
+    na = (rng.random((r, c)) > null_p).astype(dtype)
+    nb = (rng.random((r, c)) > null_p).astype(dtype)
+    ra = (rng.random(r) > row_p).astype(dtype)
+    rb = (rng.random(r) > row_p).astype(dtype)
+    atol = np.full(c, 0.005, dtype)
+    rtol = np.abs(rng.normal(scale=1e-3, size=c)).astype(dtype)
+    return a, b, na, nb, ra, rb, atol, rtol
+
+
+def run_both(args):
+    got = diff_kernel.diff_batch(*[jnp.asarray(x) for x in args])
+    want = ref.diff_ref(*args)
+    return [np.asarray(g) for g in got], want
+
+
+def assert_diff_equal(got, want):
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_array_equal(got[1], want[1])
+    np.testing.assert_array_equal(got[2], want[2])
+    np.testing.assert_allclose(got[3], want[3], rtol=1e-6, atol=0)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("r,c", [(TILE, 1), (TILE, 8), (2 * TILE, 3),
+                                 (4 * TILE, 32), (1024, 8)])
+def test_diff_matches_ref(dtype, r, c):
+    rng = np.random.default_rng(42)
+    args = make_case(rng, r, c, dtype)
+    got, want = run_both(args)
+    assert_diff_equal(got, want)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_diff_identical_tables_all_equal(dtype):
+    rng = np.random.default_rng(1)
+    r, c = TILE, 8
+    a = rng.normal(size=(r, c)).astype(dtype)
+    ones_rc = np.ones((r, c), dtype)
+    ones_r = np.ones(r, dtype)
+    z = np.zeros(c, dtype)
+    got = diff_kernel.diff_batch(*map(jnp.asarray,
+                                      (a, a, ones_rc, ones_rc, ones_r,
+                                       ones_r, z, z)))
+    v = np.asarray(got[0])
+    assert (v == ref.EQUAL).all()
+    counts = np.asarray(got[1])
+    assert counts[ref.EQUAL] == r * c and counts[1:].sum() == 0
+
+
+def test_diff_nan_equals_nan():
+    r, c = TILE, 4
+    a = np.full((r, c), np.nan, np.float32)
+    ones_rc = np.ones((r, c), np.float32)
+    ones_r = np.ones(r, np.float32)
+    z = np.zeros(c, np.float32)
+    got = diff_kernel.diff_batch(*map(jnp.asarray,
+                                      (a, a, ones_rc, ones_rc, ones_r,
+                                       ones_r, z, z)))
+    assert (np.asarray(got[0]) == ref.EQUAL).all()
+
+
+def test_diff_nan_vs_value_changed():
+    r, c = TILE, 2
+    a = np.full((r, c), np.nan, np.float32)
+    b = np.zeros((r, c), np.float32)
+    ones_rc = np.ones((r, c), np.float32)
+    ones_r = np.ones(r, np.float32)
+    big = np.full(c, 1e9, np.float32)  # huge atol must NOT rescue NaN
+    got = diff_kernel.diff_batch(*map(jnp.asarray,
+                                      (a, b, ones_rc, ones_rc, ones_r,
+                                       ones_r, big, big)))
+    assert (np.asarray(got[0]) == ref.CHANGED).all()
+
+
+def test_diff_null_semantics():
+    """null==null -> EQUAL; null vs value -> CHANGED (aligned rows)."""
+    r, c = TILE, 2
+    a = np.ones((r, c), np.float32)
+    b = np.ones((r, c), np.float32)
+    na = np.zeros((r, c), np.float32)
+    nb = np.zeros((r, c), np.float32)
+    nb[:, 1] = 1.0  # col 1: null (A) vs value (B)
+    ones_r = np.ones(r, np.float32)
+    z = np.zeros(c, np.float32)
+    got = diff_kernel.diff_batch(*map(jnp.asarray,
+                                      (a, b, na, nb, ones_r, ones_r, z, z)))
+    v = np.asarray(got[0])
+    assert (v[:, 0] == ref.EQUAL).all()
+    assert (v[:, 1] == ref.CHANGED).all()
+
+
+def test_diff_added_removed_rows():
+    r, c = TILE, 3
+    a = np.ones((r, c), np.float32)
+    ones_rc = np.ones((r, c), np.float32)
+    ra = np.zeros(r, np.float32)
+    rb = np.zeros(r, np.float32)
+    ra[: r // 4] = 1.0                     # removed rows
+    rb[r // 4: r // 2] = 1.0               # added rows
+    ra[r // 2: 3 * r // 4] = 1.0           # aligned
+    rb[r // 2: 3 * r // 4] = 1.0
+    # last quarter absent on both sides (padding)
+    z = np.zeros(c, np.float32)
+    got = diff_kernel.diff_batch(*map(jnp.asarray,
+                                      (a, a, ones_rc, ones_rc, ra, rb, z, z)))
+    v = np.asarray(got[0])
+    assert (v[: r // 4] == ref.REMOVED).all()
+    assert (v[r // 4: r // 2] == ref.ADDED).all()
+    assert (v[r // 2: 3 * r // 4] == ref.EQUAL).all()
+    assert (v[3 * r // 4:] == ref.ABSENT).all()
+    counts = np.asarray(got[1])
+    assert counts.sum() == r * c
+
+
+def test_diff_rtol_scales_with_b():
+    r, c = TILE, 1
+    b = np.full((r, c), 100.0, np.float32)
+    a = b + 0.5
+    ones_rc = np.ones((r, c), np.float32)
+    ones_r = np.ones(r, np.float32)
+    z = np.zeros(c, np.float32)
+    rt = np.full(c, 0.01, np.float32)  # tol = 1.0 >= 0.5 -> equal
+    got = diff_kernel.diff_batch(*map(jnp.asarray,
+                                      (a, b, ones_rc, ones_rc, ones_r,
+                                       ones_r, z, rt)))
+    assert (np.asarray(got[0]) == ref.EQUAL).all()
+    rt = np.full(c, 0.001, np.float32)  # tol = 0.1 < 0.5 -> changed
+    got = diff_kernel.diff_batch(*map(jnp.asarray,
+                                      (a, b, ones_rc, ones_rc, ones_r,
+                                       ones_r, z, rt)))
+    assert (np.asarray(got[0]) == ref.CHANGED).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(1, 3),
+    cols=st.integers(1, 16),
+    dtype_i=st.integers(0, 1),
+    null_p=st.floats(0.0, 0.5),
+    row_p=st.floats(0.0, 0.5),
+    nan_p=st.floats(0.0, 0.2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_diff_property_sweep(tiles, cols, dtype_i, null_p, row_p, nan_p,
+                             seed):
+    """Hypothesis sweep over shapes/dtypes/mask densities/NaN rates."""
+    rng = np.random.default_rng(seed)
+    args = make_case(rng, tiles * TILE, cols, DTYPES[dtype_i],
+                     null_p=null_p, row_p=row_p, nan_p=nan_p)
+    got, want = run_both(args)
+    assert_diff_equal(got, want)
+    # Invariant: counts partition the cell grid.
+    assert np.asarray(got[1]).sum() == tiles * TILE * cols
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    tiles=st.integers(1, 3),
+    cols=st.integers(1, 16),
+    dtype_i=st.integers(0, 1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_colstats_property_sweep(tiles, cols, dtype_i, seed):
+    rng = np.random.default_rng(seed)
+    dtype = DTYPES[dtype_i]
+    r = tiles * TILE
+    x = rng.normal(size=(r, cols)).astype(dtype)
+    m = (rng.random((r, cols)) > 0.2).astype(dtype)
+    got = diff_kernel.colstats_batch(jnp.asarray(x), jnp.asarray(m))
+    n, s, mn, mx = ref.colstats_ref(x, m)
+    np.testing.assert_array_equal(np.asarray(got[0]), n)
+    # f32 sums differ by accumulation order; near-cancellation makes the
+    # relative error unbounded, so bound the absolute error too.
+    if dtype == np.float32:
+        np.testing.assert_allclose(np.asarray(got[1]), s, rtol=1e-4,
+                                   atol=1e-3)
+    else:
+        np.testing.assert_allclose(np.asarray(got[1]), s, rtol=1e-12,
+                                   atol=1e-12)
+    np.testing.assert_array_equal(np.asarray(got[2]), mn)
+    np.testing.assert_array_equal(np.asarray(got[3]), mx)
+
+
+def test_bad_tile_shape_raises():
+    with pytest.raises(ValueError):
+        diff_kernel.diff_batch(
+            jnp.zeros((100, 2)), jnp.zeros((100, 2)),
+            jnp.ones((100, 2)), jnp.ones((100, 2)),
+            jnp.ones(100), jnp.ones(100), jnp.zeros(2), jnp.zeros(2))
+
+
+def test_vmem_footprint_under_budget():
+    """DESIGN.md §Hardware-Adaptation: per-step VMEM well under 16 MiB."""
+    for cols in (8, 32):
+        for nbytes in (4, 8):
+            fp = diff_kernel.vmem_footprint(cols, nbytes)
+            assert fp < 2 * 2**20, (cols, nbytes, fp)
+    # Double-buffered worst case still far below the budget.
+    assert 2 * diff_kernel.vmem_footprint(32, 8) < 16 * 2**20

@@ -1,0 +1,102 @@
+"""L2 graph tests: shapes, normalization, summary outputs."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import diff_kernel, ref
+
+TILE = diff_kernel.TILE_R
+
+
+def full_args(r, c, dtype=np.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(r, c)).astype(dtype)
+    b = (a + rng.normal(scale=0.02, size=(r, c))).astype(dtype)
+    ones_rc = np.ones((r, c), dtype)
+    ones_r = np.ones(r, dtype)
+    atol = np.full(c, 0.01, dtype)
+    rtol = np.zeros(c, dtype)
+    return a, b, ones_rc, ones_rc, ones_r, ones_r, atol, rtol
+
+
+@pytest.mark.parametrize("r,c,dtype", [(TILE, 8, np.float32),
+                                       (1024, 32, np.float64)])
+def test_diff_graph_shapes(r, c, dtype):
+    jitted, specs = model.make_diff_fn(r, c, jnp.dtype(dtype))
+    assert len(specs) == 8
+    out = jitted(*full_args(r, c, dtype))
+    verdicts, counts, col_changed, col_maxabs, changed_rows = out
+    assert verdicts.shape == (r, c) and verdicts.dtype == jnp.int32
+    assert counts.shape == (diff_kernel.N_VERDICTS,)
+    assert col_changed.shape == (c,)
+    assert col_maxabs.shape == (c,) and col_maxabs.dtype == jnp.dtype(dtype)
+    assert changed_rows.shape == (r,)
+
+
+def test_changed_rows_consistent_with_verdicts():
+    r, c = TILE, 8
+    jitted, _ = model.make_diff_fn(r, c)
+    out = jitted(*full_args(r, c))
+    v = np.asarray(out[0])
+    want = np.any((v == ref.CHANGED) | (v == ref.ADDED) | (v == ref.REMOVED),
+                  axis=1).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(out[4]), want)
+
+
+def test_negative_zero_canonicalized():
+    """-0.0 vs +0.0 must compare EQUAL even with atol=rtol=0."""
+    r, c = TILE, 2
+    a = np.full((r, c), -0.0, np.float32)
+    b = np.full((r, c), 0.0, np.float32)
+    ones_rc = np.ones((r, c), np.float32)
+    ones_r = np.ones(r, np.float32)
+    z = np.zeros(c, np.float32)
+    jitted, _ = model.make_diff_fn(r, c)
+    out = jitted(a, b, ones_rc, ones_rc, ones_r, ones_r, z, z)
+    assert (np.asarray(out[0]) == ref.EQUAL).all()
+
+
+def test_masked_garbage_never_reaches_compare():
+    """Cells behind a null mask may hold any value (even inf) without
+    affecting the verdict of other cells or the maxabs summary."""
+    r, c = TILE, 2
+    a = np.zeros((r, c), np.float32)
+    b = np.zeros((r, c), np.float32)
+    a[:, 1] = np.inf                      # garbage behind the mask
+    na = np.ones((r, c), np.float32)
+    na[:, 1] = 0.0
+    nb = np.ones((r, c), np.float32)
+    nb[:, 1] = 0.0
+    ones_r = np.ones(r, np.float32)
+    z = np.zeros(c, np.float32)
+    jitted, _ = model.make_diff_fn(r, c)
+    out = jitted(a, b, na, nb, ones_r, ones_r, z, z)
+    v = np.asarray(out[0])
+    assert (v[:, 0] == ref.EQUAL).all()
+    assert (v[:, 1] == ref.EQUAL).all()   # null == null
+    assert np.asarray(out[3])[1] == 0.0   # no inf in maxabs
+
+
+def test_colstats_graph_mean():
+    r, c = TILE, 4
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(r, c)).astype(np.float32)
+    m = np.ones((r, c), np.float32)
+    jitted, _ = model.make_colstats_fn(r, c)
+    n, s, mn, mx, mean = jitted(x, m)
+    np.testing.assert_allclose(np.asarray(mean), x.mean(axis=0), rtol=1e-4)
+    assert (np.asarray(n) == r).all()
+
+
+def test_colstats_all_masked_column():
+    r, c = TILE, 2
+    x = np.ones((r, c), np.float32)
+    m = np.ones((r, c), np.float32)
+    m[:, 1] = 0.0
+    jitted, _ = model.make_colstats_fn(r, c)
+    n, s, mn, mx, mean = jitted(x, m)
+    assert np.asarray(n)[1] == 0
+    assert np.asarray(s)[1] == 0.0
+    assert np.asarray(mean)[1] == 0.0

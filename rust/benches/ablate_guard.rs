@@ -1,0 +1,6 @@
+//! §VII ablation: guard η and drop γ.
+use smartdiff_sched::bench::{quick_mode, tables};
+
+fn main() {
+    println!("{}", tables::ablate_guard(quick_mode(), tables::TRIALS));
+}

@@ -1,0 +1,6 @@
+//! §VII ablation: hysteresis m.
+use smartdiff_sched::bench::{quick_mode, tables};
+
+fn main() {
+    println!("{}", tables::ablate_hysteresis(quick_mode(), tables::TRIALS));
+}

@@ -1,0 +1,6 @@
+//! §VII ablation: working-set factor κ.
+use smartdiff_sched::bench::{quick_mode, tables};
+
+fn main() {
+    println!("{}", tables::ablate_kappa(quick_mode(), 1));
+}

@@ -1,0 +1,6 @@
+//! §III ablation: EWMA smoothing factor ρ.
+use smartdiff_sched::bench::{quick_mode, tables};
+
+fn main() {
+    println!("{}", tables::ablate_rho(quick_mode(), tables::TRIALS));
+}

@@ -1,0 +1,145 @@
+//! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
+//! L1/L2 numeric-Δ throughput (native vs PJRT, per bucket shape), the
+//! engine stages (decode / align / Δ), and the L3 scheduler step cost.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use smartdiff_sched::config::EngineConfig;
+use smartdiff_sched::data::generator::{generate_pair, GenSpec};
+use smartdiff_sched::data::io::{InMemorySource, TableSource};
+use smartdiff_sched::engine::comparators::{
+    native_numeric_diff, NumericBatch, NumericDeltaExec,
+};
+use smartdiff_sched::engine::delta::{process_shard, JobPlan};
+use smartdiff_sched::engine::schema_align::align_schemas;
+use smartdiff_sched::util::rng::Rng;
+
+fn random_batch(rows: usize, cols: usize, seed: u64) -> NumericBatch {
+    let mut rng = Rng::new(seed);
+    let mut nb = NumericBatch::zeroed(rows, cols);
+    for i in 0..rows {
+        nb.ra[i] = 1.0;
+        nb.rb[i] = 1.0;
+        for j in 0..cols {
+            let idx = i * cols + j;
+            nb.na[idx] = 1.0;
+            nb.nb[idx] = 1.0;
+            nb.a[idx] = rng.normal();
+            nb.b[idx] = if rng.chance(0.9) { nb.a[idx] } else { rng.normal() };
+        }
+    }
+    nb
+}
+
+fn time_it(reps: usize, mut f: impl FnMut()) -> f64 {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() {
+    println!("== L1/L2: numeric-Δ kernel throughput (Mcells/s) ==");
+    let have_artifacts =
+        std::path::Path::new("artifacts/manifest.json").exists();
+    let pjrt = if have_artifacts {
+        let cfg = EngineConfig {
+            delta_path: smartdiff_sched::config::DeltaPath::Pjrt,
+            ..EngineConfig::default()
+        };
+        Some(smartdiff_sched::runtime::make_exec(&cfg).expect("pjrt"))
+    } else {
+        println!("(artifacts missing: PJRT rows skipped)");
+        None
+    };
+    println!("{:>14} {:>12} {:>12} {:>8}", "shape", "native", "pjrt", "ratio");
+    for (rows, cols) in [(1024, 8), (4096, 8), (16384, 8), (16384, 32), (65536, 32)] {
+        let batch = random_batch(rows, cols, 7);
+        let cells = (rows * cols) as f64;
+        let reps = (2_000_000 / (rows * cols)).clamp(1, 50);
+        let t_native = time_it(reps, || {
+            let out = native_numeric_diff(&batch);
+            std::hint::black_box(out.counts);
+        });
+        let native_mcps = cells / t_native / 1e6;
+        if let Some(exec) = &pjrt {
+            let t_pjrt = time_it(reps.min(5), || {
+                let out = exec.diff(&batch).unwrap();
+                std::hint::black_box(out.counts);
+            });
+            let pjrt_mcps = cells / t_pjrt / 1e6;
+            println!(
+                "{:>9}x{:<4} {:>12.1} {:>12.1} {:>8.2}",
+                rows, cols, native_mcps, pjrt_mcps, pjrt_mcps / native_mcps
+            );
+        } else {
+            println!("{:>9}x{:<4} {:>12.1} {:>12} {:>8}", rows, cols, native_mcps, "-", "-");
+        }
+    }
+
+    println!("\n== engine stages on a 50k-row shard (ms) ==");
+    let (a, b, _) = generate_pair(&GenSpec { rows: 50_000, seed: 3, ..GenSpec::default() });
+    let aligned = align_schemas(&a.schema, &b.schema).unwrap();
+    let plan = JobPlan::new(aligned, EngineConfig::default());
+    let exec: Arc<dyn NumericDeltaExec> =
+        Arc::new(smartdiff_sched::engine::comparators::NativeExec);
+
+    let src = InMemorySource::new(a.clone());
+    let t_decode = time_it(5, || {
+        std::hint::black_box(src.read_range(0, 50_000).nrows());
+    });
+    let t_align = time_it(5, || {
+        let al = smartdiff_sched::engine::row_align::align_rows(&a, &b, &plan.aligned)
+            .unwrap();
+        std::hint::black_box(al.pairs.len());
+    });
+    let t_shard = time_it(5, || {
+        let (o, _) = process_shard(0, &a, &b, &plan, &exec).unwrap();
+        std::hint::black_box(o.cells.total());
+    });
+    println!("decode: {:>8.2}  align: {:>8.2}  full Δ shard: {:>8.2}",
+             t_decode * 1e3, t_align * 1e3, t_shard * 1e3);
+    println!(
+        "per-row: decode {:.0} ns, align {:.0} ns, full {:.0} ns",
+        t_decode / 50e3 * 1e9,
+        t_align / 50e3 * 1e9,
+        t_shard / 50e3 * 1e9
+    );
+
+    println!("\n== L3: scheduler control-step cost ==");
+    use smartdiff_sched::config::{Caps, Policy};
+    use smartdiff_sched::sched::controller::{AdaptiveController, PolicyEnv, Signals, TuningPolicy};
+    let env = PolicyEnv {
+        caps: Caps::default(),
+        policy: Policy::default(),
+        b_max_safe: 1_000_000,
+        base_rss: 0.0,
+        job_rows: 10_000_000,
+        b_hint: 50_000,
+    };
+    let mut c = AdaptiveController::new();
+    c.initial(&env);
+    let mut i = 0u64;
+    let t_step = time_it(3, || {
+        for _ in 0..10_000 {
+            i += 1;
+            let s = Signals {
+                p50: 1.0,
+                p95: 1.2,
+                p95_smooth: 1.2,
+                mem_signal: 10e9,
+                rss_p95_batch: 1e9,
+                cpu_p95: 0.5,
+                queue_depth: 4,
+                inflight: 8,
+                completed: i,
+            };
+            std::hint::black_box(c.step(&s, &env));
+        }
+    });
+    println!("controller step: {:.0} ns (paper: O(1), <2% CPU)", t_step / 10_000.0 * 1e9);
+}

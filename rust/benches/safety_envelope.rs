@@ -1,0 +1,6 @@
+//! §VIII safety: OOM rate + fraction of actions kept by the envelope.
+use smartdiff_sched::bench::{quick_mode, tables};
+
+fn main() {
+    println!("{}", tables::safety_envelope(quick_mode(), tables::TRIALS));
+}

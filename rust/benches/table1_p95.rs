@@ -1,0 +1,21 @@
+//! Regenerates paper Table I (p95 latency) on the simulated testbed.
+//! Quick mode: SDIFF_BENCH_QUICK=1.
+use smartdiff_sched::bench::{quick_mode, tables};
+
+fn main() {
+    let quick = quick_mode();
+    let m = tables::run_matrix(quick, tables::TRIALS);
+    println!("{}", tables::table1(&m));
+    // Full fixed-grid detail (the headline Fixed column is the median).
+    println!("fixed grid detail (mean p95 s over trials):");
+    for w in &m.rows {
+        print!("  {:>3}:", w.name);
+        for ((b, k), stats) in &w.fixed_grid {
+            let (p, _) = smartdiff_sched::bench::agg(stats, |s| s.p95_latency);
+            print!("  b={b} k={k}: {p:.1}");
+        }
+        let ((bb, bk), best) = w.fixed_best();
+        let (bp, _) = smartdiff_sched::bench::agg(best, |s| s.p95_latency);
+        println!("  | best: b={bb} k={bk} ({bp:.1}s)");
+    }
+}

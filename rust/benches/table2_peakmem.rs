@@ -1,0 +1,7 @@
+//! Regenerates paper Table II (peak memory) on the simulated testbed.
+use smartdiff_sched::bench::{quick_mode, tables};
+
+fn main() {
+    let m = tables::run_matrix(quick_mode(), tables::TRIALS);
+    println!("{}", tables::table2(&m));
+}

@@ -1,0 +1,7 @@
+//! Regenerates paper Table III (throughput + reconfigs).
+use smartdiff_sched::bench::{quick_mode, tables};
+
+fn main() {
+    let m = tables::run_matrix(quick_mode(), tables::TRIALS);
+    println!("{}", tables::table3(&m));
+}

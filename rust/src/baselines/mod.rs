@@ -1,0 +1,212 @@
+//! §V baseline policies: fixed grid and the two-stage warm-up heuristic.
+//! Both implement `TuningPolicy` so every policy runs through the exact
+//! same scheduler loop — differences in Tables I–III come from the
+//! policy alone, not from harness asymmetry.
+
+use crate::sched::controller::{PolicyEnv, PolicyStep, Signals, TuningPolicy};
+
+/// Fixed (b, k) for the whole job — the paper's fixed-grid baseline.
+/// Deliberately safety-unaware: an aggressive fixed config can OOM,
+/// which is part of what Table II/§VI measure.
+pub struct FixedPolicy {
+    pub b: usize,
+    pub k: usize,
+}
+
+impl FixedPolicy {
+    pub fn new(b: usize, k: usize) -> Self {
+        FixedPolicy { b, k }
+    }
+    /// The paper's fixed grid: b ∈ {25k, 50k, 100k, 250k} × k ∈ {4, 8, 16}.
+    pub fn paper_grid() -> Vec<(usize, usize)> {
+        let mut grid = Vec::new();
+        for b in [25_000, 50_000, 100_000, 250_000] {
+            for k in [4, 8, 16] {
+                grid.push((b, k));
+            }
+        }
+        grid
+    }
+}
+
+impl TuningPolicy for FixedPolicy {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+    fn initial(&mut self, _env: &PolicyEnv) -> (usize, usize) {
+        (self.b, self.k)
+    }
+    fn step(&mut self, _s: &Signals, _env: &PolicyEnv) -> PolicyStep {
+        PolicyStep { b: self.b, k: self.k, changed: false, clamped: false, reason: "fixed" }
+    }
+}
+
+/// Two-stage warm-up heuristic (paper §V: "warm-up grid then best"):
+/// probe each grid configuration for `probe_batches` completions, score
+/// it by mean latency per row, then lock the winner for the rest of the
+/// job. Reacts once; cannot adapt to drift or memory pressure.
+pub struct HeuristicPolicy {
+    grid: Vec<(usize, usize)>,
+    probe_batches: u64,
+    /// (config index, completions seen in it, sum of per-row latencies).
+    cursor: usize,
+    seen_in_config: u64,
+    scores: Vec<f64>,
+    samples: Vec<u64>,
+    locked: Option<(usize, usize)>,
+    last_completed: u64,
+}
+
+impl HeuristicPolicy {
+    pub fn new(grid: Vec<(usize, usize)>, probe_batches: u64) -> Self {
+        let n = grid.len();
+        HeuristicPolicy {
+            grid,
+            probe_batches: probe_batches.max(1),
+            cursor: 0,
+            seen_in_config: 0,
+            scores: vec![0.0; n],
+            samples: vec![0; n],
+            locked: None,
+            last_completed: 0,
+        }
+    }
+
+    pub fn paper_default() -> Self {
+        // Probe a sub-grid (the paper's warm-up is "tuned": coarse grid,
+        // short probes).
+        let grid = vec![
+            (25_000, 8),
+            (50_000, 8),
+            (100_000, 8),
+            (100_000, 16),
+            (250_000, 16),
+        ];
+        HeuristicPolicy::new(grid, 3)
+    }
+
+    pub fn locked_config(&self) -> Option<(usize, usize)> {
+        self.locked
+    }
+
+    fn lock_best(&mut self) -> (usize, usize) {
+        let mut best = 0;
+        let mut best_score = f64::INFINITY;
+        for (i, (&sum, &n)) in self.scores.iter().zip(&self.samples).enumerate() {
+            if n == 0 {
+                continue;
+            }
+            let score = sum / n as f64;
+            if score < best_score {
+                best_score = score;
+                best = i;
+            }
+        }
+        let cfg = self.grid[best];
+        self.locked = Some(cfg);
+        cfg
+    }
+}
+
+impl TuningPolicy for HeuristicPolicy {
+    fn name(&self) -> &'static str {
+        "heuristic"
+    }
+    fn initial(&mut self, _env: &PolicyEnv) -> (usize, usize) {
+        self.grid[0]
+    }
+    fn step(&mut self, s: &Signals, _env: &PolicyEnv) -> PolicyStep {
+        if let Some((b, k)) = self.locked {
+            return PolicyStep { b, k, changed: false, clamped: false, reason: "locked" };
+        }
+        // Score the active config with the latest window p50 (per-batch
+        // latency normalized by the probe's batch size).
+        let new_completions = s.completed.saturating_sub(self.last_completed);
+        self.last_completed = s.completed;
+        if new_completions > 0 && s.p50 > 0.0 {
+            let (b, _) = self.grid[self.cursor];
+            self.scores[self.cursor] += (s.p50 / b as f64) * new_completions as f64;
+            self.samples[self.cursor] += new_completions;
+            self.seen_in_config += new_completions;
+        }
+        if self.seen_in_config >= self.probe_batches {
+            self.seen_in_config = 0;
+            self.cursor += 1;
+            if self.cursor >= self.grid.len() {
+                let (b, k) = self.lock_best();
+                return PolicyStep { b, k, changed: true, clamped: false, reason: "lock-best" };
+            }
+            let (b, k) = self.grid[self.cursor];
+            return PolicyStep { b, k, changed: true, clamped: false, reason: "probe-next" };
+        }
+        let (b, k) = self.grid[self.cursor];
+        PolicyStep { b, k, changed: false, clamped: false, reason: "probing" }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Caps, Policy};
+
+    fn env() -> PolicyEnv {
+        PolicyEnv {
+            caps: Caps::default(),
+            policy: Policy::default(),
+            b_max_safe: 1_000_000,
+            base_rss: 0.0,
+            job_rows: 100_000_000,
+            b_hint: 100_000,
+        }
+    }
+
+    fn sig(completed: u64, p50: f64) -> Signals {
+        Signals { completed, p50, p95: p50 * 1.2, ..Default::default() }
+    }
+
+    #[test]
+    fn fixed_never_changes() {
+        let mut p = FixedPolicy::new(50_000, 8);
+        assert_eq!(p.initial(&env()), (50_000, 8));
+        for i in 0..20 {
+            let s = p.step(&sig(i, 1.0), &env());
+            assert!(!s.changed);
+            assert_eq!((s.b, s.k), (50_000, 8));
+        }
+    }
+
+    #[test]
+    fn paper_grid_is_4x3() {
+        assert_eq!(FixedPolicy::paper_grid().len(), 12);
+    }
+
+    #[test]
+    fn heuristic_probes_then_locks_best() {
+        let grid = vec![(10_000, 4), (20_000, 4), (40_000, 4)];
+        let mut p = HeuristicPolicy::new(grid, 2);
+        let e = env();
+        assert_eq!(p.initial(&e), (10_000, 4));
+        // Feed per-batch p50s that make the middle config the best per
+        // row: 10k->0.2s (20µs/row), 20k->0.2s (10µs/row), 40k->0.8s
+        // (20µs/row).
+        let mut completed = 0;
+        let p50s = [0.2, 0.2, 0.8];
+        let mut cursor = 0;
+        loop {
+            completed += 1;
+            let step = p.step(&sig(completed, p50s[cursor.min(2)]), &e);
+            if step.reason == "probe-next" {
+                cursor += 1;
+            }
+            if step.reason == "lock-best" {
+                assert_eq!((step.b, step.k), (20_000, 4));
+                break;
+            }
+            assert!(completed < 50, "never locked");
+        }
+        // Stays locked forever after.
+        let s = p.step(&sig(completed + 1, 9.9), &e);
+        assert_eq!(s.reason, "locked");
+        assert_eq!(p.locked_config(), Some((20_000, 4)));
+    }
+}

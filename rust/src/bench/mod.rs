@@ -1,0 +1,110 @@
+//! Bench harness (criterion substitute, DESIGN.md §4.5): trial
+//! aggregation with mean ± 95% CI (the paper's protocol: 3 trials per
+//! configuration) and fixed-width table rendering matching the paper's
+//! table layout. The actual experiment drivers live in `tables.rs` and
+//! are shared by `rust/benches/*` and the CLI `reproduce` subcommand.
+
+pub mod tables;
+
+use crate::metrics::quantile::mean_ci95;
+
+/// mean ± ci, formatted like the paper ("13.9±0.4").
+pub fn fmt_ci(mean: f64, ci: f64, decimals: usize) -> String {
+    format!("{mean:.decimals$}±{ci:.decimals$}")
+}
+
+/// Aggregate one metric over trials.
+pub fn agg<T>(trials: &[T], f: impl Fn(&T) -> f64) -> (f64, f64) {
+    let xs: Vec<f64> = trials.iter().map(f).collect();
+    mean_ci95(&xs)
+}
+
+/// Minimal fixed-width table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count");
+        self.rows.push(cells);
+    }
+    pub fn render(&self) -> String {
+        // Char counts, not byte lengths ("±" is multi-byte).
+        let w_of = |s: &str| s.chars().count();
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| w_of(h)).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(w_of(c));
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$} | ", c, w = widths[i]));
+            }
+            s.trim_end().to_string()
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('\n');
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&"-".repeat(w + 2));
+            sep.push('|');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Quick mode (smaller workloads / fewer trials) for CI and smoke runs:
+/// set env `SDIFF_BENCH_QUICK=1`.
+pub fn quick_mode() -> bool {
+    std::env::var("SDIFF_BENCH_QUICK").map_or(false, |v| v == "1")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["Workload", "Adaptive"]);
+        t.row(vec!["1M".into(), "13.9±0.4".into()]);
+        t.row(vec!["20M".into(), "242.7±4.8".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("Workload"));
+        assert!(lines[2].contains("13.9"));
+        // All rows equal display width.
+        assert_eq!(lines[0].chars().count(), lines[2].chars().count());
+    }
+
+    #[test]
+    fn fmt_ci_matches_paper_style() {
+        assert_eq!(fmt_ci(13.94, 0.42, 1), "13.9±0.4");
+        assert_eq!(fmt_ci(74.1, 0.0, 1), "74.1±0.0");
+    }
+
+    #[test]
+    fn agg_computes_mean_ci() {
+        let (m, ci) = agg(&[1.0f64, 2.0, 3.0], |x| *x);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!(ci > 0.0);
+    }
+}

@@ -1,0 +1,482 @@
+//! Experiment drivers that regenerate every table and ablation in the
+//! paper's evaluation (DESIGN.md §3 per-experiment index) on the
+//! simulated 32-core/64 GB testbed. Each `table*` / `ablate_*` function
+//! returns the rendered table plus the paper's reference values so the
+//! shape comparison is visible in one place; `rust/benches/*.rs` and
+//! `smartdiff-sched reproduce` are thin wrappers.
+
+use crate::bench::{agg, fmt_ci, Table};
+use crate::config::{PolicyKind, SchedulerConfig};
+use crate::engine::microbench::CostConstants;
+use crate::sched::scheduler::JobStats;
+use crate::sim::{run_sim_job, SimWorkload};
+
+/// Paper workloads (name, rows/side). Quick mode shrinks rows 10× (same
+/// gating thresholds are exercised by scaling Ŵ instead — see
+/// `workload_for`).
+pub fn workloads(quick: bool) -> Vec<(&'static str, usize)> {
+    if quick {
+        vec![("1M", 100_000), ("5M", 500_000), ("10M", 1_000_000),
+             ("20M", 2_000_000)]
+    } else {
+        vec![
+            ("1M", 1_000_000),
+            ("5M", 5_000_000),
+            ("10M", 10_000_000),
+            ("20M", 20_000_000),
+        ]
+    }
+}
+
+/// Build the SimWorkload: quick mode keeps the paper's *working-set
+/// ratios* by widening rows 10× so the gate decisions match full scale.
+pub fn workload_for(name: &str, rows: usize, quick: bool, seed: u64) -> SimWorkload {
+    let mut wl = SimWorkload::paper(rows, seed);
+    if quick {
+        wl.w_hat *= 10.0;
+    }
+    let _ = name;
+    wl
+}
+
+pub fn paper_cfg() -> SchedulerConfig {
+    SchedulerConfig::default() // κ=0.7 η=0.9 γ=0.6 τ=2 m=2, 64 GB / 32c
+}
+
+/// Trials per configuration (paper: 3).
+pub const TRIALS: usize = 3;
+
+/// Results for one workload across the three policies.
+pub struct WorkloadResults {
+    pub name: &'static str,
+    pub rows: usize,
+    pub fixed_grid: Vec<((usize, usize), Vec<JobStats>)>,
+    pub heuristic: Vec<JobStats>,
+    pub adaptive: Vec<JobStats>,
+}
+
+impl WorkloadResults {
+    /// Representative fixed config: the grid config with the best mean
+    /// *throughput* — what offline tuning for production throughput
+    /// would deploy (the paper's baselines are tuned; a throughput-
+    /// tuned fixed config is the strongest credible one). The full grid
+    /// is printed by the bench binaries; see EXPERIMENTS.md.
+    pub fn fixed_median(&self) -> &Vec<JobStats> {
+        let (_, stats) = self
+            .fixed_grid
+            .iter()
+            .max_by(|a, b| {
+                agg(&a.1, |s| s.throughput_rows_per_s)
+                    .0
+                    .partial_cmp(&agg(&b.1, |s| s.throughput_rows_per_s).0)
+                    .unwrap()
+            })
+            .unwrap();
+        stats
+    }
+    /// Best fixed config by mean p95 (the strongest fixed baseline).
+    pub fn fixed_best(&self) -> (&(usize, usize), &Vec<JobStats>) {
+        let (cfg, stats) = self
+            .fixed_grid
+            .iter()
+            .min_by(|a, b| {
+                agg(&a.1, |s| s.p95_latency)
+                    .0
+                    .partial_cmp(&agg(&b.1, |s| s.p95_latency).0)
+                    .unwrap()
+            })
+            .unwrap();
+        (cfg, stats)
+    }
+}
+
+pub struct Matrix {
+    pub rows: Vec<WorkloadResults>,
+    pub quick: bool,
+}
+
+fn run_trials(
+    cfg: &SchedulerConfig,
+    wl: &SimWorkload,
+    consts: &CostConstants,
+    trials: usize,
+) -> Vec<JobStats> {
+    (0..trials)
+        .map(|t| {
+            let mut w = *wl;
+            w.seed = wl.seed.wrapping_add(1000 * t as u64 + 1);
+            run_sim_job(cfg, &w, consts)
+                .expect("sim job")
+                .stats
+        })
+        .collect()
+}
+
+/// Fixed grid (paper §V): full 4×3 at paper scale, 2×2 subset in quick.
+fn fixed_grid(quick: bool) -> Vec<(usize, usize)> {
+    if quick {
+        vec![(25_000, 8), (100_000, 8), (100_000, 16), (250_000, 16)]
+    } else {
+        crate::baselines::FixedPolicy::paper_grid()
+    }
+}
+
+/// Run the whole policy × workload matrix (Tables I–III share it).
+pub fn run_matrix(quick: bool, trials: usize) -> Matrix {
+    let consts = CostConstants::paper_engine();
+    let mut rows = Vec::new();
+    for (wi, (name, nrows)) in workloads(quick).into_iter().enumerate() {
+        let wl = workload_for(name, nrows, quick, 17 * (wi as u64 + 1));
+        let mut fixed_results = Vec::new();
+        for (b, k) in fixed_grid(quick) {
+            let mut cfg = paper_cfg();
+            cfg.policy_kind = PolicyKind::Fixed { b, k };
+            fixed_results.push(((b, k), run_trials(&cfg, &wl, &consts, trials)));
+        }
+        let mut cfg = paper_cfg();
+        cfg.policy_kind = PolicyKind::Heuristic;
+        let heuristic = run_trials(&cfg, &wl, &consts, trials);
+        let cfg = paper_cfg();
+        let adaptive = run_trials(&cfg, &wl, &consts, trials);
+        rows.push(WorkloadResults {
+            name,
+            rows: nrows,
+            fixed_grid: fixed_results,
+            heuristic,
+            adaptive,
+        });
+    }
+    Matrix { rows, quick }
+}
+
+/// Paper Table I reference values (p95 seconds + backend decision).
+pub const PAPER_T1: [(&str, f64, f64, f64, &str); 4] = [
+    ("1M", 21.7, 18.2, 13.9, "in-mem"),
+    ("5M", 83.5, 72.9, 53.8, "in-mem"),
+    ("10M", 186.2, 161.4, 115.6, "Dask"),
+    ("20M", 401.7, 336.2, 242.7, "Dask"),
+];
+/// Paper Table II (peak memory GB).
+pub const PAPER_T2: [(&str, f64, f64, f64); 4] = [
+    ("1M", 9.6, 8.4, 7.1),
+    ("5M", 34.2, 30.6, 23.9),
+    ("10M", 41.8, 36.4, 28.6),
+    ("20M", 53.1, 47.3, 39.7),
+];
+/// Paper Table III (throughput K rows/s + reconfigs/job).
+pub const PAPER_T3: [(&str, f64, f64, f64, u64); 4] = [
+    ("1M", 74.1, 76.3, 78.8, 5),
+    ("5M", 71.5, 72.0, 73.9, 7),
+    ("10M", 66.4, 68.8, 69.1, 9),
+    ("20M", 60.2, 62.5, 62.0, 10),
+];
+
+fn backend_label(stats: &[JobStats]) -> &'static str {
+    match stats.first().map(|s| s.backend.as_str()) {
+        Some("sim-inmem") | Some("inmem") => "in-mem",
+        Some("sim-dasklike") | Some("dasklike") => "Dask",
+        _ => "?",
+    }
+}
+
+/// Table I: p95 latency (s), Fixed / Heur. / Adaptive + backend.
+pub fn table1(m: &Matrix) -> String {
+    let mut t = Table::new(&[
+        "Workload", "Fixed", "Heur.", "Adaptive", "Backend",
+        "vsHeur", "vsFixed",
+    ]);
+    for w in &m.rows {
+        let (fm, fc) = agg(w.fixed_median(), |s| s.p95_latency);
+        let (hm, hc) = agg(&w.heuristic, |s| s.p95_latency);
+        let (am, ac) = agg(&w.adaptive, |s| s.p95_latency);
+        t.row(vec![
+            w.name.to_string(),
+            fmt_ci(fm, fc, 1),
+            fmt_ci(hm, hc, 1),
+            fmt_ci(am, ac, 1),
+            backend_label(&w.adaptive).to_string(),
+            format!("{:+.0}%", 100.0 * (am / hm - 1.0)),
+            format!("{:+.0}%", 100.0 * (am / fm - 1.0)),
+        ]);
+    }
+    let mut out = String::from(
+        "Table I — p95 latency (s), mean±95% CI, lower is better\n",
+    );
+    out.push_str(&t.render());
+    out.push_str("\npaper reference (Fixed / Heur. / Adaptive, backend):\n");
+    for (n, f, h, a, b) in PAPER_T1 {
+        out.push_str(&format!(
+            "  {n:>3}: {f:6.1} / {h:6.1} / {a:6.1}  {b}  \
+             (-{:.0}% vs heur, -{:.0}% vs fixed)\n",
+            100.0 * (1.0 - a / h),
+            100.0 * (1.0 - a / f)
+        ));
+    }
+    out
+}
+
+/// Table II: peak memory (GB).
+pub fn table2(m: &Matrix) -> String {
+    let gb = 1e-9;
+    let mut t = Table::new(&[
+        "Workload", "Fixed", "Heur.", "Adaptive", "vsHeur", "vsFixed",
+    ]);
+    for w in &m.rows {
+        let (fm, fc) = agg(w.fixed_median(), |s| s.peak_rss_bytes as f64 * gb);
+        let (hm, hc) = agg(&w.heuristic, |s| s.peak_rss_bytes as f64 * gb);
+        let (am, ac) = agg(&w.adaptive, |s| s.peak_rss_bytes as f64 * gb);
+        t.row(vec![
+            w.name.to_string(),
+            fmt_ci(fm, fc, 1),
+            fmt_ci(hm, hc, 1),
+            fmt_ci(am, ac, 1),
+            format!("{:+.0}%", 100.0 * (am / hm - 1.0)),
+            format!("{:+.0}%", 100.0 * (am / fm - 1.0)),
+        ]);
+    }
+    let mut out = String::from(
+        "Table II — peak memory (GB), mean±95% CI, lower is better\n",
+    );
+    out.push_str(&t.render());
+    out.push_str("\npaper reference (Fixed / Heur. / Adaptive):\n");
+    for (n, f, h, a) in PAPER_T2 {
+        out.push_str(&format!(
+            "  {n:>3}: {f:5.1} / {h:5.1} / {a:5.1}  \
+             (-{:.0}% vs heur, -{:.0}% vs fixed)\n",
+            100.0 * (1.0 - a / h),
+            100.0 * (1.0 - a / f)
+        ));
+    }
+    out
+}
+
+/// Table III: throughput (K rows/s) + reconfigs/job.
+pub fn table3(m: &Matrix) -> String {
+    let mut t = Table::new(&[
+        "Workload", "Fixed", "Heur.", "Adaptive", "Reconfigs", "OOMs",
+    ]);
+    for w in &m.rows {
+        let (fm, _) = agg(w.fixed_median(), |s| s.throughput_rows_per_s / 1e3);
+        let (hm, _) = agg(&w.heuristic, |s| s.throughput_rows_per_s / 1e3);
+        let (am, _) = agg(&w.adaptive, |s| s.throughput_rows_per_s / 1e3);
+        let (rc, _) = agg(&w.adaptive, |s| s.reconfigs as f64);
+        let ooms: u64 = w.adaptive.iter().map(|s| s.ooms).sum();
+        t.row(vec![
+            w.name.to_string(),
+            format!("{fm:.1}"),
+            format!("{hm:.1}"),
+            format!("{am:.1}"),
+            format!("{rc:.0}"),
+            format!("{ooms}"),
+        ]);
+    }
+    let mut out = String::from(
+        "Table III — throughput (K rows/s) and stability (reconfigs/job)\n",
+    );
+    out.push_str(&t.render());
+    out.push_str("\npaper reference (Fixed / Heur. / Adaptive, reconfigs):\n");
+    for (n, f, h, a, r) in PAPER_T3 {
+        out.push_str(&format!("  {n:>3}: {f:5.1} / {h:5.1} / {a:5.1}   {r}\n"));
+    }
+    out
+}
+
+// ---------------- ablations (§VII / §VIII) ----------------
+
+/// Guard (η) and drop (γ) ablation on the 5M workload.
+pub fn ablate_guard(quick: bool, trials: usize) -> String {
+    let consts = CostConstants::paper_engine();
+    let rows = if quick { 500_000 } else { 5_000_000 };
+    let wl = workload_for("5M", rows, quick, 99);
+    let mut t = Table::new(&["eta", "gamma", "p95(s)", "peak(GB)", "OOMs"]);
+    for eta in [0.90, 0.99] {
+        for gamma in [0.5, 0.6, 0.7] {
+            let mut cfg = paper_cfg();
+            // Tightened cap so the envelope binds at sim scale: the
+            // latency objective alone caps b near 4 GB of batch state,
+            // so at 64 GB the guard would never engage (the paper's
+            // engine holds ~6x more per-worker state; see DESIGN.md).
+            cfg.caps.mem_cap_bytes = 4_000_000_000;
+            cfg.policy.eta = eta;
+            cfg.policy.gamma = gamma;
+            let stats = run_trials(&cfg, &wl, &consts, trials);
+            let (p95, ci) = agg(&stats, |s| s.p95_latency);
+            let (peak, pci) = agg(&stats, |s| s.peak_rss_bytes as f64 * 1e-9);
+            let ooms: u64 = stats.iter().map(|s| s.ooms).sum();
+            t.row(vec![
+                format!("{eta:.2}"),
+                format!("{gamma:.1}"),
+                fmt_ci(p95, ci, 1),
+                fmt_ci(peak, pci, 1),
+                format!("{ooms}"),
+            ]);
+        }
+    }
+    let mut out = String::from(
+        "Ablation — guard η and drop γ (5M workload, cap tightened to \
+         4 GB so the envelope binds; see header comment). Paper: η=0.90 \
+         cuts peaks 2–4 GB for +1–2% latency; η=0.99 produced one OOM.\n",
+    );
+    out.push_str(&t.render());
+    out
+}
+
+/// Working-set factor κ ablation: backend decisions on narrow/wide rows.
+pub fn ablate_kappa(quick: bool, trials: usize) -> String {
+    let consts = CostConstants::paper_engine();
+    let mut t = Table::new(&[
+        "kappa", "rows", "width", "backend", "p95(s)", "peak(GB)",
+    ]);
+    for kappa in [0.6, 0.7, 0.8] {
+        for (name, nrows) in workloads(quick) {
+            for (wname, wmul) in [("narrow", 0.5), ("wide", 1.0)] {
+                let mut wl = workload_for(name, nrows, quick, 7);
+                wl.w_hat *= wmul;
+                let mut cfg = paper_cfg();
+                cfg.policy.kappa = kappa;
+                let stats = run_trials(&cfg, &wl, &consts, trials.min(1).max(1));
+                let (p95, _) = agg(&stats, |s| s.p95_latency);
+                let (peak, _) = agg(&stats, |s| s.peak_rss_bytes as f64 * 1e-9);
+                t.row(vec![
+                    format!("{kappa:.1}"),
+                    name.to_string(),
+                    wname.to_string(),
+                    stats[0].backend.replace("sim-", ""),
+                    format!("{p95:.1}"),
+                    format!("{peak:.1}"),
+                ]);
+            }
+        }
+    }
+    let mut out = String::from(
+        "Ablation — working-set factor κ (paper: κ=0.6 gates only 1M/5M \
+         in-mem; κ=0.8 pulls 10M/narrow in-mem with higher peaks, still \
+         under guard)\n",
+    );
+    out.push_str(&t.render());
+    out
+}
+
+/// Hysteresis m ablation: reconfigs/job and p95.
+pub fn ablate_hysteresis(quick: bool, trials: usize) -> String {
+    let consts = CostConstants::paper_engine();
+    let mut t = Table::new(&["m", "workload", "reconfigs", "p95(s)"]);
+    for m_h in [1u32, 2, 3] {
+        for (name, nrows) in workloads(quick) {
+            let wl = workload_for(name, nrows, quick, 31);
+            let mut cfg = paper_cfg();
+            cfg.policy.hysteresis_m = m_h;
+            let stats = run_trials(&cfg, &wl, &consts, trials);
+            let (rc, rcci) = agg(&stats, |s| s.reconfigs as f64);
+            let (p95, ci) = agg(&stats, |s| s.p95_latency);
+            t.row(vec![
+                format!("{m_h}"),
+                name.to_string(),
+                fmt_ci(rc, rcci, 1),
+                fmt_ci(p95, ci, 1),
+            ]);
+        }
+    }
+    let mut out = String::from(
+        "Ablation — hysteresis m (paper: m=3 removes 1–2 reconfigs/job, \
+         negligible p95 impact)\n",
+    );
+    out.push_str(&t.render());
+    out
+}
+
+/// Smoothing factor ρ ablation (paper §III: ρ∈[0.1,0.4]).
+pub fn ablate_rho(quick: bool, trials: usize) -> String {
+    let consts = CostConstants::paper_engine();
+    let rows = if quick { 500_000 } else { 5_000_000 };
+    let wl = workload_for("5M", rows, quick, 55);
+    let mut t = Table::new(&["rho", "p95(s)", "reconfigs", "peak(GB)"]);
+    for rho in [0.1, 0.2, 0.3, 0.4] {
+        let mut cfg = paper_cfg();
+        cfg.policy.rho_smooth = rho;
+        let stats = run_trials(&cfg, &wl, &consts, trials);
+        let (p95, ci) = agg(&stats, |s| s.p95_latency);
+        let (rc, _) = agg(&stats, |s| s.reconfigs as f64);
+        let (peak, _) = agg(&stats, |s| s.peak_rss_bytes as f64 * 1e-9);
+        t.row(vec![
+            format!("{rho:.1}"),
+            fmt_ci(p95, ci, 1),
+            format!("{rc:.0}"),
+            format!("{peak:.1}"),
+        ]);
+    }
+    let mut out = String::from(
+        "Ablation — EWMA smoothing ρ (paper: ρ=0.2 balances stability \
+         and responsiveness)\n",
+    );
+    out.push_str(&t.render());
+    out
+}
+
+/// §VIII safety: OOM rate under the guard, fraction of actions kept.
+pub fn safety_envelope(quick: bool, trials: usize) -> String {
+    let consts = CostConstants::paper_engine();
+    let mut t = Table::new(&[
+        "eta", "workload", "OOMs", "actions_kept", "peak/cap",
+    ]);
+    let cap_gb = 4.0;
+    for eta in [0.90, 0.99] {
+        for (name, nrows) in workloads(quick) {
+            let wl = workload_for(name, nrows, quick, 71);
+            let mut cfg = paper_cfg();
+            cfg.caps.mem_cap_bytes = 4_000_000_000; // envelope in play
+            cfg.policy.eta = eta;
+            let stats = run_trials(&cfg, &wl, &consts, trials);
+            let ooms: u64 = stats.iter().map(|s| s.ooms).sum();
+            let (kept, _) = agg(&stats, |s| s.actions_kept);
+            let (peak, _) = agg(&stats, |s| s.peak_rss_bytes as f64 * 1e-9);
+            t.row(vec![
+                format!("{eta:.2}"),
+                name.to_string(),
+                format!("{ooms}"),
+                format!("{kept:.2}"),
+                format!("{:.2}", peak / cap_gb),
+            ]);
+        }
+    }
+    let mut out = String::from(
+        "Safety envelope (§VIII): Pr[OOM] bounded by the interval \
+         pruning; paper kept >85% of candidate actions at 0% OOM under \
+         the default guard.\n",
+    );
+    out.push_str(&t.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_matrix_has_expected_shape() {
+        let m = run_matrix(true, 1);
+        assert_eq!(m.rows.len(), 4);
+        for w in &m.rows {
+            assert_eq!(w.adaptive.len(), 1);
+            assert!(!w.fixed_grid.is_empty());
+            let _ = w.fixed_median();
+            let _ = w.fixed_best();
+        }
+        let t1 = table1(&m);
+        assert!(t1.contains("Table I"));
+        assert!(t1.contains("paper reference"));
+        let t2 = table2(&m);
+        assert!(t2.contains("GB"));
+        let t3 = table3(&m);
+        assert!(t3.contains("Reconfigs"));
+    }
+
+    #[test]
+    fn quick_gating_matches_paper_decisions() {
+        let m = run_matrix(true, 1);
+        assert_eq!(backend_label(&m.rows[0].adaptive), "in-mem"); // 1M
+        assert_eq!(backend_label(&m.rows[1].adaptive), "in-mem"); // 5M
+        assert_eq!(backend_label(&m.rows[2].adaptive), "Dask"); // 10M
+        assert_eq!(backend_label(&m.rows[3].adaptive), "Dask"); // 20M
+    }
+}

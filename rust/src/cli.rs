@@ -1,0 +1,117 @@
+//! Hand-rolled CLI (clap substitute, DESIGN.md §4.5): subcommands +
+//! `--key value` / `--flag` options with typed accessors.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv (excluding argv[0]). `flag_names` lists boolean flags
+    /// (everything else starting with `--` consumes a value).
+    pub fn parse(
+        argv: &[String],
+        flag_names: &[&str],
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if flag_names.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let val = it
+                        .next()
+                        .ok_or_else(|| format!("--{name} expects a value"))?;
+                    out.options.insert(name.to_string(), val.clone());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg.clone());
+            } else {
+                out.positional.push(arg.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, String> {
+        self.get(name)
+            .map(|v| {
+                v.replace('_', "")
+                    .parse()
+                    .map_err(|_| format!("--{name}: expected integer, got {v:?}"))
+            })
+            .transpose()
+    }
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        self.get(name)
+            .map(|v| {
+                v.parse()
+                    .map_err(|_| format!("--{name}: expected number, got {v:?}"))
+            })
+            .transpose()
+    }
+    /// Error on unknown options (catch typos early).
+    pub fn expect_known(&self, known: &[&str]) -> Result<(), String> {
+        for k in self.options.keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(format!("unknown option --{k}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(
+            &argv("run --rows 10_000 --backend dask --quick input.csv"),
+            &["quick"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get_usize("rows").unwrap(), Some(10_000));
+        assert_eq!(a.get("backend"), Some("dask"));
+        assert!(a.flag("quick"));
+        assert_eq!(a.positional, vec!["input.csv"]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&argv("run --rows"), &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_option_detected() {
+        let a = Args::parse(&argv("run --typo 1"), &[]).unwrap();
+        assert!(a.expect_known(&["rows"]).is_err());
+        assert!(a.expect_known(&["typo"]).is_ok());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(&argv("x --rows abc"), &[]).unwrap();
+        assert!(a.get_usize("rows").is_err());
+        let a = Args::parse(&argv("x --eta 0.9"), &[]).unwrap();
+        assert_eq!(a.get_f64("eta").unwrap(), Some(0.9));
+    }
+}

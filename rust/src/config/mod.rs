@@ -1,0 +1,425 @@
+//! Configuration system: typed configs for caps, policy, engine and
+//! telemetry, loadable from a TOML-subset file and overridable from the
+//! CLI. Defaults reproduce the paper's §V "Policy" settings.
+
+pub mod toml_lite;
+
+use crate::util::bytes;
+use toml_lite::TomlDoc;
+
+/// Hard resource caps the scheduler must respect (paper §V: 64 GB, 32
+/// logical cores).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Caps {
+    pub mem_cap_bytes: u64,
+    pub cpu_cap: usize,
+}
+
+impl Default for Caps {
+    fn default() -> Self {
+        Caps { mem_cap_bytes: 64 * bytes::GB, cpu_cap: 32 }
+    }
+}
+
+/// Controller / gating policy parameters (paper §III–§V).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Policy {
+    /// Working-set safety factor κ in Eq. 1 gating (inmem iff ŴS ≤ κ·M_cap).
+    pub kappa: f64,
+    /// Memory guard η in Eq. 4 (predicted peak + δ_M ≤ η·M_cap).
+    pub eta: f64,
+    /// Multiplicative backoff γ for b on tail/memory triggers.
+    pub gamma: f64,
+    /// Tail trigger τ: decrease when p95/p50 > τ.
+    pub tau: f64,
+    /// Hysteresis m: consecutive triggers required before acting.
+    pub hysteresis_m: u32,
+    /// Proportional gains λ_b, λ_k in Eq. 6.
+    pub lambda_b: f64,
+    pub lambda_k: f64,
+    /// Target CPU utilization ρ* (fraction of the CPU cap).
+    pub rho_star: f64,
+    /// EWMA smoothing factor ρ for control signals (§III: 0.2).
+    pub rho_smooth: f64,
+    /// Headroom dead-band ε in the pseudocode (increase only if h > ε).
+    pub eps: f64,
+    /// Bounds / steps.
+    pub b_min: usize,
+    pub b_max: usize,
+    pub b_step_min: usize,
+    pub k_min: usize,
+    /// Rolling window (batches) for p50/p95 estimates.
+    pub window: usize,
+    /// Residual window for the δ_M prediction interval (§VIII: 20).
+    pub delta_m_window: usize,
+    /// z-score for the (1-α) prediction interval (1.96 ≈ 95%).
+    pub z_alpha: f64,
+    /// Queue-depth multiple of k that triggers backpressure.
+    pub backpressure_depth: f64,
+    /// Straggler threshold: batch older than this multiple of p50.
+    pub straggler_factor: f64,
+}
+
+impl Default for Policy {
+    fn default() -> Self {
+        Policy {
+            kappa: 0.7,
+            eta: 0.9,
+            gamma: 0.6,
+            tau: 2.0,
+            hysteresis_m: 2,
+            lambda_b: 0.2,
+            lambda_k: 0.2,
+            rho_star: 0.85,
+            rho_smooth: 0.2,
+            eps: 0.05,
+            b_min: 5_000,
+            b_max: 2_000_000,
+            b_step_min: 1_000,
+            k_min: 1,
+            window: 64,
+            delta_m_window: 20,
+            z_alpha: 1.96,
+            backpressure_depth: 4.0,
+            straggler_factor: 4.0,
+        }
+    }
+}
+
+/// Which backend to use (Auto = paper's working-set gating, Eq. 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendChoice {
+    Auto,
+    InMem,
+    DaskLike,
+    Sim,
+}
+
+impl BackendChoice {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(BackendChoice::Auto),
+            "inmem" | "in-mem" | "in_memory" => Ok(BackendChoice::InMem),
+            "dask" | "dasklike" | "dask-like" => Ok(BackendChoice::DaskLike),
+            "sim" | "simulator" => Ok(BackendChoice::Sim),
+            other => Err(format!("unknown backend {other:?}")),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendChoice::Auto => "auto",
+            BackendChoice::InMem => "inmem",
+            BackendChoice::DaskLike => "dasklike",
+            BackendChoice::Sim => "sim",
+        }
+    }
+}
+
+/// Which policy drives (b, k) — the paper's adaptive controller or one of
+/// the §V baselines.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PolicyKind {
+    Adaptive,
+    /// Fixed (b, k) for the whole job.
+    Fixed { b: usize, k: usize },
+    /// Two-stage warm-up heuristic: probe a small grid, then lock best.
+    Heuristic,
+}
+
+impl PolicyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Adaptive => "adaptive",
+            PolicyKind::Fixed { .. } => "fixed",
+            PolicyKind::Heuristic => "heuristic",
+        }
+    }
+}
+
+/// Numeric Δ execution path: PJRT artifacts (the three-layer hot path) or
+/// the native rust fallback (identical semantics; used for cross-checks
+/// and when artifacts are absent).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeltaPath {
+    Pjrt,
+    Native,
+    /// Run both and assert agreement (slow; tests/debugging).
+    Check,
+}
+
+/// Engine-level options.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub delta_path: DeltaPath,
+    /// Default absolute/relative tolerance for numeric comparators.
+    pub atol: f64,
+    pub rtol: f64,
+    /// Case-insensitive string compare.
+    pub string_ci: bool,
+    /// Timestamp tolerance in microseconds.
+    pub ts_tolerance_us: i64,
+    /// Directory with AOT artifacts (manifest.json + *.hlo.txt).
+    pub artifact_dir: String,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            delta_path: DeltaPath::Native,
+            atol: 0.0,
+            rtol: 0.0,
+            string_ci: false,
+            ts_tolerance_us: 0,
+            artifact_dir: "artifacts".into(),
+        }
+    }
+}
+
+/// Top-level scheduler configuration.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    pub caps: Caps,
+    pub policy: Policy,
+    pub policy_kind: PolicyKind,
+    pub backend: BackendChoice,
+    pub engine: EngineConfig,
+    pub seed: u64,
+    /// Telemetry output (JSON lines); None = disabled.
+    pub telemetry_path: Option<String>,
+    /// Pre-flight sample: min(1e6 rows, 1% of job) — paper §III.
+    pub preflight_max_rows: usize,
+    pub preflight_fraction: f64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            caps: Caps::default(),
+            policy: Policy::default(),
+            policy_kind: PolicyKind::Adaptive,
+            backend: BackendChoice::Auto,
+            engine: EngineConfig::default(),
+            seed: 0,
+            telemetry_path: None,
+            preflight_max_rows: 1_000_000,
+            preflight_fraction: 0.01,
+        }
+    }
+}
+
+impl SchedulerConfig {
+    /// Load from a TOML-subset file; unknown keys are an error (configs
+    /// are part of the reproducibility surface — typos must not pass
+    /// silently).
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {path}: {e}"))?;
+        Self::from_toml_str(&text)
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<Self, String> {
+        let doc = toml_lite::parse(text)?;
+        let mut cfg = SchedulerConfig::default();
+        apply_doc(&mut cfg, &doc)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        let p = &self.policy;
+        for (name, v, lo, hi) in [
+            ("kappa", p.kappa, 0.0, 1.0),
+            ("eta", p.eta, 0.0, 1.0),
+            ("gamma", p.gamma, 0.0, 1.0),
+            ("rho_star", p.rho_star, 0.0, 1.0),
+            ("rho_smooth", p.rho_smooth, 0.0, 1.0),
+            ("lambda_b", p.lambda_b, 0.0, 1.0),
+            ("lambda_k", p.lambda_k, 0.0, 1.0),
+        ] {
+            if !(v > lo && v < hi) {
+                return Err(format!("{name}={v} must be in ({lo}, {hi})"));
+            }
+        }
+        if p.tau <= 1.0 {
+            return Err(format!("tau={} must be > 1", p.tau));
+        }
+        if p.b_min == 0 || p.b_min > p.b_max {
+            return Err("b_min must be in [1, b_max]".into());
+        }
+        if self.caps.cpu_cap == 0 || self.caps.mem_cap_bytes == 0 {
+            return Err("caps must be positive".into());
+        }
+        if p.k_min == 0 || p.k_min > self.caps.cpu_cap {
+            return Err("k_min must be in [1, cpu_cap]".into());
+        }
+        Ok(())
+    }
+}
+
+fn apply_doc(cfg: &mut SchedulerConfig, doc: &TomlDoc) -> Result<(), String> {
+    for (section, kv) in doc {
+        for (key, val) in kv {
+            let full = if section.is_empty() {
+                key.clone()
+            } else {
+                format!("{section}.{key}")
+            };
+            apply_key(cfg, &full, val)?;
+        }
+    }
+    Ok(())
+}
+
+fn apply_key(
+    cfg: &mut SchedulerConfig,
+    key: &str,
+    val: &toml_lite::TomlValue,
+) -> Result<(), String> {
+    use toml_lite::TomlValue as V;
+    let f = |v: &V| v.as_f64().ok_or_else(|| format!("{key}: expected number"));
+    let i = |v: &V| {
+        v.as_i64()
+            .and_then(|x| usize::try_from(x).ok())
+            .ok_or_else(|| format!("{key}: expected non-negative integer"))
+    };
+    let p = &mut cfg.policy;
+    match key {
+        "seed" => cfg.seed = i(val)? as u64,
+        "telemetry" => {
+            cfg.telemetry_path =
+                Some(val.as_str().ok_or("telemetry: expected string")?.into())
+        }
+        "backend" => {
+            cfg.backend = BackendChoice::parse(
+                val.as_str().ok_or("backend: expected string")?,
+            )?
+        }
+        "caps.mem_cap" => {
+            cfg.caps.mem_cap_bytes = match val {
+                V::Str(s) => bytes::parse(s)?,
+                other => other
+                    .as_i64()
+                    .map(|x| x as u64)
+                    .ok_or("caps.mem_cap: expected size")?,
+            }
+        }
+        "caps.cpu_cap" => cfg.caps.cpu_cap = i(val)?,
+        "policy.kappa" => p.kappa = f(val)?,
+        "policy.eta" => p.eta = f(val)?,
+        "policy.gamma" => p.gamma = f(val)?,
+        "policy.tau" => p.tau = f(val)?,
+        "policy.hysteresis_m" => p.hysteresis_m = i(val)? as u32,
+        "policy.lambda_b" => p.lambda_b = f(val)?,
+        "policy.lambda_k" => p.lambda_k = f(val)?,
+        "policy.rho_star" => p.rho_star = f(val)?,
+        "policy.rho_smooth" => p.rho_smooth = f(val)?,
+        "policy.eps" => p.eps = f(val)?,
+        "policy.b_min" => p.b_min = i(val)?,
+        "policy.b_max" => p.b_max = i(val)?,
+        "policy.b_step_min" => p.b_step_min = i(val)?,
+        "policy.k_min" => p.k_min = i(val)?,
+        "policy.window" => p.window = i(val)?,
+        "policy.delta_m_window" => p.delta_m_window = i(val)?,
+        "policy.z_alpha" => p.z_alpha = f(val)?,
+        "policy.backpressure_depth" => p.backpressure_depth = f(val)?,
+        "policy.straggler_factor" => p.straggler_factor = f(val)?,
+        "engine.atol" => cfg.engine.atol = f(val)?,
+        "engine.rtol" => cfg.engine.rtol = f(val)?,
+        "engine.string_ci" => {
+            cfg.engine.string_ci =
+                val.as_bool().ok_or("engine.string_ci: expected bool")?
+        }
+        "engine.ts_tolerance_us" => {
+            cfg.engine.ts_tolerance_us = val
+                .as_i64()
+                .ok_or("engine.ts_tolerance_us: expected integer")?
+        }
+        "engine.artifact_dir" => {
+            cfg.engine.artifact_dir = val
+                .as_str()
+                .ok_or("engine.artifact_dir: expected string")?
+                .into()
+        }
+        "engine.delta_path" => {
+            cfg.engine.delta_path =
+                match val.as_str().ok_or("engine.delta_path: string")? {
+                    "pjrt" => DeltaPath::Pjrt,
+                    "native" => DeltaPath::Native,
+                    "check" => DeltaPath::Check,
+                    o => return Err(format!("unknown delta_path {o:?}")),
+                }
+        }
+        other => return Err(format!("unknown config key {other:?}")),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_policy() {
+        let c = SchedulerConfig::default();
+        assert_eq!(c.policy.kappa, 0.7);
+        assert_eq!(c.policy.eta, 0.9);
+        assert_eq!(c.policy.gamma, 0.6);
+        assert_eq!(c.policy.tau, 2.0);
+        assert_eq!(c.policy.hysteresis_m, 2);
+        assert_eq!(c.policy.rho_star, 0.85);
+        assert_eq!(c.policy.rho_smooth, 0.2);
+        assert_eq!(c.caps.mem_cap_bytes, 64 * bytes::GB);
+        assert_eq!(c.caps.cpu_cap, 32);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn loads_toml_overrides() {
+        let cfg = SchedulerConfig::from_toml_str(
+            r#"
+            seed = 9
+            backend = "dask"
+            [caps]
+            mem_cap = "32GB"
+            cpu_cap = 16
+            [policy]
+            eta = 0.8
+            kappa = 0.6
+            [engine]
+            atol = 0.001
+            delta_path = "pjrt"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.backend, BackendChoice::DaskLike);
+        assert_eq!(cfg.caps.mem_cap_bytes, 32 * bytes::GB);
+        assert_eq!(cfg.caps.cpu_cap, 16);
+        assert_eq!(cfg.policy.eta, 0.8);
+        assert_eq!(cfg.engine.atol, 0.001);
+        assert_eq!(cfg.engine.delta_path, DeltaPath::Pjrt);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(SchedulerConfig::from_toml_str("nope = 1").is_err());
+        assert!(SchedulerConfig::from_toml_str("[policy]\ntypo_eta = 0.5")
+            .is_err());
+    }
+
+    #[test]
+    fn invalid_ranges_rejected() {
+        assert!(SchedulerConfig::from_toml_str("[policy]\neta = 1.5").is_err());
+        assert!(SchedulerConfig::from_toml_str("[policy]\ntau = 0.5").is_err());
+        assert!(SchedulerConfig::from_toml_str("[caps]\ncpu_cap = 0").is_err());
+    }
+
+    #[test]
+    fn backend_parse_aliases() {
+        assert_eq!(BackendChoice::parse("in-mem").unwrap(),
+                   BackendChoice::InMem);
+        assert_eq!(BackendChoice::parse("DASK").unwrap(),
+                   BackendChoice::DaskLike);
+        assert!(BackendChoice::parse("gpu").is_err());
+    }
+}

@@ -1,0 +1,494 @@
+//! Typed columnar storage with null bitmaps.
+//!
+//! Strings use an offsets+bytes arena (not Vec<String>) so that memory
+//! accounting is tight and slicing is cheap-ish; everything reports its
+//! heap footprint exactly — the scheduler's memory model is calibrated
+//! against these numbers.
+
+use crate::data::schema::ColumnType;
+
+/// Packed validity bitmap (1 = present, 0 = null).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Bitmap {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl Bitmap {
+    pub fn new_set(len: usize) -> Self {
+        let mut b = Bitmap { words: vec![!0u64; len.div_ceil(64)], len };
+        b.trim_tail();
+        b
+    }
+    pub fn new_unset(len: usize) -> Self {
+        Bitmap { words: vec![0u64; len.div_ceil(64)], len }
+    }
+    fn trim_tail(&mut self) {
+        let tail = self.len % 64;
+        if tail != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << tail) - 1;
+            }
+        }
+    }
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        if v {
+            self.words[i / 64] |= 1 << (i % 64);
+        } else {
+            self.words[i / 64] &= !(1 << (i % 64));
+        }
+    }
+    pub fn push(&mut self, v: bool) {
+        if self.len % 64 == 0 {
+            self.words.push(0);
+        }
+        self.len += 1;
+        self.set(self.len - 1, v);
+    }
+    pub fn count_set(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+    pub fn slice(&self, offset: usize, len: usize) -> Bitmap {
+        let mut out = Bitmap::new_unset(len);
+        for i in 0..len {
+            out.set(i, self.get(offset + i));
+        }
+        out
+    }
+    pub fn heap_bytes(&self) -> usize {
+        self.words.capacity() * 8
+    }
+}
+
+/// String arena column: offsets into a shared byte buffer.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct StrData {
+    pub offsets: Vec<u32>, // len + 1 entries
+    pub bytes: Vec<u8>,
+}
+
+impl StrData {
+    pub fn new() -> Self {
+        StrData { offsets: vec![0], bytes: Vec::new() }
+    }
+    pub fn len(&self) -> usize {
+        self.offsets.len() - 1
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn push(&mut self, s: &str) {
+        self.bytes.extend_from_slice(s.as_bytes());
+        self.offsets.push(self.bytes.len() as u32);
+    }
+    #[inline]
+    pub fn get(&self, i: usize) -> &str {
+        let lo = self.offsets[i] as usize;
+        let hi = self.offsets[i + 1] as usize;
+        // Arena only ever receives &str pushes, so this is valid UTF-8.
+        unsafe { std::str::from_utf8_unchecked(&self.bytes[lo..hi]) }
+    }
+    pub fn slice(&self, offset: usize, len: usize) -> StrData {
+        let mut out = StrData::new();
+        out.bytes.reserve(
+            self.offsets[offset + len] as usize - self.offsets[offset] as usize,
+        );
+        for i in 0..len {
+            out.push(self.get(offset + i));
+        }
+        out
+    }
+    pub fn heap_bytes(&self) -> usize {
+        self.offsets.capacity() * 4 + self.bytes.capacity()
+    }
+}
+
+/// Typed column values (parallel to `ColumnType`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Values {
+    I64(Vec<i64>),
+    F64(Vec<f64>),
+    Str(StrData),
+    Bool(Bitmap),
+    Date(Vec<i32>),
+    Ts(Vec<i64>),
+    Dec { mantissa: Vec<i128>, scale: u8 },
+}
+
+impl Values {
+    pub fn len(&self) -> usize {
+        match self {
+            Values::I64(v) => v.len(),
+            Values::F64(v) => v.len(),
+            Values::Str(s) => s.len(),
+            Values::Bool(b) => b.len(),
+            Values::Date(v) => v.len(),
+            Values::Ts(v) => v.len(),
+            Values::Dec { mantissa, .. } => mantissa.len(),
+        }
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn column_type(&self) -> ColumnType {
+        match self {
+            Values::I64(_) => ColumnType::Int64,
+            Values::F64(_) => ColumnType::Float64,
+            Values::Str(_) => ColumnType::Utf8,
+            Values::Bool(_) => ColumnType::Bool,
+            Values::Date(_) => ColumnType::Date,
+            Values::Ts(_) => ColumnType::Timestamp,
+            Values::Dec { scale, .. } => ColumnType::Decimal { scale: *scale },
+        }
+    }
+    pub fn heap_bytes(&self) -> usize {
+        match self {
+            Values::I64(v) => v.capacity() * 8,
+            Values::F64(v) => v.capacity() * 8,
+            Values::Str(s) => s.heap_bytes(),
+            Values::Bool(b) => b.heap_bytes(),
+            Values::Date(v) => v.capacity() * 4,
+            Values::Ts(v) => v.capacity() * 8,
+            Values::Dec { mantissa, .. } => mantissa.capacity() * 16,
+        }
+    }
+    pub fn slice(&self, offset: usize, len: usize) -> Values {
+        match self {
+            Values::I64(v) => Values::I64(v[offset..offset + len].to_vec()),
+            Values::F64(v) => Values::F64(v[offset..offset + len].to_vec()),
+            Values::Str(s) => Values::Str(s.slice(offset, len)),
+            Values::Bool(b) => Values::Bool(b.slice(offset, len)),
+            Values::Date(v) => Values::Date(v[offset..offset + len].to_vec()),
+            Values::Ts(v) => Values::Ts(v[offset..offset + len].to_vec()),
+            Values::Dec { mantissa, scale } => Values::Dec {
+                mantissa: mantissa[offset..offset + len].to_vec(),
+                scale: *scale,
+            },
+        }
+    }
+}
+
+/// A column: typed values + validity bitmap.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Column {
+    pub values: Values,
+    pub validity: Bitmap,
+}
+
+/// Dynamically-typed cell view (for row sampling, CSV io, debugging —
+/// never on the per-cell hot path).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Cell<'a> {
+    Null,
+    I64(i64),
+    F64(f64),
+    Str(&'a str),
+    Bool(bool),
+    Date(i32),
+    Ts(i64),
+    Dec { mantissa: i128, scale: u8 },
+}
+
+impl Column {
+    pub fn new(values: Values) -> Self {
+        let n = values.len();
+        Column { values, validity: Bitmap::new_set(n) }
+    }
+    pub fn with_validity(values: Values, validity: Bitmap) -> Self {
+        assert_eq!(values.len(), validity.len());
+        Column { values, validity }
+    }
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+    pub fn column_type(&self) -> ColumnType {
+        self.values.column_type()
+    }
+    #[inline]
+    pub fn is_null(&self, i: usize) -> bool {
+        !self.validity.get(i)
+    }
+    pub fn null_count(&self) -> usize {
+        self.len() - self.validity.count_set()
+    }
+    pub fn heap_bytes(&self) -> usize {
+        self.values.heap_bytes() + self.validity.heap_bytes()
+    }
+    pub fn slice(&self, offset: usize, len: usize) -> Column {
+        Column {
+            values: self.values.slice(offset, len),
+            validity: self.validity.slice(offset, len),
+        }
+    }
+
+    pub fn cell(&self, i: usize) -> Cell<'_> {
+        if self.is_null(i) {
+            return Cell::Null;
+        }
+        match &self.values {
+            Values::I64(v) => Cell::I64(v[i]),
+            Values::F64(v) => Cell::F64(v[i]),
+            Values::Str(s) => Cell::Str(s.get(i)),
+            Values::Bool(b) => Cell::Bool(b.get(i)),
+            Values::Date(v) => Cell::Date(v[i]),
+            Values::Ts(v) => Cell::Ts(v[i]),
+            Values::Dec { mantissa, scale } => {
+                Cell::Dec { mantissa: mantissa[i], scale: *scale }
+            }
+        }
+    }
+
+    /// Numeric view of a cell as f64 (None for null / non-numeric).
+    /// This is the coercion the Δ numeric path uses for cross-type
+    /// compares (int vs float vs decimal).
+    pub fn numeric(&self, i: usize) -> Option<f64> {
+        if self.is_null(i) {
+            return None;
+        }
+        match &self.values {
+            Values::I64(v) => Some(v[i] as f64),
+            Values::F64(v) => Some(v[i]),
+            Values::Dec { mantissa, scale } => {
+                Some(mantissa[i] as f64 / 10f64.powi(*scale as i32))
+            }
+            _ => None,
+        }
+    }
+
+    /// Measured average value payload in bytes (exact for strings; used
+    /// by the pre-flight profiler's Ŵ).
+    pub fn avg_value_bytes(&self) -> f64 {
+        match &self.values {
+            Values::Str(s) => {
+                if s.len() == 0 {
+                    0.0
+                } else {
+                    s.bytes.len() as f64 / s.len() as f64 + 4.0
+                }
+            }
+            other => other.column_type().value_bytes() as f64,
+        }
+    }
+}
+
+/// Column builder used by generators and CSV decode.
+#[derive(Debug)]
+pub struct ColumnBuilder {
+    ty: ColumnType,
+    values: Values,
+    validity: Bitmap,
+}
+
+impl ColumnBuilder {
+    pub fn new(ty: ColumnType) -> Self {
+        let values = match ty {
+            ColumnType::Int64 => Values::I64(Vec::new()),
+            ColumnType::Float64 => Values::F64(Vec::new()),
+            ColumnType::Utf8 => Values::Str(StrData::new()),
+            ColumnType::Bool => Values::Bool(Bitmap::default()),
+            ColumnType::Date => Values::Date(Vec::new()),
+            ColumnType::Timestamp => Values::Ts(Vec::new()),
+            ColumnType::Decimal { scale } => {
+                Values::Dec { mantissa: Vec::new(), scale }
+            }
+        };
+        ColumnBuilder { ty, values, validity: Bitmap::default() }
+    }
+
+    pub fn push_null(&mut self) {
+        match &mut self.values {
+            Values::I64(v) => v.push(0),
+            Values::F64(v) => v.push(0.0),
+            Values::Str(s) => s.push(""),
+            Values::Bool(b) => b.push(false),
+            Values::Date(v) => v.push(0),
+            Values::Ts(v) => v.push(0),
+            Values::Dec { mantissa, .. } => mantissa.push(0),
+        }
+        self.validity.push(false);
+    }
+
+    pub fn push_i64(&mut self, x: i64) {
+        match &mut self.values {
+            Values::I64(v) => v.push(x),
+            _ => panic!("push_i64 on {:?}", self.ty),
+        }
+        self.validity.push(true);
+    }
+    pub fn push_f64(&mut self, x: f64) {
+        match &mut self.values {
+            Values::F64(v) => v.push(x),
+            _ => panic!("push_f64 on {:?}", self.ty),
+        }
+        self.validity.push(true);
+    }
+    pub fn push_str(&mut self, s: &str) {
+        match &mut self.values {
+            Values::Str(d) => d.push(s),
+            _ => panic!("push_str on {:?}", self.ty),
+        }
+        self.validity.push(true);
+    }
+    pub fn push_bool(&mut self, b: bool) {
+        match &mut self.values {
+            Values::Bool(d) => d.push(b),
+            _ => panic!("push_bool on {:?}", self.ty),
+        }
+        self.validity.push(true);
+    }
+    pub fn push_date(&mut self, days: i32) {
+        match &mut self.values {
+            Values::Date(v) => v.push(days),
+            _ => panic!("push_date on {:?}", self.ty),
+        }
+        self.validity.push(true);
+    }
+    pub fn push_ts(&mut self, us: i64) {
+        match &mut self.values {
+            Values::Ts(v) => v.push(us),
+            _ => panic!("push_ts on {:?}", self.ty),
+        }
+        self.validity.push(true);
+    }
+    pub fn push_dec(&mut self, mantissa: i128) {
+        match &mut self.values {
+            Values::Dec { mantissa: m, .. } => m.push(mantissa),
+            _ => panic!("push_dec on {:?}", self.ty),
+        }
+        self.validity.push(true);
+    }
+
+    pub fn push_cell(&mut self, cell: &Cell) {
+        match cell {
+            Cell::Null => self.push_null(),
+            Cell::I64(x) => self.push_i64(*x),
+            Cell::F64(x) => self.push_f64(*x),
+            Cell::Str(s) => self.push_str(s),
+            Cell::Bool(b) => self.push_bool(*b),
+            Cell::Date(d) => self.push_date(*d),
+            Cell::Ts(t) => self.push_ts(*t),
+            Cell::Dec { mantissa, .. } => self.push_dec(*mantissa),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn finish(self) -> Column {
+        Column::with_validity(self.values, self.validity)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitmap_set_get_push() {
+        let mut b = Bitmap::new_unset(70);
+        b.set(0, true);
+        b.set(69, true);
+        assert!(b.get(0) && b.get(69) && !b.get(35));
+        assert_eq!(b.count_set(), 2);
+        b.push(true);
+        assert_eq!(b.len(), 71);
+        assert!(b.get(70));
+    }
+
+    #[test]
+    fn bitmap_new_set_count() {
+        let b = Bitmap::new_set(100);
+        assert_eq!(b.count_set(), 100);
+        let s = b.slice(10, 50);
+        assert_eq!(s.count_set(), 50);
+    }
+
+    #[test]
+    fn str_arena_roundtrip() {
+        let mut s = StrData::new();
+        s.push("hello");
+        s.push("");
+        s.push("wörld");
+        assert_eq!(s.get(0), "hello");
+        assert_eq!(s.get(1), "");
+        assert_eq!(s.get(2), "wörld");
+        let sl = s.slice(1, 2);
+        assert_eq!(sl.get(1), "wörld");
+    }
+
+    #[test]
+    fn builder_roundtrip_all_types() {
+        let mut b = ColumnBuilder::new(ColumnType::Float64);
+        b.push_f64(1.5);
+        b.push_null();
+        b.push_f64(-2.0);
+        let c = b.finish();
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.cell(0), Cell::F64(1.5));
+        assert_eq!(c.cell(1), Cell::Null);
+        assert_eq!(c.null_count(), 1);
+        assert_eq!(c.numeric(2), Some(-2.0));
+        assert_eq!(c.numeric(1), None);
+
+        let mut b = ColumnBuilder::new(ColumnType::Decimal { scale: 2 });
+        b.push_dec(12345); // 123.45
+        let c = b.finish();
+        assert_eq!(c.numeric(0), Some(123.45));
+
+        let mut b = ColumnBuilder::new(ColumnType::Utf8);
+        b.push_str("x");
+        let c = b.finish();
+        assert_eq!(c.cell(0), Cell::Str("x"));
+        assert_eq!(c.numeric(0), None);
+    }
+
+    #[test]
+    fn slice_preserves_nulls_and_values() {
+        let mut b = ColumnBuilder::new(ColumnType::Int64);
+        for i in 0..100 {
+            if i % 7 == 0 {
+                b.push_null();
+            } else {
+                b.push_i64(i);
+            }
+        }
+        let c = b.finish();
+        let s = c.slice(10, 20);
+        assert_eq!(s.len(), 20);
+        for j in 0..20 {
+            assert_eq!(s.cell(j), c.cell(10 + j));
+        }
+    }
+
+    #[test]
+    fn heap_bytes_tracks_payload() {
+        let mut b = ColumnBuilder::new(ColumnType::Utf8);
+        for _ in 0..1000 {
+            b.push_str("0123456789");
+        }
+        let c = b.finish();
+        assert!(c.heap_bytes() >= 10_000);
+        assert!((c.avg_value_bytes() - 14.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,289 @@
+//! Synthetic workload generator (paper §V: "synthetic tables with mixed
+//! types and sizes {1,5,10,20}M rows per side").
+//!
+//! Generates a pair (A, B) where B is derived from A by controlled
+//! perturbation: cell-level value changes, row deletions (→ REMOVED) and
+//! row insertions (→ ADDED). Keys are even integers in A; inserted rows
+//! take odd keys so both sides stay key-sorted — the range partitioner
+//! relies on that ordering, exactly like SmartDiff's PK-aligned batches.
+
+use crate::data::column::Cell;
+use crate::data::schema::{ColumnType, Schema};
+use crate::data::table::{mixed_schema, Table, TableBuilder};
+use crate::util::rng::Rng;
+
+/// Perturbation + shape spec for a synthetic pair.
+#[derive(Debug, Clone)]
+pub struct GenSpec {
+    /// Rows in table A.
+    pub rows: usize,
+    /// Payload columns beyond the key (mixed types, see `mixed_schema`).
+    pub extra_cols: usize,
+    /// Probability a payload cell is NULL.
+    pub null_rate: f64,
+    /// Probability an aligned row has at least one changed cell.
+    pub change_rate: f64,
+    /// Fraction of A-rows deleted in B (REMOVED verdicts).
+    pub remove_rate: f64,
+    /// Inserted rows in B as a fraction of |A| (ADDED verdicts).
+    pub add_rate: f64,
+    /// Relative magnitude of numeric perturbations.
+    pub value_noise: f64,
+    /// Mean string payload length (row width Ŵ knob for the κ ablation:
+    /// "narrow rows" ≈ 8, wide ≈ 64).
+    pub str_len: usize,
+    pub seed: u64,
+}
+
+impl Default for GenSpec {
+    fn default() -> Self {
+        GenSpec {
+            rows: 10_000,
+            extra_cols: 7,
+            null_rate: 0.03,
+            change_rate: 0.05,
+            remove_rate: 0.01,
+            add_rate: 0.01,
+            value_noise: 0.1,
+            str_len: 12,
+            seed: 42,
+        }
+    }
+}
+
+impl GenSpec {
+    pub fn with_rows(mut self, rows: usize) -> Self {
+        self.rows = rows;
+        self
+    }
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+    pub fn schema(&self) -> Schema {
+        mixed_schema(self.extra_cols)
+    }
+}
+
+/// Ground-truth outcome counts implied by the generator, used to verify
+/// engine correctness end-to-end (row-level, not cell-level).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct GenTruth {
+    pub aligned: usize,
+    pub changed_rows: usize,
+    pub removed: usize,
+    pub added: usize,
+}
+
+fn push_random_payload(
+    tb: &mut TableBuilder,
+    schema: &Schema,
+    rng: &mut Rng,
+    spec: &GenSpec,
+) {
+    for (ci, field) in schema.fields.iter().enumerate().skip(1) {
+        if rng.chance(spec.null_rate) {
+            tb.col(ci).push_null();
+            continue;
+        }
+        match field.ty {
+            ColumnType::Int64 => tb.col(ci).push_i64(rng.range_i64(-1_000_000, 1_000_000)),
+            ColumnType::Float64 => tb.col(ci).push_f64(rng.normal_ms(0.0, 100.0)),
+            ColumnType::Utf8 => {
+                let len = (spec.str_len as f64 * rng.uniform(0.5, 1.5)) as usize;
+                let s = rng.alnum(len.max(1));
+                tb.col(ci).push_str(&s);
+            }
+            ColumnType::Bool => tb.col(ci).push_bool(rng.chance(0.5)),
+            ColumnType::Date => tb.col(ci).push_date(rng.range_i64(10_000, 20_000) as i32),
+            ColumnType::Timestamp => {
+                tb.col(ci).push_ts(rng.range_i64(1_500_000_000_000_000, 1_700_000_000_000_000))
+            }
+            ColumnType::Decimal { .. } => {
+                tb.col(ci).push_dec(rng.range_i64(-10_000_000, 10_000_000) as i128)
+            }
+        }
+    }
+}
+
+/// Copy row `i` of `src` into `tb`, perturbing payload cells when
+/// `perturb` fires (at least one cell is always perturbed then).
+fn push_copied_row(
+    tb: &mut TableBuilder,
+    src: &Table,
+    i: usize,
+    rng: &mut Rng,
+    spec: &GenSpec,
+    perturb: bool,
+) {
+    let ncols = src.ncols();
+    // Choose which payload cells to mutate.
+    let mut mutate = vec![false; ncols];
+    if perturb {
+        let target = rng.range_usize(1, ncols);
+        mutate[target] = true;
+        for m in mutate.iter_mut().skip(1) {
+            if rng.chance(0.15) {
+                *m = true;
+            }
+        }
+    }
+    for ci in 0..ncols {
+        let cell = src.column(ci).cell(i);
+        if ci == 0 || !mutate[ci] {
+            tb.col(ci).push_cell(&cell);
+            continue;
+        }
+        // Mutate: null flip or value change.
+        if matches!(cell, Cell::Null) {
+            // null -> value
+            match src.schema.fields[ci].ty {
+                ColumnType::Int64 => tb.col(ci).push_i64(rng.range_i64(0, 1000)),
+                ColumnType::Float64 => tb.col(ci).push_f64(rng.normal()),
+                ColumnType::Utf8 => tb.col(ci).push_str("filled"),
+                ColumnType::Bool => tb.col(ci).push_bool(true),
+                ColumnType::Date => tb.col(ci).push_date(12_345),
+                ColumnType::Timestamp => tb.col(ci).push_ts(1_600_000_000_000_000),
+                ColumnType::Decimal { .. } => tb.col(ci).push_dec(100),
+            }
+            continue;
+        }
+        if rng.chance(0.05) {
+            tb.col(ci).push_null(); // value -> null
+            continue;
+        }
+        match cell {
+            Cell::I64(x) => tb.col(ci).push_i64(x + rng.range_i64(1, 100)),
+            Cell::F64(x) => tb
+                .col(ci)
+                .push_f64(x + spec.value_noise * (x.abs() + 1.0) * (rng.f64() + 0.1)),
+            Cell::Str(s) => {
+                let mut t = s.to_string();
+                t.push('~');
+                tb.col(ci).push_str(&t);
+            }
+            Cell::Bool(b) => tb.col(ci).push_bool(!b),
+            Cell::Date(d) => tb.col(ci).push_date(d + rng.range_i64(1, 30) as i32),
+            Cell::Ts(t) => tb.col(ci).push_ts(t + rng.range_i64(1_000_000, 3_600_000_000)),
+            Cell::Dec { mantissa, .. } => {
+                tb.col(ci).push_dec(mantissa + rng.range_i64(1, 10_000) as i128)
+            }
+            Cell::Null => unreachable!(),
+        }
+    }
+}
+
+/// Generate the (A, B) pair plus ground truth.
+pub fn generate_pair(spec: &GenSpec) -> (Table, Table, GenTruth) {
+    let schema = spec.schema();
+    let mut rng = Rng::new(spec.seed);
+
+    // Table A: keys 0, 2, 4, ... (even), sorted.
+    let mut ta = TableBuilder::new(schema.clone());
+    for i in 0..spec.rows {
+        ta.col(0).push_i64(2 * i as i64);
+        push_random_payload(&mut ta, &schema, &mut rng, spec);
+    }
+    let a = ta.finish();
+
+    // Table B: walk A in key order; delete, copy/perturb, and insert.
+    let mut truth = GenTruth::default();
+    let mut tb = TableBuilder::new(schema.clone());
+    let mut brng = rng.fork(0xB);
+    for i in 0..spec.rows {
+        if brng.chance(spec.remove_rate) {
+            truth.removed += 1;
+            continue;
+        }
+        let perturb = brng.chance(spec.change_rate);
+        push_copied_row(&mut tb, &a, i, &mut brng, spec, perturb);
+        truth.aligned += 1;
+        if perturb {
+            truth.changed_rows += 1;
+        }
+        if brng.chance(spec.add_rate) {
+            // Insert a fresh row with the odd key 2i+1 (keeps order).
+            tb.col(0).push_i64(2 * i as i64 + 1);
+            push_random_payload(&mut tb, &schema, &mut brng, spec);
+            truth.added += 1;
+        }
+    }
+    let b = tb.finish();
+    (a, b, truth)
+}
+
+/// Generate a single standalone table (profiling / io tests).
+pub fn generate_table(spec: &GenSpec) -> Table {
+    generate_pair(spec).0
+}
+
+/// The paper's four synthetic workload sizes, in rows per side.
+pub const PAPER_WORKLOADS: [(&str, usize); 4] = [
+    ("1M", 1_000_000),
+    ("5M", 5_000_000),
+    ("10M", 10_000_000),
+    ("20M", 20_000_000),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> GenSpec {
+        GenSpec { rows: 2_000, seed: 7, ..GenSpec::default() }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (a1, b1, t1) = generate_pair(&small());
+        let (a2, b2, t2) = generate_pair(&small());
+        assert_eq!(a1, a2);
+        assert_eq!(b1, b2);
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn truth_accounts_for_all_rows() {
+        let spec = small();
+        let (a, b, t) = generate_pair(&spec);
+        assert_eq!(a.nrows(), spec.rows);
+        assert_eq!(t.aligned + t.removed, a.nrows());
+        assert_eq!(b.nrows(), t.aligned + t.added);
+        assert!(t.changed_rows > 0 && t.removed > 0 && t.added > 0);
+    }
+
+    #[test]
+    fn keys_sorted_both_sides() {
+        let (a, b, _) = generate_pair(&small());
+        for t in [&a, &b] {
+            let col = t.column(0);
+            let mut prev = i64::MIN;
+            for i in 0..t.nrows() {
+                let k = match col.cell(i) {
+                    Cell::I64(k) => k,
+                    other => panic!("bad key {other:?}"),
+                };
+                assert!(k > prev, "keys must be strictly increasing");
+                prev = k;
+            }
+        }
+    }
+
+    #[test]
+    fn unperturbed_rows_identical() {
+        let mut spec = small();
+        spec.change_rate = 0.0;
+        spec.remove_rate = 0.0;
+        spec.add_rate = 0.0;
+        let (a, b, t) = generate_pair(&spec);
+        assert_eq!(a, b);
+        assert_eq!(t.changed_rows, 0);
+    }
+
+    #[test]
+    fn str_len_controls_width() {
+        let narrow = generate_table(&GenSpec { str_len: 8, rows: 500, ..small() });
+        let wide = generate_table(&GenSpec { str_len: 64, rows: 500, ..small() });
+        assert!(wide.measured_row_bytes() > narrow.measured_row_bytes() + 20.0);
+    }
+}

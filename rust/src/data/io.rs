@@ -1,0 +1,515 @@
+//! Table sources and chunked I/O with read-bandwidth metering.
+//!
+//! `TableSource` is the engine's only view of input data: batches read
+//! contiguous row ranges (the paper's T_read + decode term), the
+//! pre-flight profiler samples rows and measures effective read
+//! bandwidth (B̂_read). Two implementations:
+//!
+//! * `InMemorySource` — wraps an Arc<Table>; read = columnar slice copy
+//!   (a real decode-buffer allocation, so memory accounting stays honest).
+//! * `CsvFileSource` — row-indexed CSV file; read = seek + parse, which
+//!   exercises the real parse/normalize cost the cost model fits.
+
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::data::column::Cell;
+use crate::data::schema::{ColumnType, Schema};
+use crate::data::table::{Table, TableBuilder};
+
+/// Cumulative read-side counters (shared across worker threads).
+#[derive(Debug, Default)]
+pub struct ReadMeter {
+    bytes: AtomicU64,
+    nanos: AtomicU64,
+}
+
+impl ReadMeter {
+    pub fn record(&self, bytes: u64, elapsed_nanos: u64) {
+        self.bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.nanos.fetch_add(elapsed_nanos, Ordering::Relaxed);
+    }
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+    /// Effective bandwidth in bytes/sec (None until something was read).
+    pub fn bandwidth(&self) -> Option<f64> {
+        let ns = self.nanos.load(Ordering::Relaxed);
+        if ns == 0 {
+            return None;
+        }
+        Some(self.bytes.load(Ordering::Relaxed) as f64 / (ns as f64 * 1e-9))
+    }
+}
+
+/// Abstract input table. Thread-safe: shards read ranges concurrently.
+pub trait TableSource: Send + Sync {
+    fn schema(&self) -> &Schema;
+    fn nrows(&self) -> usize;
+    /// Read+decode a contiguous row range into an owned Table (the
+    /// per-batch decode buffer).
+    fn read_range(&self, offset: usize, len: usize) -> Table;
+    /// Primary-key value at `row` (i64 surrogate/PK; the range
+    /// partitioner requires key-sorted sources). None if keyless.
+    fn key_at(&self, row: usize) -> Option<i64>;
+    /// Total on-storage bytes (working-set estimation input).
+    fn storage_bytes(&self) -> u64;
+    /// Bytes *resident in RAM* for the lifetime of the job (counted
+    /// against the memory cap as the base RSS). In-memory sources pin
+    /// their whole table; file sources only pin their key index.
+    fn resident_bytes(&self) -> u64;
+    /// Read metering for B̂_read estimation.
+    fn meter(&self) -> &ReadMeter;
+}
+
+/// In-memory source.
+pub struct InMemorySource {
+    table: Arc<Table>,
+    key_col: Option<usize>,
+    meter: ReadMeter,
+}
+
+impl InMemorySource {
+    pub fn new(table: Table) -> Self {
+        let key_col = table.schema.key_indices().first().copied();
+        InMemorySource { table: Arc::new(table), key_col, meter: ReadMeter::default() }
+    }
+    pub fn table(&self) -> &Arc<Table> {
+        &self.table
+    }
+}
+
+impl TableSource for InMemorySource {
+    fn schema(&self) -> &Schema {
+        &self.table.schema
+    }
+    fn nrows(&self) -> usize {
+        self.table.nrows()
+    }
+    fn read_range(&self, offset: usize, len: usize) -> Table {
+        let t0 = Instant::now();
+        let out = self.table.slice(offset, len);
+        self.meter
+            .record(out.heap_bytes() as u64, t0.elapsed().as_nanos() as u64);
+        out
+    }
+    fn key_at(&self, row: usize) -> Option<i64> {
+        let kc = self.key_col?;
+        match self.table.column(kc).cell(row) {
+            Cell::I64(k) => Some(k),
+            _ => None,
+        }
+    }
+    fn storage_bytes(&self) -> u64 {
+        self.table.heap_bytes() as u64
+    }
+    fn resident_bytes(&self) -> u64 {
+        self.table.heap_bytes() as u64
+    }
+    fn meter(&self) -> &ReadMeter {
+        &self.meter
+    }
+}
+
+// ---------------- CSV ----------------
+
+fn needs_quote(s: &str) -> bool {
+    s.contains(',') || s.contains('"') || s.contains('\n') || s.contains('\r')
+}
+
+fn write_field(out: &mut impl Write, s: &str) -> std::io::Result<()> {
+    if needs_quote(s) {
+        out.write_all(b"\"")?;
+        out.write_all(s.replace('"', "\"\"").as_bytes())?;
+        out.write_all(b"\"")
+    } else {
+        out.write_all(s.as_bytes())
+    }
+}
+
+/// Write a table as CSV (header = column names; nulls = empty fields;
+/// dates/timestamps/decimal mantissas as integers — lossless).
+pub fn write_csv(table: &Table, path: &Path) -> std::io::Result<()> {
+    let mut out = BufWriter::new(std::fs::File::create(path)?);
+    let names: Vec<&str> =
+        table.schema.fields.iter().map(|f| f.name.as_str()).collect();
+    out.write_all(names.join(",").as_bytes())?;
+    out.write_all(b"\n")?;
+    let mut buf = String::new();
+    for i in 0..table.nrows() {
+        for (ci, col) in table.columns.iter().enumerate() {
+            if ci > 0 {
+                out.write_all(b",")?;
+            }
+            buf.clear();
+            match col.cell(i) {
+                Cell::Null => {}
+                Cell::I64(x) => buf.push_str(&x.to_string()),
+                Cell::F64(x) => {
+                    // {:?} prints round-trippable f64.
+                    buf.push_str(&format!("{x:?}"));
+                }
+                Cell::Str(s) => {
+                    // Quoted empty ("") distinguishes the empty string
+                    // from NULL (bare empty field).
+                    if s.is_empty() {
+                        out.write_all(b"\"\"")?;
+                    } else {
+                        write_field(&mut out, s)?;
+                    }
+                    continue;
+                }
+                Cell::Bool(b) => buf.push_str(if b { "t" } else { "f" }),
+                Cell::Date(d) => buf.push_str(&d.to_string()),
+                Cell::Ts(t) => buf.push_str(&t.to_string()),
+                Cell::Dec { mantissa, .. } => buf.push_str(&mantissa.to_string()),
+            }
+            out.write_all(buf.as_bytes())?;
+        }
+        out.write_all(b"\n")?;
+    }
+    out.flush()
+}
+
+/// Split one CSV record into (field, was_quoted) pairs. The quoted flag
+/// lets the decoder distinguish NULL (bare empty) from "" (quoted empty).
+fn split_record(line: &str) -> Vec<(String, bool)> {
+    let mut fields = Vec::new();
+    let mut cur = String::new();
+    let mut quoted = false;
+    let mut chars = line.chars().peekable();
+    let mut in_quotes = false;
+    while let Some(ch) = chars.next() {
+        match ch {
+            '"' if in_quotes => {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    cur.push('"');
+                } else {
+                    in_quotes = false;
+                }
+            }
+            '"' => {
+                in_quotes = true;
+                quoted = true;
+            }
+            ',' if !in_quotes => {
+                fields.push((std::mem::take(&mut cur), quoted));
+                quoted = false;
+            }
+            c => cur.push(c),
+        }
+    }
+    fields.push((cur, quoted));
+    fields
+}
+
+fn parse_cell(
+    tb: &mut TableBuilder,
+    ci: usize,
+    ty: ColumnType,
+    field: &str,
+    quoted: bool,
+) -> Result<(), String> {
+    if field.is_empty() && !quoted {
+        tb.col(ci).push_null();
+        return Ok(());
+    }
+    let err = |e: &str| format!("col {ci}: bad {ty} value {field:?}: {e}");
+    match ty {
+        ColumnType::Int64 => {
+            tb.col(ci).push_i64(field.parse().map_err(|_| err("int"))?)
+        }
+        ColumnType::Float64 => {
+            tb.col(ci).push_f64(field.parse().map_err(|_| err("float"))?)
+        }
+        ColumnType::Utf8 => tb.col(ci).push_str(field),
+        ColumnType::Bool => match field {
+            "t" => tb.col(ci).push_bool(true),
+            "f" => tb.col(ci).push_bool(false),
+            _ => return Err(err("bool")),
+        },
+        ColumnType::Date => {
+            tb.col(ci).push_date(field.parse().map_err(|_| err("date"))?)
+        }
+        ColumnType::Timestamp => {
+            tb.col(ci).push_ts(field.parse().map_err(|_| err("ts"))?)
+        }
+        ColumnType::Decimal { .. } => {
+            tb.col(ci).push_dec(field.parse().map_err(|_| err("dec"))?)
+        }
+    }
+    Ok(())
+}
+
+/// CSV-backed source with a prebuilt row offset index (byte position of
+/// every row) so `read_range` is a single seek + sequential parse.
+pub struct CsvFileSource {
+    path: PathBuf,
+    schema: Schema,
+    /// Byte offset of row i (data rows; header excluded); last entry = EOF.
+    row_offsets: Vec<u64>,
+    /// Key column values, loaded once (alignment/partitioning state —
+    /// this is part of the paper's "alignment state for f" memory term).
+    keys: Option<Vec<i64>>,
+    meter: ReadMeter,
+}
+
+impl CsvFileSource {
+    pub fn open(path: &Path, schema: Schema) -> Result<Self, String> {
+        let text_file =
+            std::fs::File::open(path).map_err(|e| format!("open: {e}"))?;
+        let mut reader = std::io::BufReader::new(text_file);
+        let mut all = String::new();
+        reader
+            .read_to_string(&mut all)
+            .map_err(|e| format!("read: {e}"))?;
+        // Index row start offsets. CSV quoting may contain newlines; we
+        // track quote parity to only split on record boundaries.
+        let bytes = all.as_bytes();
+        let mut row_offsets = Vec::new();
+        let mut in_quotes = false;
+        let mut line_start = 0u64;
+        let mut first = true;
+        for (i, &b) in bytes.iter().enumerate() {
+            match b {
+                b'"' => in_quotes = !in_quotes,
+                b'\n' if !in_quotes => {
+                    if first {
+                        first = false; // header line
+                    } else {
+                        row_offsets.push(line_start);
+                    }
+                    line_start = i as u64 + 1;
+                }
+                _ => {}
+            }
+        }
+        if line_start < bytes.len() as u64 && !first {
+            row_offsets.push(line_start);
+        }
+        row_offsets.push(bytes.len() as u64);
+
+        let key_col = schema.key_indices().first().copied();
+        let mut src = CsvFileSource {
+            path: path.to_path_buf(),
+            schema,
+            row_offsets,
+            keys: None,
+            meter: ReadMeter::default(),
+        };
+        if let Some(kc) = key_col {
+            let n = src.nrows();
+            if n > 0 {
+                let t = src.read_range(0, n);
+                let mut keys = Vec::with_capacity(n);
+                for i in 0..n {
+                    match t.column(kc).cell(i) {
+                        Cell::I64(k) => keys.push(k),
+                        _ => return Err(format!("row {i}: null/bad key")),
+                    }
+                }
+                src.keys = Some(keys);
+            } else {
+                src.keys = Some(Vec::new());
+            }
+        }
+        Ok(src)
+    }
+
+    fn parse_rows(&self, text: &str, expect: usize) -> Result<Table, String> {
+        let mut tb = TableBuilder::new(self.schema.clone());
+        let mut in_quotes = false;
+        let mut start = 0usize;
+        let bytes = text.as_bytes();
+        let mut parsed = 0usize;
+        for i in 0..bytes.len() {
+            match bytes[i] {
+                b'"' => in_quotes = !in_quotes,
+                b'\n' if !in_quotes => {
+                    let line = &text[start..i];
+                    start = i + 1;
+                    if line.is_empty() {
+                        continue;
+                    }
+                    self.parse_line(&mut tb, line)?;
+                    parsed += 1;
+                }
+                _ => {}
+            }
+        }
+        if start < text.len() {
+            self.parse_line(&mut tb, &text[start..])?;
+            parsed += 1;
+        }
+        if parsed != expect {
+            return Err(format!("expected {expect} rows, parsed {parsed}"));
+        }
+        Ok(tb.finish())
+    }
+
+    fn parse_line(&self, tb: &mut TableBuilder, line: &str) -> Result<(), String> {
+        let line = line.strip_suffix('\r').unwrap_or(line);
+        let fields = split_record(line);
+        if fields.len() != self.schema.len() {
+            return Err(format!(
+                "row has {} fields, schema {}",
+                fields.len(),
+                self.schema.len()
+            ));
+        }
+        for (ci, (field, quoted)) in fields.iter().enumerate() {
+            parse_cell(tb, ci, self.schema.fields[ci].ty, field, *quoted)?;
+        }
+        Ok(())
+    }
+}
+
+impl TableSource for CsvFileSource {
+    fn schema(&self) -> &Schema {
+        &self.schema
+    }
+    fn nrows(&self) -> usize {
+        self.row_offsets.len() - 1
+    }
+    fn read_range(&self, offset: usize, len: usize) -> Table {
+        assert!(offset + len < self.row_offsets.len(), "range out of bounds");
+        if len == 0 {
+            return Table::empty(self.schema.clone());
+        }
+        let t0 = Instant::now();
+        let lo = self.row_offsets[offset];
+        let hi = self.row_offsets[offset + len];
+        let mut f = std::fs::File::open(&self.path).expect("reopen csv");
+        f.seek(SeekFrom::Start(lo)).expect("seek");
+        let mut buf = vec![0u8; (hi - lo) as usize];
+        f.read_exact(&mut buf).expect("read range");
+        let text = String::from_utf8(buf).expect("utf8 csv");
+        let table = self
+            .parse_rows(&text, len)
+            .unwrap_or_else(|e| panic!("csv parse {:?}: {e}", self.path));
+        self.meter
+            .record(hi - lo, t0.elapsed().as_nanos() as u64);
+        table
+    }
+    fn key_at(&self, row: usize) -> Option<i64> {
+        self.keys.as_ref().map(|k| k[row])
+    }
+    fn storage_bytes(&self) -> u64 {
+        *self.row_offsets.last().unwrap_or(&0)
+    }
+    fn resident_bytes(&self) -> u64 {
+        // Row-offset index + key index stay resident; data is streamed.
+        (self.row_offsets.capacity() * 8
+            + self.keys.as_ref().map_or(0, |k| k.capacity() * 8)) as u64
+    }
+    fn meter(&self) -> &ReadMeter {
+        &self.meter
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generator::{generate_table, GenSpec};
+
+    fn tmpdir() -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "smartdiff_io_test_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn csv_roundtrip_preserves_table() {
+        let spec = GenSpec { rows: 500, str_len: 10, seed: 11, ..GenSpec::default() };
+        let t = generate_table(&spec);
+        let path = tmpdir().join("roundtrip.csv");
+        write_csv(&t, &path).unwrap();
+        let src = CsvFileSource::open(&path, t.schema.clone()).unwrap();
+        assert_eq!(src.nrows(), t.nrows());
+        let back = src.read_range(0, t.nrows());
+        assert_eq!(back, t);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn csv_range_reads_match_slices() {
+        let spec = GenSpec { rows: 300, seed: 12, ..GenSpec::default() };
+        let t = generate_table(&spec);
+        let path = tmpdir().join("ranges.csv");
+        write_csv(&t, &path).unwrap();
+        let src = CsvFileSource::open(&path, t.schema.clone()).unwrap();
+        for (off, len) in [(0usize, 10usize), (50, 100), (290, 10), (299, 1)] {
+            assert_eq!(src.read_range(off, len), t.slice(off, len));
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn quoted_strings_with_commas_and_newlines() {
+        use crate::data::schema::{ColumnType, Field, Schema};
+        let schema = Schema::new(vec![
+            Field::key("id", ColumnType::Int64),
+            Field::new("s", ColumnType::Utf8),
+        ]);
+        let mut tb = TableBuilder::new(schema.clone());
+        tb.col(0).push_i64(0);
+        tb.col(1).push_str("a,b\"c\"\nd");
+        tb.col(0).push_i64(2);
+        tb.col(1).push_str("plain");
+        let t = tb.finish();
+        let path = tmpdir().join("quotes.csv");
+        write_csv(&t, &path).unwrap();
+        let src = CsvFileSource::open(&path, schema).unwrap();
+        assert_eq!(src.read_range(0, 2), t);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn meter_records_reads() {
+        let t = generate_table(&GenSpec { rows: 100, ..GenSpec::default() });
+        let src = InMemorySource::new(t);
+        let _ = src.read_range(0, 100);
+        assert!(src.meter().bytes() > 0);
+        assert!(src.meter().bandwidth().unwrap_or(0.0) > 0.0);
+    }
+
+    #[test]
+    fn keys_available_from_both_sources() {
+        let t = generate_table(&GenSpec { rows: 50, ..GenSpec::default() });
+        let path = tmpdir().join("keys.csv");
+        write_csv(&t, &path).unwrap();
+        let csv = CsvFileSource::open(&path, t.schema.clone()).unwrap();
+        let mem = InMemorySource::new(t);
+        for i in [0usize, 10, 49] {
+            assert_eq!(mem.key_at(i), Some(2 * i as i64));
+            assert_eq!(csv.key_at(i), Some(2 * i as i64));
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn empty_fields_are_nulls() {
+        use crate::data::schema::{ColumnType, Field, Schema};
+        let schema = Schema::new(vec![
+            Field::key("id", ColumnType::Int64),
+            Field::new("x", ColumnType::Float64),
+        ]);
+        let mut tb = TableBuilder::new(schema.clone());
+        tb.col(0).push_i64(0);
+        tb.col(1).push_null();
+        let t = tb.finish();
+        let path = tmpdir().join("nulls.csv");
+        write_csv(&t, &path).unwrap();
+        let src = CsvFileSource::open(&path, schema).unwrap();
+        let back = src.read_range(0, 1);
+        assert!(back.column(1).is_null(0));
+        std::fs::remove_file(path).ok();
+    }
+}

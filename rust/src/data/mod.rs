@@ -1,0 +1,9 @@
+//! Data substrate: columnar tables, schemas, workload generators and
+//! metered table sources (DESIGN.md systems S1–S4).
+
+pub mod column;
+pub mod generator;
+pub mod io;
+pub mod schema;
+pub mod table;
+pub mod tpch;

@@ -1,0 +1,176 @@
+//! Schema model: column types, fields, and key designation.
+
+use std::fmt;
+
+/// Column data types supported by the engine. The numeric family
+/// (Int64/Float64/Decimal) routes through the PJRT Δ path; the rest are
+/// compared natively (DESIGN.md §Hardware-Adaptation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ColumnType {
+    Int64,
+    Float64,
+    /// UTF-8 string.
+    Utf8,
+    Bool,
+    /// Days since Unix epoch.
+    Date,
+    /// Microseconds since Unix epoch.
+    Timestamp,
+    /// Fixed-point i128 mantissa with per-column decimal scale.
+    Decimal { scale: u8 },
+}
+
+impl ColumnType {
+    pub fn is_numeric(&self) -> bool {
+        matches!(
+            self,
+            ColumnType::Int64 | ColumnType::Float64 | ColumnType::Decimal { .. }
+        )
+    }
+
+    /// In-memory bytes per value (excl. null bitmap; Utf8 is the average
+    /// payload estimate used only for working-set estimation defaults).
+    pub fn value_bytes(&self) -> usize {
+        match self {
+            ColumnType::Int64 => 8,
+            ColumnType::Float64 => 8,
+            ColumnType::Utf8 => 16, // offset + avg payload estimate
+            ColumnType::Bool => 1,
+            ColumnType::Date => 4,
+            ColumnType::Timestamp => 8,
+            ColumnType::Decimal { .. } => 16,
+        }
+    }
+
+    /// Loose comparability for schema alignment: numeric types align with
+    /// each other; everything else requires an exact type match.
+    pub fn comparable_with(&self, other: &ColumnType) -> bool {
+        if self == other {
+            return true;
+        }
+        self.is_numeric() && other.is_numeric()
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            ColumnType::Int64 => "int64".into(),
+            ColumnType::Float64 => "float64".into(),
+            ColumnType::Utf8 => "utf8".into(),
+            ColumnType::Bool => "bool".into(),
+            ColumnType::Date => "date".into(),
+            ColumnType::Timestamp => "timestamp".into(),
+            ColumnType::Decimal { scale } => format!("decimal({scale})"),
+        }
+    }
+}
+
+impl fmt::Display for ColumnType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// A named, typed column slot in a schema.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Field {
+    pub name: String,
+    pub ty: ColumnType,
+    pub nullable: bool,
+    /// Part of the row-alignment key f (primary/business key component).
+    pub key: bool,
+}
+
+impl Field {
+    pub fn new(name: &str, ty: ColumnType) -> Self {
+        Field { name: name.into(), ty, nullable: true, key: false }
+    }
+    pub fn key(name: &str, ty: ColumnType) -> Self {
+        Field { name: name.into(), ty, nullable: false, key: true }
+    }
+    pub fn not_null(mut self) -> Self {
+        self.nullable = false;
+        self
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Schema {
+    pub fields: Vec<Field>,
+}
+
+impl Schema {
+    pub fn new(fields: Vec<Field>) -> Self {
+        Schema { fields }
+    }
+    pub fn len(&self) -> usize {
+        self.fields.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.fields.is_empty()
+    }
+    pub fn field(&self, name: &str) -> Option<(usize, &Field)> {
+        self.fields
+            .iter()
+            .enumerate()
+            .find(|(_, f)| f.name == name)
+    }
+    /// Indices of key columns, in declaration order.
+    pub fn key_indices(&self) -> Vec<usize> {
+        self.fields
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| f.key)
+            .map(|(i, _)| i)
+            .collect()
+    }
+    /// Estimated bytes per row (working-set default before pre-flight
+    /// refines it with measured string payloads).
+    pub fn est_row_bytes(&self) -> usize {
+        self.fields.iter().map(|f| f.ty.value_bytes() + 1).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> Schema {
+        Schema::new(vec![
+            Field::key("id", ColumnType::Int64),
+            Field::new("amount", ColumnType::Float64),
+            Field::new("name", ColumnType::Utf8),
+            Field::new("flag", ColumnType::Bool),
+            Field::new("d", ColumnType::Date),
+            Field::new("ts", ColumnType::Timestamp),
+            Field::new("price", ColumnType::Decimal { scale: 2 }),
+        ])
+    }
+
+    #[test]
+    fn key_indices_and_lookup() {
+        let s = demo();
+        assert_eq!(s.key_indices(), vec![0]);
+        assert_eq!(s.field("amount").unwrap().0, 1);
+        assert!(s.field("nope").is_none());
+    }
+
+    #[test]
+    fn numeric_comparability() {
+        assert!(ColumnType::Int64.comparable_with(&ColumnType::Float64));
+        assert!(ColumnType::Float64
+            .comparable_with(&ColumnType::Decimal { scale: 2 }));
+        assert!(!ColumnType::Utf8.comparable_with(&ColumnType::Bool));
+        assert!(ColumnType::Utf8.comparable_with(&ColumnType::Utf8));
+    }
+
+    #[test]
+    fn row_bytes_positive() {
+        assert!(demo().est_row_bytes() > 40);
+    }
+
+    #[test]
+    fn type_names() {
+        assert_eq!(ColumnType::Decimal { scale: 3 }.name(), "decimal(3)");
+        assert_eq!(ColumnType::Int64.to_string(), "int64");
+    }
+}

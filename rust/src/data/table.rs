@@ -1,0 +1,214 @@
+//! Table: a schema plus equal-length columns, with cheap slicing and
+//! exact heap accounting.
+
+use crate::data::column::{Cell, Column, ColumnBuilder};
+use crate::data::schema::{ColumnType, Field, Schema};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Table {
+    pub schema: Schema,
+    pub columns: Vec<Column>,
+    nrows: usize,
+}
+
+impl Table {
+    pub fn new(schema: Schema, columns: Vec<Column>) -> Result<Self, String> {
+        if schema.len() != columns.len() {
+            return Err(format!(
+                "schema has {} fields but {} columns given",
+                schema.len(),
+                columns.len()
+            ));
+        }
+        let nrows = columns.first().map_or(0, |c| c.len());
+        for (f, c) in schema.fields.iter().zip(&columns) {
+            if c.len() != nrows {
+                return Err(format!(
+                    "column {} has {} rows, expected {nrows}",
+                    f.name,
+                    c.len()
+                ));
+            }
+            if c.column_type() != f.ty {
+                return Err(format!(
+                    "column {} is {} but schema says {}",
+                    f.name,
+                    c.column_type(),
+                    f.ty
+                ));
+            }
+        }
+        Ok(Table { schema, columns, nrows })
+    }
+
+    pub fn empty(schema: Schema) -> Self {
+        let columns = schema
+            .fields
+            .iter()
+            .map(|f| ColumnBuilder::new(f.ty).finish())
+            .collect();
+        Table { schema, columns, nrows: 0 }
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+    pub fn ncols(&self) -> usize {
+        self.columns.len()
+    }
+    pub fn column(&self, i: usize) -> &Column {
+        &self.columns[i]
+    }
+    pub fn column_by_name(&self, name: &str) -> Option<&Column> {
+        self.schema.field(name).map(|(i, _)| &self.columns[i])
+    }
+
+    /// Exact heap footprint of the column data (the number the working-set
+    /// estimator is calibrated against).
+    pub fn heap_bytes(&self) -> usize {
+        self.columns.iter().map(|c| c.heap_bytes()).sum()
+    }
+
+    /// Measured average bytes per row (string payloads included).
+    pub fn measured_row_bytes(&self) -> f64 {
+        self.columns.iter().map(|c| c.avg_value_bytes() + 0.125).sum()
+    }
+
+    /// Copy a contiguous row range into a new table.
+    pub fn slice(&self, offset: usize, len: usize) -> Table {
+        assert!(offset + len <= self.nrows, "slice out of bounds");
+        Table {
+            schema: self.schema.clone(),
+            columns: self.columns.iter().map(|c| c.slice(offset, len)).collect(),
+            nrows: len,
+        }
+    }
+
+    pub fn row_cells(&self, i: usize) -> Vec<Cell<'_>> {
+        self.columns.iter().map(|c| c.cell(i)).collect()
+    }
+}
+
+/// Row-at-a-time table builder.
+#[derive(Debug)]
+pub struct TableBuilder {
+    schema: Schema,
+    builders: Vec<ColumnBuilder>,
+}
+
+impl TableBuilder {
+    pub fn new(schema: Schema) -> Self {
+        let builders = schema
+            .fields
+            .iter()
+            .map(|f| ColumnBuilder::new(f.ty))
+            .collect();
+        TableBuilder { schema, builders }
+    }
+
+    pub fn col(&mut self, i: usize) -> &mut ColumnBuilder {
+        &mut self.builders[i]
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.builders.first().map_or(0, |b| b.len())
+    }
+
+    pub fn finish(self) -> Table {
+        let columns: Vec<Column> =
+            self.builders.into_iter().map(|b| b.finish()).collect();
+        let nrows = columns.first().map_or(0, |c| c.len());
+        for c in &columns {
+            assert_eq!(c.len(), nrows, "ragged table builder");
+        }
+        Table { schema: self.schema, columns, nrows }
+    }
+}
+
+/// Convenience schema for tests and examples: one key + a mixed-type
+/// payload of `extra` columns cycling through all types.
+pub fn mixed_schema(extra: usize) -> Schema {
+    let mut fields = vec![Field::key("id", ColumnType::Int64)];
+    let cycle = [
+        ColumnType::Float64,
+        ColumnType::Int64,
+        ColumnType::Utf8,
+        ColumnType::Date,
+        ColumnType::Bool,
+        ColumnType::Timestamp,
+        ColumnType::Decimal { scale: 2 },
+    ];
+    for i in 0..extra {
+        fields.push(Field::new(
+            &format!("c{i}"),
+            cycle[i % cycle.len()],
+        ));
+    }
+    Schema::new(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_table(n: usize) -> Table {
+        let schema = mixed_schema(3); // id, f64, i64, utf8
+        let mut tb = TableBuilder::new(schema);
+        for i in 0..n {
+            tb.col(0).push_i64(i as i64);
+            tb.col(1).push_f64(i as f64 * 0.5);
+            tb.col(2).push_i64(-(i as i64));
+            tb.col(3).push_str(&format!("row{i}"));
+        }
+        tb.finish()
+    }
+
+    #[test]
+    fn build_and_read() {
+        let t = demo_table(10);
+        assert_eq!(t.nrows(), 10);
+        assert_eq!(t.ncols(), 4);
+        assert_eq!(t.column_by_name("c0").unwrap().numeric(4), Some(2.0));
+        assert_eq!(t.row_cells(3)[3], Cell::Str("row3"));
+    }
+
+    #[test]
+    fn schema_mismatch_rejected() {
+        let schema = mixed_schema(0);
+        let col = ColumnBuilder::new(ColumnType::Float64).finish();
+        assert!(Table::new(schema, vec![col]).is_err());
+    }
+
+    #[test]
+    fn ragged_rejected() {
+        let schema = mixed_schema(1);
+        let mut a = ColumnBuilder::new(ColumnType::Int64);
+        a.push_i64(1);
+        let b = ColumnBuilder::new(ColumnType::Float64);
+        assert!(Table::new(schema, vec![a.finish(), b.finish()]).is_err());
+    }
+
+    #[test]
+    fn slice_rows() {
+        let t = demo_table(100);
+        let s = t.slice(20, 30);
+        assert_eq!(s.nrows(), 30);
+        assert_eq!(s.row_cells(0), t.row_cells(20));
+        assert_eq!(s.row_cells(29), t.row_cells(49));
+    }
+
+    #[test]
+    fn heap_accounting_grows_with_rows() {
+        let small = demo_table(10).heap_bytes();
+        let big = demo_table(1000).heap_bytes();
+        assert!(big > 20 * small);
+    }
+
+    #[test]
+    fn measured_row_bytes_reasonable() {
+        let t = demo_table(50);
+        let w = t.measured_row_bytes();
+        // id(8) + f64(8) + i64(8) + str(~5+4) ≈ 33
+        assert!(w > 20.0 && w < 60.0, "{w}");
+    }
+}

@@ -1,0 +1,311 @@
+//! Type-specific cell comparators for Δ (paper §II) and the native
+//! implementation of the numeric batch diff.
+//!
+//! The numeric batch contract (`NumericBatch` → `NumericDiffOut`) is the
+//! cross-layer interface shared by the native comparator here and the
+//! PJRT executable produced from the Pallas kernel (`runtime::pjrt`).
+//! `native_numeric_diff` mirrors `kernels/ref.py` exactly and is the
+//! in-process oracle the PJRT path is cross-checked against.
+
+use crate::config::EngineConfig;
+use crate::engine::verdict::Verdict;
+
+/// One numeric batch in kernel layout (row-major R×C matrices).
+/// Row slots: aligned pairs first, then removed (ra=1, rb=0), then added
+/// (ra=0, rb=1); padding rows have ra=rb=0.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct NumericBatch {
+    pub rows: usize,
+    pub cols: usize,
+    pub a: Vec<f64>,
+    pub b: Vec<f64>,
+    /// Cell presence (1.0 = non-null). Garbage values behind a 0 mask
+    /// are allowed — they never reach the compare.
+    pub na: Vec<f64>,
+    pub nb: Vec<f64>,
+    /// Row presence per side.
+    pub ra: Vec<f64>,
+    pub rb: Vec<f64>,
+    /// Per-column tolerances.
+    pub atol: Vec<f64>,
+    pub rtol: Vec<f64>,
+}
+
+impl NumericBatch {
+    pub fn zeroed(rows: usize, cols: usize) -> Self {
+        NumericBatch {
+            rows,
+            cols,
+            a: vec![0.0; rows * cols],
+            b: vec![0.0; rows * cols],
+            na: vec![0.0; rows * cols],
+            nb: vec![0.0; rows * cols],
+            ra: vec![0.0; rows],
+            rb: vec![0.0; rows],
+            atol: vec![0.0; cols],
+            rtol: vec![0.0; cols],
+        }
+    }
+    /// Scratch footprint in bytes (memory-model input).
+    pub fn heap_bytes(&self) -> usize {
+        (self.a.capacity()
+            + self.b.capacity()
+            + self.na.capacity()
+            + self.nb.capacity()
+            + self.ra.capacity()
+            + self.rb.capacity()
+            + self.atol.capacity()
+            + self.rtol.capacity())
+            * 8
+    }
+}
+
+/// Output of a numeric batch diff (mirrors the L2 graph outputs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NumericDiffOut {
+    /// R×C verdict codes.
+    pub verdicts: Vec<i32>,
+    /// Verdict histogram [equal, changed, added, removed, absent].
+    pub counts: [i64; 5],
+    /// Per-column changed-cell counts.
+    pub col_changed: Vec<i64>,
+    /// Per-column max |a-b| over numerically compared cells.
+    pub col_maxabs: Vec<f64>,
+    /// Per-row any-diff indicator (changed/added/removed).
+    pub changed_rows: Vec<i32>,
+}
+
+/// Executor for numeric batches: native rust or the AOT PJRT executable.
+pub trait NumericDeltaExec: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn diff(&self, batch: &NumericBatch) -> Result<NumericDiffOut, String>;
+}
+
+/// Canonicalize like the L2 graph: zero masked cells, fold -0.0 → +0.0.
+#[inline]
+fn canon(x: f64, present: bool) -> f64 {
+    if present {
+        x + 0.0
+    } else {
+        0.0
+    }
+}
+
+/// Pure-rust numeric diff, semantically identical to the Pallas kernel +
+/// L2 canonicalization (see python/compile/kernels/ref.py).
+pub fn native_numeric_diff(batch: &NumericBatch) -> NumericDiffOut {
+    let (r, c) = (batch.rows, batch.cols);
+    let mut verdicts = vec![Verdict::Absent as i32; r * c];
+    let mut counts = [0i64; 5];
+    let mut col_changed = vec![0i64; c];
+    let mut col_maxabs = vec![0f64; c];
+    let mut changed_rows = vec![0i32; r];
+
+    for i in 0..r {
+        let ra = batch.ra[i] > 0.5;
+        let rb = batch.rb[i] > 0.5;
+        let mut row_diff = false;
+        for j in 0..c {
+            let idx = i * c + j;
+            let v = if ra && rb {
+                let na = batch.na[idx] > 0.5;
+                let nb = batch.nb[idx] > 0.5;
+                let a = canon(batch.a[idx], na);
+                let b = canon(batch.b[idx], nb);
+                if !na && !nb {
+                    Verdict::Equal
+                } else if na != nb {
+                    Verdict::Changed
+                } else {
+                    // NaN==NaN and exact equality (covers inf==inf, where
+                    // a-b is NaN) are equal; else tolerance compare.
+                    let nan_eq = a.is_nan() && b.is_nan();
+                    let tol = batch.atol[j] + batch.rtol[j] * b.abs();
+                    let d = (a - b).abs();
+                    if nan_eq || a == b || d <= tol {
+                        Verdict::Equal
+                    } else {
+                        Verdict::Changed
+                    }
+                }
+            } else if ra {
+                Verdict::Removed
+            } else if rb {
+                Verdict::Added
+            } else {
+                Verdict::Absent
+            };
+            verdicts[idx] = v as i32;
+            counts[v as i32 as usize] += 1;
+            match v {
+                Verdict::Changed => {
+                    col_changed[j] += 1;
+                    row_diff = true;
+                }
+                Verdict::Added | Verdict::Removed => row_diff = true,
+                _ => {}
+            }
+            // maxabs over numerically compared cells only.
+            if ra && rb && batch.na[idx] > 0.5 && batch.nb[idx] > 0.5 {
+                let a = canon(batch.a[idx], true);
+                let b = canon(batch.b[idx], true);
+                let d = (a - b).abs();
+                if d.is_finite() && d > col_maxabs[j] {
+                    col_maxabs[j] = d;
+                }
+            }
+        }
+        changed_rows[i] = row_diff as i32;
+    }
+    NumericDiffOut { verdicts, counts, col_changed, col_maxabs, changed_rows }
+}
+
+/// Native executor (always available; no artifacts needed).
+#[derive(Debug, Default)]
+pub struct NativeExec;
+
+impl NumericDeltaExec for NativeExec {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+    fn diff(&self, batch: &NumericBatch) -> Result<NumericDiffOut, String> {
+        Ok(native_numeric_diff(batch))
+    }
+}
+
+// ----- scalar comparators for the non-numeric (native) columns -----
+
+/// Compare two present strings under the engine config.
+pub fn compare_str(a: &str, b: &str, cfg: &EngineConfig) -> Verdict {
+    let eq = if cfg.string_ci {
+        a.eq_ignore_ascii_case(b)
+    } else {
+        a == b
+    };
+    if eq {
+        Verdict::Equal
+    } else {
+        Verdict::Changed
+    }
+}
+
+pub fn compare_bool(a: bool, b: bool) -> Verdict {
+    if a == b {
+        Verdict::Equal
+    } else {
+        Verdict::Changed
+    }
+}
+
+/// Null-aware wrapper: both null = equal, one null = changed, else defer.
+pub fn null_aware(
+    a_null: bool,
+    b_null: bool,
+    cmp: impl FnOnce() -> Verdict,
+) -> Verdict {
+    match (a_null, b_null) {
+        (true, true) => Verdict::Equal,
+        (true, false) | (false, true) => Verdict::Changed,
+        (false, false) => cmp(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_cell(a: f64, b: f64, atol: f64, rtol: f64) -> Verdict {
+        let mut nb = NumericBatch::zeroed(1, 1);
+        nb.a[0] = a;
+        nb.b[0] = b;
+        nb.na[0] = 1.0;
+        nb.nb[0] = 1.0;
+        nb.ra[0] = 1.0;
+        nb.rb[0] = 1.0;
+        nb.atol[0] = atol;
+        nb.rtol[0] = rtol;
+        let out = native_numeric_diff(&nb);
+        Verdict::from_code(out.verdicts[0]).unwrap()
+    }
+
+    #[test]
+    fn tolerance_semantics() {
+        assert_eq!(one_cell(1.0, 1.0, 0.0, 0.0), Verdict::Equal);
+        assert_eq!(one_cell(1.0, 1.1, 0.05, 0.0), Verdict::Changed);
+        assert_eq!(one_cell(1.0, 1.1, 0.2, 0.0), Verdict::Equal);
+        assert_eq!(one_cell(100.0, 100.5, 0.0, 0.01), Verdict::Equal);
+        assert_eq!(one_cell(100.0, 102.0, 0.0, 0.01), Verdict::Changed);
+    }
+
+    #[test]
+    fn nan_and_negzero() {
+        assert_eq!(one_cell(f64::NAN, f64::NAN, 0.0, 0.0), Verdict::Equal);
+        assert_eq!(one_cell(f64::NAN, 0.0, 1e18, 1e18), Verdict::Changed);
+        assert_eq!(one_cell(-0.0, 0.0, 0.0, 0.0), Verdict::Equal);
+        assert_eq!(one_cell(f64::INFINITY, f64::INFINITY, 0.0, 0.0),
+                   Verdict::Equal);
+        assert_eq!(one_cell(f64::INFINITY, f64::NEG_INFINITY, 1e300, 0.0),
+                   Verdict::Changed);
+    }
+
+    #[test]
+    fn row_presence_codes() {
+        let mut nb = NumericBatch::zeroed(4, 2);
+        // row 0 aligned, row 1 removed, row 2 added, row 3 padding
+        nb.ra[0] = 1.0;
+        nb.rb[0] = 1.0;
+        nb.ra[1] = 1.0;
+        nb.rb[2] = 1.0;
+        for j in 0..2 {
+            nb.na[j] = 1.0;
+            nb.nb[j] = 1.0;
+        }
+        let out = native_numeric_diff(&nb);
+        assert_eq!(out.verdicts[0], Verdict::Equal as i32);
+        assert_eq!(out.verdicts[2], Verdict::Removed as i32);
+        assert_eq!(out.verdicts[3], Verdict::Removed as i32);
+        assert_eq!(out.verdicts[4], Verdict::Added as i32);
+        assert_eq!(out.verdicts[6], Verdict::Absent as i32);
+        assert_eq!(out.counts.iter().sum::<i64>(), 8);
+        assert_eq!(out.changed_rows, vec![0, 1, 1, 0]);
+    }
+
+    #[test]
+    fn null_cells_in_aligned_rows() {
+        let mut nb = NumericBatch::zeroed(1, 3);
+        nb.ra[0] = 1.0;
+        nb.rb[0] = 1.0;
+        // col0: both null -> equal; col1: null vs value -> changed;
+        // col2: both present equal.
+        nb.nb[1] = 1.0;
+        nb.b[1] = 5.0;
+        nb.na[2] = 1.0;
+        nb.nb[2] = 1.0;
+        nb.a[2] = 3.0;
+        nb.b[2] = 3.0;
+        let out = native_numeric_diff(&nb);
+        assert_eq!(out.verdicts, vec![0, 1, 0]);
+        assert_eq!(out.col_changed, vec![0, 1, 0]);
+        // masked garbage must not pollute maxabs
+        assert_eq!(out.col_maxabs, vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn string_and_bool_comparators() {
+        let cfg = EngineConfig::default();
+        assert_eq!(compare_str("a", "a", &cfg), Verdict::Equal);
+        assert_eq!(compare_str("a", "A", &cfg), Verdict::Changed);
+        let ci = EngineConfig { string_ci: true, ..EngineConfig::default() };
+        assert_eq!(compare_str("a", "A", &ci), Verdict::Equal);
+        assert_eq!(compare_bool(true, true), Verdict::Equal);
+        assert_eq!(compare_bool(true, false), Verdict::Changed);
+    }
+
+    #[test]
+    fn null_aware_wrapper() {
+        assert_eq!(null_aware(true, true, || Verdict::Changed), Verdict::Equal);
+        assert_eq!(null_aware(true, false, || Verdict::Equal), Verdict::Changed);
+        assert_eq!(null_aware(false, false, || Verdict::Changed),
+                   Verdict::Changed);
+    }
+}

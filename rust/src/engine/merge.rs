@@ -1,0 +1,216 @@
+//! Merge step: concatenate batch outputs in stable shard order and
+//! compute job-level aggregates (paper §II). The merged result is the
+//! determinism anchor: it must be invariant to (b, k) and backend.
+
+use std::collections::BTreeMap;
+
+use crate::engine::verdict::{BatchOutcome, RowCounts, VerdictCounts};
+use crate::util::json::ObjWriter;
+
+/// Job-level diff report.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct JobReport {
+    pub batches: u64,
+    pub rows_a: u64,
+    pub rows_b: u64,
+    pub cells: VerdictCounts,
+    pub rows: RowCounts,
+    /// Per-column aggregates, keyed by aligned column name.
+    pub columns: BTreeMap<String, ColumnAgg>,
+    /// All diff-row keys, sorted (capped per shard upstream).
+    pub diff_keys: Vec<i64>,
+    pub diff_keys_truncated: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ColumnAgg {
+    pub changed: u64,
+    pub max_abs_delta: f64,
+}
+
+/// Stable merge: outcomes are sorted by shard id before aggregation so
+/// the report is identical regardless of completion order.
+pub struct Merger {
+    outcomes: Vec<BatchOutcome>,
+}
+
+impl Merger {
+    pub fn new() -> Self {
+        Merger { outcomes: Vec::new() }
+    }
+    pub fn push(&mut self, outcome: BatchOutcome) {
+        self.outcomes.push(outcome);
+    }
+    pub fn len(&self) -> usize {
+        self.outcomes.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.outcomes.is_empty()
+    }
+
+    pub fn finish(mut self) -> JobReport {
+        self.outcomes.sort_by_key(|o| o.shard_id);
+        let mut report = JobReport { batches: self.outcomes.len() as u64, ..Default::default() };
+        for o in &self.outcomes {
+            report.rows_a += o.rows_a;
+            report.rows_b += o.rows_b;
+            report.cells.merge(&o.cells);
+            report.rows.merge(&o.rows);
+            for c in &o.columns {
+                let agg = report.columns.entry(c.name.clone()).or_default();
+                agg.changed += c.changed;
+                if c.max_abs_delta > agg.max_abs_delta {
+                    agg.max_abs_delta = c.max_abs_delta;
+                }
+            }
+            report.diff_keys.extend_from_slice(&o.diff_keys);
+            report.diff_keys_truncated |= o.diff_keys_truncated;
+        }
+        report.diff_keys.sort_unstable();
+        report
+    }
+}
+
+impl Default for Merger {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JobReport {
+    /// Multiset-equality check used by the determinism property tests:
+    /// two reports describe the same diff iff all aggregates and the
+    /// sorted key list agree.
+    pub fn same_diff(&self, other: &JobReport) -> bool {
+        self.cells == other.cells
+            && self.rows == other.rows
+            && self.columns == other.columns
+            && self.diff_keys == other.diff_keys
+            && self.rows_a == other.rows_a
+            && self.rows_b == other.rows_b
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut cols = String::from("{");
+        for (i, (name, agg)) in self.columns.iter().enumerate() {
+            if i > 0 {
+                cols.push(',');
+            }
+            cols.push_str(&crate::util::json::Json::Str(name.clone()).to_string());
+            cols.push(':');
+            cols.push_str(
+                &ObjWriter::new()
+                    .int("changed", agg.changed as i64)
+                    .num("max_abs_delta", agg.max_abs_delta)
+                    .finish(),
+            );
+        }
+        cols.push('}');
+
+        ObjWriter::new()
+            .int("batches", self.batches as i64)
+            .int("rows_a", self.rows_a as i64)
+            .int("rows_b", self.rows_b as i64)
+            .int("cells_equal", self.cells.equal as i64)
+            .int("cells_changed", self.cells.changed as i64)
+            .int("cells_added", self.cells.added as i64)
+            .int("cells_removed", self.cells.removed as i64)
+            .int("rows_aligned", self.rows.aligned as i64)
+            .int("rows_changed", self.rows.changed_rows as i64)
+            .int("rows_added", self.rows.added as i64)
+            .int("rows_removed", self.rows.removed as i64)
+            .int("diff_rows", self.diff_keys.len() as i64)
+            .bool("diff_keys_truncated", self.diff_keys_truncated)
+            .raw("columns", &cols)
+            .finish()
+    }
+
+    /// Short human summary for CLI output.
+    pub fn summary(&self) -> String {
+        format!(
+            "rows: {} aligned ({} changed), {} added, {} removed | cells: \
+             {} equal, {} changed | batches: {}",
+            self.rows.aligned,
+            self.rows.changed_rows,
+            self.rows.added,
+            self.rows.removed,
+            self.cells.equal,
+            self.cells.changed,
+            self.batches
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::verdict::ColumnOutcome;
+
+    fn outcome(shard: u64, changed: u64, key0: i64) -> BatchOutcome {
+        BatchOutcome {
+            shard_id: shard,
+            rows_a: 10,
+            rows_b: 10,
+            cells: VerdictCounts { equal: 20 - changed, changed, ..Default::default() },
+            rows: RowCounts { aligned: 10, changed_rows: changed.min(10), ..Default::default() },
+            columns: vec![ColumnOutcome {
+                name: "v".into(),
+                changed,
+                max_abs_delta: changed as f64,
+            }],
+            diff_keys: vec![key0, key0 + 1],
+            diff_keys_truncated: false,
+        }
+    }
+
+    #[test]
+    fn merge_order_invariant() {
+        let mut m1 = Merger::new();
+        m1.push(outcome(0, 1, 0));
+        m1.push(outcome(1, 2, 10));
+        m1.push(outcome(2, 3, 20));
+        let r1 = m1.finish();
+
+        let mut m2 = Merger::new();
+        m2.push(outcome(2, 3, 20));
+        m2.push(outcome(0, 1, 0));
+        m2.push(outcome(1, 2, 10));
+        let r2 = m2.finish();
+
+        assert!(r1.same_diff(&r2));
+        assert_eq!(r1, r2);
+        assert_eq!(r1.cells.changed, 6);
+        assert_eq!(r1.columns["v"].changed, 6);
+        assert_eq!(r1.columns["v"].max_abs_delta, 3.0);
+        assert_eq!(r1.diff_keys, vec![0, 1, 10, 11, 20, 21]);
+    }
+
+    #[test]
+    fn different_diffs_detected() {
+        let mut m1 = Merger::new();
+        m1.push(outcome(0, 1, 0));
+        let mut m2 = Merger::new();
+        m2.push(outcome(0, 2, 0));
+        assert!(!m1.finish().same_diff(&m2.finish()));
+    }
+
+    #[test]
+    fn json_emits_parseable_report() {
+        let mut m = Merger::new();
+        m.push(outcome(0, 1, 5));
+        let r = m.finish();
+        let j = crate::util::json::parse(&r.to_json()).unwrap();
+        assert_eq!(j.get("batches").unwrap().as_i64(), Some(1));
+        assert_eq!(j.get("cells_changed").unwrap().as_i64(), Some(1));
+        assert!(j.get("columns").unwrap().get("v").is_some());
+    }
+
+    #[test]
+    fn summary_contains_key_numbers() {
+        let mut m = Merger::new();
+        m.push(outcome(0, 2, 0));
+        let s = m.finish().summary();
+        assert!(s.contains("10 aligned"));
+        assert!(s.contains("2 changed"));
+    }
+}

@@ -1,0 +1,12 @@
+//! The SmartDiff engine substrate (DESIGN.md systems S5–S9): schema
+//! alignment, row alignment f, typed cell-wise Δ, stable merge, and the
+//! calibration microbenchmarks. The scheduler treats all of this as the
+//! workload; it never changes Δ semantics (paper §II).
+
+pub mod comparators;
+pub mod delta;
+pub mod merge;
+pub mod microbench;
+pub mod row_align;
+pub mod schema_align;
+pub mod verdict;

@@ -1,0 +1,257 @@
+//! Schema alignment: one-to-one attribute mapping between source and
+//! target schemas (paper §II, first pipeline stage).
+//!
+//! Matching is by normalized name (case-, underscore- and dash-
+//! insensitive) with type-compatibility constraints; numeric types align
+//! across the Int64/Float64/Decimal family. Unmatched attributes are
+//! reported (they do not fail the job — the engine diffs the aligned
+//! intersection, like SmartDiff).
+
+use crate::data::schema::{ColumnType, Schema};
+
+/// How an aligned column pair is compared (dispatch for Δ).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CompareKind {
+    /// Int64 / Float64 / Decimal / Date / Timestamp — dense tolerance
+    /// compare on the accelerator path (f64 matrix).
+    Numeric,
+    String,
+    Bool,
+}
+
+impl CompareKind {
+    pub fn of(ty: &ColumnType) -> CompareKind {
+        match ty {
+            ColumnType::Utf8 => CompareKind::String,
+            ColumnType::Bool => CompareKind::Bool,
+            ColumnType::Int64
+            | ColumnType::Float64
+            | ColumnType::Decimal { .. }
+            | ColumnType::Date
+            | ColumnType::Timestamp => CompareKind::Numeric,
+        }
+    }
+}
+
+/// One aligned attribute pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AlignedCol {
+    pub name: String,
+    pub a_idx: usize,
+    pub b_idx: usize,
+    pub a_ty: ColumnType,
+    pub b_ty: ColumnType,
+    pub kind: CompareKind,
+    pub is_key: bool,
+}
+
+/// Alignment result: aligned pairs (in A declaration order) plus the
+/// unmatched remainder on each side.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct AlignedSchema {
+    pub pairs: Vec<AlignedCol>,
+    pub a_only: Vec<String>,
+    pub b_only: Vec<String>,
+}
+
+impl AlignedSchema {
+    /// Indices (into `pairs`) of key columns.
+    pub fn key_pairs(&self) -> Vec<usize> {
+        self.pairs
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.is_key)
+            .map(|(i, _)| i)
+            .collect()
+    }
+    /// Indices (into `pairs`) of numeric-kind (accelerator path) columns.
+    pub fn numeric_pairs(&self) -> Vec<usize> {
+        self.pairs
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.kind == CompareKind::Numeric)
+            .map(|(i, _)| i)
+            .collect()
+    }
+    pub fn native_pairs(&self) -> Vec<usize> {
+        self.pairs
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.kind != CompareKind::Numeric)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// Normalize an attribute name for matching.
+pub fn normalize_name(name: &str) -> String {
+    name.chars()
+        .filter(|c| *c != '_' && *c != '-' && *c != ' ')
+        .flat_map(|c| c.to_lowercase())
+        .collect()
+}
+
+/// Compute the alignment between two schemas.
+///
+/// Errors if the key columns of A cannot all be aligned (diffing without
+/// a consistent row-alignment key is a job-definition error; surrogate
+/// keyless mode is handled upstream by synthesizing a row-index key).
+pub fn align_schemas(a: &Schema, b: &Schema) -> Result<AlignedSchema, String> {
+    let mut out = AlignedSchema::default();
+    let mut b_norm: Vec<(String, usize)> = b
+        .fields
+        .iter()
+        .enumerate()
+        .map(|(i, f)| (normalize_name(&f.name), i))
+        .collect();
+    // Detect duplicate normalized names (ambiguous mapping).
+    {
+        let mut seen = std::collections::HashSet::new();
+        for (n, _) in &b_norm {
+            if !seen.insert(n.clone()) {
+                return Err(format!("ambiguous attribute {n:?} in target schema"));
+            }
+        }
+        let mut seen = std::collections::HashSet::new();
+        for f in &a.fields {
+            let n = normalize_name(&f.name);
+            if !seen.insert(n.clone()) {
+                return Err(format!("ambiguous attribute {n:?} in source schema"));
+            }
+        }
+    }
+
+    let mut b_matched = vec![false; b.fields.len()];
+    for (ai, af) in a.fields.iter().enumerate() {
+        let an = normalize_name(&af.name);
+        let hit = b_norm.iter().find(|(bn, _)| *bn == an).map(|(_, bi)| *bi);
+        match hit {
+            Some(bi) if af.ty.comparable_with(&b.fields[bi].ty) => {
+                b_matched[bi] = true;
+                out.pairs.push(AlignedCol {
+                    name: af.name.clone(),
+                    a_idx: ai,
+                    b_idx: bi,
+                    a_ty: af.ty,
+                    b_ty: b.fields[bi].ty,
+                    kind: CompareKind::of(&af.ty),
+                    is_key: af.key && b.fields[bi].key,
+                });
+            }
+            Some(bi) => {
+                // Same name, incompatible type: report on both sides.
+                out.a_only.push(af.name.clone());
+                out.b_only.push(b.fields[bi].name.clone());
+                b_matched[bi] = true;
+            }
+            None => out.a_only.push(af.name.clone()),
+        }
+    }
+    for (bi, m) in b_matched.iter().enumerate() {
+        if !m {
+            out.b_only.push(b.fields[bi].name.clone());
+        }
+    }
+    b_norm.clear();
+
+    // Key columns of A must align as keys.
+    let a_keys: Vec<&str> = a
+        .fields
+        .iter()
+        .filter(|f| f.key)
+        .map(|f| f.name.as_str())
+        .collect();
+    for k in &a_keys {
+        if !out.pairs.iter().any(|p| p.is_key && p.name == *k) {
+            return Err(format!("key column {k:?} not aligned across schemas"));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::schema::Field;
+
+    #[test]
+    fn exact_and_normalized_matching() {
+        let a = Schema::new(vec![
+            Field::key("order_id", ColumnType::Int64),
+            Field::new("Total_Amount", ColumnType::Float64),
+            Field::new("note", ColumnType::Utf8),
+        ]);
+        let b = Schema::new(vec![
+            Field::key("OrderID", ColumnType::Int64),
+            Field::new("totalamount", ColumnType::Decimal { scale: 2 }),
+            Field::new("extra", ColumnType::Bool),
+        ]);
+        let al = align_schemas(&a, &b).unwrap();
+        assert_eq!(al.pairs.len(), 2);
+        assert!(al.pairs[0].is_key);
+        assert_eq!(al.pairs[1].kind, CompareKind::Numeric);
+        assert_eq!(al.a_only, vec!["note"]);
+        assert_eq!(al.b_only, vec!["extra"]);
+    }
+
+    #[test]
+    fn type_conflict_goes_unmatched() {
+        let a = Schema::new(vec![
+            Field::key("id", ColumnType::Int64),
+            Field::new("v", ColumnType::Utf8),
+        ]);
+        let b = Schema::new(vec![
+            Field::key("id", ColumnType::Int64),
+            Field::new("v", ColumnType::Float64),
+        ]);
+        let al = align_schemas(&a, &b).unwrap();
+        assert_eq!(al.pairs.len(), 1);
+        assert_eq!(al.a_only, vec!["v"]);
+        assert_eq!(al.b_only, vec!["v"]);
+    }
+
+    #[test]
+    fn missing_key_is_error() {
+        let a = Schema::new(vec![
+            Field::key("id", ColumnType::Int64),
+            Field::new("v", ColumnType::Float64),
+        ]);
+        let b = Schema::new(vec![
+            Field::new("other", ColumnType::Int64),
+            Field::new("v", ColumnType::Float64),
+        ]);
+        assert!(align_schemas(&a, &b).is_err());
+    }
+
+    #[test]
+    fn ambiguous_names_rejected() {
+        let a = Schema::new(vec![
+            Field::key("id", ColumnType::Int64),
+            Field::new("a_b", ColumnType::Float64),
+            Field::new("ab", ColumnType::Float64),
+        ]);
+        let b = Schema::new(vec![Field::key("id", ColumnType::Int64)]);
+        assert!(align_schemas(&a, &b).is_err());
+    }
+
+    #[test]
+    fn compare_kind_dispatch() {
+        assert_eq!(CompareKind::of(&ColumnType::Date), CompareKind::Numeric);
+        assert_eq!(CompareKind::of(&ColumnType::Timestamp), CompareKind::Numeric);
+        assert_eq!(CompareKind::of(&ColumnType::Utf8), CompareKind::String);
+        assert_eq!(CompareKind::of(&ColumnType::Bool), CompareKind::Bool);
+    }
+
+    #[test]
+    fn key_indices_reported() {
+        let a = Schema::new(vec![
+            Field::key("id", ColumnType::Int64),
+            Field::new("v", ColumnType::Float64),
+            Field::new("s", ColumnType::Utf8),
+        ]);
+        let al = align_schemas(&a, &a).unwrap();
+        assert_eq!(al.key_pairs(), vec![0]);
+        assert_eq!(al.numeric_pairs(), vec![0, 1]);
+        assert_eq!(al.native_pairs(), vec![2]);
+    }
+}

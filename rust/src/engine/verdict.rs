@@ -1,0 +1,168 @@
+//! Verdict codes and outcome aggregates.
+//!
+//! Codes are the cross-layer contract: they must match
+//! `python/compile/kernels/diff_kernel.py` (and `ref.py`) exactly — the
+//! PJRT path returns raw i32 codes produced by the Pallas kernel.
+
+/// Cell-level verdict (paper §II: typed verdict per aligned row+column).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(i32)]
+pub enum Verdict {
+    /// Values compare equal (incl. null==null, NaN==NaN, within tolerance).
+    Equal = 0,
+    /// Aligned row, differing cell (incl. null vs value).
+    Changed = 1,
+    /// Row present only on the B side.
+    Added = 2,
+    /// Row present only on the A side.
+    Removed = 3,
+    /// Padding slot (bucket padding); never counted in outcomes.
+    Absent = 4,
+}
+
+impl Verdict {
+    pub fn from_code(code: i32) -> Option<Verdict> {
+        match code {
+            0 => Some(Verdict::Equal),
+            1 => Some(Verdict::Changed),
+            2 => Some(Verdict::Added),
+            3 => Some(Verdict::Removed),
+            4 => Some(Verdict::Absent),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Verdict::Equal => "equal",
+            Verdict::Changed => "changed",
+            Verdict::Added => "added",
+            Verdict::Removed => "removed",
+            Verdict::Absent => "absent",
+        }
+    }
+}
+
+/// Cell-level verdict histogram. `absent` exists only transiently (bucket
+/// padding) and must be zero in merged job outcomes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct VerdictCounts {
+    pub equal: u64,
+    pub changed: u64,
+    pub added: u64,
+    pub removed: u64,
+    pub absent: u64,
+}
+
+impl VerdictCounts {
+    pub fn total(&self) -> u64 {
+        self.equal + self.changed + self.added + self.removed + self.absent
+    }
+    pub fn record(&mut self, v: Verdict, n: u64) {
+        match v {
+            Verdict::Equal => self.equal += n,
+            Verdict::Changed => self.changed += n,
+            Verdict::Added => self.added += n,
+            Verdict::Removed => self.removed += n,
+            Verdict::Absent => self.absent += n,
+        }
+    }
+    pub fn merge(&mut self, other: &VerdictCounts) {
+        self.equal += other.equal;
+        self.changed += other.changed;
+        self.added += other.added;
+        self.removed += other.removed;
+        self.absent += other.absent;
+    }
+    /// From the kernel's (5,) i32 counts vector.
+    pub fn from_codes(counts: &[i64; 5]) -> VerdictCounts {
+        VerdictCounts {
+            equal: counts[0] as u64,
+            changed: counts[1] as u64,
+            added: counts[2] as u64,
+            removed: counts[3] as u64,
+            absent: counts[4] as u64,
+        }
+    }
+}
+
+/// Row-level outcome totals for one shard or job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RowCounts {
+    pub aligned: u64,
+    pub changed_rows: u64,
+    pub added: u64,
+    pub removed: u64,
+}
+
+impl RowCounts {
+    pub fn merge(&mut self, o: &RowCounts) {
+        self.aligned += o.aligned;
+        self.changed_rows += o.changed_rows;
+        self.added += o.added;
+        self.removed += o.removed;
+    }
+}
+
+/// Per-column diff summary (merge step: distribution summaries).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ColumnOutcome {
+    pub name: String,
+    pub changed: u64,
+    /// Max |a-b| among numerically compared cells (0 for non-numeric).
+    pub max_abs_delta: f64,
+}
+
+/// The output of Δ over one shard. The merged multiset of outcomes is
+/// deterministic and invariant to (b, k) and backend (paper §II) —
+/// property-tested in rust/tests/.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchOutcome {
+    pub shard_id: u64,
+    pub rows_a: u64,
+    pub rows_b: u64,
+    pub cells: VerdictCounts,
+    pub rows: RowCounts,
+    pub columns: Vec<ColumnOutcome>,
+    /// Keys of changed/added/removed rows (capped at `KEY_SAMPLE_CAP`).
+    pub diff_keys: Vec<i64>,
+    pub diff_keys_truncated: bool,
+}
+
+/// Cap on materialized diff-row keys per shard.
+pub const KEY_SAMPLE_CAP: usize = 10_000;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_match_python_contract() {
+        assert_eq!(Verdict::Equal as i32, 0);
+        assert_eq!(Verdict::Changed as i32, 1);
+        assert_eq!(Verdict::Added as i32, 2);
+        assert_eq!(Verdict::Removed as i32, 3);
+        assert_eq!(Verdict::Absent as i32, 4);
+        for c in 0..5 {
+            assert_eq!(Verdict::from_code(c).unwrap() as i32, c);
+        }
+        assert!(Verdict::from_code(5).is_none());
+    }
+
+    #[test]
+    fn counts_merge_and_total() {
+        let mut a = VerdictCounts { equal: 10, changed: 2, ..Default::default() };
+        let b = VerdictCounts { added: 3, removed: 1, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.total(), 16);
+        a.record(Verdict::Changed, 4);
+        assert_eq!(a.changed, 6);
+    }
+
+    #[test]
+    fn from_codes_roundtrip() {
+        let c = VerdictCounts::from_codes(&[5, 4, 3, 2, 1]);
+        assert_eq!(c.equal, 5);
+        assert_eq!(c.absent, 1);
+        assert_eq!(c.total(), 15);
+    }
+}

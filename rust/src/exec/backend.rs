@@ -1,0 +1,168 @@
+//! The backend abstraction: how the scheduler submits shards and
+//! observes completions. Both real backends (inmem threads, dask-like
+//! task graph) and the discrete-event simulator implement this trait —
+//! the scheduler cannot tell them apart, which is what makes the
+//! simulator a valid testbed for the control loop (DESIGN.md §4.2).
+
+use std::sync::Arc;
+
+use crate::data::io::TableSource;
+use crate::engine::comparators::NumericDeltaExec;
+use crate::engine::delta::{JobPlan, ShardMemStats};
+use crate::engine::verdict::BatchOutcome;
+
+/// One schedulable shard: contiguous key-aligned row ranges on each side.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub shard_id: u64,
+    /// Speculative attempt number (0 = primary). The merger keeps the
+    /// first completion per shard_id.
+    pub attempt: u32,
+    pub a_offset: usize,
+    pub a_len: usize,
+    pub b_offset: usize,
+    pub b_len: usize,
+}
+
+impl ShardSpec {
+    pub fn rows(&self) -> usize {
+        self.a_len.max(self.b_len)
+    }
+}
+
+/// Why a batch failed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BatchError {
+    /// Accounted memory exceeded the cap — the failure the safety
+    /// envelope (Eq. 4) exists to prevent. Fatal for the job.
+    Oom { needed_bytes: u64, cap_bytes: u64 },
+    /// Cooperative cancellation (straggler speculation won).
+    Cancelled,
+    /// Any other execution error.
+    Failed(String),
+}
+
+/// Completion record for one batch (the paper's per-batch telemetry:
+/// timestamps, RSS, CPU, I/O, queue depth at completion).
+#[derive(Debug, Clone)]
+pub struct BatchReport {
+    pub shard: ShardSpec,
+    pub worker_id: usize,
+    /// Backend-clock seconds (virtual for the simulator).
+    pub submitted_at: f64,
+    pub started_at: f64,
+    pub finished_at: f64,
+    pub result: Result<BatchOutcome, BatchError>,
+    pub mem: ShardMemStats,
+    /// Peak accounted RSS of the executing worker during this batch.
+    pub worker_rss_peak: u64,
+    /// Bytes read for this batch.
+    pub io_bytes: u64,
+}
+
+impl BatchReport {
+    /// Queueing + execution latency (the paper's per-batch latency).
+    pub fn latency(&self) -> f64 {
+        self.finished_at - self.submitted_at
+    }
+    pub fn exec_time(&self) -> f64 {
+        self.finished_at - self.started_at
+    }
+    pub fn is_oom(&self) -> bool {
+        matches!(self.result, Err(BatchError::Oom { .. }))
+    }
+}
+
+/// Shared immutable job state handed to every backend/worker.
+pub struct JobContext {
+    pub a: Arc<dyn TableSource>,
+    pub b: Arc<dyn TableSource>,
+    pub plan: Arc<JobPlan>,
+    pub exec: Arc<dyn NumericDeltaExec>,
+    /// Hard RAM cap (accounting-based; exceeding it is an OOM failure).
+    pub mem_cap_bytes: u64,
+    /// Baseline resident bytes (source tables etc.) counted against the
+    /// cap in addition to per-batch buffers.
+    pub base_rss_bytes: u64,
+}
+
+impl JobContext {
+    pub fn new(
+        a: Arc<dyn TableSource>,
+        b: Arc<dyn TableSource>,
+        plan: JobPlan,
+        exec: Arc<dyn NumericDeltaExec>,
+        mem_cap_bytes: u64,
+    ) -> Arc<Self> {
+        let base = a.resident_bytes() + b.resident_bytes();
+        Arc::new(JobContext {
+            a,
+            b,
+            plan: Arc::new(plan),
+            exec,
+            mem_cap_bytes,
+            base_rss_bytes: base,
+        })
+    }
+}
+
+/// Execution backend contract. All methods are called from the single
+/// scheduler thread; workers live inside the backend.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+    /// Enqueue a shard for execution.
+    fn submit(&mut self, shard: ShardSpec);
+    /// Non-blocking: drain finished batches.
+    fn poll(&mut self) -> Vec<BatchReport>;
+    /// Block until at least one batch finishes (or nothing is inflight);
+    /// returns all completions currently available.
+    fn wait_any(&mut self) -> Vec<BatchReport>;
+    /// Request a new worker count (takes effect asap; k is the paper's
+    /// control variable).
+    fn set_workers(&mut self, k: usize);
+    fn workers(&self) -> usize;
+    /// Shards submitted but not yet started.
+    fn queue_depth(&self) -> usize;
+    /// Shards submitted but not yet finished.
+    fn inflight(&self) -> usize;
+    /// Backend clock in seconds (virtual for the simulator).
+    fn now(&self) -> f64;
+    /// Job-level accounted RSS right now (base + active batch buffers).
+    fn current_rss(&self) -> u64;
+    /// CPU utilization since the previous call, as a fraction of the
+    /// *CPU cap* (not of k), in [0, 1].
+    fn utilization_sample(&mut self, cpu_cap: usize) -> f64;
+    /// Cooperatively cancel a shard attempt (straggler speculation).
+    fn cancel(&mut self, shard_id: u64);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_latency_math() {
+        let r = BatchReport {
+            shard: ShardSpec {
+                shard_id: 0,
+                attempt: 0,
+                a_offset: 0,
+                a_len: 10,
+                b_offset: 0,
+                b_len: 12,
+            },
+            worker_id: 0,
+            submitted_at: 1.0,
+            started_at: 1.5,
+            finished_at: 3.0,
+            result: Err(BatchError::Cancelled),
+            mem: ShardMemStats::default(),
+            worker_rss_peak: 0,
+            io_bytes: 0,
+        };
+        assert_eq!(r.latency(), 2.0);
+        assert_eq!(r.exec_time(), 1.5);
+        assert!(!r.is_oom());
+        assert_eq!(r.shard.rows(), 12);
+    }
+}

@@ -1,0 +1,117 @@
+//! Dask-like local task-graph backend (paper §II backend (ii);
+//! substitution documented in DESIGN.md §4.1).
+//!
+//! Reproduces the scheduler-visible properties of a local Dask cluster:
+//!
+//! * **task-graph overhead** — every shard is expanded into key-aligned
+//!   sub-chunk tasks and tracked through a task-state table (real
+//!   bookkeeping on the submit/completion path);
+//! * **per-worker memory isolation** — each worker has its own arena
+//!   with `total/k` cap (Dask's `memory_limit`), re-split on resize;
+//! * **finer-grained preemption** — sub-chunk execution bounds the peak
+//!   per-task buffer, so memory behaviour near the cap is much safer
+//!   than the shared-heap inmem backend, at the cost of per-task
+//!   overhead and worse locality.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::exec::backend::{Backend, BatchReport, JobContext, ShardSpec};
+use crate::exec::pool::{Pool, PoolProfile};
+
+/// Default sub-chunk granularity (rows per task).
+pub const DEFAULT_CHUNK_ROWS: usize = 65_536;
+
+#[derive(Debug, Clone, Copy)]
+enum TaskState {
+    Queued,
+    Done,
+}
+
+pub struct DaskLikeBackend {
+    pool: Pool,
+    /// Task-state table (graph bookkeeping — the overhead source).
+    tasks: HashMap<u64, TaskState>,
+    completed: u64,
+}
+
+impl DaskLikeBackend {
+    pub fn new(
+        ctx: Arc<JobContext>,
+        initial_workers: usize,
+        max_workers: usize,
+        chunk_rows: usize,
+    ) -> Self {
+        DaskLikeBackend {
+            pool: Pool::new(
+                ctx,
+                PoolProfile {
+                    chunk_rows: Some(chunk_rows.max(1)),
+                    per_worker_memory: true,
+                },
+                initial_workers,
+                max_workers,
+            ),
+            tasks: HashMap::new(),
+            completed: 0,
+        }
+    }
+
+    pub fn completed_tasks(&self) -> u64 {
+        self.completed
+    }
+
+    fn track_completions(&mut self, reports: &[BatchReport]) {
+        for r in reports {
+            if let Some(state) = self.tasks.get_mut(&r.shard.shard_id) {
+                *state = TaskState::Done;
+            }
+            self.tasks.remove(&r.shard.shard_id);
+            self.completed += 1;
+        }
+    }
+}
+
+impl Backend for DaskLikeBackend {
+    fn name(&self) -> &'static str {
+        "dasklike"
+    }
+    fn submit(&mut self, shard: ShardSpec) {
+        self.tasks.insert(shard.shard_id, TaskState::Queued);
+        self.pool.submit(shard);
+    }
+    fn poll(&mut self) -> Vec<BatchReport> {
+        let reports = self.pool.poll();
+        self.track_completions(&reports);
+        reports
+    }
+    fn wait_any(&mut self) -> Vec<BatchReport> {
+        let reports = self.pool.wait_any();
+        self.track_completions(&reports);
+        reports
+    }
+    fn set_workers(&mut self, k: usize) {
+        self.pool.set_workers(k);
+    }
+    fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+    fn queue_depth(&self) -> usize {
+        self.pool.queue_depth()
+    }
+    fn inflight(&self) -> usize {
+        self.pool.inflight()
+    }
+    fn now(&self) -> f64 {
+        crate::util::mono_secs()
+    }
+    fn current_rss(&self) -> u64 {
+        self.pool.current_rss()
+    }
+    fn utilization_sample(&mut self, cpu_cap: usize) -> f64 {
+        self.pool.utilization_sample(cpu_cap)
+    }
+    fn cancel(&mut self, shard_id: u64) {
+        self.pool.cancel(shard_id);
+    }
+}

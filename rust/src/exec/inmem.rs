@@ -1,0 +1,66 @@
+//! In-memory threaded backend (paper §II backend (i)): single process,
+//! shared heap, minimal scheduling overhead, best cache locality — the
+//! fast choice when the working set comfortably fits in RAM. Memory is
+//! one shared pool; an aggressive (b, k) can genuinely blow the cap,
+//! which is exactly the failure mode the working-set gate avoids.
+
+use std::sync::Arc;
+
+use crate::exec::backend::{Backend, BatchReport, JobContext, ShardSpec};
+use crate::exec::pool::{Pool, PoolProfile};
+
+pub struct InMemBackend {
+    pool: Pool,
+}
+
+impl InMemBackend {
+    pub fn new(ctx: Arc<JobContext>, initial_workers: usize, max_workers: usize) -> Self {
+        InMemBackend {
+            pool: Pool::new(
+                ctx,
+                PoolProfile { chunk_rows: None, per_worker_memory: false },
+                initial_workers,
+                max_workers,
+            ),
+        }
+    }
+}
+
+impl Backend for InMemBackend {
+    fn name(&self) -> &'static str {
+        "inmem"
+    }
+    fn submit(&mut self, shard: ShardSpec) {
+        self.pool.submit(shard);
+    }
+    fn poll(&mut self) -> Vec<BatchReport> {
+        self.pool.poll()
+    }
+    fn wait_any(&mut self) -> Vec<BatchReport> {
+        self.pool.wait_any()
+    }
+    fn set_workers(&mut self, k: usize) {
+        self.pool.set_workers(k);
+    }
+    fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+    fn queue_depth(&self) -> usize {
+        self.pool.queue_depth()
+    }
+    fn inflight(&self) -> usize {
+        self.pool.inflight()
+    }
+    fn now(&self) -> f64 {
+        crate::util::mono_secs()
+    }
+    fn current_rss(&self) -> u64 {
+        self.pool.current_rss()
+    }
+    fn utilization_sample(&mut self, cpu_cap: usize) -> f64 {
+        self.pool.utilization_sample(cpu_cap)
+    }
+    fn cancel(&mut self, shard_id: u64) {
+        self.pool.cancel(shard_id);
+    }
+}

@@ -1,0 +1,12 @@
+//! Execution backends (DESIGN.md systems S10–S11): the `Backend` trait,
+//! the job partitioner, worker-side execution with memory accounting,
+//! and the two real backends (inmem threads, dask-like task graph).
+//! The discrete-event simulator (`crate::sim`) implements the same
+//! trait.
+
+pub mod backend;
+pub mod dasklike;
+pub mod inmem;
+pub mod partition;
+pub mod pool;
+pub mod worker;

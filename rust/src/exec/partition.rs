@@ -1,0 +1,278 @@
+//! Job partitioning: carve the key-sorted inputs into shards of `b`
+//! aligned rows per side (paper §II job decomposition).
+//!
+//! Shards are key-range aligned: shard i covers A rows [p, p+b) and the
+//! B rows whose keys fall in the same key span, so every row lands in
+//! exactly one shard regardless of b — that is what makes the merged
+//! outcome invariant to batch size. Keyless jobs shard by position.
+//!
+//! Partitioning is incremental (`next(b)`) because the controller
+//! changes b while the job runs.
+
+use crate::data::io::TableSource;
+use crate::data::table::Table;
+use crate::exec::backend::ShardSpec;
+
+/// Incremental shard carver over a source pair.
+pub struct Partitioner<'a> {
+    a: &'a dyn TableSource,
+    b: &'a dyn TableSource,
+    keyed: bool,
+    a_pos: usize,
+    b_pos: usize,
+    next_id: u64,
+}
+
+impl<'a> Partitioner<'a> {
+    pub fn new(a: &'a dyn TableSource, b: &'a dyn TableSource) -> Self {
+        let keyed = a.nrows() > 0
+            && b.nrows() > 0
+            && a.key_at(0).is_some()
+            && b.key_at(0).is_some();
+        Partitioner { a, b, keyed, a_pos: 0, b_pos: 0, next_id: 0 }
+    }
+
+    pub fn done(&self) -> bool {
+        self.a_pos >= self.a.nrows() && self.b_pos >= self.b.nrows()
+    }
+
+    /// Fraction of input rows already carved (progress metric).
+    pub fn progress(&self) -> f64 {
+        let total = (self.a.nrows() + self.b.nrows()).max(1);
+        (self.a_pos + self.b_pos) as f64 / total as f64
+    }
+
+    pub fn shards_emitted(&self) -> u64 {
+        self.next_id
+    }
+
+    /// Carve the next shard of (at most) `batch_rows` A-side rows.
+    pub fn next(&mut self, batch_rows: usize) -> Option<ShardSpec> {
+        if self.done() {
+            return None;
+        }
+        let batch_rows = batch_rows.max(1);
+        let a_n = self.a.nrows();
+        let b_n = self.b.nrows();
+
+        let (a_len, b_len) = if !self.keyed {
+            // Positional sharding: same ranges both sides.
+            let a_len = batch_rows.min(a_n - self.a_pos);
+            let b_len = if self.a_pos + a_len >= a_n {
+                b_n - self.b_pos // last shard takes the B tail
+            } else {
+                batch_rows.min(b_n.saturating_sub(self.b_pos))
+            };
+            (a_len, b_len)
+        } else if self.a_pos >= a_n {
+            // A exhausted: the rest of B is one trailing added-range.
+            (0, (b_n - self.b_pos).min(batch_rows))
+        } else {
+            let a_len = batch_rows.min(a_n - self.a_pos);
+            let b_hi = if self.a_pos + a_len >= a_n {
+                b_n // last A shard absorbs the B tail
+            } else {
+                // First B row whose key exceeds the shard's last A key.
+                let boundary = self
+                    .a
+                    .key_at(self.a_pos + a_len - 1)
+                    .expect("keyed source");
+                upper_bound_key(self.b, self.b_pos, boundary)
+            };
+            (a_len, b_hi - self.b_pos)
+        };
+
+        let spec = ShardSpec {
+            shard_id: self.next_id,
+            attempt: 0,
+            a_offset: self.a_pos,
+            a_len,
+            b_offset: self.b_pos,
+            b_len,
+        };
+        self.a_pos += a_len;
+        self.b_pos += b_len;
+        self.next_id += 1;
+        Some(spec)
+    }
+}
+
+/// First row index in [lo, nrows) with key > `key` (binary search over a
+/// key-sorted source).
+fn upper_bound_key(src: &dyn TableSource, lo: usize, key: i64) -> usize {
+    let mut lo = lo;
+    let mut hi = src.nrows();
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        match src.key_at(mid) {
+            Some(k) if k <= key => lo = mid + 1,
+            _ => hi = mid,
+        }
+    }
+    lo
+}
+
+/// Split decoded shard tables into sub-chunks of at most `chunk_rows`
+/// A-side rows, key-range aligned (used by the dask-like backend's
+/// finer-grained tasks and by straggler shard splitting).
+pub fn partition_tables(
+    a: &Table,
+    b: &Table,
+    chunk_rows: usize,
+) -> Vec<((usize, usize), (usize, usize))> {
+    let key_a = a.schema.key_indices().first().copied();
+    let key_b = b.schema.key_indices().first().copied();
+    let chunk_rows = chunk_rows.max(1);
+    let mut out = Vec::new();
+    let (mut ap, mut bp) = (0usize, 0usize);
+    while ap < a.nrows() || bp < b.nrows() {
+        if ap >= a.nrows() {
+            out.push(((ap, 0), (bp, b.nrows() - bp)));
+            break;
+        }
+        let a_len = chunk_rows.min(a.nrows() - ap);
+        let b_hi = match (key_a, key_b) {
+            (Some(ka), Some(kb)) if ap + a_len < a.nrows() => {
+                let boundary = match a.column(ka).cell(ap + a_len - 1) {
+                    crate::data::column::Cell::I64(k) => k,
+                    _ => i64::MAX,
+                };
+                let mut lo = bp;
+                let mut hi = b.nrows();
+                while lo < hi {
+                    let mid = lo + (hi - lo) / 2;
+                    let k = match b.column(kb).cell(mid) {
+                        crate::data::column::Cell::I64(k) => k,
+                        _ => i64::MAX,
+                    };
+                    if k <= boundary {
+                        lo = mid + 1;
+                    } else {
+                        hi = mid;
+                    }
+                }
+                lo
+            }
+            _ if ap + a_len < a.nrows() => (bp + a_len).min(b.nrows()),
+            _ => b.nrows(),
+        };
+        out.push(((ap, a_len), (bp, b_hi - bp)));
+        ap += a_len;
+        bp = b_hi;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generator::{generate_pair, GenSpec};
+    use crate::data::io::InMemorySource;
+
+    fn sources(rows: usize, seed: u64) -> (InMemorySource, InMemorySource) {
+        let (a, b, _) = generate_pair(&GenSpec {
+            rows,
+            seed,
+            ..GenSpec::default()
+        });
+        (InMemorySource::new(a), InMemorySource::new(b))
+    }
+
+    #[test]
+    fn shards_cover_both_sides_exactly_once() {
+        let (a, b) = sources(5_000, 3);
+        let mut p = Partitioner::new(&a, &b);
+        let mut a_seen = 0;
+        let mut b_seen = 0;
+        let mut id = 0;
+        while let Some(s) = p.next(700) {
+            assert_eq!(s.shard_id, id);
+            assert_eq!(s.a_offset, a_seen);
+            assert_eq!(s.b_offset, b_seen);
+            a_seen += s.a_len;
+            b_seen += s.b_len;
+            id += 1;
+        }
+        assert_eq!(a_seen, a.nrows());
+        assert_eq!(b_seen, b.nrows());
+        assert!(p.done());
+        assert_eq!(p.progress(), 1.0);
+    }
+
+    #[test]
+    fn key_ranges_never_split_a_key_span() {
+        // Every B key must fall in the shard whose A key range covers it.
+        let (a, b) = sources(3_000, 9);
+        let mut p = Partitioner::new(&a, &b);
+        while let Some(s) = p.next(311) {
+            if s.a_len == 0 {
+                continue;
+            }
+            let a_last = a.key_at(s.a_offset + s.a_len - 1).unwrap();
+            if s.b_len > 0 {
+                let b_last = b.key_at(s.b_offset + s.b_len - 1).unwrap();
+                // b rows in this shard have keys <= a_last (except the
+                // final shard which absorbs the tail).
+                if s.a_offset + s.a_len < a.nrows() {
+                    assert!(b_last <= a_last, "b_last={b_last} a_last={a_last}");
+                }
+            }
+            // The next B row (if any) must be beyond a_last.
+            if s.a_offset + s.a_len < a.nrows()
+                && s.b_offset + s.b_len < b.nrows()
+            {
+                let next_b = b.key_at(s.b_offset + s.b_len).unwrap();
+                assert!(next_b > a_last);
+            }
+        }
+    }
+
+    #[test]
+    fn varying_batch_size_still_covers() {
+        let (a, b) = sources(4_000, 5);
+        let mut p = Partitioner::new(&a, &b);
+        let sizes = [100, 900, 50, 2_000, 317];
+        let mut i = 0;
+        let (mut a_seen, mut b_seen) = (0, 0);
+        while let Some(s) = p.next(sizes[i % sizes.len()]) {
+            a_seen += s.a_len;
+            b_seen += s.b_len;
+            i += 1;
+        }
+        assert_eq!((a_seen, b_seen), (a.nrows(), b.nrows()));
+    }
+
+    #[test]
+    fn partition_tables_covers_decoded_pair() {
+        let (a, b, _) = generate_pair(&GenSpec {
+            rows: 1_000,
+            seed: 8,
+            ..GenSpec::default()
+        });
+        let chunks = partition_tables(&a, &b, 137);
+        let a_total: usize = chunks.iter().map(|c| c.0 .1).sum();
+        let b_total: usize = chunks.iter().map(|c| c.1 .1).sum();
+        assert_eq!(a_total, a.nrows());
+        assert_eq!(b_total, b.nrows());
+        // Contiguity.
+        let mut ap = 0;
+        let mut bp = 0;
+        for ((ao, al), (bo, bl)) in chunks {
+            assert_eq!(ao, ap);
+            assert_eq!(bo, bp);
+            ap += al;
+            bp += bl;
+        }
+    }
+
+    #[test]
+    fn single_shard_when_b_huge() {
+        let (a, b) = sources(100, 2);
+        let mut p = Partitioner::new(&a, &b);
+        let s = p.next(1_000_000).unwrap();
+        assert_eq!(s.a_len, a.nrows());
+        assert_eq!(s.b_len, b.nrows());
+        assert!(p.done());
+        assert!(p.next(10).is_none());
+    }
+}

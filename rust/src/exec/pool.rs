@@ -1,0 +1,373 @@
+//! Shared worker-pool machinery for the real (in-process) backends.
+//!
+//! A pool owns N worker threads pulling `ShardSpec`s from a condvar
+//! queue and pushing `BatchReport`s through a channel. The two backends
+//! differ only in their `PoolProfile`: memory accounting scope (shared
+//! heap vs per-worker arenas), chunk granularity, and per-task
+//! bookkeeping — see `inmem.rs` / `dasklike.rs`.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::exec::backend::{BatchReport, JobContext, ShardSpec};
+use crate::exec::worker::{execute_shard, CancelSet, MemTracker};
+use crate::util::mono_secs;
+
+/// Backend-specific execution profile.
+#[derive(Clone)]
+pub struct PoolProfile {
+    /// None → whole-shard execution (shared-heap inmem); Some(rows) →
+    /// key-aligned sub-chunk tasks (dask-like granularity).
+    pub chunk_rows: Option<usize>,
+    /// Shared tracker (inmem) or per-worker arenas (dask-like).
+    pub per_worker_memory: bool,
+}
+
+struct Queued {
+    spec: ShardSpec,
+    submitted_at: f64,
+}
+
+struct Shared {
+    ctx: Arc<JobContext>,
+    profile: PoolProfile,
+    queue: Mutex<VecDeque<Queued>>,
+    cv: Condvar,
+    target_workers: AtomicUsize,
+    queue_len: AtomicUsize,
+    inflight: AtomicUsize,
+    busy_ns: AtomicU64,
+    shutdown: AtomicUsize, // 1 = drain and exit
+    /// Shared pool (inmem) — also used as the job-level RSS ledger.
+    shared_tracker: Arc<MemTracker>,
+    /// Per-worker arenas (dask-like); indexed by worker id.
+    worker_trackers: Vec<Arc<MemTracker>>,
+    cancel: Arc<CancelSet>,
+    report_tx: Mutex<Sender<BatchReport>>,
+}
+
+pub struct Pool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    report_rx: Receiver<BatchReport>,
+    spawned: usize,
+    max_workers: usize,
+    util_last_t: f64,
+    util_last_busy: u64,
+}
+
+impl Pool {
+    pub fn new(
+        ctx: Arc<JobContext>,
+        profile: PoolProfile,
+        initial_workers: usize,
+        max_workers: usize,
+    ) -> Pool {
+        let (tx, rx) = channel();
+        let budget = ctx
+            .mem_cap_bytes
+            .saturating_sub(ctx.base_rss_bytes)
+            .max(1);
+        let shared_tracker = MemTracker::new(budget);
+        let worker_trackers: Vec<Arc<MemTracker>> = (0..max_workers)
+            .map(|_| MemTracker::new(budget / initial_workers.max(1) as u64))
+            .collect();
+        let shared = Arc::new(Shared {
+            ctx,
+            profile,
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            target_workers: AtomicUsize::new(initial_workers),
+            queue_len: AtomicUsize::new(0),
+            inflight: AtomicUsize::new(0),
+            busy_ns: AtomicU64::new(0),
+            shutdown: AtomicUsize::new(0),
+            shared_tracker,
+            worker_trackers,
+            cancel: CancelSet::new(),
+            report_tx: Mutex::new(tx),
+        });
+        let mut pool = Pool {
+            shared,
+            handles: Vec::new(),
+            report_rx: rx,
+            spawned: 0,
+            max_workers,
+            util_last_t: mono_secs(),
+            util_last_busy: 0,
+        };
+        pool.ensure_spawned(initial_workers);
+        pool
+    }
+
+    fn ensure_spawned(&mut self, target: usize) {
+        let target = target.min(self.max_workers);
+        while self.spawned < target {
+            let id = self.spawned;
+            let shared = Arc::clone(&self.shared);
+            self.handles.push(
+                std::thread::Builder::new()
+                    .name(format!("sdiff-worker-{id}"))
+                    .spawn(move || worker_loop(id, shared))
+                    .expect("spawn worker"),
+            );
+            self.spawned += 1;
+        }
+    }
+
+    pub fn submit(&mut self, spec: ShardSpec) {
+        let q = Queued { spec, submitted_at: mono_secs() };
+        {
+            let mut queue = self.shared.queue.lock().unwrap();
+            queue.push_back(q);
+        }
+        self.shared.queue_len.fetch_add(1, Ordering::Relaxed);
+        self.shared.inflight.fetch_add(1, Ordering::Relaxed);
+        self.shared.cv.notify_one();
+    }
+
+    pub fn poll(&mut self) -> Vec<BatchReport> {
+        let mut out = Vec::new();
+        while let Ok(r) = self.report_rx.try_recv() {
+            out.push(r);
+        }
+        out
+    }
+
+    pub fn wait_any(&mut self) -> Vec<BatchReport> {
+        loop {
+            let got = self.poll();
+            if !got.is_empty() || self.inflight() == 0 {
+                return got;
+            }
+            match self
+                .report_rx
+                .recv_timeout(std::time::Duration::from_millis(20))
+            {
+                Ok(r) => {
+                    let mut out = vec![r];
+                    out.extend(self.poll());
+                    return out;
+                }
+                Err(_) => continue,
+            }
+        }
+    }
+
+    pub fn set_workers(&mut self, k: usize) {
+        let k = k.clamp(1, self.max_workers);
+        self.shared.target_workers.store(k, Ordering::Relaxed);
+        self.ensure_spawned(k);
+        if self.shared.profile.per_worker_memory {
+            // Re-split the memory budget across active arenas (Dask
+            // semantics: per-worker memory_limit = total / n_workers).
+            let budget = self
+                .shared
+                .ctx
+                .mem_cap_bytes
+                .saturating_sub(self.shared.ctx.base_rss_bytes)
+                .max(1);
+            for t in &self.shared.worker_trackers {
+                t.set_cap(budget / k as u64);
+            }
+        }
+        self.shared.cv.notify_all();
+    }
+
+    pub fn workers(&self) -> usize {
+        self.shared.target_workers.load(Ordering::Relaxed)
+    }
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue_len.load(Ordering::Relaxed)
+    }
+    pub fn inflight(&self) -> usize {
+        self.shared.inflight.load(Ordering::Relaxed)
+    }
+    pub fn cancel(&self, shard_id: u64) {
+        self.shared.cancel.cancel(shard_id);
+    }
+
+    /// Job-level accounted RSS (base tables + live batch buffers).
+    pub fn current_rss(&self) -> u64 {
+        let batch: u64 = if self.shared.profile.per_worker_memory {
+            self.shared.worker_trackers.iter().map(|t| t.current()).sum()
+        } else {
+            self.shared.shared_tracker.current()
+        };
+        self.shared.ctx.base_rss_bytes + batch
+    }
+
+    pub fn utilization_sample(&mut self, cpu_cap: usize) -> f64 {
+        let now = mono_secs();
+        let busy = self.shared.busy_ns.load(Ordering::Relaxed);
+        let dt = (now - self.util_last_t).max(1e-9);
+        let db = busy.saturating_sub(self.util_last_busy) as f64 * 1e-9;
+        self.util_last_t = now;
+        self.util_last_busy = busy;
+        (db / (dt * cpu_cap.max(1) as f64)).clamp(0.0, 1.0)
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(1, Ordering::Relaxed);
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(id: usize, shared: Arc<Shared>) {
+    loop {
+        // Retire if we are above the target worker count and idle.
+        let task = {
+            let mut queue = shared.queue.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::Relaxed) == 1 {
+                    return;
+                }
+                let active = shared.target_workers.load(Ordering::Relaxed);
+                if id < active {
+                    if let Some(t) = queue.pop_front() {
+                        break Some(t);
+                    }
+                }
+                let (q, _timeout) = shared
+                    .cv
+                    .wait_timeout(queue, std::time::Duration::from_millis(25))
+                    .unwrap();
+                queue = q;
+            }
+        };
+        let Some(task) = task else { continue };
+        shared.queue_len.fetch_sub(1, Ordering::Relaxed);
+
+        let started_at = mono_secs();
+        let t0 = Instant::now();
+        let tracker = if shared.profile.per_worker_memory {
+            &shared.worker_trackers[id]
+        } else {
+            &shared.shared_tracker
+        };
+        let res = execute_shard(
+            &shared.ctx,
+            task.spec,
+            tracker,
+            &shared.cancel,
+            shared.profile.chunk_rows,
+        );
+        shared
+            .busy_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let finished_at = mono_secs();
+
+        let report = BatchReport {
+            shard: task.spec,
+            worker_id: id,
+            submitted_at: task.submitted_at,
+            started_at,
+            finished_at,
+            result: res.result,
+            mem: res.mem,
+            worker_rss_peak: res.mem.peak() as u64,
+            io_bytes: res.io_bytes,
+        };
+        // Send BEFORE decrementing inflight: the scheduler treats
+        // "inflight == 0" as "every report is visible in the channel".
+        let _ = shared.report_tx.lock().unwrap().send(report);
+        shared.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+    use crate::data::generator::{generate_pair, GenSpec};
+    use crate::data::io::InMemorySource;
+    use crate::engine::comparators::NativeExec;
+    use crate::engine::delta::JobPlan;
+    use crate::engine::schema_align::align_schemas;
+    use crate::exec::partition::Partitioner;
+
+    fn mk_ctx(rows: usize) -> Arc<JobContext> {
+        let (a, b, _) =
+            generate_pair(&GenSpec { rows, seed: 33, ..GenSpec::default() });
+        let aligned = align_schemas(&a.schema, &b.schema).unwrap();
+        let plan = JobPlan::new(aligned, EngineConfig::default());
+        JobContext::new(
+            Arc::new(InMemorySource::new(a)),
+            Arc::new(InMemorySource::new(b)),
+            plan,
+            Arc::new(NativeExec),
+            u64::MAX,
+        )
+    }
+
+    #[test]
+    fn pool_executes_all_shards() {
+        let ctx = mk_ctx(2_000);
+        let mut pool = Pool::new(
+            Arc::clone(&ctx),
+            PoolProfile { chunk_rows: None, per_worker_memory: false },
+            2,
+            4,
+        );
+        let mut part = Partitioner::new(ctx.a.as_ref(), ctx.b.as_ref());
+        let mut n = 0;
+        while let Some(s) = part.next(300) {
+            pool.submit(s);
+            n += 1;
+        }
+        let mut done = 0;
+        while done < n {
+            let got = pool.wait_any();
+            for r in &got {
+                assert!(r.result.is_ok(), "{:?}", r.result);
+                assert!(r.finished_at >= r.started_at);
+                assert!(r.worker_rss_peak > 0);
+            }
+            done += got.len();
+        }
+        // Reports are sent before the inflight decrement; give the
+        // counter a moment to catch up.
+        let t0 = std::time::Instant::now();
+        while pool.inflight() != 0 && t0.elapsed().as_secs() < 5 {
+            std::thread::yield_now();
+        }
+        assert_eq!(pool.inflight(), 0);
+        assert!(pool.utilization_sample(4) >= 0.0);
+    }
+
+    #[test]
+    fn resize_workers_up_and_down() {
+        let ctx = mk_ctx(500);
+        let mut pool = Pool::new(
+            Arc::clone(&ctx),
+            PoolProfile { chunk_rows: Some(100), per_worker_memory: true },
+            1,
+            4,
+        );
+        pool.set_workers(4);
+        assert_eq!(pool.workers(), 4);
+        pool.set_workers(2);
+        assert_eq!(pool.workers(), 2);
+        // Work still completes after resizing.
+        let mut part = Partitioner::new(ctx.a.as_ref(), ctx.b.as_ref());
+        let mut n = 0;
+        while let Some(s) = part.next(200) {
+            pool.submit(s);
+            n += 1;
+        }
+        let mut done = 0;
+        while done < n {
+            done += pool.wait_any().len();
+        }
+        assert_eq!(done, n);
+    }
+}

@@ -1,0 +1,405 @@
+//! Worker-side shard execution shared by the real backends: metered
+//! decode → row-align → Δ → outcome, with accounting-based memory
+//! control and cooperative cancellation.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::engine::delta::{process_shard, ShardMemStats};
+use crate::engine::merge::Merger;
+use crate::engine::verdict::BatchOutcome;
+use crate::exec::backend::{BatchError, JobContext, ShardSpec};
+
+/// Shared accounting for a memory pool (job-wide for inmem; per-worker
+/// for the dask-like backend). Exceeding the cap is the OOM failure the
+/// scheduler's safety envelope must prevent.
+#[derive(Debug)]
+pub struct MemTracker {
+    current: AtomicU64,
+    peak: AtomicU64,
+    cap: AtomicU64,
+}
+
+impl MemTracker {
+    pub fn new(cap_bytes: u64) -> Arc<Self> {
+        Arc::new(MemTracker {
+            current: AtomicU64::new(0),
+            peak: AtomicU64::new(0),
+            cap: AtomicU64::new(cap_bytes),
+        })
+    }
+    pub fn set_cap(&self, cap_bytes: u64) {
+        self.cap.store(cap_bytes, Ordering::Relaxed);
+    }
+    pub fn cap(&self) -> u64 {
+        self.cap.load(Ordering::Relaxed)
+    }
+    pub fn current(&self) -> u64 {
+        self.current.load(Ordering::Relaxed)
+    }
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Account `bytes`; Err(Oom) if it would exceed the cap.
+    pub fn alloc(self: &Arc<Self>, bytes: u64) -> Result<MemGuard, BatchError> {
+        let prev = self.current.fetch_add(bytes, Ordering::Relaxed);
+        let now = prev + bytes;
+        if now > self.cap.load(Ordering::Relaxed) {
+            self.current.fetch_sub(bytes, Ordering::Relaxed);
+            return Err(BatchError::Oom {
+                needed_bytes: now,
+                cap_bytes: self.cap.load(Ordering::Relaxed),
+            });
+        }
+        self.peak.fetch_max(now, Ordering::Relaxed);
+        Ok(MemGuard { tracker: Arc::clone(self), bytes })
+    }
+}
+
+/// RAII release of accounted bytes.
+pub struct MemGuard {
+    tracker: Arc<MemTracker>,
+    bytes: u64,
+}
+
+impl Drop for MemGuard {
+    fn drop(&mut self) {
+        self.tracker.current.fetch_sub(self.bytes, Ordering::Relaxed);
+    }
+}
+
+/// Cooperative cancellation set (straggler speculation).
+#[derive(Debug, Default)]
+pub struct CancelSet {
+    inner: Mutex<HashSet<u64>>,
+}
+
+impl CancelSet {
+    pub fn new() -> Arc<Self> {
+        Arc::new(CancelSet::default())
+    }
+    pub fn cancel(&self, shard_id: u64) {
+        self.inner.lock().unwrap().insert(shard_id);
+    }
+    pub fn is_cancelled(&self, shard_id: u64) -> bool {
+        self.inner.lock().unwrap().contains(&shard_id)
+    }
+    pub fn clear(&self, shard_id: u64) {
+        self.inner.lock().unwrap().remove(&shard_id);
+    }
+}
+
+/// Result of executing one shard on a worker.
+pub struct ShardExecResult {
+    pub result: Result<BatchOutcome, BatchError>,
+    pub mem: ShardMemStats,
+    pub peak_bytes: u64,
+    pub io_bytes: u64,
+}
+
+/// Execute one key-aligned range pair with full accounting.
+fn execute_range(
+    ctx: &JobContext,
+    shard_id: u64,
+    a_off: usize,
+    a_len: usize,
+    b_off: usize,
+    b_len: usize,
+    tracker: &Arc<MemTracker>,
+) -> Result<(BatchOutcome, ShardMemStats, u64), BatchError> {
+    // Decode (T_read + parse): buffers are accounted as soon as they
+    // exist; an estimate-first reservation would hide the real number.
+    let a_tbl = ctx.a.read_range(a_off, a_len);
+    let b_tbl = ctx.b.read_range(b_off, b_len);
+    let decode_bytes = (a_tbl.heap_bytes() + b_tbl.heap_bytes()) as u64;
+    let _decode_guard = tracker.alloc(decode_bytes)?;
+
+    let (outcome, mem) =
+        process_shard(shard_id, &a_tbl, &b_tbl, &ctx.plan, &ctx.exec)
+            .map_err(BatchError::Failed)?;
+    // Alignment state + Δ scratch materialized inside process_shard;
+    // account them post-hoc against the peak (they are freed on return).
+    let transient = (mem.align_bytes + mem.scratch_bytes) as u64;
+    let _transient_guard = tracker.alloc(transient)?;
+    Ok((outcome, mem, decode_bytes))
+}
+
+/// Execute a shard. `chunk_rows` — if set, the shard is internally
+/// re-partitioned into key-aligned sub-chunks processed sequentially
+/// (the dask-like backend's finer task granularity: lower peak memory,
+/// more per-task overhead); None processes the shard in one piece
+/// (inmem).
+pub fn execute_shard(
+    ctx: &JobContext,
+    spec: ShardSpec,
+    tracker: &Arc<MemTracker>,
+    cancel: &Arc<CancelSet>,
+    chunk_rows: Option<usize>,
+) -> ShardExecResult {
+    let peak_before = tracker.peak();
+    let mut io_bytes = 0u64;
+    let mut mem_total = ShardMemStats::default();
+
+    if cancel.is_cancelled(spec.shard_id) {
+        return ShardExecResult {
+            result: Err(BatchError::Cancelled),
+            mem: mem_total,
+            peak_bytes: 0,
+            io_bytes: 0,
+        };
+    }
+
+    let result: Result<BatchOutcome, BatchError> = (|| {
+        match chunk_rows {
+            None => {
+                let (outcome, mem, io) = execute_range(
+                    ctx,
+                    spec.shard_id,
+                    spec.a_offset,
+                    spec.a_len,
+                    spec.b_offset,
+                    spec.b_len,
+                    tracker,
+                )?;
+                mem_total = mem;
+                io_bytes = io;
+                Ok(outcome)
+            }
+            Some(chunk) => {
+                // Sub-chunk boundaries need the key spans: consult the
+                // source's key index (cheap) rather than decoding the
+                // whole shard at once — that is the point of chunking.
+                let sub = sub_partition(ctx, &spec, chunk);
+                let mut merger = Merger::new();
+                for (i, ((ao, al), (bo, bl))) in sub.iter().enumerate() {
+                    if cancel.is_cancelled(spec.shard_id) {
+                        return Err(BatchError::Cancelled);
+                    }
+                    let (outcome, mem, io) = execute_range(
+                        ctx,
+                        spec.shard_id,
+                        *ao,
+                        *al,
+                        *bo,
+                        *bl,
+                        tracker,
+                    )?;
+                    io_bytes += io;
+                    // Peak is the max over chunks, not the sum — buffers
+                    // are freed between chunks.
+                    mem_total.decode_bytes = mem_total.decode_bytes.max(mem.decode_bytes);
+                    mem_total.align_bytes = mem_total.align_bytes.max(mem.align_bytes);
+                    mem_total.scratch_bytes =
+                        mem_total.scratch_bytes.max(mem.scratch_bytes);
+                    let _ = i;
+                    merger.push(outcome);
+                }
+                let report = merger.finish();
+                // Collapse the merged sub-chunks back into a single
+                // BatchOutcome for this shard.
+                Ok(collapse(spec.shard_id, report))
+            }
+        }
+    })();
+
+    ShardExecResult {
+        result,
+        mem: mem_total,
+        peak_bytes: tracker.peak().saturating_sub(peak_before),
+        io_bytes,
+    }
+}
+
+/// Key-aligned sub-ranges of a shard, consulting source keys.
+fn sub_partition(
+    ctx: &JobContext,
+    spec: &ShardSpec,
+    chunk: usize,
+) -> Vec<((usize, usize), (usize, usize))> {
+    if spec.a_len == 0 || spec.b_len == 0 || ctx.a.key_at(0).is_none() {
+        // Degenerate: chunk positionally via the table splitter on a
+        // decoded copy would defeat the purpose; just split ranges.
+        let mut out = Vec::new();
+        let (mut ap, mut bp) = (0usize, 0usize);
+        while ap < spec.a_len || bp < spec.b_len {
+            let al = chunk.min(spec.a_len - ap);
+            let bl = if ap + al >= spec.a_len {
+                spec.b_len - bp
+            } else {
+                chunk.min(spec.b_len - bp)
+            };
+            out.push((
+                (spec.a_offset + ap, al),
+                (spec.b_offset + bp, bl),
+            ));
+            ap += al;
+            bp += bl;
+        }
+        return out;
+    }
+    let mut out = Vec::new();
+    let (mut ap, mut bp) = (spec.a_offset, spec.b_offset);
+    let a_end = spec.a_offset + spec.a_len;
+    let b_end = spec.b_offset + spec.b_len;
+    while ap < a_end {
+        let al = chunk.min(a_end - ap);
+        let b_hi = if ap + al >= a_end {
+            b_end
+        } else {
+            let boundary = ctx.a.key_at(ap + al - 1).unwrap_or(i64::MAX);
+            let mut lo = bp;
+            let mut hi = b_end;
+            while lo < hi {
+                let mid = lo + (hi - lo) / 2;
+                match ctx.b.key_at(mid) {
+                    Some(k) if k <= boundary => lo = mid + 1,
+                    _ => hi = mid,
+                }
+            }
+            lo
+        };
+        out.push(((ap, al), (bp, b_hi - bp)));
+        ap += al;
+        bp = b_hi;
+    }
+    if bp < b_end {
+        out.push(((a_end, 0), (bp, b_end - bp)));
+    }
+    out
+}
+
+/// Collapse a merged multi-chunk report back into one BatchOutcome.
+fn collapse(shard_id: u64, report: crate::engine::merge::JobReport) -> BatchOutcome {
+    BatchOutcome {
+        shard_id,
+        rows_a: report.rows_a,
+        rows_b: report.rows_b,
+        cells: report.cells,
+        rows: report.rows,
+        columns: report
+            .columns
+            .into_iter()
+            .map(|(name, agg)| crate::engine::verdict::ColumnOutcome {
+                name,
+                changed: agg.changed,
+                max_abs_delta: agg.max_abs_delta,
+            })
+            .collect(),
+        diff_keys: report.diff_keys,
+        diff_keys_truncated: report.diff_keys_truncated,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+    use crate::data::generator::{generate_pair, GenSpec};
+    use crate::data::io::InMemorySource;
+    use crate::engine::comparators::NativeExec;
+    use crate::engine::delta::JobPlan;
+    use crate::engine::schema_align::align_schemas;
+
+    fn ctx(rows: usize, seed: u64, cap: u64) -> Arc<JobContext> {
+        let (a, b, _) = generate_pair(&GenSpec { rows, seed, ..GenSpec::default() });
+        let aligned = align_schemas(&a.schema, &b.schema).unwrap();
+        let plan = JobPlan::new(aligned, EngineConfig::default());
+        JobContext::new(
+            Arc::new(InMemorySource::new(a)),
+            Arc::new(InMemorySource::new(b)),
+            plan,
+            Arc::new(NativeExec),
+            cap,
+        )
+    }
+
+    fn whole_shard(ctx: &JobContext) -> ShardSpec {
+        ShardSpec {
+            shard_id: 0,
+            attempt: 0,
+            a_offset: 0,
+            a_len: ctx.a.nrows(),
+            b_offset: 0,
+            b_len: ctx.b.nrows(),
+        }
+    }
+
+    #[test]
+    fn memtracker_alloc_free_peak() {
+        let t = MemTracker::new(100);
+        let g1 = t.alloc(60).unwrap();
+        assert_eq!(t.current(), 60);
+        assert!(t.alloc(50).is_err()); // would exceed
+        drop(g1);
+        assert_eq!(t.current(), 0);
+        assert_eq!(t.peak(), 60);
+        let _g2 = t.alloc(100).unwrap();
+        assert_eq!(t.peak(), 100);
+    }
+
+    #[test]
+    fn chunked_equals_unchunked() {
+        let c = ctx(3_000, 21, u64::MAX);
+        let tracker = MemTracker::new(u64::MAX);
+        let cancel = CancelSet::new();
+        let spec = whole_shard(&c);
+        let whole = execute_shard(&c, spec, &tracker, &cancel, None);
+        let chunked = execute_shard(&c, spec, &tracker, &cancel, Some(257));
+        let (w, ch) = (whole.result.unwrap(), chunked.result.unwrap());
+        assert_eq!(w.cells, ch.cells);
+        assert_eq!(w.rows, ch.rows);
+        let mut wk = w.diff_keys.clone();
+        wk.sort_unstable();
+        assert_eq!(wk, ch.diff_keys); // chunked is pre-sorted by merger
+    }
+
+    #[test]
+    fn chunked_peak_memory_is_lower() {
+        let c = ctx(5_000, 4, u64::MAX);
+        let cancel = CancelSet::new();
+        let t1 = MemTracker::new(u64::MAX);
+        let whole = execute_shard(&c, whole_shard(&c), &t1, &cancel, None);
+        let t2 = MemTracker::new(u64::MAX);
+        let chunked =
+            execute_shard(&c, whole_shard(&c), &t2, &cancel, Some(500));
+        assert!(whole.result.is_ok() && chunked.result.is_ok());
+        assert!(
+            t2.peak() < t1.peak() / 2,
+            "chunked peak {} vs whole {}",
+            t2.peak(),
+            t1.peak()
+        );
+    }
+
+    #[test]
+    fn oom_when_cap_too_small() {
+        let c = ctx(2_000, 6, u64::MAX);
+        let tracker = MemTracker::new(10_000); // absurdly small pool
+        let cancel = CancelSet::new();
+        let r = execute_shard(&c, whole_shard(&c), &tracker, &cancel, None);
+        assert!(matches!(r.result, Err(BatchError::Oom { .. })));
+    }
+
+    #[test]
+    fn cancellation_short_circuits() {
+        let c = ctx(1_000, 7, u64::MAX);
+        let tracker = MemTracker::new(u64::MAX);
+        let cancel = CancelSet::new();
+        cancel.cancel(0);
+        let r = execute_shard(&c, whole_shard(&c), &tracker, &cancel, None);
+        assert!(matches!(r.result, Err(BatchError::Cancelled)));
+        assert_eq!(r.io_bytes, 0);
+    }
+
+    #[test]
+    fn io_bytes_reported() {
+        let c = ctx(1_000, 8, u64::MAX);
+        let tracker = MemTracker::new(u64::MAX);
+        let cancel = CancelSet::new();
+        let r = execute_shard(&c, whole_shard(&c), &tracker, &cancel, None);
+        assert!(r.io_bytes > 0);
+        assert!(r.peak_bytes > 0);
+    }
+}

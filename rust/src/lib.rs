@@ -1,0 +1,15 @@
+//! smartdiff-sched: adaptive execution scheduler for the SmartDiff
+//! differencing engine (CS.DC 2025 reproduction).
+pub mod config;
+pub mod data;
+pub mod engine;
+pub mod exec;
+pub mod runtime;
+pub mod metrics;
+pub mod sched;
+pub mod baselines;
+pub mod sim;
+pub mod bench;
+pub mod cli;
+pub mod report;
+pub mod util;

@@ -1,0 +1,278 @@
+//! smartdiff-sched launcher.
+//!
+//! Subcommands:
+//!   diff       — diff two CSV files (--schema describes the columns;
+//!                `key` marks row-alignment key components)
+//!   run        — synthetic workload through the full pipeline
+//!   profile    — pre-flight profile + gate decision only
+//!   reproduce  — regenerate the paper's Tables I–III on the sim testbed
+//!   ablate     — run one §VII/§VIII ablation (guard|kappa|hysteresis|rho|safety)
+//!   calibrate  — engine microbenchmarks (cost-model constants)
+
+use std::sync::Arc;
+
+use smartdiff_sched::bench::tables;
+use smartdiff_sched::cli::Args;
+use smartdiff_sched::config::{BackendChoice, DeltaPath, PolicyKind, SchedulerConfig};
+use smartdiff_sched::data::generator::{generate_pair, GenSpec};
+use smartdiff_sched::data::io::{CsvFileSource, InMemorySource};
+use smartdiff_sched::data::schema::{ColumnType, Field, Schema};
+use smartdiff_sched::engine::microbench;
+use smartdiff_sched::sched::preflight::preflight;
+use smartdiff_sched::sched::scheduler::run_job;
+use smartdiff_sched::sched::working_set::{gate_backend, WorkingSetModel};
+
+const USAGE: &str = "\
+smartdiff-sched — adaptive execution scheduler for SmartDiff
+
+USAGE:
+  smartdiff-sched diff <a.csv> <b.csv> --schema id:key:int64,amount:float64,...
+                       [--config cfg.toml] [--backend auto|inmem|dask]
+                       [--telemetry out.jsonl] [--pjrt]
+  smartdiff-sched run [--rows N] [--seed S] [--policy adaptive|heuristic|fixed]
+                      [--b N --k N] [--backend ...] [--config cfg.toml] [--pjrt]
+  smartdiff-sched profile [--rows N] [--config cfg.toml]
+  smartdiff-sched reproduce [--quick] [--trials N]
+  smartdiff-sched ablate <guard|kappa|hysteresis|rho|safety> [--quick]
+  smartdiff-sched analyze <telemetry.jsonl>
+  smartdiff-sched calibrate [--rows N]
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e}");
+        eprintln!("{USAGE}");
+        std::process::exit(1);
+    }
+}
+
+fn load_cfg(args: &Args) -> Result<SchedulerConfig, String> {
+    let mut cfg = match args.get("config") {
+        Some(path) => SchedulerConfig::from_file(path)?,
+        None => {
+            let mut c = SchedulerConfig::default();
+            c.caps.cpu_cap = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(2);
+            c.caps.mem_cap_bytes = 8_000_000_000;
+            c.policy.b_min = 1_000;
+            c
+        }
+    };
+    if let Some(b) = args.get("backend") {
+        cfg.backend = BackendChoice::parse(b)?;
+    }
+    if let Some(t) = args.get("telemetry") {
+        cfg.telemetry_path = Some(t.to_string());
+    }
+    if args.flag("pjrt") {
+        cfg.engine.delta_path = DeltaPath::Pjrt;
+    }
+    match args.get("policy") {
+        Some("adaptive") | None => {}
+        Some("heuristic") => cfg.policy_kind = PolicyKind::Heuristic,
+        Some("fixed") => {
+            let b = args.get_usize("b")?.ok_or("--policy fixed needs --b")?;
+            let k = args.get_usize("k")?.ok_or("--policy fixed needs --k")?;
+            cfg.policy_kind = PolicyKind::Fixed { b, k };
+        }
+        Some(other) => return Err(format!("unknown policy {other:?}")),
+    }
+    Ok(cfg)
+}
+
+fn print_result(r: &smartdiff_sched::sched::scheduler::JobResult) {
+    println!("{}", r.report.summary());
+    let s = &r.stats;
+    println!(
+        "backend={} policy={} batches={} p50={:.3}s p95={:.3}s \
+         peak_rss={:.1}MB throughput={:.0} rows/s reconfigs={} ooms={}",
+        s.backend,
+        s.policy,
+        s.batches,
+        s.p50_latency,
+        s.p95_latency,
+        s.peak_rss_bytes as f64 / 1e6,
+        s.throughput_rows_per_s,
+        s.reconfigs,
+        s.ooms
+    );
+    println!("report: {}", r.report.to_json());
+}
+
+fn dispatch(argv: &[String]) -> Result<(), String> {
+    let args = Args::parse(argv, &["quick", "pjrt"])?;
+    let known = [
+        "config", "backend", "telemetry", "policy", "b", "k", "rows",
+        "seed", "trials", "schema",
+    ];
+    args.expect_known(&known)?;
+    match args.subcommand.as_deref() {
+        Some("diff") => {
+            if args.positional.len() != 2 {
+                return Err("diff needs exactly two csv paths".into());
+            }
+            let cfg = load_cfg(&args)?;
+            let schema = match args.get("schema") {
+                Some(spec) => parse_schema(spec)?,
+                None => {
+                    return Err(
+                        "--schema is required for csv diff \
+                         (e.g. --schema id:key:int64,amount:float64,name:utf8)"
+                            .into(),
+                    )
+                }
+            };
+            let a = CsvFileSource::open(
+                std::path::Path::new(&args.positional[0]),
+                schema.clone(),
+            )?;
+            let b = CsvFileSource::open(
+                std::path::Path::new(&args.positional[1]),
+                schema,
+            )?;
+            let r = run_job(&cfg, Arc::new(a), Arc::new(b))?;
+            print_result(&r);
+            Ok(())
+        }
+        Some("run") => {
+            let cfg = load_cfg(&args)?;
+            let rows = args.get_usize("rows")?.unwrap_or(100_000);
+            let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
+            let (a, b, truth) =
+                generate_pair(&GenSpec { rows, seed, ..GenSpec::default() });
+            println!(
+                "generated pair: {rows} rows (truth: {} changed, {} added, {} removed)",
+                truth.changed_rows, truth.added, truth.removed
+            );
+            let r = run_job(
+                &cfg,
+                Arc::new(InMemorySource::new(a)),
+                Arc::new(InMemorySource::new(b)),
+            )?;
+            print_result(&r);
+            Ok(())
+        }
+        Some("profile") => {
+            let cfg = load_cfg(&args)?;
+            let rows = args.get_usize("rows")?.unwrap_or(100_000);
+            let (a, b, _) = generate_pair(&GenSpec {
+                rows,
+                seed: 1,
+                ..GenSpec::default()
+            });
+            let (sa, sb) = (InMemorySource::new(a), InMemorySource::new(b));
+            let p = preflight(
+                &sa,
+                &sb,
+                cfg.preflight_max_rows,
+                cfg.preflight_fraction,
+            );
+            println!(
+                "preflight: w_hat={:.1} B/row  b_read={:.2} GB/s  sampled={} rows",
+                p.w_hat,
+                p.b_read / 1e9,
+                p.sampled_rows
+            );
+            let g =
+                gate_backend(&WorkingSetModel::default(), &p, &cfg.caps, &cfg.policy);
+            println!(
+                "gate: ws={:.2} MB threshold={:.2} MB -> {}",
+                g.ws_bytes / 1e6,
+                g.threshold_bytes / 1e6,
+                g.backend.name()
+            );
+            Ok(())
+        }
+        Some("reproduce") => {
+            let quick = args.flag("quick");
+            let trials = args.get_usize("trials")?.unwrap_or(tables::TRIALS);
+            eprintln!(
+                "running policy × workload matrix (quick={quick}, trials={trials})..."
+            );
+            let m = tables::run_matrix(quick, trials);
+            println!("{}", tables::table1(&m));
+            println!("{}", tables::table2(&m));
+            println!("{}", tables::table3(&m));
+            Ok(())
+        }
+        Some("ablate") => {
+            let quick = args.flag("quick");
+            let trials = if quick { 1 } else { tables::TRIALS };
+            let which = args
+                .positional
+                .first()
+                .map(|s| s.as_str())
+                .ok_or("ablate needs a target")?;
+            let out = match which {
+                "guard" => tables::ablate_guard(quick, trials),
+                "kappa" => tables::ablate_kappa(quick, trials),
+                "hysteresis" => tables::ablate_hysteresis(quick, trials),
+                "rho" => tables::ablate_rho(quick, trials),
+                "safety" => tables::safety_envelope(quick, trials),
+                other => return Err(format!("unknown ablation {other:?}")),
+            };
+            println!("{out}");
+            Ok(())
+        }
+        Some("analyze") => {
+            let path = args
+                .positional
+                .first()
+                .ok_or("analyze needs a telemetry file")?;
+            let log = smartdiff_sched::report::TelemetryLog::load(path)?;
+            print!("{}", smartdiff_sched::report::analyze(&log));
+            Ok(())
+        }
+        Some("calibrate") => {
+            let rows = args.get_usize("rows")?.unwrap_or(microbench::CALIB_ROWS);
+            let c = microbench::calibrate(rows, 1);
+            println!("{c:#?}");
+            Ok(())
+        }
+        Some(other) => Err(format!("unknown subcommand {other:?}")),
+        None => Err("missing subcommand".into()),
+    }
+}
+
+/// Parse "name[:key]:type,..." schema specs for csv diff.
+fn parse_schema(spec: &str) -> Result<Schema, String> {
+    let mut fields = Vec::new();
+    for part in spec.split(',') {
+        let bits: Vec<&str> = part.split(':').collect();
+        let (name, key, ty_name) = match bits.as_slice() {
+            [n, t] => (*n, false, *t),
+            [n, "key", t] => (*n, true, *t),
+            _ => return Err(format!("bad schema field {part:?}")),
+        };
+        let ty = match ty_name {
+            "int64" => ColumnType::Int64,
+            "float64" => ColumnType::Float64,
+            "utf8" => ColumnType::Utf8,
+            "bool" => ColumnType::Bool,
+            "date" => ColumnType::Date,
+            "timestamp" => ColumnType::Timestamp,
+            other => {
+                if let Some(scale) = other
+                    .strip_prefix("decimal(")
+                    .and_then(|s| s.strip_suffix(')'))
+                {
+                    ColumnType::Decimal {
+                        scale: scale
+                            .parse()
+                            .map_err(|_| format!("bad decimal scale {other:?}"))?,
+                    }
+                } else {
+                    return Err(format!("unknown type {other:?}"));
+                }
+            }
+        };
+        fields.push(if key {
+            Field::key(name, ty)
+        } else {
+            Field::new(name, ty)
+        });
+    }
+    Ok(Schema::new(fields))
+}

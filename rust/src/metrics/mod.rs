@@ -1,0 +1,3 @@
+//! Metric primitives (S16): rolling quantiles and aggregation helpers.
+
+pub mod quantile;

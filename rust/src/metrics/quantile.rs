@@ -1,0 +1,170 @@
+//! Quantile estimation: rolling-window exact quantiles for the control
+//! signals (paper §II: "p95 over a rolling window") and weighted job-
+//! level aggregation (paper §V measurement protocol).
+
+use std::collections::VecDeque;
+
+/// Fixed-capacity rolling window with exact quantiles (the window is
+//  small — 64 batches — so sort-on-read is cheap and exact).
+#[derive(Debug, Clone)]
+pub struct RollingWindow {
+    buf: VecDeque<f64>,
+    cap: usize,
+}
+
+impl RollingWindow {
+    pub fn new(cap: usize) -> Self {
+        RollingWindow { buf: VecDeque::with_capacity(cap.max(1)), cap: cap.max(1) }
+    }
+    pub fn push(&mut self, x: f64) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(x);
+    }
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    /// Exact q-quantile (nearest-rank with linear interpolation).
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        let mut v: Vec<f64> = self.buf.iter().copied().collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        Some(interpolated(&v, q))
+    }
+    pub fn p50(&self) -> Option<f64> {
+        self.quantile(0.50)
+    }
+    pub fn p95(&self) -> Option<f64> {
+        self.quantile(0.95)
+    }
+    pub fn mean(&self) -> Option<f64> {
+        if self.buf.is_empty() {
+            None
+        } else {
+            Some(self.buf.iter().sum::<f64>() / self.buf.len() as f64)
+        }
+    }
+}
+
+fn interpolated(sorted: &[f64], q: f64) -> f64 {
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let pos = q.clamp(0.0, 1.0) * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Weighted quantile over all samples (job-level p95: per-batch values
+/// weighted by rows processed, per the paper's aggregation).
+pub fn weighted_quantile(samples: &[(f64, f64)], q: f64) -> Option<f64> {
+    if samples.is_empty() {
+        return None;
+    }
+    let mut v: Vec<(f64, f64)> = samples
+        .iter()
+        .copied()
+        .filter(|(_, w)| *w > 0.0)
+        .collect();
+    if v.is_empty() {
+        return None;
+    }
+    v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+    let total: f64 = v.iter().map(|(_, w)| w).sum();
+    let target = q.clamp(0.0, 1.0) * total;
+    let mut acc = 0.0;
+    for (x, w) in &v {
+        acc += w;
+        if acc >= target {
+            return Some(*x);
+        }
+    }
+    Some(v.last().unwrap().0)
+}
+
+/// Plain mean/CI helpers for the bench harness (95% CI via t≈1.96·SE).
+pub fn mean_ci95(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+    (mean, 1.96 * (var / n).sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_evicts_oldest() {
+        let mut w = RollingWindow::new(3);
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            w.push(x);
+        }
+        assert_eq!(w.len(), 3);
+        assert_eq!(w.quantile(0.0), Some(2.0));
+        assert_eq!(w.quantile(1.0), Some(4.0));
+    }
+
+    #[test]
+    fn exact_quantiles_small() {
+        let mut w = RollingWindow::new(10);
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            w.push(x);
+        }
+        assert_eq!(w.p50(), Some(3.0));
+        assert!((w.quantile(0.25).unwrap() - 2.0).abs() < 1e-12);
+        assert!((w.p95().unwrap() - 4.8).abs() < 1e-9);
+        assert_eq!(w.mean(), Some(3.0));
+    }
+
+    #[test]
+    fn empty_window_none() {
+        let w = RollingWindow::new(4);
+        assert!(w.p95().is_none());
+        assert!(w.mean().is_none());
+    }
+
+    #[test]
+    fn weighted_quantile_respects_weights() {
+        // 1.0 carries 99% of the weight -> p50 is 1.0.
+        let s = [(1.0, 99.0), (100.0, 1.0)];
+        assert_eq!(weighted_quantile(&s, 0.5), Some(1.0));
+        assert_eq!(weighted_quantile(&s, 0.999), Some(100.0));
+        assert_eq!(weighted_quantile(&[], 0.5), None);
+        // Zero-weight samples are ignored.
+        let s = [(5.0, 0.0), (7.0, 1.0)];
+        assert_eq!(weighted_quantile(&s, 0.5), Some(7.0));
+    }
+
+    #[test]
+    fn mean_ci_reasonable() {
+        let (m, ci) = mean_ci95(&[10.0, 12.0, 11.0]);
+        assert!((m - 11.0).abs() < 1e-9);
+        assert!(ci > 0.0 && ci < 3.0);
+        assert_eq!(mean_ci95(&[]), (0.0, 0.0));
+        assert_eq!(mean_ci95(&[4.2]).1, 0.0);
+    }
+}

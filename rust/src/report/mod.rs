@@ -1,0 +1,265 @@
+//! Telemetry log analysis (paper §IX: "a read-only analysis notebook
+//! that reproduces all tables/curves from logs; analysis is
+//! reproducible from logs without exposing proprietary code").
+//!
+//! `analyze` re-derives every job-level statistic — p50/p95 latency
+//! (row-weighted), throughput, (b,k) trajectory, reconfig/mitigation
+//! counts, queue-depth and RSS curves — purely from a JSON-lines
+//! telemetry file, and renders text curves. `smartdiff-sched analyze
+//! run.jsonl` is the CLI entry.
+
+use crate::metrics::quantile::weighted_quantile;
+use crate::util::json::{parse, Json};
+
+/// One parsed batch record.
+#[derive(Debug, Clone)]
+pub struct BatchRec {
+    pub shard: i64,
+    pub submitted: f64,
+    pub finished: f64,
+    pub latency: f64,
+    pub rows: f64,
+    pub rss_peak: f64,
+    pub b: i64,
+    pub k: i64,
+    pub queue: i64,
+    pub ok: bool,
+}
+
+/// The full log, split by record kind.
+#[derive(Debug, Default)]
+pub struct TelemetryLog {
+    pub batches: Vec<BatchRec>,
+    pub events: Vec<(String, String, f64)>,
+    pub summary: Option<Json>,
+}
+
+impl TelemetryLog {
+    pub fn parse_str(text: &str) -> Result<TelemetryLog, String> {
+        let mut log = TelemetryLog::default();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let v = parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+            let ev = v
+                .get("ev")
+                .and_then(|e| e.as_str())
+                .ok_or_else(|| format!("line {}: missing ev", i + 1))?;
+            match ev {
+                "batch" => {
+                    let f = |k: &str| v.get(k).and_then(|x| x.as_f64());
+                    let n = |k: &str| v.get(k).and_then(|x| x.as_i64());
+                    log.batches.push(BatchRec {
+                        shard: n("shard").unwrap_or(-1),
+                        submitted: f("submitted").unwrap_or(0.0),
+                        finished: f("finished").unwrap_or(0.0),
+                        latency: f("latency").unwrap_or(0.0),
+                        rows: f("rows").unwrap_or(0.0),
+                        rss_peak: f("rss_peak").unwrap_or(0.0),
+                        b: n("b").unwrap_or(0),
+                        k: n("k").unwrap_or(0),
+                        queue: n("queue").unwrap_or(0),
+                        ok: v.get("ok").and_then(|x| x.as_bool()).unwrap_or(false),
+                    });
+                }
+                "summary" => log.summary = v.get("job").cloned(),
+                kind => log.events.push((
+                    kind.to_string(),
+                    v.get("detail")
+                        .and_then(|d| d.as_str())
+                        .unwrap_or("")
+                        .to_string(),
+                    v.get("t").and_then(|t| t.as_f64()).unwrap_or(0.0),
+                )),
+            }
+        }
+        Ok(log)
+    }
+
+    pub fn load(path: &str) -> Result<TelemetryLog, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {path}: {e}"))?;
+        Self::parse_str(&text)
+    }
+
+    /// Row-weighted job-level quantile of batch latency (§V protocol).
+    pub fn latency_quantile(&self, q: f64) -> Option<f64> {
+        let samples: Vec<(f64, f64)> = self
+            .batches
+            .iter()
+            .filter(|b| b.ok)
+            .map(|b| (b.latency, b.rows))
+            .collect();
+        weighted_quantile(&samples, q)
+    }
+
+    pub fn makespan(&self) -> f64 {
+        let lo = self
+            .batches
+            .iter()
+            .map(|b| b.submitted)
+            .fold(f64::INFINITY, f64::min);
+        let hi = self.batches.iter().map(|b| b.finished).fold(0.0, f64::max);
+        (hi - lo).max(0.0)
+    }
+
+    pub fn throughput_rows_per_s(&self) -> f64 {
+        let rows: f64 = self.batches.iter().filter(|b| b.ok).map(|b| b.rows).sum();
+        let m = self.makespan();
+        if m > 0.0 {
+            rows / m
+        } else {
+            0.0
+        }
+    }
+
+    pub fn count_events(&self, kind: &str) -> usize {
+        self.events.iter().filter(|(k, _, _)| k == kind).count()
+    }
+}
+
+/// Unicode sparkline of a series (the "curves" of §IX, in text form).
+pub fn sparkline(values: &[f64], width: usize) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if values.is_empty() || width == 0 {
+        return String::new();
+    }
+    // Downsample to `width` buckets by mean.
+    let chunk = (values.len() as f64 / width as f64).max(1.0);
+    let mut series = Vec::new();
+    let mut i = 0.0;
+    while (i as usize) < values.len() && series.len() < width {
+        let lo = i as usize;
+        let hi = ((i + chunk) as usize).min(values.len()).max(lo + 1);
+        series.push(values[lo..hi].iter().sum::<f64>() / (hi - lo) as f64);
+        i += chunk;
+    }
+    let max = series.iter().cloned().fold(f64::MIN, f64::max);
+    let min = series.iter().cloned().fold(f64::MAX, f64::min);
+    let span = (max - min).max(1e-12);
+    series
+        .iter()
+        .map(|v| BARS[(((v - min) / span) * 7.0).round() as usize])
+        .collect()
+}
+
+/// Render the full analysis report.
+pub fn analyze(log: &TelemetryLog) -> String {
+    let mut out = String::new();
+    let ok: Vec<&BatchRec> = log.batches.iter().filter(|b| b.ok).collect();
+    out.push_str(&format!(
+        "batches: {} ok / {} total | makespan: {:.3}s | throughput: {:.0} rows/s\n",
+        ok.len(),
+        log.batches.len(),
+        log.makespan(),
+        log.throughput_rows_per_s()
+    ));
+    out.push_str(&format!(
+        "latency: p50={:.4}s p95={:.4}s (row-weighted)\n",
+        log.latency_quantile(0.50).unwrap_or(0.0),
+        log.latency_quantile(0.95).unwrap_or(0.0)
+    ));
+    out.push_str(&format!(
+        "events: {} reconfigs, {} speculations, {} splits, {} ooms, gate: {}\n",
+        log.count_events("reconfig"),
+        log.count_events("speculate"),
+        log.count_events("split"),
+        log.count_events("oom"),
+        log.events
+            .iter()
+            .find(|(k, _, _)| k == "gate")
+            .map(|(_, d, _)| d.as_str())
+            .unwrap_or("-")
+    ));
+    if !ok.is_empty() {
+        let lat: Vec<f64> = ok.iter().map(|b| b.latency).collect();
+        let rss: Vec<f64> = ok.iter().map(|b| b.rss_peak).collect();
+        let bb: Vec<f64> = ok.iter().map(|b| b.b as f64).collect();
+        let kk: Vec<f64> = ok.iter().map(|b| b.k as f64).collect();
+        let qq: Vec<f64> = ok.iter().map(|b| b.queue as f64).collect();
+        out.push_str(&format!("latency  {}\n", sparkline(&lat, 60)));
+        out.push_str(&format!("rss/batch{}\n", sparkline(&rss, 60)));
+        out.push_str(&format!(
+            "b        {}  ({} -> {})\n",
+            sparkline(&bb, 60),
+            bb.first().map(|x| *x as i64).unwrap_or(0),
+            bb.last().map(|x| *x as i64).unwrap_or(0)
+        ));
+        out.push_str(&format!(
+            "k        {}  ({} -> {})\n",
+            sparkline(&kk, 60),
+            kk.first().map(|x| *x as i64).unwrap_or(0),
+            kk.last().map(|x| *x as i64).unwrap_or(0)
+        ));
+        out.push_str(&format!("queue    {}\n", sparkline(&qq, 60)));
+    }
+    if let Some(s) = &log.summary {
+        out.push_str(&format!("summary: {}\n", s.to_string()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_log() -> String {
+        let mut lines = Vec::new();
+        lines.push(
+            r#"{"ev":"gate","detail":"backend=inmem ws=1.0GB thr=2.0GB","t":0}"#
+                .to_string(),
+        );
+        for i in 0..10 {
+            lines.push(format!(
+                r#"{{"ev":"batch","shard":{i},"submitted":{},"finished":{},"latency":{},"rows":1000,"rss_peak":{},"b":500,"k":2,"queue":1,"ok":true}}"#,
+                i as f64,
+                i as f64 + 1.5,
+                1.5,
+                1_000_000 + i * 1000
+            ));
+        }
+        lines.push(r#"{"ev":"reconfig","detail":"b 500->600 k 2->2 (increase-b)","t":5}"#.to_string());
+        lines.push(r#"{"ev":"summary","job":{"batches":10}}"#.to_string());
+        lines.join("\n")
+    }
+
+    #[test]
+    fn parses_and_rederives_stats() {
+        let log = TelemetryLog::parse_str(&demo_log()).unwrap();
+        assert_eq!(log.batches.len(), 10);
+        assert_eq!(log.count_events("reconfig"), 1);
+        assert!((log.latency_quantile(0.95).unwrap() - 1.5).abs() < 1e-9);
+        assert!((log.makespan() - 10.5).abs() < 1e-9);
+        assert!((log.throughput_rows_per_s() - 10_000.0 / 10.5).abs() < 1.0);
+        assert!(log.summary.is_some());
+    }
+
+    #[test]
+    fn analyze_renders_curves() {
+        let log = TelemetryLog::parse_str(&demo_log()).unwrap();
+        let report = analyze(&log);
+        assert!(report.contains("p95=1.5"));
+        assert!(report.contains("1 reconfigs"));
+        assert!(report.contains("backend=inmem"));
+        assert!(report.contains("latency  "));
+    }
+
+    #[test]
+    fn sparkline_shapes() {
+        assert_eq!(sparkline(&[], 10), "");
+        let s = sparkline(&[0.0, 1.0, 2.0, 3.0], 4);
+        assert_eq!(s.chars().count(), 4);
+        assert!(s.starts_with('▁'));
+        assert!(s.ends_with('█'));
+        // Downsampling long series.
+        let long: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        assert_eq!(sparkline(&long, 60).chars().count(), 60);
+    }
+
+    #[test]
+    fn bad_lines_error_with_location() {
+        let err = TelemetryLog::parse_str("not json").unwrap_err();
+        assert!(err.contains("line 1"));
+    }
+}

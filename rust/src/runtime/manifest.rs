@@ -1,0 +1,161 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime. `manifest.json` lists every AOT-lowered HLO text
+//! artifact with its shape bucket; the runtime selects the smallest
+//! bucket that fits a batch and pads up to it.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String,
+    pub path: PathBuf,
+    pub rows: usize,
+    pub cols: usize,
+    pub dtype: String,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub tile_r: usize,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let doc = json::parse(&text)?;
+        let version = doc
+            .get("version")
+            .and_then(|v| v.as_i64())
+            .ok_or("manifest: missing version")?;
+        if version != 1 {
+            return Err(format!("manifest: unsupported version {version}"));
+        }
+        let tile_r = doc
+            .get("tile_r")
+            .and_then(|v| v.as_usize())
+            .ok_or("manifest: missing tile_r")?;
+        let mut artifacts = Vec::new();
+        for a in doc
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .ok_or("manifest: missing artifacts")?
+        {
+            let get_s = |k: &str| {
+                a.get(k)
+                    .and_then(|v| v.as_str())
+                    .map(str::to_string)
+                    .ok_or_else(|| format!("manifest: artifact missing {k}"))
+            };
+            let get_n = |k: &str| {
+                a.get(k)
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| format!("manifest: artifact missing {k}"))
+            };
+            let outputs = a
+                .get("outputs")
+                .and_then(|v| v.as_arr())
+                .map(|xs| {
+                    xs.iter()
+                        .filter_map(|x| x.as_str().map(str::to_string))
+                        .collect()
+                })
+                .unwrap_or_default();
+            artifacts.push(ArtifactMeta {
+                name: get_s("name")?,
+                kind: get_s("kind")?,
+                path: dir.join(get_s("path")?),
+                rows: get_n("rows")?,
+                cols: get_n("cols")?,
+                dtype: get_s("dtype")?,
+                outputs,
+            });
+        }
+        if artifacts.is_empty() {
+            return Err("manifest: no artifacts".into());
+        }
+        Ok(Manifest { tile_r, artifacts })
+    }
+
+    /// Smallest bucket (by padded cell count) of `kind`/`dtype` with
+    /// rows ≥ r and cols ≥ c. None if no bucket is big enough (callers
+    /// then chunk rows/cols down to the largest bucket).
+    pub fn pick_bucket(
+        &self,
+        kind: &str,
+        dtype: &str,
+        r: usize,
+        c: usize,
+    ) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == kind && a.dtype == dtype && a.rows >= r && a.cols >= c
+            })
+            .min_by_key(|a| a.rows * a.cols)
+    }
+
+    /// Largest available bucket for kind/dtype (row/col chunk target).
+    pub fn max_bucket(&self, kind: &str, dtype: &str) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.dtype == dtype)
+            .max_by_key(|a| (a.rows, a.cols))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifact_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&artifact_dir()).unwrap();
+        assert_eq!(m.tile_r, 256);
+        assert!(m.artifacts.len() >= 16);
+        for a in &m.artifacts {
+            assert!(a.path.exists(), "{:?}", a.path);
+            assert!(a.rows % m.tile_r == 0);
+        }
+    }
+
+    #[test]
+    fn bucket_selection_smallest_fit() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&artifact_dir()).unwrap();
+        let b = m.pick_bucket("diff", "f64", 1000, 5).unwrap();
+        assert_eq!((b.rows, b.cols), (1024, 8));
+        let b = m.pick_bucket("diff", "f64", 1025, 8).unwrap();
+        assert_eq!((b.rows, b.cols), (4096, 8));
+        let b = m.pick_bucket("diff", "f64", 1, 9).unwrap();
+        assert_eq!((b.rows, b.cols), (1024, 32));
+        assert!(m.pick_bucket("diff", "f64", usize::MAX, 1).is_none());
+        let mx = m.max_bucket("diff", "f64").unwrap();
+        assert_eq!((mx.rows, mx.cols), (65536, 32));
+    }
+
+    #[test]
+    fn rejects_missing_manifest() {
+        assert!(Manifest::load(Path::new("/nonexistent")).is_err());
+    }
+}

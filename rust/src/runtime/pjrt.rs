@@ -1,0 +1,417 @@
+//! PJRT execution service: loads the AOT HLO-text artifacts, compiles
+//! them once on the PJRT CPU client, and serves numeric-Δ batches from
+//! the L3 hot path.
+//!
+//! The `xla` crate's wrappers hold raw pointers (not Send/Sync), so a
+//! dedicated service thread owns the client and all compiled
+//! executables; workers talk to it through a channel-based
+//! `PjrtHandle` (Clone + Send) that implements `NumericDeltaExec`.
+//! XLA's CPU backend parallelizes inside an execution, so a single
+//! service thread does not serialize the math onto one core.
+//!
+//! Batches whose shape exceeds the largest compiled bucket are chunked
+//! (rows, then columns) and the partial results recombined; smaller
+//! batches are padded up to the smallest fitting bucket with
+//! `ra = rb = 0` rows, which the kernel reports as ABSENT and the
+//! unpadding step strips (verified against expectations).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+
+use crate::engine::comparators::{NumericBatch, NumericDeltaExec, NumericDiffOut};
+use crate::engine::verdict::Verdict;
+use crate::runtime::manifest::Manifest;
+
+struct Request {
+    batch: NumericBatch,
+    resp: Sender<Result<NumericDiffOut, String>>,
+}
+
+/// Handle to the PJRT service thread. Cheap to clone; `diff` is a
+/// blocking round-trip.
+pub struct PjrtHandle {
+    tx: Mutex<Sender<Request>>,
+}
+
+impl NumericDeltaExec for PjrtHandle {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+    fn diff(&self, batch: &NumericBatch) -> Result<NumericDiffOut, String> {
+        let (tx, rx) = channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Request { batch: batch.clone(), resp: tx })
+            .map_err(|_| "pjrt service thread gone".to_string())?;
+        rx.recv().map_err(|_| "pjrt service dropped request".to_string())?
+    }
+}
+
+/// Spawn the PJRT service for `artifact_dir`. Fails fast (before
+/// spawning workers) if the manifest or client is unavailable.
+pub fn spawn_service(artifact_dir: &Path) -> Result<PjrtHandle, String> {
+    let manifest = Manifest::load(artifact_dir)?;
+    let (tx, rx) = channel::<Request>();
+    let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+    std::thread::Builder::new()
+        .name("pjrt-service".into())
+        .spawn(move || {
+            let mut svc = match Service::new(manifest) {
+                Ok(svc) => {
+                    let _ = ready_tx.send(Ok(()));
+                    svc
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(req) = rx.recv() {
+                let out = svc.run(&req.batch);
+                let _ = req.resp.send(out);
+            }
+        })
+        .map_err(|e| format!("spawn pjrt service: {e}"))?;
+    ready_rx
+        .recv()
+        .map_err(|_| "pjrt service died during init".to_string())??;
+    Ok(PjrtHandle { tx: Mutex::new(tx) })
+}
+
+struct Service {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// Compiled executables keyed by artifact name (compiled lazily).
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Service {
+    fn new(manifest: Manifest) -> Result<Service, String> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| format!("PjRtClient::cpu: {e:?}"))?;
+        Ok(Service { client, manifest, compiled: HashMap::new() })
+    }
+
+    fn ensure_compiled(
+        &mut self,
+        name: &str,
+        path: &PathBuf,
+    ) -> Result<&xla::PjRtLoadedExecutable, String> {
+        if !self.compiled.contains_key(name) {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| format!("load {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| format!("compile {name}: {e:?}"))?;
+            self.compiled.insert(name.to_string(), exe);
+        }
+        Ok(&self.compiled[name])
+    }
+
+    fn run(&mut self, batch: &NumericBatch) -> Result<NumericDiffOut, String> {
+        if batch.rows == 0 || batch.cols == 0 {
+            return Ok(empty_out(batch.rows, batch.cols));
+        }
+        let max = self
+            .manifest
+            .max_bucket("diff", "f64")
+            .ok_or("no f64 diff artifacts")?;
+        let (max_rows, max_cols) = (max.rows, max.cols);
+
+        if batch.cols > max_cols {
+            return self.run_col_chunked(batch, max_cols);
+        }
+        if batch.rows > max_rows {
+            return self.run_row_chunked(batch, max_rows);
+        }
+
+        let meta = self
+            .manifest
+            .pick_bucket("diff", "f64", batch.rows, batch.cols)
+            .ok_or("no fitting bucket")?;
+        let (name, path, brows, bcols) =
+            (meta.name.clone(), meta.path.clone(), meta.rows, meta.cols);
+        let padded = pad_batch(batch, brows, bcols);
+        let exe = self.ensure_compiled(&name, &path)?;
+
+        let lit = |v: &[f64], dims: &[i64]| -> Result<xla::Literal, String> {
+            xla::Literal::vec1(v)
+                .reshape(dims)
+                .map_err(|e| format!("literal reshape: {e:?}"))
+        };
+        let r = brows as i64;
+        let c = bcols as i64;
+        let args = [
+            lit(&padded.a, &[r, c])?,
+            lit(&padded.b, &[r, c])?,
+            lit(&padded.na, &[r, c])?,
+            lit(&padded.nb, &[r, c])?,
+            lit(&padded.ra, &[r])?,
+            lit(&padded.rb, &[r])?,
+            lit(&padded.atol, &[c])?,
+            lit(&padded.rtol, &[c])?,
+        ];
+        let result = exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| format!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("to_literal: {e:?}"))?;
+        let outs = result
+            .to_tuple()
+            .map_err(|e| format!("to_tuple: {e:?}"))?;
+        if outs.len() != 5 {
+            return Err(format!("expected 5 outputs, got {}", outs.len()));
+        }
+        let verdicts_p: Vec<i32> = outs[0]
+            .to_vec()
+            .map_err(|e| format!("verdicts: {e:?}"))?;
+        let counts_p: Vec<i32> =
+            outs[1].to_vec().map_err(|e| format!("counts: {e:?}"))?;
+        let col_changed_p: Vec<i32> = outs[2]
+            .to_vec()
+            .map_err(|e| format!("col_changed: {e:?}"))?;
+        let col_maxabs_p: Vec<f64> = outs[3]
+            .to_vec()
+            .map_err(|e| format!("col_maxabs: {e:?}"))?;
+        let changed_rows_p: Vec<i32> = outs[4]
+            .to_vec()
+            .map_err(|e| format!("changed_rows: {e:?}"))?;
+
+        unpad_out(
+            batch,
+            brows,
+            bcols,
+            verdicts_p,
+            counts_p,
+            col_changed_p,
+            col_maxabs_p,
+            changed_rows_p,
+        )
+    }
+
+    /// Column-chunk oversized batches; each chunk sees all rows.
+    fn run_col_chunked(
+        &mut self,
+        batch: &NumericBatch,
+        max_cols: usize,
+    ) -> Result<NumericDiffOut, String> {
+        let mut combined = empty_out(batch.rows, 0);
+        combined.verdicts = vec![0; batch.rows * batch.cols];
+        combined.col_changed = vec![0; batch.cols];
+        combined.col_maxabs = vec![0.0; batch.cols];
+        combined.changed_rows = vec![0; batch.rows];
+        let mut first = true;
+        let mut c0 = 0;
+        while c0 < batch.cols {
+            let cn = max_cols.min(batch.cols - c0);
+            let sub = slice_cols(batch, c0, cn);
+            let out = self.run(&sub)?;
+            for i in 0..batch.rows {
+                for j in 0..cn {
+                    combined.verdicts[i * batch.cols + c0 + j] =
+                        out.verdicts[i * cn + j];
+                }
+                if out.changed_rows[i] != 0 {
+                    combined.changed_rows[i] = 1;
+                }
+            }
+            combined.col_changed[c0..c0 + cn]
+                .copy_from_slice(&out.col_changed);
+            combined.col_maxabs[c0..c0 + cn].copy_from_slice(&out.col_maxabs);
+            for k in 0..5 {
+                combined.counts[k] += out.counts[k];
+            }
+            first = false;
+            c0 += cn;
+        }
+        let _ = first;
+        Ok(combined)
+    }
+
+    /// Row-chunk oversized batches; each chunk sees all columns.
+    fn run_row_chunked(
+        &mut self,
+        batch: &NumericBatch,
+        max_rows: usize,
+    ) -> Result<NumericDiffOut, String> {
+        let mut combined = empty_out(0, batch.cols);
+        combined.col_changed = vec![0; batch.cols];
+        combined.col_maxabs = vec![0.0; batch.cols];
+        let mut r0 = 0;
+        while r0 < batch.rows {
+            let rn = max_rows.min(batch.rows - r0);
+            let sub = slice_rows(batch, r0, rn);
+            let out = self.run(&sub)?;
+            combined.verdicts.extend_from_slice(&out.verdicts);
+            combined.changed_rows.extend_from_slice(&out.changed_rows);
+            for k in 0..5 {
+                combined.counts[k] += out.counts[k];
+            }
+            for j in 0..batch.cols {
+                combined.col_changed[j] += out.col_changed[j];
+                if out.col_maxabs[j] > combined.col_maxabs[j] {
+                    combined.col_maxabs[j] = out.col_maxabs[j];
+                }
+            }
+            r0 += rn;
+        }
+        Ok(combined)
+    }
+}
+
+fn empty_out(rows: usize, cols: usize) -> NumericDiffOut {
+    NumericDiffOut {
+        verdicts: vec![0; rows * cols],
+        counts: [0; 5],
+        col_changed: vec![0; cols],
+        col_maxabs: vec![0.0; cols],
+        changed_rows: vec![0; rows],
+    }
+}
+
+fn pad_batch(batch: &NumericBatch, brows: usize, bcols: usize) -> NumericBatch {
+    if batch.rows == brows && batch.cols == bcols {
+        return batch.clone();
+    }
+    let mut p = NumericBatch::zeroed(brows, bcols);
+    for i in 0..batch.rows {
+        let src = i * batch.cols;
+        let dst = i * bcols;
+        p.a[dst..dst + batch.cols].copy_from_slice(&batch.a[src..src + batch.cols]);
+        p.b[dst..dst + batch.cols].copy_from_slice(&batch.b[src..src + batch.cols]);
+        p.na[dst..dst + batch.cols]
+            .copy_from_slice(&batch.na[src..src + batch.cols]);
+        p.nb[dst..dst + batch.cols]
+            .copy_from_slice(&batch.nb[src..src + batch.cols]);
+    }
+    p.ra[..batch.rows].copy_from_slice(&batch.ra);
+    p.rb[..batch.rows].copy_from_slice(&batch.rb);
+    p.atol[..batch.cols].copy_from_slice(&batch.atol);
+    p.rtol[..batch.cols].copy_from_slice(&batch.rtol);
+    p
+}
+
+fn slice_cols(batch: &NumericBatch, c0: usize, cn: usize) -> NumericBatch {
+    let mut s = NumericBatch::zeroed(batch.rows, cn);
+    for i in 0..batch.rows {
+        let src = i * batch.cols + c0;
+        let dst = i * cn;
+        s.a[dst..dst + cn].copy_from_slice(&batch.a[src..src + cn]);
+        s.b[dst..dst + cn].copy_from_slice(&batch.b[src..src + cn]);
+        s.na[dst..dst + cn].copy_from_slice(&batch.na[src..src + cn]);
+        s.nb[dst..dst + cn].copy_from_slice(&batch.nb[src..src + cn]);
+    }
+    s.ra.copy_from_slice(&batch.ra);
+    s.rb.copy_from_slice(&batch.rb);
+    s.atol.copy_from_slice(&batch.atol[c0..c0 + cn]);
+    s.rtol.copy_from_slice(&batch.rtol[c0..c0 + cn]);
+    s
+}
+
+fn slice_rows(batch: &NumericBatch, r0: usize, rn: usize) -> NumericBatch {
+    let c = batch.cols;
+    let mut s = NumericBatch::zeroed(rn, c);
+    s.a.copy_from_slice(&batch.a[r0 * c..(r0 + rn) * c]);
+    s.b.copy_from_slice(&batch.b[r0 * c..(r0 + rn) * c]);
+    s.na.copy_from_slice(&batch.na[r0 * c..(r0 + rn) * c]);
+    s.nb.copy_from_slice(&batch.nb[r0 * c..(r0 + rn) * c]);
+    s.ra.copy_from_slice(&batch.ra[r0..r0 + rn]);
+    s.rb.copy_from_slice(&batch.rb[r0..r0 + rn]);
+    s.atol.copy_from_slice(&batch.atol);
+    s.rtol.copy_from_slice(&batch.rtol);
+    s
+}
+
+/// Strip padding and verify its accounting: padding rows must be ABSENT;
+/// padded columns contribute per-row-presence verdicts that are
+/// subtracted from the counts.
+#[allow(clippy::too_many_arguments)]
+fn unpad_out(
+    batch: &NumericBatch,
+    brows: usize,
+    bcols: usize,
+    verdicts_p: Vec<i32>,
+    counts_p: Vec<i32>,
+    col_changed_p: Vec<i32>,
+    col_maxabs_p: Vec<f64>,
+    changed_rows_p: Vec<i32>,
+) -> Result<NumericDiffOut, String> {
+    let (r, c) = (batch.rows, batch.cols);
+    let mut out = empty_out(r, c);
+
+    for i in 0..r {
+        let src = i * bcols;
+        out.verdicts[i * c..(i + 1) * c]
+            .copy_from_slice(&verdicts_p[src..src + c]);
+    }
+    out.col_changed
+        .copy_from_slice(&col_changed_p[..c].iter().map(|&x| x as i64)
+            .collect::<Vec<_>>());
+    out.col_maxabs.copy_from_slice(&col_maxabs_p[..c]);
+    out.changed_rows.copy_from_slice(&changed_rows_p[..r]);
+
+    // Count padding contributions to subtract.
+    let mut aligned = 0i64;
+    let mut removed = 0i64;
+    let mut added = 0i64;
+    for i in 0..r {
+        match (batch.ra[i] > 0.5, batch.rb[i] > 0.5) {
+            (true, true) => aligned += 1,
+            (true, false) => removed += 1,
+            (false, true) => added += 1,
+            (false, false) => {}
+        }
+    }
+    let pad_cols = (bcols - c) as i64;
+    let pad_row_cells = ((brows - r) as i64) * bcols as i64;
+    let mut counts = [0i64; 5];
+    for k in 0..5 {
+        counts[k] = counts_p[k] as i64;
+    }
+    // Padded columns on real rows: aligned rows read null==null -> EQUAL.
+    counts[Verdict::Equal as usize] -= aligned * pad_cols;
+    counts[Verdict::Removed as usize] -= removed * pad_cols;
+    counts[Verdict::Added as usize] -= added * pad_cols;
+    // Padding rows are ABSENT across all bucket columns; real rows with
+    // ra=rb=0 (none by construction) would also be absent.
+    counts[Verdict::Absent as usize] -= pad_row_cells;
+    if counts.iter().any(|&x| x < 0) {
+        return Err(format!(
+            "padding accounting underflow: {counts:?} (bucket {brows}x{bcols}, \
+             batch {r}x{c})"
+        ));
+    }
+    out.counts = counts;
+
+    // changed_rows for padding rows must be 0; sanity-check a prefix.
+    debug_assert!(changed_rows_p[r..].iter().all(|&x| x == 0));
+    Ok(out)
+}
+
+/// Cross-checking executor: runs both native and PJRT paths and asserts
+/// they agree (config `engine.delta_path = "check"`).
+pub struct CheckExec {
+    pub pjrt: PjrtHandle,
+}
+
+impl NumericDeltaExec for CheckExec {
+    fn name(&self) -> &'static str {
+        "check"
+    }
+    fn diff(&self, batch: &NumericBatch) -> Result<NumericDiffOut, String> {
+        let native = crate::engine::comparators::native_numeric_diff(batch);
+        let pjrt = self.pjrt.diff(batch)?;
+        if native.verdicts != pjrt.verdicts || native.counts != pjrt.counts {
+            return Err(format!(
+                "pjrt/native divergence: counts {:?} vs {:?}",
+                pjrt.counts, native.counts
+            ));
+        }
+        Ok(pjrt)
+    }
+}

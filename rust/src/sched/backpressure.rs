@@ -1,0 +1,72 @@
+//! Backpressure gate (paper §IV: "backpressure reduces k or pauses
+//! submission when queue depth grows"). Hysteresis: pause above
+//! `depth_factor · k`, resume below half of that.
+
+#[derive(Debug, Clone, Copy)]
+pub struct Backpressure {
+    depth_factor: f64,
+    paused: bool,
+    pauses: u64,
+}
+
+impl Backpressure {
+    pub fn new(depth_factor: f64) -> Self {
+        Backpressure { depth_factor: depth_factor.max(1.0), paused: false, pauses: 0 }
+    }
+
+    /// Update with the current queue depth; returns whether submission
+    /// is currently allowed.
+    pub fn update(&mut self, queue_depth: usize, k: usize) -> bool {
+        let hi = (self.depth_factor * k.max(1) as f64).ceil();
+        let lo = (hi / 2.0).floor();
+        if self.paused {
+            if (queue_depth as f64) <= lo {
+                self.paused = false;
+            }
+        } else if queue_depth as f64 >= hi {
+            self.paused = true;
+            self.pauses += 1;
+        }
+        !self.paused
+    }
+
+    pub fn is_paused(&self) -> bool {
+        self.paused
+    }
+    pub fn pause_count(&self) -> u64 {
+        self.pauses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pauses_and_resumes_with_hysteresis() {
+        let mut bp = Backpressure::new(4.0);
+        assert!(bp.update(0, 2)); // depth 0 < 8
+        assert!(bp.update(7, 2));
+        assert!(!bp.update(8, 2)); // hits hi=8 -> pause
+        assert!(!bp.update(5, 2)); // still above lo=4
+        assert!(bp.update(4, 2)); // resumes at lo
+        assert_eq!(bp.pause_count(), 1);
+    }
+
+    #[test]
+    fn threshold_scales_with_k() {
+        let mut bp = Backpressure::new(4.0);
+        assert!(bp.update(20, 8)); // hi = 32
+        assert!(!bp.update(32, 8));
+    }
+
+    #[test]
+    fn repeated_cycles_counted() {
+        let mut bp = Backpressure::new(2.0);
+        for _ in 0..3 {
+            assert!(!bp.update(10, 1)); // pause (hi=2)
+            assert!(bp.update(0, 1)); // resume
+        }
+        assert_eq!(bp.pause_count(), 3);
+    }
+}

@@ -1,0 +1,547 @@
+//! The guarded proportional hill-climb controller (paper §IV, Eq. 5–6)
+//! and the `TuningPolicy` trait that the scheduler drives — the adaptive
+//! controller and the §V baselines (fixed grid, warm-up heuristic) are
+//! interchangeable behind it.
+//!
+//! Decision structure follows the paper's pseudocode exactly:
+//!   1. safety-first multiplicative decreases (memory guard / tail
+//!      trigger, with m-consecutive hysteresis);
+//!   2. CPU over-target → reduce k;
+//!   3. otherwise proportional increases driven by whichever resource
+//!      has more normalized headroom (ties prefer b);
+//!   4. every proposal is pruned by the Eq. 4 envelope and the CPU cap
+//!      (the scheduler passes `b_max_safe` from the memory model).
+
+use crate::config::{Caps, Policy};
+
+/// Smoothed control signals computed by the scheduler after each
+/// completion round (paper §II instrumentation).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Signals {
+    /// Rolling-window batch-latency quantiles (seconds).
+    pub p50: f64,
+    pub p95: f64,
+    /// EWMA-smoothed window p95 (the hill-climb objective signal; raw
+    /// p95 is too straggler-noisy to judge single actions against).
+    pub p95_smooth: f64,
+    /// EWMA-smoothed p95 of per-batch worker RSS peaks (bytes).
+    pub rss_p95_batch: f64,
+    /// Job-level memory signal: base + k · rss_p95_batch (bytes).
+    pub mem_signal: f64,
+    /// EWMA-smoothed p95 CPU utilization as a fraction of the CPU cap.
+    pub cpu_p95: f64,
+    pub queue_depth: usize,
+    /// Shards submitted but not finished (pipeline depth — increases
+    /// are judged only after the pre-increase pipeline drains).
+    pub inflight: usize,
+    /// Accepted batch completions so far.
+    pub completed: u64,
+}
+
+/// Environment the scheduler provides to a policy step.
+#[derive(Debug, Clone, Copy)]
+pub struct PolicyEnv {
+    pub caps: Caps,
+    pub policy: Policy,
+    /// Eq. 4 pruning: largest safe b at the *current* k.
+    pub b_max_safe: usize,
+    /// Base job RSS in bytes (for mem-signal reconstruction if needed).
+    pub base_rss: f64,
+    /// Aligned-row universe (max(|A|,|B|)) — lets safe_start scale the
+    /// initial b so small jobs still get enough batches to adapt over.
+    pub job_rows: usize,
+    /// Cost-model hint: the overhead-balanced batch size (the knee
+    /// where fixed per-batch costs stop dominating).
+    pub b_hint: usize,
+}
+
+/// One policy decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PolicyStep {
+    pub b: usize,
+    pub k: usize,
+    pub changed: bool,
+    /// Whether the Eq. 4 envelope clipped the proposal (the §VIII
+    /// "actions kept" statistic counts the complement).
+    pub clamped: bool,
+    pub reason: &'static str,
+}
+
+/// A (b,k) tuning policy.
+pub trait TuningPolicy: Send {
+    fn name(&self) -> &'static str;
+    /// Initial (b, k) before any batch completes.
+    fn initial(&mut self, env: &PolicyEnv) -> (usize, usize);
+    /// Called after each completion round.
+    fn step(&mut self, s: &Signals, env: &PolicyEnv) -> PolicyStep;
+}
+
+/// A tentative increase awaiting its objective evaluation.
+#[derive(Debug, Clone, Copy)]
+struct PendingEval {
+    /// Which dimension was increased (true = b, false = k).
+    dim_b: bool,
+    prev: usize,
+    p95_before: f64,
+    eval_at: u64,
+}
+
+/// How many completions to wait before judging an increase, how much
+/// p95 degradation is tolerated, and how long a reverted dimension is
+/// blocked. These are the "guarded" part of the guarded hill-climb: the
+/// objective is p95, so an increase that degrades it is undone and that
+/// direction parked — without this, the headroom-proportional rule
+/// grows b monotonically until per-batch latency dominates the tail.
+const EVAL_DELAY: u64 = 4;
+/// b inflates per-batch latency directly — judge it tightly. k mostly
+/// affects queueing/contention — give it more slack before reverting.
+const DEGRADE_TOL_B: f64 = 0.20;
+const DEGRADE_TOL_K: f64 = 0.25;
+const BLOCK_ROUNDS: u64 = 32;
+/// Return-to-best: if the smoothed objective drifts this far above the
+/// best configuration seen, jump back to it. A wide margin + settle
+/// delay keeps this a runaway-drift safety net, not a competing
+/// controller (the per-action objective guard does the fine work).
+const BEST_DRIFT: f64 = 0.6;
+const SETTLE_ROUNDS: u64 = 16;
+
+/// The paper's adaptive controller.
+pub struct AdaptiveController {
+    b: usize,
+    k: usize,
+    /// Consecutive decrease-trigger counts (hysteresis, §IV).
+    mem_or_tail_triggers: u32,
+    cpu_triggers: u32,
+    /// Completions remaining before the next increase is allowed
+    /// ("increases ... when recent batches are stable").
+    cooldown: u32,
+    pending: Option<PendingEval>,
+    blocked_b_until: u64,
+    blocked_k_until: u64,
+    /// Best (b, k, smoothed p95) seen so far — hill-climb memory.
+    best: Option<(usize, usize, f64)>,
+    /// Completion count at the last applied change (settle timer).
+    last_change_at: u64,
+}
+
+impl AdaptiveController {
+    pub fn new() -> Self {
+        AdaptiveController {
+            b: 0,
+            k: 0,
+            mem_or_tail_triggers: 0,
+            cpu_triggers: 0,
+            cooldown: 0,
+            pending: None,
+            blocked_b_until: 0,
+            blocked_k_until: 0,
+            best: None,
+            last_change_at: 0,
+        }
+    }
+    pub fn bk(&self) -> (usize, usize) {
+        (self.b, self.k)
+    }
+
+    fn clamp(&self, env: &PolicyEnv, b: usize, k: usize) -> (usize, usize) {
+        let p = &env.policy;
+        let k = k.clamp(p.k_min, env.caps.cpu_cap);
+        let b_hi = env.b_max_safe.max(p.b_min).min(p.b_max);
+        let b = b.clamp(p.b_min, b_hi);
+        (b, k)
+    }
+}
+
+impl Default for AdaptiveController {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TuningPolicy for AdaptiveController {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    /// `safe_start`: begin at a deliberately conservative point — the
+    /// controller climbs from below instead of backing off from above.
+    fn initial(&mut self, env: &PolicyEnv) -> (usize, usize) {
+        let p = &env.policy;
+        let k0 = (env.caps.cpu_cap / 4).clamp(p.k_min, env.caps.cpu_cap);
+        // Quarter of the cold-start-safe b, further bounded so the job
+        // yields enough batches (≥ ~8 per worker) for the hill-climb to
+        // observe and act on.
+        let by_job = (env.job_rows / (8 * k0)).max(1);
+        let b0 = (env.b_max_safe / 4)
+            .min(by_job)
+            .min(env.b_hint.max(p.b_min))
+            .clamp(p.b_min, p.b_max);
+        let (b, k) = self.clamp(env, b0, k0);
+        self.b = b;
+        self.k = k;
+        (b, k)
+    }
+
+    fn step(&mut self, s: &Signals, env: &PolicyEnv) -> PolicyStep {
+        let p = &env.policy;
+        let eta_cap = p.eta * env.caps.mem_cap_bytes as f64;
+        let (old_b, old_k) = (self.b, self.k);
+        let mut reason = "hold";
+
+        // --- hill-climb memory: remember the best configuration ---
+        // Only once the window is representative (full pipeline), and
+        // keep the record honest while sitting at the best config.
+        if s.p95_smooth > 0.0 && s.completed >= env.policy.window as u64 / 2 {
+            match self.best {
+                Some((bb, bk, bp)) if bb == self.b && bk == self.k => {
+                    self.best =
+                        Some((bb, bk, 0.8 * bp + 0.2 * s.p95_smooth));
+                }
+                Some((_, _, bp)) if s.p95_smooth >= bp => {}
+                _ => self.best = Some((self.b, self.k, s.p95_smooth)),
+            }
+        }
+
+        // --- objective guard: judge the last increase against p95 ---
+        if let Some(pe) = self.pending {
+            if s.completed >= pe.eval_at {
+                self.pending = None;
+                let tol = if pe.dim_b { DEGRADE_TOL_B } else { DEGRADE_TOL_K };
+                if pe.p95_before > 0.0
+                    && s.p95_smooth > pe.p95_before * (1.0 + tol)
+                {
+                    // The increase hurt the objective: revert + park.
+                    if pe.dim_b {
+                        self.b = pe.prev;
+                        self.blocked_b_until = s.completed + BLOCK_ROUNDS;
+                        reason = "revert-b";
+                    } else {
+                        self.k = pe.prev.max(p.k_min);
+                        self.blocked_k_until = s.completed + BLOCK_ROUNDS;
+                        reason = "revert-k";
+                    }
+                    let raw_b = self.b;
+                    let (b, k) = self.clamp(env, self.b, self.k);
+                    self.b = b;
+                    self.k = k;
+                    if b != old_b || k != old_k {
+                        self.last_change_at = s.completed;
+                    }
+                    return PolicyStep {
+                        b,
+                        k,
+                        changed: b != old_b || k != old_k,
+                        clamped: b < raw_b,
+                        reason,
+                    };
+                }
+            }
+        }
+
+        // --- return-to-best: undo slow upward drift of the objective ---
+        if self.pending.is_none()
+            && s.completed >= self.last_change_at + SETTLE_ROUNDS
+        {
+            if let Some((bb, bk, bp)) = self.best {
+                if s.p95_smooth > bp * (1.0 + BEST_DRIFT)
+                    && (self.b != bb || self.k != bk)
+                {
+                    self.b = bb;
+                    self.k = bk;
+                    self.blocked_b_until = s.completed + BLOCK_ROUNDS;
+                    self.blocked_k_until = s.completed + BLOCK_ROUNDS / 2;
+                    let (b, k) = self.clamp(env, self.b, self.k);
+                    self.b = b;
+                    self.k = k;
+                    if b != old_b || k != old_k {
+                        self.last_change_at = s.completed;
+                    }
+                    return PolicyStep {
+                        b,
+                        k,
+                        changed: b != old_b || k != old_k,
+                        clamped: false,
+                        reason: "return-to-best",
+                    };
+                }
+            }
+        }
+
+        // --- safety-first decreases (hysteresis: m consecutive) ---
+        let tail_spike = s.p50 > 0.0 && s.p95 / s.p50 > p.tau;
+        let mem_near = s.mem_signal >= eta_cap;
+        if mem_near || tail_spike {
+            self.pending = None;
+            self.mem_or_tail_triggers += 1;
+            if self.mem_or_tail_triggers >= p.hysteresis_m {
+                // Memory pressure may push b all the way to b_min
+                // (safety first); pure tail spikes floor at a fraction
+                // of the overhead-balanced point so repeated straggler
+                // noise cannot drive the job off the throughput cliff.
+                let floor = if mem_near {
+                    p.b_min
+                } else {
+                    p.b_min.max(env.b_hint / 4)
+                };
+                self.b = ((p.gamma * self.b as f64).floor() as usize).max(floor);
+                self.k = self.k.saturating_sub(1).max(p.k_min);
+                self.mem_or_tail_triggers = 0;
+                self.cooldown = p.hysteresis_m;
+                reason = if mem_near { "mem-backoff" } else { "tail-backoff" };
+            } else {
+                reason = "trigger-armed";
+            }
+        } else {
+            self.mem_or_tail_triggers = 0;
+            // --- CPU over target: reduce k first ---
+            if s.cpu_p95 > p.rho_star {
+                self.cpu_triggers += 1;
+                if self.cpu_triggers >= p.hysteresis_m {
+                    self.k = self.k.saturating_sub(1).max(p.k_min);
+                    self.cpu_triggers = 0;
+                    self.cooldown = p.hysteresis_m;
+                    reason = "cpu-backoff";
+                } else {
+                    reason = "cpu-armed";
+                }
+            } else {
+                self.cpu_triggers = 0;
+                // --- proportional increases (Eq. 5–6) ---
+                if self.cooldown > 0 {
+                    self.cooldown -= 1;
+                    reason = "cooldown";
+                } else if self.pending.is_none() {
+                    let h_mem = ((eta_cap - s.mem_signal) / eta_cap).max(0.0);
+                    let h_cpu = ((p.rho_star - s.cpu_p95) / p.rho_star).max(0.0);
+                    let b_ok = s.completed >= self.blocked_b_until
+                        && self.b < env.b_max_safe.min(p.b_max);
+                    let k_ok = s.completed >= self.blocked_k_until
+                        && self.k < env.caps.cpu_cap;
+                    // Increase whichever resource has more normalized
+                    // headroom (ties prefer b), skipping parked dims.
+                    let grow_b = h_mem > p.eps
+                        && b_ok
+                        && (!k_ok
+                            || h_cpu <= p.eps
+                            || h_mem >= h_cpu + p.eps
+                            || (h_mem - h_cpu).abs() < p.eps);
+                    let grow_k = !grow_b && h_cpu > p.eps && k_ok;
+                    if grow_b {
+                        // Δb = ⌊λ_b · h_mem · b⌋.
+                        let db = ((p.lambda_b * h_mem * self.b as f64)
+                            .floor() as usize)
+                            .max(p.b_step_min);
+                        self.pending = Some(PendingEval {
+                            dim_b: true,
+                            prev: self.b,
+                            p95_before: s.p95_smooth,
+                            // Post-increase batches only exist after the
+                            // current pipeline drains.
+                            eval_at: s.completed + s.inflight as u64 + EVAL_DELAY,
+                        });
+                        self.b += db;
+                        reason = "increase-b";
+                        self.cooldown = 1;
+                    } else if grow_k {
+                        // Δk = ⌈λ_k · h_cpu · k⌉.
+                        let dk = ((p.lambda_k * h_cpu * self.k as f64)
+                            .ceil() as usize)
+                            .max(1);
+                        self.pending = Some(PendingEval {
+                            dim_b: false,
+                            prev: self.k,
+                            p95_before: s.p95_smooth,
+                            eval_at: s.completed + s.inflight as u64 + EVAL_DELAY,
+                        });
+                        self.k += dk;
+                        reason = "increase-k";
+                        self.cooldown = 1;
+                    }
+                }
+            }
+        }
+
+        // --- prune by the envelope + caps (Eq. 4) ---
+        let raw_b = self.b;
+        let (b, k) = self.clamp(env, self.b, self.k);
+        self.b = b;
+        self.k = k;
+        let changed = b != old_b || k != old_k;
+        if changed {
+            self.last_change_at = s.completed;
+        }
+        PolicyStep { b, k, changed, clamped: b < raw_b, reason }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env(b_max_safe: usize) -> PolicyEnv {
+        PolicyEnv {
+            caps: Caps::default(), // 64 GB, 32 cores
+            policy: Policy::default(),
+            b_max_safe,
+            base_rss: 0.0,
+            job_rows: 100_000_000,
+            b_hint: 100_000,
+        }
+    }
+
+    fn healthy_signals(mem_frac: f64, cpu: f64) -> Signals {
+        let cap = 64.0e9;
+        Signals {
+            p50: 1.0,
+            p95: 1.3,
+            p95_smooth: 1.3,
+            rss_p95_batch: mem_frac * cap / 8.0,
+            mem_signal: mem_frac * 0.9 * cap,
+            cpu_p95: cpu,
+            queue_depth: 0,
+            inflight: 0,
+            completed: 10,
+        }
+    }
+
+    #[test]
+    fn initial_is_conservative_and_safe() {
+        let mut c = AdaptiveController::new();
+        let e = env(400_000);
+        let (b, k) = c.initial(&e);
+        assert_eq!(k, 8); // 32/4
+        assert_eq!(b, 100_000); // 400k/4
+        assert!(b <= e.b_max_safe);
+    }
+
+    #[test]
+    fn grows_b_when_memory_headroom_dominates() {
+        let mut c = AdaptiveController::new();
+        let e = env(2_000_000);
+        c.initial(&e);
+        let (b0, _) = c.bk();
+        // Lots of memory headroom, CPU near target -> b grows. p95 stays
+        // flat, so the objective guard keeps every increase.
+        let mut s = healthy_signals(0.2, 0.80);
+        let mut grew = 0;
+        for i in 0..40 {
+            s.completed = 10 + i;
+            let step = c.step(&s, &e);
+            if step.reason == "increase-b" {
+                grew += 1;
+            }
+            assert_ne!(step.reason, "revert-b", "flat p95 must not revert");
+        }
+        assert!(grew >= 3, "grew={grew}");
+        assert!(c.bk().0 > b0);
+    }
+
+    #[test]
+    fn grows_k_when_cpu_headroom_dominates() {
+        let mut c = AdaptiveController::new();
+        let e = env(2_000_000);
+        c.initial(&e);
+        let (_, k0) = c.bk();
+        // Memory nearly exhausted relative to guard, CPU idle -> k grows.
+        let s = healthy_signals(0.95, 0.10);
+        for _ in 0..10 {
+            c.step(&s, &e);
+        }
+        assert!(c.bk().1 > k0);
+    }
+
+    #[test]
+    fn memory_guard_backoff_with_hysteresis() {
+        let mut c = AdaptiveController::new();
+        let e = env(1_000_000);
+        c.initial(&e);
+        let (b0, k0) = c.bk();
+        let cap = 64.0e9;
+        let s = Signals {
+            p50: 1.0,
+            p95: 1.2,
+            mem_signal: 0.95 * cap, // above η=0.9 guard
+            rss_p95_batch: 1e9,
+            cpu_p95: 0.5,
+            completed: 5,
+            ..Default::default()
+        };
+        // First trigger arms; second fires (m=2).
+        let s1 = c.step(&s, &e);
+        assert!(!s1.changed);
+        assert_eq!(s1.reason, "trigger-armed");
+        let s2 = c.step(&s, &e);
+        assert_eq!(s2.reason, "mem-backoff");
+        assert!(c.bk().0 <= (0.6 * b0 as f64) as usize + 1);
+        assert_eq!(c.bk().1, k0 - 1);
+    }
+
+    #[test]
+    fn tail_spike_backoff() {
+        let mut c = AdaptiveController::new();
+        let e = env(1_000_000);
+        c.initial(&e);
+        let s = Signals {
+            p50: 1.0,
+            p95: 3.0, // p95/p50 = 3 > tau = 2
+            mem_signal: 1e9,
+            rss_p95_batch: 1e8,
+            cpu_p95: 0.5,
+            completed: 5,
+            ..Default::default()
+        };
+        c.step(&s, &e);
+        let step = c.step(&s, &e);
+        assert_eq!(step.reason, "tail-backoff");
+    }
+
+    #[test]
+    fn cpu_over_target_reduces_k() {
+        let mut c = AdaptiveController::new();
+        let e = env(1_000_000);
+        c.initial(&e);
+        let k0 = c.bk().1;
+        let s = healthy_signals(0.2, 0.95); // CPU > ρ*=0.85
+        c.step(&s, &e);
+        let step = c.step(&s, &e);
+        assert_eq!(step.reason, "cpu-backoff");
+        assert_eq!(c.bk().1, k0 - 1);
+    }
+
+    #[test]
+    fn proposals_always_within_envelope_and_caps() {
+        let mut c = AdaptiveController::new();
+        let e = env(50_000);
+        c.initial(&e);
+        let s = healthy_signals(0.05, 0.05);
+        for _ in 0..50 {
+            c.step(&s, &e);
+            let (b, k) = c.bk();
+            assert!(b <= e.b_max_safe.max(e.policy.b_min));
+            assert!(k <= e.caps.cpu_cap);
+            assert!(b >= e.policy.b_min && k >= e.policy.k_min);
+        }
+    }
+
+    #[test]
+    fn never_below_minimums_under_sustained_backoff() {
+        let mut c = AdaptiveController::new();
+        let e = env(1_000_000);
+        c.initial(&e);
+        let s = Signals {
+            p50: 1.0,
+            p95: 10.0,
+            mem_signal: 70e9,
+            rss_p95_batch: 1e9,
+            cpu_p95: 1.0,
+            queue_depth: 100,
+            completed: 5,
+            ..Default::default()
+        };
+        for _ in 0..100 {
+            c.step(&s, &e);
+        }
+        assert_eq!(c.bk().0, e.policy.b_min);
+        assert_eq!(c.bk().1, e.policy.k_min);
+    }
+}

@@ -1,0 +1,156 @@
+//! Online per-batch latency model (paper Eq. 2):
+//!
+//!   T̂(b,k) = T_read(b) + T_prep(b) + T_Δ(b) + T_overhead(k) − T_overlap
+//!
+//! Term constants come from the engine microbenchmarks (§III:
+//! calibration) and are corrected online by exponential smoothing on the
+//! observed/predicted ratio — the multiplicative form keeps the model
+//! scale-free as b changes.
+
+use crate::engine::microbench::CostConstants;
+use crate::sched::ewma::Ewma;
+use crate::sched::preflight::PreflightProfile;
+
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub consts: CostConstants,
+    /// Ŵ and B̂_read from pre-flight.
+    pub w_hat: f64,
+    pub b_read: f64,
+    /// Columns entering Δ (cells per row ≈ ncols).
+    pub ncols: f64,
+    /// Online multiplicative correction (obs/pred), EWMA-smoothed.
+    correction: Ewma,
+    /// Read/compute overlap fraction (T_overlap): the pipeline overlaps
+    /// decode with Δ of the previous chunk; 0 = fully serial.
+    pub overlap: f64,
+}
+
+impl CostModel {
+    pub fn new(consts: CostConstants, profile: &PreflightProfile, rho: f64) -> Self {
+        CostModel {
+            consts,
+            w_hat: profile.w_hat,
+            b_read: profile.b_read.max(1.0),
+            ncols: profile.ncols as f64,
+            correction: Ewma::new(rho),
+            overlap: 0.0,
+        }
+    }
+
+    /// Uncorrected Eq. 2 prediction (seconds).
+    fn predict_raw(&self, b: usize, k: usize, overhead_per_batch: f64) -> f64 {
+        let b = b as f64;
+        let t_read = b * self.w_hat / self.b_read;
+        let t_prep = b * self.w_hat * self.consts.decode_ns_per_byte * 1e-9
+            + b * self.consts.align_ns_per_row * 1e-9;
+        let t_delta = b * self.ncols * self.consts.delta_numeric_ns_per_cell * 1e-9;
+        // Scheduler/merge overheads grow mildly with k (contention).
+        let t_overhead = overhead_per_batch
+            + self.consts.merge_ns_per_batch * 1e-9 * (1.0 + 0.02 * k as f64);
+        let t_overlap = self.overlap * t_read.min(t_delta);
+        (t_read + t_prep + t_delta + t_overhead - t_overlap).max(1e-9)
+    }
+
+    /// Predicted batch execution time in seconds for batch size b under
+    /// backend overhead profile `overhead_per_batch` (seconds).
+    pub fn predict(&self, b: usize, k: usize, overhead_per_batch: f64) -> f64 {
+        self.predict_raw(b, k, overhead_per_batch) * self.correction.get_or(1.0)
+    }
+
+    /// Feed an observation; returns the residual (obs − pred_before).
+    /// The EWMA tracks obs/raw-prediction, so the correction converges
+    /// to the true scale instead of compounding.
+    pub fn observe(
+        &mut self,
+        b: usize,
+        k: usize,
+        overhead_per_batch: f64,
+        observed_secs: f64,
+    ) -> f64 {
+        let before = self.predict(b, k, overhead_per_batch);
+        let raw = self.predict_raw(b, k, overhead_per_batch);
+        let ratio = (observed_secs / raw).clamp(1e-4, 1e4);
+        self.correction.update(ratio);
+        observed_secs - before
+    }
+
+    pub fn correction_factor(&self) -> f64 {
+        self.correction.get_or(1.0)
+    }
+
+    /// Batch size where variable cost ≈ `ratio` × the fixed per-batch
+    /// overhead — the knee where larger b stops buying much throughput
+    /// but keeps inflating latency. Used for the controller's
+    /// `safe_start` (paper: "begin conservatively, climb from below").
+    pub fn overhead_balanced_b(&self, ratio: f64) -> usize {
+        let c = &self.consts;
+        let fixed = (c.merge_ns_per_batch + c.sched_ns_per_batch) * 1e-9;
+        let per_row = self.w_hat / self.b_read
+            + self.w_hat * c.decode_ns_per_byte * 1e-9
+            + c.align_ns_per_row * 1e-9
+            + self.ncols * c.delta_numeric_ns_per_cell * 1e-9;
+        ((ratio * fixed / per_row.max(1e-12)) as usize).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> CostModel {
+        let profile = PreflightProfile {
+            w_hat: 100.0,
+            b_read: 1e9,
+            rows_a: 1_000_000,
+            rows_b: 1_000_000,
+            sampled_rows: 10_000,
+            ncols: 8,
+        };
+        CostModel::new(CostConstants::default(), &profile, 0.2)
+    }
+
+    #[test]
+    fn monotone_in_b() {
+        let m = model();
+        let t1 = m.predict(10_000, 4, 0.0);
+        let t2 = m.predict(100_000, 4, 0.0);
+        assert!(t2 > 5.0 * t1, "{t1} {t2}");
+    }
+
+    #[test]
+    fn overhead_grows_with_k() {
+        let m = model();
+        assert!(m.predict(10_000, 32, 0.0) > m.predict(10_000, 1, 0.0));
+    }
+
+    #[test]
+    fn correction_converges_to_observed_scale() {
+        let mut m = model();
+        let obs = 3.0 * model().predict(50_000, 4, 0.0);
+        for _ in 0..60 {
+            m.observe(50_000, 4, 0.0, obs);
+        }
+        let pred = m.predict(50_000, 4, 0.0);
+        assert!((pred / obs - 1.0).abs() < 0.05, "pred {pred} obs {obs}");
+        assert!((m.correction_factor() - 3.0).abs() < 0.2);
+    }
+
+    #[test]
+    fn overlap_reduces_latency() {
+        let mut m = model();
+        let serial = m.predict(100_000, 4, 0.0);
+        m.overlap = 0.8;
+        assert!(m.predict(100_000, 4, 0.0) < serial);
+    }
+
+    #[test]
+    fn residual_sign_matches() {
+        let mut m = model();
+        let pred = m.predict(10_000, 2, 0.0);
+        let r = m.observe(10_000, 2, 0.0, pred * 2.0);
+        assert!(r > 0.0);
+        let r = m.observe(10_000, 2, 0.0, 1e-9);
+        assert!(r < 0.0);
+    }
+}

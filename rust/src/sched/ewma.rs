@@ -1,0 +1,136 @@
+//! Exponentially-weighted moving averages (paper §III: model parameters
+//! and control signals smoothed with factor ρ = 0.2).
+
+/// Scalar EWMA: y ← (1-ρ)·y + ρ·x.
+#[derive(Debug, Clone, Copy)]
+pub struct Ewma {
+    rho: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(rho: f64) -> Self {
+        assert!((0.0..=1.0).contains(&rho), "rho in [0,1]");
+        Ewma { rho, value: None }
+    }
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => (1.0 - self.rho) * v + self.rho * x,
+        };
+        self.value = Some(v);
+        v
+    }
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+    pub fn get_or(&self, default: f64) -> f64 {
+        self.value.unwrap_or(default)
+    }
+    pub fn reset(&mut self) {
+        self.value = None;
+    }
+}
+
+/// Windowed residual tracker for the δ_M prediction interval
+/// (paper §VIII: calibrated on the last 20 batches).
+#[derive(Debug, Clone)]
+pub struct ResidualWindow {
+    buf: std::collections::VecDeque<f64>,
+    cap: usize,
+}
+
+impl ResidualWindow {
+    pub fn new(cap: usize) -> Self {
+        ResidualWindow {
+            buf: std::collections::VecDeque::with_capacity(cap.max(2)),
+            cap: cap.max(2),
+        }
+    }
+    pub fn push(&mut self, residual: f64) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(residual);
+    }
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+    /// Half-width of the (z-scaled) prediction interval: z·σ̂ of the
+    /// residuals (+ |mean| to absorb bias before the model converges).
+    pub fn half_width(&self, z: f64) -> f64 {
+        if self.buf.len() < 2 {
+            return f64::INFINITY; // no evidence yet: maximally cautious
+        }
+        let n = self.buf.len() as f64;
+        let mean = self.buf.iter().sum::<f64>() / n;
+        let var = self
+            .buf
+            .iter()
+            .map(|x| (x - mean) * (x - mean))
+            .sum::<f64>()
+            / (n - 1.0);
+        z * var.sqrt() + mean.abs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_first_sample_passthrough() {
+        let mut e = Ewma::new(0.2);
+        assert_eq!(e.get(), None);
+        assert_eq!(e.update(10.0), 10.0);
+        let v = e.update(20.0);
+        assert!((v - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ewma_converges_to_constant() {
+        let mut e = Ewma::new(0.2);
+        for _ in 0..200 {
+            e.update(5.0);
+        }
+        assert!((e.get().unwrap() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn residual_window_infinite_until_two() {
+        let mut r = ResidualWindow::new(20);
+        assert!(r.half_width(1.96).is_infinite());
+        r.push(1.0);
+        assert!(r.half_width(1.96).is_infinite());
+        r.push(1.2);
+        assert!(r.half_width(1.96).is_finite());
+    }
+
+    #[test]
+    fn residual_window_tracks_spread_and_bias() {
+        let mut tight = ResidualWindow::new(20);
+        let mut wide = ResidualWindow::new(20);
+        for i in 0..20 {
+            tight.push(if i % 2 == 0 { 0.1 } else { -0.1 });
+            wide.push(if i % 2 == 0 { 5.0 } else { -5.0 });
+        }
+        assert!(wide.half_width(1.96) > 10.0 * tight.half_width(1.96));
+        // Pure bias also widens the interval.
+        let mut biased = ResidualWindow::new(20);
+        for _ in 0..20 {
+            biased.push(3.0);
+        }
+        assert!(biased.half_width(1.96) >= 3.0);
+    }
+
+    #[test]
+    fn residual_window_evicts() {
+        let mut r = ResidualWindow::new(3);
+        for x in [100.0, 100.0, 0.1, 0.1, 0.1] {
+            r.push(x);
+        }
+        assert_eq!(r.len(), 3);
+        // Old spikes evicted: hw = 1.96·0 + |0.1|.
+        assert!(r.half_width(1.96) < 0.2);
+    }
+}

@@ -1,0 +1,217 @@
+//! Online memory model and safety envelope (paper Eq. 3–4, contribution
+//! 2):
+//!
+//!   Mem(b,k) ≈ k·(β₀ + β₁·b·Ŵ + β₂·b)            (3)
+//!   Mem(b,k) + δ_M ≤ η·M_cap                      (4)
+//!
+//! β₁ starts from the working-set replication factor and is corrected
+//! online by exponential smoothing on observed/predicted per-batch
+//! peaks; δ_M is the z-scaled half-width of the residuals over the last
+//! `delta_m_window` batches (§VIII). `safe_b_max` inverts Eq. 4 to give
+//! the controller its pruned action space.
+
+use crate::sched::ewma::{Ewma, ResidualWindow};
+
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    /// Per-worker fixed buffers (bytes).
+    pub beta0: f64,
+    /// Per (row·byte) multiplier (decode replication + align + scratch).
+    pub beta1: f64,
+    /// Per-row constant (verdict vectors, bookkeeping).
+    pub beta2: f64,
+    /// Ŵ (bytes per aligned row) from pre-flight.
+    pub w_hat: f64,
+    /// Baseline job RSS (source tables, runtime) counted against the cap.
+    pub base_bytes: f64,
+    correction: Ewma,
+    residuals: ResidualWindow,
+    z_alpha: f64,
+}
+
+impl MemoryModel {
+    pub fn new(
+        w_hat: f64,
+        base_bytes: f64,
+        rho: f64,
+        delta_m_window: usize,
+        z_alpha: f64,
+    ) -> Self {
+        MemoryModel {
+            beta0: 16.0e6,
+            beta1: 1.6,
+            beta2: 16.0,
+            w_hat,
+            base_bytes,
+            correction: Ewma::new(rho),
+            residuals: ResidualWindow::new(delta_m_window),
+            z_alpha,
+        }
+    }
+
+    /// Predicted peak RSS of ONE batch (per worker), bytes.
+    pub fn predict_batch(&self, b: usize) -> f64 {
+        self.predict_batch_raw(b) * self.correction.get_or(1.0)
+    }
+
+    /// Eq. 3: predicted job peak with k concurrent workers.
+    pub fn predict(&self, b: usize, k: usize) -> f64 {
+        self.base_bytes + k as f64 * self.predict_batch(b)
+    }
+
+    /// δ_M: half-width of the prediction interval, scaled to k workers.
+    pub fn delta_m(&self, k: usize) -> f64 {
+        let hw = self.residuals.half_width(self.z_alpha);
+        if hw.is_infinite() {
+            // No residual evidence yet: fall back to 25% of prediction —
+            // conservative but finite so the job can start.
+            return f64::NAN; // callers use delta_m_or(b, k)
+        }
+        hw * k as f64
+    }
+
+    /// δ_M with the cold-start fallback applied.
+    pub fn delta_m_or(&self, b: usize, k: usize) -> f64 {
+        let d = self.delta_m(k);
+        if d.is_nan() {
+            0.25 * (self.predict(b, k) - self.base_bytes)
+        } else {
+            d
+        }
+    }
+
+    /// Eq. 4 check for an action (b, k).
+    pub fn is_safe(&self, b: usize, k: usize, eta: f64, mem_cap: u64) -> bool {
+        self.predict(b, k) + self.delta_m_or(b, k) <= eta * mem_cap as f64
+    }
+
+    /// Largest safe b for a given k (inverts Eq. 4; 0 if none).
+    pub fn safe_b_max(&self, k: usize, eta: f64, mem_cap: u64) -> usize {
+        // Solve with the cold-start fallback folded in: with fallback,
+        // envelope is base + 1.25·k·pred_batch(b) ≤ η·cap.
+        let budget = eta * mem_cap as f64 - self.base_bytes;
+        if budget <= 0.0 {
+            return 0;
+        }
+        let hw = self.residuals.half_width(self.z_alpha);
+        let (scale, extra) = if hw.is_infinite() {
+            (1.25, 0.0)
+        } else {
+            (1.0, hw * k as f64)
+        };
+        let per_worker = ((budget - extra) / (scale * k as f64)).max(0.0);
+        let corr = self.correction.get_or(1.0);
+        let per_row = (self.beta1 * self.w_hat + self.beta2) * corr;
+        let b = ((per_worker - self.beta0 * corr) / per_row).floor();
+        if b.is_finite() && b > 0.0 {
+            b as usize
+        } else {
+            0
+        }
+    }
+
+    /// Uncorrected Eq. 3 per-batch term.
+    fn predict_batch_raw(&self, b: usize) -> f64 {
+        let b = b as f64;
+        self.beta0 + self.beta1 * b * self.w_hat + self.beta2 * b
+    }
+
+    /// Feed an observed per-batch peak for batch size b. The EWMA tracks
+    /// obs/raw-prediction (stable convergence, no compounding).
+    pub fn observe(&mut self, b: usize, observed_peak_bytes: f64) {
+        let pred = self.predict_batch(b);
+        let raw = self.predict_batch_raw(b).max(1.0);
+        let ratio = (observed_peak_bytes / raw).clamp(1e-4, 1e4);
+        self.correction.update(ratio);
+        self.residuals.push(observed_peak_bytes - pred);
+    }
+
+    pub fn residual_count(&self) -> usize {
+        self.residuals.len()
+    }
+    pub fn correction_factor(&self) -> f64 {
+        self.correction.get_or(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> MemoryModel {
+        MemoryModel::new(200.0, 1.0e9, 0.2, 20, 1.96)
+    }
+
+    #[test]
+    fn prediction_scales_with_b_and_k() {
+        let m = model();
+        assert!(m.predict(100_000, 4) > m.predict(10_000, 4));
+        assert!(m.predict(10_000, 8) > m.predict(10_000, 4));
+    }
+
+    #[test]
+    fn safe_b_max_inverts_eq4() {
+        let mut m = model();
+        // Warm the residual window so δ_M is finite and small.
+        for _ in 0..20 {
+            let pred = m.predict_batch(50_000);
+            m.observe(50_000, pred * 1.01);
+        }
+        let cap = 64_000_000_000u64;
+        let eta = 0.9;
+        for k in [1usize, 4, 16, 32] {
+            let bmax = m.safe_b_max(k, eta, cap);
+            assert!(bmax > 0);
+            assert!(m.is_safe(bmax, k, eta, cap), "k={k} bmax={bmax}");
+            // One step beyond must violate (within rounding slack).
+            let over = bmax + bmax / 50 + 1_000;
+            assert!(
+                !m.is_safe(over, k, eta, cap),
+                "k={k} over={over} should violate"
+            );
+        }
+        // More workers -> smaller safe b.
+        assert!(m.safe_b_max(32, eta, cap) < m.safe_b_max(4, eta, cap));
+    }
+
+    #[test]
+    fn cold_start_is_conservative() {
+        let cold = model();
+        let mut warm = model();
+        for _ in 0..20 {
+            let pred = warm.predict_batch(50_000);
+            warm.observe(50_000, pred);
+        }
+        let cap = 64_000_000_000u64;
+        assert!(cold.safe_b_max(8, 0.9, cap) < warm.safe_b_max(8, 0.9, cap));
+    }
+
+    #[test]
+    fn observation_corrects_underestimates() {
+        let mut m = model();
+        let before = m.predict_batch(100_000);
+        for _ in 0..40 {
+            m.observe(100_000, 3.0 * before);
+        }
+        let after = m.predict_batch(100_000);
+        assert!(after > 2.0 * before, "model should learn 3x: {after}");
+    }
+
+    #[test]
+    fn no_budget_means_zero() {
+        let m = MemoryModel::new(200.0, 1.0e12, 0.2, 20, 1.96);
+        assert_eq!(m.safe_b_max(4, 0.9, 1_000_000_000), 0);
+    }
+
+    #[test]
+    fn delta_m_scales_with_k() {
+        let mut m = model();
+        for i in 0..20 {
+            let pred = m.predict_batch(10_000);
+            m.observe(10_000, pred + if i % 2 == 0 { 1e6 } else { -1e6 });
+        }
+        let d4 = m.delta_m(4);
+        let d8 = m.delta_m(8);
+        assert!((d8 / d4 - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,16 @@
+//! The adaptive execution scheduler — the paper's contribution
+//! (DESIGN.md S12–S22): pre-flight profiling, working-set backend
+//! gating (Eq. 1), online cost/memory models (Eq. 2–3), the safety
+//! envelope (Eq. 4), the guarded proportional hill-climb controller
+//! (Eq. 5–6), backpressure, straggler mitigation, and telemetry.
+
+pub mod backpressure;
+pub mod controller;
+pub mod cost_model;
+pub mod ewma;
+pub mod memory_model;
+pub mod preflight;
+pub mod scheduler;
+pub mod straggler;
+pub mod telemetry;
+pub mod working_set;

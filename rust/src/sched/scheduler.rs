@@ -1,0 +1,704 @@
+//! The scheduler main loop (contribution 3): submit shards, collect
+//! per-batch metrics, update the online models, drive the tuning policy,
+//! enforce the safety envelope continuously, and apply backpressure and
+//! straggler mitigation — all generic over `exec::Backend`, so the same
+//! loop drives the real backends and the discrete-event testbed.
+
+use std::sync::Arc;
+
+use crate::config::{BackendChoice, PolicyKind, SchedulerConfig};
+use crate::data::io::TableSource;
+use crate::engine::delta::JobPlan;
+use crate::engine::merge::{JobReport, Merger};
+use crate::engine::schema_align::align_schemas;
+use crate::exec::backend::{Backend, BatchError, JobContext, ShardSpec};
+use crate::exec::dasklike::DaskLikeBackend;
+use crate::exec::inmem::InMemBackend;
+use crate::exec::partition::Partitioner;
+use crate::metrics::quantile::{weighted_quantile, RollingWindow};
+use crate::sched::backpressure::Backpressure;
+use crate::sched::controller::{AdaptiveController, PolicyEnv, Signals, TuningPolicy};
+use crate::sched::cost_model::CostModel;
+use crate::sched::ewma::Ewma;
+use crate::sched::memory_model::MemoryModel;
+use crate::sched::preflight::{preflight, PreflightProfile};
+use crate::sched::straggler::{Mitigation, StragglerTracker};
+use crate::sched::telemetry::Telemetry;
+use crate::sched::working_set::{gate_backend, GateDecision, WorkingSetModel};
+
+/// Job-level statistics (the raw material for Tables I–III).
+#[derive(Debug, Clone)]
+pub struct JobStats {
+    pub backend: String,
+    pub policy: String,
+    pub makespan_secs: f64,
+    /// Job-level p50/p95 batch latency, row-weighted (paper §V).
+    pub p50_latency: f64,
+    pub p95_latency: f64,
+    /// Peak accounted job RSS (bytes) — Table II's metric.
+    pub peak_rss_bytes: u64,
+    /// max(|A|,|B|) rows / makespan — Table III's metric.
+    pub throughput_rows_per_s: f64,
+    /// Applied (b,k) changes — Table III "reconfigs/job".
+    pub reconfigs: u64,
+    pub ooms: u64,
+    pub batches: u64,
+    pub speculations: u64,
+    pub splits: u64,
+    pub backpressure_pauses: u64,
+    pub final_b: usize,
+    pub final_k: usize,
+    pub gate: Option<GateDecision>,
+    /// Fraction of candidate actions kept by the envelope (§VIII).
+    pub actions_kept: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub report: JobReport,
+    pub stats: JobStats,
+}
+
+/// Coverage ledger: accept each key-range exactly once (speculation and
+/// splitting can produce overlapping completions; first wins).
+#[derive(Debug, Default)]
+struct Coverage {
+    /// Accepted A intervals (start -> end), non-overlapping.
+    a_intervals: std::collections::BTreeMap<usize, usize>,
+    /// Accepted B intervals for shards with a_len == 0.
+    b_intervals: std::collections::BTreeMap<usize, usize>,
+}
+
+impl Coverage {
+    fn try_accept(&mut self, spec: &ShardSpec) -> bool {
+        if spec.a_len > 0 {
+            Self::insert_if_free(&mut self.a_intervals, spec.a_offset, spec.a_len)
+        } else if spec.b_len > 0 {
+            Self::insert_if_free(&mut self.b_intervals, spec.b_offset, spec.b_len)
+        } else {
+            true // empty shard (degenerate); harmless
+        }
+    }
+    fn insert_if_free(
+        map: &mut std::collections::BTreeMap<usize, usize>,
+        start: usize,
+        len: usize,
+    ) -> bool {
+        let end = start + len;
+        // Previous interval must end at/before start.
+        if let Some((_, &pend)) = map.range(..=start).next_back() {
+            if pend > start {
+                return false;
+            }
+        }
+        // Next interval must begin at/after end.
+        if let Some((&nstart, _)) = map.range(start..).next() {
+            if nstart < end {
+                return false;
+            }
+        }
+        map.insert(start, end);
+        true
+    }
+}
+
+/// Key-aligned split of a shard into two halves (B boundary re-derived
+/// from the key index; positional when keyless).
+fn split_spec(
+    a: &dyn TableSource,
+    b: &dyn TableSource,
+    spec: ShardSpec,
+) -> (ShardSpec, ShardSpec) {
+    let half = (spec.a_len / 2).max(1);
+    let keyed = a.key_at(0).is_some() && b.nrows() > 0 && b.key_at(0).is_some();
+    let b_mid = if keyed {
+        let boundary = a.key_at(spec.a_offset + half - 1).unwrap_or(i64::MAX);
+        let mut lo = spec.b_offset;
+        let mut hi = spec.b_offset + spec.b_len;
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            match b.key_at(mid) {
+                Some(k) if k <= boundary => lo = mid + 1,
+                _ => hi = mid,
+            }
+        }
+        lo
+    } else {
+        spec.b_offset + (spec.b_len / 2).min(spec.b_len)
+    };
+    let left = ShardSpec {
+        a_len: half,
+        b_len: b_mid - spec.b_offset,
+        ..spec
+    };
+    let right = ShardSpec {
+        a_offset: spec.a_offset + half,
+        a_len: spec.a_len - half,
+        b_offset: b_mid,
+        b_len: spec.b_offset + spec.b_len - b_mid,
+        ..spec
+    };
+    (left, right)
+}
+
+/// Everything `drive` needs beyond the backend and sources.
+pub struct DriveInputs<'a> {
+    pub cfg: &'a SchedulerConfig,
+    pub profile: PreflightProfile,
+    pub gate: Option<GateDecision>,
+    pub telemetry: &'a mut Telemetry,
+    /// Cost constants describing the engine actually executing batches
+    /// (microbench-calibrated for the real engine; paper-engine for the
+    /// simulated testbed).
+    pub consts: crate::engine::microbench::CostConstants,
+}
+
+/// The scheduler loop. Returns the merged report + stats. An OOM aborts
+/// the job (recorded in stats); transient failures retry once.
+pub fn drive(
+    backend: &mut dyn Backend,
+    a: &dyn TableSource,
+    b: &dyn TableSource,
+    policy: &mut dyn TuningPolicy,
+    inputs: &mut DriveInputs,
+) -> Result<JobResult, String> {
+    let cfg = inputs.cfg;
+    let pol = &cfg.policy;
+    let caps = &cfg.caps;
+    let base_rss = (a.resident_bytes() + b.resident_bytes()) as f64;
+
+    // --- online models ---
+    let mut mem_model = MemoryModel::new(
+        inputs.profile.w_hat,
+        base_rss,
+        pol.rho_smooth,
+        pol.delta_m_window,
+        pol.z_alpha,
+    );
+    let mut cost_model = CostModel::new(inputs.consts, &inputs.profile, pol.rho_smooth);
+
+    // --- policy init ---
+    let mut env = PolicyEnv {
+        caps: *caps,
+        policy: *pol,
+        b_max_safe: mem_model
+            .safe_b_max(pol.k_min.max(caps.cpu_cap / 4), pol.eta, caps.mem_cap_bytes)
+            .max(pol.b_min),
+        base_rss,
+        job_rows: a.nrows().max(b.nrows()),
+        b_hint: cost_model.overhead_balanced_b(3.0),
+    };
+    let (mut b_cur, mut k_cur) = policy.initial(&env);
+    b_cur = b_cur.clamp(pol.b_min, pol.b_max);
+    k_cur = k_cur.clamp(pol.k_min, caps.cpu_cap);
+    backend.set_workers(k_cur);
+
+    // --- loop state ---
+    let mut part = Partitioner::new(a, b);
+    let mut merger = Merger::new();
+    let mut coverage = Coverage::default();
+    let mut stragglers = StragglerTracker::new();
+    let mut backpressure = Backpressure::new(pol.backpressure_depth);
+    let mut lat_window = RollingWindow::new(pol.window);
+    let mut rss_window = RollingWindow::new(pol.window);
+    let mut util_window = RollingWindow::new(pol.window);
+    let mut rss_ewma = Ewma::new(pol.rho_smooth);
+    let mut cpu_ewma = Ewma::new(pol.rho_smooth);
+    let mut p95_ewma = Ewma::new(pol.rho_smooth);
+    let mut all_latencies: Vec<(f64, f64)> = Vec::new();
+    let mut retries: std::collections::HashMap<u64, u32> = Default::default();
+    // Split lineage: half-id -> original id, original id -> half ids.
+    // Halves get fresh shard ids so cancelling one never hits its
+    // sibling (coverage guarantees correctness; cancels are economy).
+    let mut split_parent: std::collections::HashMap<u64, u64> = Default::default();
+    let mut split_children: std::collections::HashMap<u64, Vec<u64>> = Default::default();
+    let mut next_split_id: u64 = 1 << 40;
+
+    let mut stats = JobStats {
+        backend: backend.name().to_string(),
+        policy: policy.name().to_string(),
+        makespan_secs: 0.0,
+        p50_latency: 0.0,
+        p95_latency: 0.0,
+        peak_rss_bytes: 0,
+        throughput_rows_per_s: 0.0,
+        reconfigs: 0,
+        ooms: 0,
+        batches: 0,
+        speculations: 0,
+        splits: 0,
+        backpressure_pauses: 0,
+        final_b: b_cur,
+        final_k: k_cur,
+        gate: inputs.gate,
+        actions_kept: 1.0,
+    };
+    let mut completed: u64 = 0;
+    let mut t_first_submit: Option<f64> = None;
+    let mut t_last_finish: f64 = 0.0;
+    let mut aborted = false;
+    let mut actions_total: u64 = 0;
+    let mut actions_kept: u64 = 0;
+
+    if let Some(g) = &inputs.gate {
+        inputs.telemetry.event(
+            "gate",
+            &format!(
+                "backend={} ws={:.2}GB thr={:.2}GB",
+                backend.name(),
+                g.ws_bytes / 1e9,
+                g.threshold_bytes / 1e9
+            ),
+            backend.now(),
+        );
+    }
+
+    loop {
+        // --- submission (paper: pause when queue grows / guard active) ---
+        let allow = backpressure.update(backend.queue_depth(), k_cur) && !aborted;
+        while allow
+            && backend.queue_depth() < k_cur.max(1)
+            && backend.inflight() < 2 * k_cur.max(1)
+            && !part.done()
+        {
+            if let Some(spec) = part.next(b_cur) {
+                let now = backend.now();
+                t_first_submit.get_or_insert(now);
+                stragglers.on_submit(spec, now);
+                backend.submit(spec);
+            }
+        }
+
+        // --- collect completions ---
+        // When all work is carved and inflight is zero, drain any
+        // reports still in the channel (completion is visible in two
+        // steps: report first, then the inflight decrement) before
+        // deciding the job is done.
+        let reports = if part.done() && backend.inflight() == 0 {
+            let leftovers = backend.poll();
+            if leftovers.is_empty() {
+                break;
+            }
+            leftovers
+        } else {
+            backend.wait_any()
+        };
+        let now = backend.now();
+        stats.peak_rss_bytes = stats.peak_rss_bytes.max(backend.current_rss());
+
+        for r in &reports {
+            stragglers.on_complete(r.shard.shard_id);
+            match &r.result {
+                Ok(outcome) => {
+                    if !coverage.try_accept(&r.shard) {
+                        continue; // lost the speculation race
+                    }
+                    // Cancel clones of this shard, the split original (if
+                    // this is a half), and pending halves (if this is an
+                    // original that outran its split).
+                    backend.cancel(r.shard.shard_id);
+                    if let Some(parent) = split_parent.get(&r.shard.shard_id) {
+                        backend.cancel(*parent);
+                    }
+                    if let Some(children) = split_children.get(&r.shard.shard_id) {
+                        for c in children.clone() {
+                            backend.cancel(c);
+                        }
+                    }
+                    merger.push(outcome.clone());
+                    completed += 1;
+                    stats.batches += 1;
+                    t_last_finish = t_last_finish.max(r.finished_at);
+
+                    // model + signal updates
+                    let rows = r.shard.rows();
+                    lat_window.push(r.latency());
+                    rss_window.push(r.worker_rss_peak as f64);
+                    all_latencies.push((r.latency(), rows as f64));
+                    mem_model.observe(rows, r.worker_rss_peak as f64);
+                    cost_model.observe(rows, k_cur, 0.0, r.exec_time());
+                    inputs.telemetry.batch(r, b_cur, k_cur, backend.queue_depth());
+                }
+                Err(BatchError::Cancelled) => {}
+                Err(BatchError::Oom { needed_bytes, cap_bytes }) => {
+                    stats.ooms += 1;
+                    aborted = true;
+                    inputs.telemetry.event(
+                        "oom",
+                        &format!("needed={needed_bytes} cap={cap_bytes}"),
+                        now,
+                    );
+                }
+                Err(BatchError::Failed(e)) => {
+                    let n = retries.entry(r.shard.shard_id).or_insert(0);
+                    if *n < 1 {
+                        *n += 1;
+                        let retry = ShardSpec {
+                            attempt: r.shard.attempt + 1,
+                            ..r.shard
+                        };
+                        stragglers.on_submit(retry, now);
+                        backend.submit(retry);
+                        inputs.telemetry.event("retry", e, now);
+                    } else {
+                        return Err(format!(
+                            "shard {} failed twice: {e}",
+                            r.shard.shard_id
+                        ));
+                    }
+                }
+            }
+        }
+
+        // --- control signals (EWMA-smoothed rolling p95s, §II) ---
+        let util = backend.utilization_sample(caps.cpu_cap);
+        util_window.push(util);
+        let rss_p95 =
+            rss_ewma.update(rss_window.p95().unwrap_or(0.0));
+        let cpu_p95 = cpu_ewma.update(util_window.p95().unwrap_or(util));
+        let p95_raw = lat_window.p95().unwrap_or(0.0);
+        let signals = Signals {
+            p50: lat_window.p50().unwrap_or(0.0),
+            p95: p95_raw,
+            p95_smooth: if p95_raw > 0.0 {
+                p95_ewma.update(p95_raw)
+            } else {
+                0.0
+            },
+            rss_p95_batch: rss_p95,
+            mem_signal: base_rss + k_cur as f64 * rss_p95,
+            cpu_p95,
+            queue_depth: backend.queue_depth(),
+            inflight: backend.inflight(),
+            completed,
+        };
+
+        // --- policy step, pruned by the envelope (Eq. 4, continuous) ---
+        if !aborted && completed > 0 && !reports.is_empty() {
+            env.b_max_safe = mem_model
+                .safe_b_max(k_cur, pol.eta, caps.mem_cap_bytes)
+                .max(pol.b_min);
+            let step = policy.step(&signals, &env);
+            actions_total += 1;
+            let mut nb = step.b;
+            let mut nk = step.k;
+            let mut clamped = step.clamped;
+            if matches!(cfg.policy_kind, PolicyKind::Adaptive) {
+                // Continuous envelope enforcement: re-clamp the proposal
+                // against the safe set at the *proposed* k.
+                let safe_b = mem_model
+                    .safe_b_max(nk, pol.eta, caps.mem_cap_bytes)
+                    .max(pol.b_min);
+                if nb > safe_b {
+                    nb = safe_b;
+                    clamped = true;
+                }
+                nk = nk.clamp(pol.k_min, caps.cpu_cap);
+            }
+            if !clamped {
+                actions_kept += 1;
+            }
+            if nb != b_cur || nk != k_cur {
+                stats.reconfigs += 1;
+                inputs.telemetry.event(
+                    "reconfig",
+                    &format!("b {b_cur}->{nb} k {k_cur}->{nk} ({})", step.reason),
+                    now,
+                );
+                if nk != k_cur {
+                    backend.set_workers(nk);
+                }
+                b_cur = nb;
+                k_cur = nk;
+            }
+        }
+
+        // --- straggler mitigation ---
+        if !aborted {
+            for m in stragglers.detect(
+                backend.now(),
+                lat_window.p50(),
+                pol.straggler_factor,
+                pol.b_min,
+            ) {
+                match m {
+                    Mitigation::Speculate(spec) => {
+                        stats.speculations += 1;
+                        inputs.telemetry.event(
+                            "speculate",
+                            &format!("shard={}", spec.shard_id),
+                            now,
+                        );
+                        backend.submit(spec);
+                    }
+                    Mitigation::Split(spec) => {
+                        stats.splits += 1;
+                        let (mut l, mut rgt) = split_spec(a, b, spec);
+                        l.shard_id = next_split_id;
+                        rgt.shard_id = next_split_id + 1;
+                        next_split_id += 2;
+                        split_parent.insert(l.shard_id, spec.shard_id);
+                        split_parent.insert(rgt.shard_id, spec.shard_id);
+                        split_children
+                            .insert(spec.shard_id, vec![l.shard_id, rgt.shard_id]);
+                        inputs.telemetry.event(
+                            "split",
+                            &format!("shard={} -> {}+{}", spec.shard_id, l.a_len, rgt.a_len),
+                            now,
+                        );
+                        backend.submit(l);
+                        backend.submit(rgt);
+                    }
+                }
+            }
+        }
+
+        if aborted && backend.inflight() == 0 {
+            break;
+        }
+    }
+
+    // --- job aggregates (paper §V measurement) ---
+    let report = merger.finish();
+    stats.backpressure_pauses = backpressure.pause_count();
+    stats.final_b = b_cur;
+    stats.final_k = k_cur;
+    stats.p50_latency = weighted_quantile(&all_latencies, 0.50).unwrap_or(0.0);
+    stats.p95_latency = weighted_quantile(&all_latencies, 0.95).unwrap_or(0.0);
+    let t0 = t_first_submit.unwrap_or(0.0);
+    stats.makespan_secs = (t_last_finish - t0).max(0.0);
+    let rows = a.nrows().max(b.nrows()) as f64;
+    stats.throughput_rows_per_s = if stats.makespan_secs > 0.0 {
+        rows / stats.makespan_secs
+    } else {
+        0.0
+    };
+    stats.actions_kept = if actions_total > 0 {
+        actions_kept as f64 / actions_total as f64
+    } else {
+        1.0
+    };
+    stats.peak_rss_bytes = stats.peak_rss_bytes.max(base_rss as u64);
+
+    inputs.telemetry.summary(&report.to_json());
+    inputs.telemetry.flush();
+    Ok(JobResult { report, stats })
+}
+
+/// Full job entry point over the real backends: schema-align, pre-flight
+/// profile, gate (Eq. 1), build backend + policy from config, drive.
+pub fn run_job(
+    cfg: &SchedulerConfig,
+    a: Arc<dyn TableSource>,
+    b: Arc<dyn TableSource>,
+) -> Result<JobResult, String> {
+    let aligned = align_schemas(a.schema(), b.schema())?;
+    let plan = JobPlan::new(aligned, cfg.engine.clone());
+    let exec = crate::runtime::make_exec(&cfg.engine)?;
+
+    let profile = preflight(
+        a.as_ref(),
+        b.as_ref(),
+        cfg.preflight_max_rows,
+        cfg.preflight_fraction,
+    );
+    let gate = gate_backend(
+        &WorkingSetModel::default(),
+        &profile,
+        &cfg.caps,
+        &cfg.policy,
+    );
+    let choice = match cfg.backend {
+        BackendChoice::Auto => gate.backend,
+        other => other,
+    };
+
+    let ctx = JobContext::new(
+        Arc::clone(&a),
+        Arc::clone(&b),
+        plan,
+        exec,
+        cfg.caps.mem_cap_bytes,
+    );
+    let k0 = (cfg.caps.cpu_cap / 4).max(cfg.policy.k_min);
+    let mut backend: Box<dyn Backend> = match choice {
+        BackendChoice::InMem => {
+            Box::new(InMemBackend::new(ctx, k0, cfg.caps.cpu_cap))
+        }
+        BackendChoice::DaskLike => {
+            // Sub-chunk so one task's decode buffer is ~64 MB at Ŵ.
+            let chunk = ((64.0e6 / profile.w_hat.max(1.0)) as usize)
+                .clamp(4_096, 1_000_000);
+            Box::new(DaskLikeBackend::new(ctx, k0, cfg.caps.cpu_cap, chunk))
+        }
+        BackendChoice::Sim => {
+            return Err("sim backend is driven via sim::run_sim_job".into())
+        }
+        BackendChoice::Auto => unreachable!(),
+    };
+
+    let mut policy: Box<dyn TuningPolicy> = match cfg.policy_kind {
+        PolicyKind::Adaptive => Box::new(AdaptiveController::new()),
+        PolicyKind::Fixed { b, k } => {
+            Box::new(crate::baselines::FixedPolicy::new(b, k))
+        }
+        PolicyKind::Heuristic => {
+            Box::new(crate::baselines::HeuristicPolicy::paper_default())
+        }
+    };
+
+    let mut telemetry = match &cfg.telemetry_path {
+        Some(p) => Telemetry::to_file(p)?,
+        None => Telemetry::disabled(),
+    };
+    let mut inputs = DriveInputs {
+        cfg,
+        profile,
+        gate: Some(gate),
+        telemetry: &mut telemetry,
+        consts: crate::engine::microbench::CostConstants::default(),
+    };
+    drive(backend.as_mut(), a.as_ref(), b.as_ref(), policy.as_mut(), &mut inputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeltaPath;
+    use crate::data::generator::{generate_pair, GenSpec};
+    use crate::data::io::InMemorySource;
+
+    fn small_cfg() -> SchedulerConfig {
+        let mut cfg = SchedulerConfig::default();
+        cfg.caps.cpu_cap = 2;
+        cfg.policy.b_min = 200;
+        cfg.policy.b_step_min = 50;
+        cfg.engine.delta_path = DeltaPath::Native;
+        cfg
+    }
+
+    fn run_small(
+        cfg: &SchedulerConfig,
+        rows: usize,
+        seed: u64,
+    ) -> (JobResult, crate::data::generator::GenTruth) {
+        let (a, b, truth) =
+            generate_pair(&GenSpec { rows, seed, ..GenSpec::default() });
+        let r = run_job(
+            cfg,
+            Arc::new(InMemorySource::new(a)),
+            Arc::new(InMemorySource::new(b)),
+        )
+        .unwrap();
+        (r, truth)
+    }
+
+    #[test]
+    fn adaptive_job_produces_correct_diff() {
+        let cfg = small_cfg();
+        let (r, truth) = run_small(&cfg, 5_000, 11);
+        assert_eq!(r.report.rows.aligned as usize, truth.aligned);
+        assert_eq!(r.report.rows.added as usize, truth.added);
+        assert_eq!(r.report.rows.removed as usize, truth.removed);
+        assert_eq!(r.report.rows.changed_rows as usize, truth.changed_rows);
+        assert_eq!(r.stats.ooms, 0);
+        assert!(r.stats.batches > 0);
+        assert!(r.stats.p95_latency >= r.stats.p50_latency);
+        assert!(r.stats.peak_rss_bytes > 0);
+    }
+
+    #[test]
+    fn all_policies_agree_on_the_diff() {
+        let mut cfg = small_cfg();
+        let (rad, _) = run_small(&cfg, 4_000, 13);
+        cfg.policy_kind = PolicyKind::Fixed { b: 500, k: 2 };
+        let (rfix, _) = run_small(&cfg, 4_000, 13);
+        cfg.policy_kind = PolicyKind::Heuristic;
+        let (rheu, _) = run_small(&cfg, 4_000, 13);
+        assert!(rad.report.same_diff(&rfix.report));
+        assert!(rad.report.same_diff(&rheu.report));
+    }
+
+    #[test]
+    fn both_backends_agree_on_the_diff() {
+        let mut cfg = small_cfg();
+        cfg.backend = BackendChoice::InMem;
+        let (rm, _) = run_small(&cfg, 4_000, 17);
+        cfg.backend = BackendChoice::DaskLike;
+        let (rd, _) = run_small(&cfg, 4_000, 17);
+        assert!(rm.report.same_diff(&rd.report));
+        assert_eq!(rm.stats.backend, "inmem");
+        assert_eq!(rd.stats.backend, "dasklike");
+    }
+
+    #[test]
+    fn gate_selects_inmem_for_tiny_jobs() {
+        let cfg = small_cfg();
+        let (r, _) = run_small(&cfg, 2_000, 19);
+        assert_eq!(r.stats.backend, "inmem");
+        let g = r.stats.gate.unwrap();
+        assert!(g.ws_bytes < g.threshold_bytes);
+    }
+
+    #[test]
+    fn varying_b_during_job_preserves_coverage() {
+        // The adaptive controller changes b mid-job; the merged row
+        // totals must still cover every input row exactly once.
+        let mut cfg = small_cfg();
+        cfg.policy.b_min = 100;
+        let (r, truth) = run_small(&cfg, 8_000, 23);
+        assert_eq!(
+            r.report.rows.aligned + r.report.rows.removed,
+            (truth.aligned + truth.removed) as u64
+        );
+        assert!(r.stats.reconfigs > 0, "controller should act on an 8k job");
+    }
+
+    #[test]
+    fn coverage_rejects_overlaps() {
+        let mut c = Coverage::default();
+        let s = |off: usize, len: usize| ShardSpec {
+            shard_id: 0,
+            attempt: 0,
+            a_offset: off,
+            a_len: len,
+            b_offset: 0,
+            b_len: len,
+        };
+        assert!(c.try_accept(&s(0, 100)));
+        assert!(!c.try_accept(&s(50, 100))); // overlaps
+        assert!(!c.try_accept(&s(0, 100))); // duplicate
+        assert!(c.try_accept(&s(100, 50))); // adjacent ok
+        assert!(!c.try_accept(&s(120, 10))); // inside accepted
+        assert!(c.try_accept(&s(150, 10)));
+    }
+
+    #[test]
+    fn split_spec_key_aligned() {
+        let (a, b, _) =
+            generate_pair(&GenSpec { rows: 1_000, seed: 3, ..GenSpec::default() });
+        let (sa, sb) = (InMemorySource::new(a), InMemorySource::new(b));
+        let spec = ShardSpec {
+            shard_id: 7,
+            attempt: 0,
+            a_offset: 100,
+            a_len: 400,
+            b_offset: 90,
+            b_len: 410,
+        };
+        let (l, r) = split_spec(&sa, &sb, spec);
+        assert_eq!(l.a_len + r.a_len, 400);
+        assert_eq!(l.b_len + r.b_len, 410);
+        assert_eq!(r.a_offset, l.a_offset + l.a_len);
+        assert_eq!(r.b_offset, l.b_offset + l.b_len);
+        // Key alignment: last B key of left <= last A key of left < first
+        // B key of right.
+        let a_boundary = sa.key_at(l.a_offset + l.a_len - 1).unwrap();
+        if l.b_len > 0 {
+            assert!(sb.key_at(l.b_offset + l.b_len - 1).unwrap() <= a_boundary);
+        }
+        if r.b_len > 0 {
+            assert!(sb.key_at(r.b_offset).unwrap() > a_boundary);
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! Straggler mitigation (paper §IV): batches that exceed a multiple of
+//! the rolling p50 latency trigger shard splitting (large shards) or a
+//! speculative duplicate (small shards); the first completion per
+//! coverage range wins and the loser is cooperatively cancelled.
+
+use std::collections::HashMap;
+
+use crate::exec::backend::ShardSpec;
+
+/// What to do about a detected straggler.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Mitigation {
+    /// Re-submit the same range as one speculative duplicate.
+    Speculate(ShardSpec),
+    /// Re-submit the range as two half-shards. The *scheduler* performs
+    /// the split because the B-side boundary must be re-derived from the
+    /// key index (a positional halve would mis-align rows).
+    Split(ShardSpec),
+}
+
+#[derive(Debug)]
+struct Tracked {
+    spec: ShardSpec,
+    submitted_at: f64,
+    mitigated: bool,
+}
+
+/// Tracks inflight shards and flags stragglers.
+#[derive(Debug, Default)]
+pub struct StragglerTracker {
+    inflight: HashMap<u64, Tracked>,
+    pub speculations: u64,
+    pub splits: u64,
+}
+
+impl StragglerTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_submit(&mut self, spec: ShardSpec, now: f64) {
+        // Only primary attempts are tracked (speculative attempts are
+        // themselves the mitigation).
+        if spec.attempt == 0 {
+            self.inflight.insert(
+                spec.shard_id,
+                Tracked { spec, submitted_at: now, mitigated: false },
+            );
+        }
+    }
+
+    pub fn on_complete(&mut self, shard_id: u64) {
+        self.inflight.remove(&shard_id);
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Scan for stragglers. `factor` is the policy's straggler multiple,
+    /// `p50` the rolling median batch latency, `b_min` the minimum batch
+    /// size (splitting below 2·b_min degenerates to speculation).
+    pub fn detect(
+        &mut self,
+        now: f64,
+        p50: Option<f64>,
+        factor: f64,
+        b_min: usize,
+    ) -> Vec<Mitigation> {
+        let Some(p50) = p50 else { return Vec::new() };
+        if p50 <= 0.0 {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        for t in self.inflight.values_mut() {
+            if t.mitigated {
+                continue;
+            }
+            if now - t.submitted_at > factor * p50 {
+                t.mitigated = true;
+                let spec = t.spec;
+                if spec.a_len >= 2 * b_min && spec.a_len >= 2 {
+                    self.splits += 1;
+                    out.push(Mitigation::Split(ShardSpec {
+                        attempt: spec.attempt + 1,
+                        ..spec
+                    }));
+                } else {
+                    self.speculations += 1;
+                    out.push(Mitigation::Speculate(ShardSpec {
+                        attempt: spec.attempt + 1,
+                        ..spec
+                    }));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(id: u64, a_len: usize) -> ShardSpec {
+        ShardSpec {
+            shard_id: id,
+            attempt: 0,
+            a_offset: 100,
+            a_len,
+            b_offset: 200,
+            b_len: a_len,
+        }
+    }
+
+    #[test]
+    fn no_detection_before_threshold() {
+        let mut t = StragglerTracker::new();
+        t.on_submit(spec(1, 1_000), 0.0);
+        assert!(t.detect(1.0, Some(1.0), 4.0, 100).is_empty());
+        assert!(t.detect(3.9, Some(1.0), 4.0, 100).is_empty());
+    }
+
+    #[test]
+    fn small_shard_speculates_large_shard_splits() {
+        let mut t = StragglerTracker::new();
+        t.on_submit(spec(1, 150), 0.0); // < 2*b_min -> speculate
+        t.on_submit(spec(2, 1_000), 0.0); // >= 2*b_min -> split
+        let ms = t.detect(10.0, Some(1.0), 4.0, 100);
+        assert_eq!(ms.len(), 2);
+        let mut spec_n = 0;
+        let mut split_n = 0;
+        for m in ms {
+            match m {
+                Mitigation::Speculate(s) => {
+                    spec_n += 1;
+                    assert_eq!(s.attempt, 1);
+                    assert_eq!(s.a_len, 150);
+                }
+                Mitigation::Split(s) => {
+                    split_n += 1;
+                    assert_eq!(s.a_len, 1_000);
+                    assert_eq!(s.attempt, 1);
+                }
+            }
+        }
+        assert_eq!((spec_n, split_n), (1, 1));
+        assert_eq!(t.speculations, 1);
+        assert_eq!(t.splits, 1);
+    }
+
+    #[test]
+    fn mitigates_each_shard_once() {
+        let mut t = StragglerTracker::new();
+        t.on_submit(spec(1, 150), 0.0);
+        assert_eq!(t.detect(10.0, Some(1.0), 4.0, 100).len(), 1);
+        assert!(t.detect(20.0, Some(1.0), 4.0, 100).is_empty());
+    }
+
+    #[test]
+    fn completion_clears_tracking() {
+        let mut t = StragglerTracker::new();
+        t.on_submit(spec(1, 150), 0.0);
+        t.on_complete(1);
+        assert_eq!(t.inflight(), 0);
+        assert!(t.detect(100.0, Some(1.0), 4.0, 100).is_empty());
+    }
+
+    #[test]
+    fn no_p50_no_detection() {
+        let mut t = StragglerTracker::new();
+        t.on_submit(spec(1, 150), 0.0);
+        assert!(t.detect(100.0, None, 4.0, 100).is_empty());
+    }
+}

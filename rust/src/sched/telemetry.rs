@@ -1,0 +1,153 @@
+//! Batch-level telemetry (paper §IX: "we release batch-level telemetry
+//! logs ... analysis is reproducible from logs"). JSON-lines format:
+//! one record per accepted batch, plus control/gate events and the job
+//! summary.
+
+use std::io::Write;
+
+use crate::exec::backend::BatchReport;
+use crate::util::json::ObjWriter;
+
+/// JSON-lines telemetry sink (no-op when disabled).
+pub struct Telemetry {
+    out: Option<std::io::BufWriter<std::fs::File>>,
+    lines: u64,
+}
+
+impl Telemetry {
+    pub fn disabled() -> Self {
+        Telemetry { out: None, lines: 0 }
+    }
+
+    pub fn to_file(path: &str) -> Result<Self, String> {
+        let f = std::fs::File::create(path)
+            .map_err(|e| format!("create {path}: {e}"))?;
+        Ok(Telemetry { out: Some(std::io::BufWriter::new(f)), lines: 0 })
+    }
+
+    pub fn lines_written(&self) -> u64 {
+        self.lines
+    }
+
+    fn emit(&mut self, line: String) {
+        if let Some(out) = &mut self.out {
+            let _ = out.write_all(line.as_bytes());
+            let _ = out.write_all(b"\n");
+            self.lines += 1;
+        }
+    }
+
+    /// One accepted batch completion.
+    pub fn batch(&mut self, r: &BatchReport, b: usize, k: usize, queue: usize) {
+        if self.out.is_none() {
+            return;
+        }
+        let line = ObjWriter::new()
+            .str("ev", "batch")
+            .int("shard", r.shard.shard_id as i64)
+            .int("attempt", r.shard.attempt as i64)
+            .int("worker", r.worker_id as i64)
+            .num("submitted", r.submitted_at)
+            .num("started", r.started_at)
+            .num("finished", r.finished_at)
+            .num("latency", r.latency())
+            .int("rows", r.shard.rows() as i64)
+            .int("rss_peak", r.worker_rss_peak as i64)
+            .int("io_bytes", r.io_bytes as i64)
+            .int("b", b as i64)
+            .int("k", k as i64)
+            .int("queue", queue as i64)
+            .bool("ok", r.result.is_ok())
+            .finish();
+        self.emit(line);
+    }
+
+    /// Control decision / gate / mitigation event.
+    pub fn event(&mut self, kind: &str, detail: &str, now: f64) {
+        if self.out.is_none() {
+            return;
+        }
+        let line = ObjWriter::new()
+            .str("ev", kind)
+            .str("detail", detail)
+            .num("t", now)
+            .finish();
+        self.emit(line);
+    }
+
+    /// Final job summary (raw JSON payload from the report/stats).
+    pub fn summary(&mut self, json_payload: &str) {
+        if self.out.is_none() {
+            return;
+        }
+        let line = ObjWriter::new()
+            .str("ev", "summary")
+            .raw("job", json_payload)
+            .finish();
+        self.emit(line);
+    }
+
+    pub fn flush(&mut self) {
+        if let Some(out) = &mut self.out {
+            let _ = out.flush();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::delta::ShardMemStats;
+    use crate::exec::backend::{BatchError, ShardSpec};
+
+    fn report() -> BatchReport {
+        BatchReport {
+            shard: ShardSpec {
+                shard_id: 3,
+                attempt: 0,
+                a_offset: 0,
+                a_len: 100,
+                b_offset: 0,
+                b_len: 100,
+            },
+            worker_id: 1,
+            submitted_at: 0.0,
+            started_at: 0.1,
+            finished_at: 0.5,
+            result: Err(BatchError::Cancelled),
+            mem: ShardMemStats::default(),
+            worker_rss_peak: 1024,
+            io_bytes: 2048,
+        }
+    }
+
+    #[test]
+    fn disabled_sink_writes_nothing() {
+        let mut t = Telemetry::disabled();
+        t.batch(&report(), 100, 2, 0);
+        t.event("gate", "inmem", 0.0);
+        assert_eq!(t.lines_written(), 0);
+    }
+
+    #[test]
+    fn file_sink_writes_parseable_json_lines() {
+        let path = std::env::temp_dir().join(format!(
+            "sdiff_telemetry_{}.jsonl",
+            std::process::id()
+        ));
+        let mut t = Telemetry::to_file(path.to_str().unwrap()).unwrap();
+        t.batch(&report(), 100, 2, 5);
+        t.event("gate", "inmem ws=1.2GB", 0.1);
+        t.summary(r#"{"p95":1.5}"#);
+        t.flush();
+        assert_eq!(t.lines_written(), 3);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut kinds = Vec::new();
+        for line in text.lines() {
+            let v = crate::util::json::parse(line).unwrap();
+            kinds.push(v.get("ev").unwrap().as_str().unwrap().to_string());
+        }
+        assert_eq!(kinds, vec!["batch", "gate", "summary"]);
+        std::fs::remove_file(path).ok();
+    }
+}

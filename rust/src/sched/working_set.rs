@@ -1,0 +1,115 @@
+//! Working-set estimation and backend gating (paper Eq. 1, contribution
+//! 1): ŴS = α·Ŵ·(|A|+|B|) + β; select inmem iff ŴS ≤ κ·M_cap.
+
+use crate::config::{BackendChoice, Caps, Policy};
+use crate::sched::preflight::PreflightProfile;
+
+/// Gating constants. α captures decode/replication overheads on top of
+/// raw row bytes (columnar buffers + alignment state + scratch); β is
+/// the fixed process/runtime footprint.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkingSetModel {
+    pub alpha: f64,
+    pub beta_bytes: f64,
+}
+
+impl Default for WorkingSetModel {
+    fn default() -> Self {
+        // α≈1.6: decode buffers (~1×W) + alignment hash state (~0.4×W on
+        // keyed rows) + comparator scratch (~0.2×W). β: client + compiled
+        // executables + allocator slack (~150 MB, matching the paper's
+        // reported scheduler memory overhead).
+        WorkingSetModel { alpha: 1.6, beta_bytes: 150.0e6 }
+    }
+}
+
+impl WorkingSetModel {
+    /// Eq. 1. Ŵ from pre-flight already covers both sides per aligned
+    /// row, so the row count here is max(|A|,|B|) — the aligned row
+    /// universe — rather than the sum (which would double-count).
+    pub fn estimate(&self, profile: &PreflightProfile) -> f64 {
+        let rows = profile.rows_a.max(profile.rows_b) as f64;
+        self.alpha * profile.w_hat * rows + self.beta_bytes
+    }
+}
+
+/// Gate decision with its inputs (telemetry/report material).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GateDecision {
+    pub ws_bytes: f64,
+    pub threshold_bytes: f64,
+    pub backend: BackendChoice,
+}
+
+/// Select the backend once per job (paper: gating happens once; the
+/// controller then tunes (b,k) within the chosen backend).
+pub fn gate_backend(
+    model: &WorkingSetModel,
+    profile: &PreflightProfile,
+    caps: &Caps,
+    policy: &Policy,
+) -> GateDecision {
+    let ws = model.estimate(profile);
+    let threshold = policy.kappa * caps.mem_cap_bytes as f64;
+    let backend = if ws <= threshold {
+        BackendChoice::InMem
+    } else {
+        BackendChoice::DaskLike
+    };
+    GateDecision { ws_bytes: ws, threshold_bytes: threshold, backend }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile(rows: usize, w: f64) -> PreflightProfile {
+        PreflightProfile {
+            w_hat: w,
+            b_read: 1e9,
+            rows_a: rows,
+            rows_b: rows,
+            sampled_rows: 1000,
+            ncols: 8,
+        }
+    }
+
+    fn caps() -> Caps {
+        Caps { mem_cap_bytes: 64_000_000_000, cpu_cap: 32 }
+    }
+
+    #[test]
+    fn small_job_gates_inmem_large_gates_dask() {
+        let m = WorkingSetModel::default();
+        let p = Policy::default(); // kappa = 0.7 -> threshold 44.8 GB
+        // 1M rows * ~200 B/row * 1.6 ≈ 0.32 GB -> inmem.
+        let d = gate_backend(&m, &profile(1_000_000, 200.0), &caps(), &p);
+        assert_eq!(d.backend, BackendChoice::InMem);
+        // 200M rows * 200 B * 1.6 = 64 GB > 44.8 GB -> dask.
+        let d = gate_backend(&m, &profile(200_000_000, 200.0), &caps(), &p);
+        assert_eq!(d.backend, BackendChoice::DaskLike);
+        assert!(d.ws_bytes > d.threshold_bytes);
+    }
+
+    #[test]
+    fn kappa_moves_the_boundary() {
+        // A job right near the default boundary flips with κ (paper §VII
+        // working-set ablation).
+        let m = WorkingSetModel::default();
+        let p = profile(150_000_000, 200.0); // ws = 48 GB
+        let mut pol = Policy::default();
+        pol.kappa = 0.6; // 38.4 GB -> dask
+        assert_eq!(gate_backend(&m, &p, &caps(), &pol).backend,
+                   BackendChoice::DaskLike);
+        pol.kappa = 0.8; // 51.2 GB -> inmem
+        assert_eq!(gate_backend(&m, &p, &caps(), &pol).backend,
+                   BackendChoice::InMem);
+    }
+
+    #[test]
+    fn beta_dominates_tiny_jobs() {
+        let m = WorkingSetModel::default();
+        let ws = m.estimate(&profile(10, 100.0));
+        assert!(ws > 100.0e6, "fixed buffers floor the estimate: {ws}");
+    }
+}

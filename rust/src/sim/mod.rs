@@ -1,0 +1,212 @@
+//! Simulated testbed (DESIGN.md S24): run the *real* scheduler loop
+//! against a discrete-event model of the paper's 32-core / 64 GB / SSD
+//! machine. Used by the bench harness to regenerate Tables I–III and
+//! the ablations at paper scale on this 1-core container.
+
+pub mod simexec;
+pub mod source;
+
+use crate::config::{BackendChoice, PolicyKind, SchedulerConfig};
+use crate::engine::microbench::CostConstants;
+use crate::sched::controller::AdaptiveController;
+use crate::sched::preflight::PreflightProfile;
+use crate::sched::scheduler::{drive, DriveInputs, JobResult};
+use crate::sched::telemetry::Telemetry;
+use crate::sched::working_set::{gate_backend, WorkingSetModel};
+use simexec::{SimBackend, SimParams, SimProfile};
+use source::VirtualSource;
+
+/// One simulated workload (paper §V: {1, 5, 10, 20}M rows per side of
+/// wide mixed-type rows).
+#[derive(Debug, Clone, Copy)]
+pub struct SimWorkload {
+    pub rows: usize,
+    /// Bytes per aligned row, both sides (paper rows are wide — several
+    /// KB — which is what makes 10M/20M exceed the κ·M_cap gate).
+    pub w_hat: f64,
+    pub ncols: usize,
+    pub seed: u64,
+}
+
+impl SimWorkload {
+    pub fn paper(rows: usize, seed: u64) -> Self {
+        SimWorkload { rows, w_hat: 4_000.0, ncols: 16, seed }
+    }
+}
+
+/// Run one simulated job under `cfg` (policy, caps, policy params all
+/// honored; `cfg.backend` overrides gating if not Auto).
+pub fn run_sim_job(
+    cfg: &SchedulerConfig,
+    wl: &SimWorkload,
+    consts: &CostConstants,
+) -> Result<JobResult, String> {
+    let profile = PreflightProfile {
+        w_hat: wl.w_hat,
+        b_read: 2.5e9,
+        rows_a: wl.rows,
+        rows_b: wl.rows,
+        sampled_rows: wl.rows.min(1_000_000),
+        ncols: wl.ncols,
+    };
+    let gate = gate_backend(
+        &WorkingSetModel::default(),
+        &profile,
+        &cfg.caps,
+        &cfg.policy,
+    );
+    let choice = match cfg.backend {
+        BackendChoice::Auto => gate.backend,
+        BackendChoice::Sim => gate.backend,
+        other => other,
+    };
+    let sim_profile = match choice {
+        BackendChoice::InMem => SimProfile::InMem,
+        BackendChoice::DaskLike => SimProfile::DaskLike {
+            // Coarse Dask partitions sized off the memory budget: ~1/64
+            // of the cap per task (≈1 GB at the paper's 64 GB), so task
+            // peaks always fit the per-worker arena even under
+            // tightened-cap ablations.
+            chunk_rows: ((cfg.caps.mem_cap_bytes as f64 / 64.0 / wl.w_hat)
+                as usize)
+                .clamp(4_096, 1_000_000),
+        },
+        _ => unreachable!(),
+    };
+    let params = SimParams {
+        cores: cfg.caps.cpu_cap,
+        mem_cap: cfg.caps.mem_cap_bytes,
+        ..SimParams::paper_testbed(
+            wl.w_hat,
+            wl.ncols as f64,
+            *consts,
+            sim_profile,
+            wl.seed,
+        )
+    };
+    let k0 = (cfg.caps.cpu_cap / 4).max(cfg.policy.k_min);
+    let mut backend = SimBackend::new(params, k0);
+
+    let a = VirtualSource::new(wl.rows, wl.w_hat / 2.0, wl.ncols);
+    let b = VirtualSource::new(wl.rows, wl.w_hat / 2.0, wl.ncols);
+
+    let mut policy: Box<dyn crate::sched::controller::TuningPolicy> =
+        match cfg.policy_kind {
+            PolicyKind::Adaptive => Box::new(AdaptiveController::new()),
+            PolicyKind::Fixed { b, k } => {
+                Box::new(crate::baselines::FixedPolicy::new(b, k))
+            }
+            PolicyKind::Heuristic => {
+                Box::new(crate::baselines::HeuristicPolicy::paper_default())
+            }
+        };
+
+    let mut telemetry = match &cfg.telemetry_path {
+        Some(p) => Telemetry::to_file(p)?,
+        None => Telemetry::disabled(),
+    };
+    let mut inputs = DriveInputs {
+        cfg,
+        profile,
+        gate: Some(gate),
+        telemetry: &mut telemetry,
+        consts: *consts,
+    };
+    drive(&mut backend, &a, &b, policy.as_mut(), &mut inputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SchedulerConfig {
+        SchedulerConfig::default() // 64 GB, 32 cores, paper policy
+    }
+
+    fn consts() -> CostConstants {
+        CostConstants::paper_engine()
+    }
+
+    #[test]
+    fn paper_gating_by_workload_size() {
+        // 1M/5M -> inmem; 10M/20M -> dask (paper §VI backend decisions).
+        for (rows, want) in [
+            (1_000_000, "sim-inmem"),
+            (5_000_000, "sim-inmem"),
+            (10_000_000, "sim-dasklike"),
+            (20_000_000, "sim-dasklike"),
+        ] {
+            let wl = SimWorkload::paper(rows, 7);
+            let r = run_sim_job(&cfg(), &wl, &consts()).unwrap();
+            assert_eq!(r.stats.backend, want, "{rows}");
+        }
+    }
+
+    #[test]
+    fn adaptive_sim_run_completes_with_zero_ooms() {
+        let wl = SimWorkload::paper(1_000_000, 3);
+        let r = run_sim_job(&cfg(), &wl, &consts()).unwrap();
+        assert_eq!(r.stats.ooms, 0);
+        assert!(r.stats.batches > 10);
+        assert!(r.stats.makespan_secs > 0.0);
+        assert!(r.stats.throughput_rows_per_s > 0.0);
+        assert!(r.stats.p95_latency >= r.stats.p50_latency);
+        // Sim covered every row exactly once.
+        assert_eq!(r.report.rows_a, 1_000_000);
+        assert_eq!(r.report.rows_b, 1_000_000);
+    }
+
+    #[test]
+    fn aggressive_fixed_config_ooms_adaptive_does_not() {
+        // A deliberately oversized fixed b on the inmem backend must blow
+        // the shared pool; the adaptive controller on the same workload
+        // must not (this is the paper's zero-OOM claim in miniature).
+        let wl = SimWorkload::paper(20_000_000, 11);
+        let mut c = cfg();
+        c.backend = BackendChoice::InMem;
+        c.policy_kind = PolicyKind::Fixed { b: 2_000_000, k: 16 };
+        c.policy.b_max = 4_000_000;
+        let r_fixed = run_sim_job(&c, &wl, &consts()).unwrap();
+        assert!(r_fixed.stats.ooms > 0, "2M rows x 4KB x 1.6 x 16 >> 64GB");
+
+        let mut c2 = cfg();
+        c2.backend = BackendChoice::InMem;
+        let r_adaptive = run_sim_job(&c2, &wl, &consts()).unwrap();
+        assert_eq!(r_adaptive.stats.ooms, 0);
+        assert!(r_adaptive.stats.peak_rss_bytes < c2.caps.mem_cap_bytes);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let wl = SimWorkload::paper(1_000_000, 5);
+        let r1 = run_sim_job(&cfg(), &wl, &consts()).unwrap();
+        let r2 = run_sim_job(&cfg(), &wl, &consts()).unwrap();
+        assert_eq!(r1.stats.p95_latency, r2.stats.p95_latency);
+        assert_eq!(r1.stats.makespan_secs, r2.stats.makespan_secs);
+        assert_eq!(r1.stats.reconfigs, r2.stats.reconfigs);
+    }
+
+    #[test]
+    fn adaptive_beats_untuned_fixed_on_p95() {
+        let wl = SimWorkload::paper(1_000_000, 9);
+        let r_ad = run_sim_job(&cfg(), &wl, &consts()).unwrap();
+        // Oversized fixed b: stragglers inflate the tail; undersized k
+        // wastes the machine.
+        let mut c = cfg();
+        c.backend = BackendChoice::InMem;
+        c.policy_kind = PolicyKind::Fixed { b: 250_000, k: 4 };
+        let r_fx = run_sim_job(&c, &wl, &consts()).unwrap();
+        assert!(
+            r_ad.stats.p95_latency < r_fx.stats.p95_latency,
+            "adaptive p95 {:.2}s vs fixed p95 {:.2}s",
+            r_ad.stats.p95_latency,
+            r_fx.stats.p95_latency
+        );
+        assert!(
+            r_ad.stats.makespan_secs < r_fx.stats.makespan_secs,
+            "adaptive {:.2}s vs fixed {:.2}s makespan",
+            r_ad.stats.makespan_secs,
+            r_fx.stats.makespan_secs
+        );
+    }
+}

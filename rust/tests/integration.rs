@@ -1,0 +1,257 @@
+//! Cross-module integration tests: CSV sources through the full
+//! pipeline, PJRT path on real jobs, failure injection, config files,
+//! telemetry round-trips.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use smartdiff_sched::config::{
+    BackendChoice, DeltaPath, PolicyKind, SchedulerConfig,
+};
+use smartdiff_sched::data::generator::{generate_pair, GenSpec};
+use smartdiff_sched::data::io::{write_csv, CsvFileSource, InMemorySource};
+use smartdiff_sched::sched::scheduler::run_job;
+use smartdiff_sched::util::json;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("sdiff_it_{}_{name}", std::process::id()))
+}
+
+fn small_cfg() -> SchedulerConfig {
+    let mut cfg = SchedulerConfig::default();
+    cfg.caps.cpu_cap = 2;
+    cfg.policy.b_min = 300;
+    cfg.engine.delta_path = DeltaPath::Native;
+    cfg
+}
+
+#[test]
+fn csv_sources_equal_inmemory_sources() {
+    let spec = GenSpec { rows: 3_000, seed: 41, ..GenSpec::default() };
+    let (a, b, _) = generate_pair(&spec);
+    let pa = tmp("a.csv");
+    let pb = tmp("b.csv");
+    write_csv(&a, &pa).unwrap();
+    write_csv(&b, &pb).unwrap();
+
+    let cfg = small_cfg();
+    let r_mem = run_job(
+        &cfg,
+        Arc::new(InMemorySource::new(a.clone())),
+        Arc::new(InMemorySource::new(b.clone())),
+    )
+    .unwrap();
+    let r_csv = run_job(
+        &cfg,
+        Arc::new(CsvFileSource::open(&pa, a.schema.clone()).unwrap()),
+        Arc::new(CsvFileSource::open(&pb, b.schema.clone()).unwrap()),
+    )
+    .unwrap();
+    assert!(r_mem.report.same_diff(&r_csv.report));
+    // File sources stream: resident base is tiny, so peak RSS must be
+    // far below the in-memory variant's source-table baseline.
+    assert!(r_csv.stats.peak_rss_bytes < r_mem.stats.peak_rss_bytes);
+    std::fs::remove_file(pa).ok();
+    std::fs::remove_file(pb).ok();
+}
+
+#[test]
+fn pjrt_path_full_job_matches_native() {
+    if !std::path::Path::new(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/artifacts/manifest.json"
+    ))
+    .exists()
+    {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let spec = GenSpec { rows: 4_000, seed: 43, ..GenSpec::default() };
+    let (a, b, _) = generate_pair(&spec);
+    let mut cfg = small_cfg();
+    cfg.engine.artifact_dir =
+        concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into();
+    let r_native = run_job(
+        &cfg,
+        Arc::new(InMemorySource::new(a.clone())),
+        Arc::new(InMemorySource::new(b.clone())),
+    )
+    .unwrap();
+    cfg.engine.delta_path = DeltaPath::Pjrt;
+    let r_pjrt = run_job(
+        &cfg,
+        Arc::new(InMemorySource::new(a)),
+        Arc::new(InMemorySource::new(b)),
+    )
+    .unwrap();
+    assert!(r_native.report.same_diff(&r_pjrt.report),
+        "PJRT and native paths must produce the identical diff");
+}
+
+#[test]
+fn oom_abort_is_reported_not_hung() {
+    // Absurd fixed config + tiny cap on the shared-heap backend: the
+    // job must abort with ooms > 0 (not hang, not panic).
+    let spec = GenSpec { rows: 20_000, str_len: 64, seed: 5, ..GenSpec::default() };
+    let (a, b, _) = generate_pair(&spec);
+    let base = (a.heap_bytes() + b.heap_bytes()) as u64;
+    let mut cfg = small_cfg();
+    cfg.backend = BackendChoice::InMem;
+    cfg.policy_kind = PolicyKind::Fixed { b: 20_000, k: 2 };
+    // Cap just above the resident tables: any real batch blows it.
+    cfg.caps.mem_cap_bytes = base + 200_000;
+    let r = run_job(
+        &cfg,
+        Arc::new(InMemorySource::new(a)),
+        Arc::new(InMemorySource::new(b)),
+    )
+    .unwrap();
+    assert!(r.stats.ooms > 0, "expected accounting OOM");
+}
+
+#[test]
+fn telemetry_is_parseable_and_complete() {
+    let spec = GenSpec { rows: 2_000, seed: 47, ..GenSpec::default() };
+    let (a, b, _) = generate_pair(&spec);
+    let path = tmp("telemetry.jsonl");
+    let mut cfg = small_cfg();
+    cfg.telemetry_path = Some(path.to_str().unwrap().to_string());
+    let r = run_job(
+        &cfg,
+        Arc::new(InMemorySource::new(a)),
+        Arc::new(InMemorySource::new(b)),
+    )
+    .unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut batches = 0u64;
+    let mut summary = 0;
+    for line in text.lines() {
+        let v = json::parse(line).expect("telemetry line parses");
+        match v.get("ev").unwrap().as_str().unwrap() {
+            "batch" => batches += 1,
+            "summary" => summary += 1,
+            _ => {}
+        }
+    }
+    assert_eq!(batches, r.stats.batches, "one batch line per accepted batch");
+    assert_eq!(summary, 1);
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn config_file_round_trip_drives_job() {
+    let cfg_path = tmp("cfg.toml");
+    std::fs::write(
+        &cfg_path,
+        r#"
+        seed = 3
+        backend = "dask"
+        [caps]
+        mem_cap = "2GiB"
+        cpu_cap = 2
+        [policy]
+        b_min = 250
+        eta = 0.8
+        [engine]
+        delta_path = "native"
+        atol = 0.5
+        "#,
+    )
+    .unwrap();
+    let cfg = SchedulerConfig::from_file(cfg_path.to_str().unwrap()).unwrap();
+    assert_eq!(cfg.backend, BackendChoice::DaskLike);
+    assert_eq!(cfg.policy.eta, 0.8);
+
+    let spec = GenSpec { rows: 2_000, seed: 31, ..GenSpec::default() };
+    let (a, b, _) = generate_pair(&spec);
+    let r = run_job(
+        &cfg,
+        Arc::new(InMemorySource::new(a)),
+        Arc::new(InMemorySource::new(b)),
+    )
+    .unwrap();
+    assert_eq!(r.stats.backend, "dasklike");
+    // atol=0.5 suppresses sub-0.5 numeric drift: changed count lower
+    // than strict run.
+    let mut strict = cfg.clone();
+    strict.engine.atol = 0.0;
+    let spec2 = GenSpec { rows: 2_000, seed: 31, ..GenSpec::default() };
+    let (a2, b2, _) = generate_pair(&spec2);
+    let r2 = run_job(
+        &strict,
+        Arc::new(InMemorySource::new(a2)),
+        Arc::new(InMemorySource::new(b2)),
+    )
+    .unwrap();
+    assert!(r.report.cells.changed <= r2.report.cells.changed);
+    std::fs::remove_file(cfg_path).ok();
+}
+
+#[test]
+fn gate_override_is_respected() {
+    let spec = GenSpec { rows: 1_000, seed: 11, ..GenSpec::default() };
+    for (choice, want) in [
+        (BackendChoice::InMem, "inmem"),
+        (BackendChoice::DaskLike, "dasklike"),
+    ] {
+        let (a, b, _) = generate_pair(&spec);
+        let mut cfg = small_cfg();
+        cfg.backend = choice;
+        let r = run_job(
+            &cfg,
+            Arc::new(InMemorySource::new(a)),
+            Arc::new(InMemorySource::new(b)),
+        )
+        .unwrap();
+        assert_eq!(r.stats.backend, want);
+    }
+}
+
+#[test]
+fn empty_and_disjoint_tables() {
+    // A empty: everything added. Disjoint keys: all removed + added.
+    let mk = |rows: usize, seed: u64| {
+        generate_pair(&GenSpec {
+            rows,
+            seed,
+            change_rate: 0.0,
+            add_rate: 0.0,
+            remove_rate: 0.0,
+            ..GenSpec::default()
+        })
+        .0
+    };
+    let cfg = small_cfg();
+    let a = mk(0, 1);
+    let b = mk(500, 1);
+    let r = run_job(
+        &cfg,
+        Arc::new(InMemorySource::new(a.clone())),
+        Arc::new(InMemorySource::new(b.clone())),
+    )
+    .unwrap();
+    assert_eq!(r.report.rows.added, 500);
+    assert_eq!(r.report.rows.aligned, 0);
+
+    // Same sizes, disjoint key ranges (shift B's keys far away).
+    let mut tb = smartdiff_sched::data::table::TableBuilder::new(b.schema.clone());
+    for i in 0..b.nrows() {
+        for (ci, cell) in b.row_cells(i).into_iter().enumerate() {
+            if ci == 0 {
+                tb.col(0).push_i64(1_000_000 + 2 * i as i64);
+            } else {
+                tb.col(ci).push_cell(&cell);
+            }
+        }
+    }
+    let b_shifted = tb.finish();
+    let r = run_job(
+        &cfg,
+        Arc::new(InMemorySource::new(b)),
+        Arc::new(InMemorySource::new(b_shifted)),
+    )
+    .unwrap();
+    assert_eq!(r.report.rows.aligned, 0);
+    assert_eq!(r.report.rows.removed, 500);
+    assert_eq!(r.report.rows.added, 500);
+}
