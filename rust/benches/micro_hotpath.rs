@@ -1,18 +1,34 @@
 //! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
 //! L1/L2 numeric-Δ throughput (native vs PJRT, per bucket shape), the
-//! engine stages (decode / align / Δ), and the L3 scheduler step cost.
+//! engine stages (decode / align / batch-fill / native-string Δ) with
+//! columnar-vs-reference speedups, and the L3 scheduler step cost.
+//!
+//! Besides the human-readable table, the stage section emits a
+//! machine-readable JSON dump (default `micro_hotpath.json`; override
+//! with the `MICRO_HOTPATH_JSON` env var) so the speedup trajectory can
+//! be tracked across PRs / uploaded as a CI artifact.
 
+use std::fmt::Write as _;
 use std::sync::Arc;
 use std::time::Instant;
 
 use smartdiff_sched::config::EngineConfig;
 use smartdiff_sched::data::generator::{generate_pair, GenSpec};
 use smartdiff_sched::data::io::{InMemorySource, TableSource};
+use smartdiff_sched::data::schema::{ColumnType, Field, Schema};
+use smartdiff_sched::data::table::{Table, TableBuilder};
 use smartdiff_sched::engine::comparators::{
     native_numeric_diff, NumericBatch, NumericDeltaExec,
 };
-use smartdiff_sched::engine::delta::{process_shard, JobPlan};
+use smartdiff_sched::engine::delta::{
+    fill_numeric_batch_into, fill_numeric_batch_ref, process_shard_ref,
+    process_shard_with, JobPlan, ShardScratch,
+};
+use smartdiff_sched::engine::row_align::{
+    align_rows, align_rows_into, align_rows_ref, AlignScratch, Alignment,
+};
 use smartdiff_sched::engine::schema_align::align_schemas;
+use smartdiff_sched::util::json::ObjWriter;
 use smartdiff_sched::util::rng::Rng;
 
 fn random_batch(rows: usize, cols: usize, seed: u64) -> NumericBatch {
@@ -40,6 +56,49 @@ fn time_it(reps: usize, mut f: impl FnMut()) -> f64 {
         f();
     }
     t0.elapsed().as_secs_f64() / reps as f64
+}
+
+/// A string/bool-heavy pair exercising the native comparator path:
+/// i64 key + 4 utf8 + 2 bool payload columns, ~3% of rows perturbed.
+fn string_pair(rows: usize, seed: u64) -> (Table, Table) {
+    let schema = Schema::new(vec![
+        Field::key("id", ColumnType::Int64),
+        Field::new("s0", ColumnType::Utf8),
+        Field::new("s1", ColumnType::Utf8),
+        Field::new("s2", ColumnType::Utf8),
+        Field::new("s3", ColumnType::Utf8),
+        Field::new("f0", ColumnType::Bool),
+        Field::new("f1", ColumnType::Bool),
+    ]);
+    let mut rng = Rng::new(seed);
+    let mut ta = TableBuilder::new(schema.clone());
+    let mut tb = TableBuilder::new(schema.clone());
+    for i in 0..rows {
+        let strs: Vec<String> = (0..4).map(|_| rng.alnum(12)).collect();
+        let bools = [rng.chance(0.5), rng.chance(0.5)];
+        let perturb = rng.chance(0.03);
+        ta.col(0).push_i64(i as i64);
+        tb.col(0).push_i64(i as i64);
+        for (c, s) in strs.iter().enumerate() {
+            ta.col(1 + c).push_str(s);
+            if perturb && c == 0 {
+                tb.col(1 + c).push_str(&format!("{s}~"));
+            } else {
+                tb.col(1 + c).push_str(s);
+            }
+        }
+        ta.col(5).push_bool(bools[0]);
+        ta.col(6).push_bool(bools[1]);
+        tb.col(5).push_bool(bools[0] ^ perturb);
+        tb.col(6).push_bool(bools[1]);
+    }
+    (ta.finish(), tb.finish())
+}
+
+struct StageTime {
+    name: &'static str,
+    new_s: f64,
+    ref_s: f64,
 }
 
 fn main() {
@@ -81,8 +140,10 @@ fn main() {
         }
     }
 
-    println!("\n== engine stages on a 50k-row shard (ms) ==");
-    let (a, b, _) = generate_pair(&GenSpec { rows: 50_000, seed: 3, ..GenSpec::default() });
+    let shard_rows = 50_000;
+    println!("\n== engine stages on a {shard_rows}-row shard: columnar vs per-cell reference ==");
+    let (a, b, _) =
+        generate_pair(&GenSpec { rows: shard_rows, seed: 3, ..GenSpec::default() });
     let aligned = align_schemas(&a.schema, &b.schema).unwrap();
     let plan = JobPlan::new(aligned, EngineConfig::default());
     let exec: Arc<dyn NumericDeltaExec> =
@@ -90,25 +151,117 @@ fn main() {
 
     let src = InMemorySource::new(a.clone());
     let t_decode = time_it(5, || {
-        std::hint::black_box(src.read_range(0, 50_000).nrows());
+        std::hint::black_box(src.read_range(0, shard_rows).nrows());
     });
-    let t_align = time_it(5, || {
-        let al = smartdiff_sched::engine::row_align::align_rows(&a, &b, &plan.aligned)
+
+    let mut stages = Vec::new();
+
+    // -- row-align stage: columnar hashing + scratch reuse vs per-cell --
+    let mut ascr = AlignScratch::default();
+    let mut alignment = Alignment::default();
+    let t_align = time_it(10, || {
+        align_rows_into(&a, &b, &plan.aligned, &mut ascr, &mut alignment)
             .unwrap();
+        std::hint::black_box(alignment.pairs.len());
+    });
+    let t_align_ref = time_it(5, || {
+        let al = align_rows_ref(&a, &b, &plan.aligned).unwrap();
         std::hint::black_box(al.pairs.len());
     });
-    let t_shard = time_it(5, || {
-        let (o, _) = process_shard(0, &a, &b, &plan, &exec).unwrap();
+    stages.push(StageTime { name: "row_align", new_s: t_align, ref_s: t_align_ref });
+
+    // -- batch-fill stage: typed gathers vs per-cell closure --
+    let al = align_rows(&a, &b, &plan.aligned).unwrap();
+    let mut batch = NumericBatch::default();
+    let t_fill = time_it(10, || {
+        fill_numeric_batch_into(&plan, &a, &b, &al, &mut batch);
+        std::hint::black_box(batch.a.len());
+    });
+    let t_fill_ref = time_it(5, || {
+        let nb = fill_numeric_batch_ref(&plan, &a, &b, &al);
+        std::hint::black_box(nb.a.len());
+    });
+    stages.push(StageTime { name: "batch_fill", new_s: t_fill, ref_s: t_fill_ref });
+
+    // -- native string/bool Δ: direct StrData bytes vs Cell enums --
+    // (string-only payload so the native comparators dominate)
+    let (sa, sb) = string_pair(shard_rows, 11);
+    let s_aligned = align_schemas(&sa.schema, &sb.schema).unwrap();
+    let s_plan = JobPlan::new(s_aligned, EngineConfig::default());
+    let mut s_scratch = ShardScratch::default();
+    let t_nat = time_it(10, || {
+        let (o, _) =
+            process_shard_with(0, &sa, &sb, &s_plan, &exec, &mut s_scratch)
+                .unwrap();
         std::hint::black_box(o.cells.total());
     });
-    println!("decode: {:>8.2}  align: {:>8.2}  full Δ shard: {:>8.2}",
-             t_decode * 1e3, t_align * 1e3, t_shard * 1e3);
+    let t_nat_ref = time_it(5, || {
+        let (o, _) = process_shard_ref(0, &sa, &sb, &s_plan, &exec).unwrap();
+        std::hint::black_box(o.cells.total());
+    });
+    stages.push(StageTime { name: "native_string_shard", new_s: t_nat, ref_s: t_nat_ref });
+
+    // -- full Δ shard end-to-end (mixed schema) --
+    let mut scratch = ShardScratch::default();
+    let t_shard = time_it(10, || {
+        let (o, _) =
+            process_shard_with(0, &a, &b, &plan, &exec, &mut scratch).unwrap();
+        std::hint::black_box(o.cells.total());
+    });
+    let t_shard_ref = time_it(5, || {
+        let (o, _) = process_shard_ref(0, &a, &b, &plan, &exec).unwrap();
+        std::hint::black_box(o.cells.total());
+    });
+    stages.push(StageTime { name: "shard_e2e", new_s: t_shard, ref_s: t_shard_ref });
+
     println!(
-        "per-row: decode {:.0} ns, align {:.0} ns, full {:.0} ns",
-        t_decode / 50e3 * 1e9,
-        t_align / 50e3 * 1e9,
-        t_shard / 50e3 * 1e9
+        "{:>22} {:>12} {:>12} {:>9}",
+        "stage", "columnar ms", "ref ms", "speedup"
     );
+    println!("{:>22} {:>12.3} {:>12} {:>9}", "decode", t_decode * 1e3, "-", "-");
+    for s in &stages {
+        println!(
+            "{:>22} {:>12.3} {:>12.3} {:>8.2}x",
+            s.name,
+            s.new_s * 1e3,
+            s.ref_s * 1e3,
+            s.ref_s / s.new_s
+        );
+    }
+    println!(
+        "per-row: decode {:.0} ns, align {:.0} ns, full shard {:.0} ns",
+        t_decode / shard_rows as f64 * 1e9,
+        t_align / shard_rows as f64 * 1e9,
+        t_shard / shard_rows as f64 * 1e9
+    );
+
+    // Machine-readable dump for the bench trajectory / CI artifact.
+    let mut stages_json = String::from("[");
+    for (i, s) in stages.iter().enumerate() {
+        if i > 0 {
+            stages_json.push(',');
+        }
+        let obj = ObjWriter::new()
+            .str("stage", s.name)
+            .num("columnar_s", s.new_s)
+            .num("reference_s", s.ref_s)
+            .num("speedup", s.ref_s / s.new_s)
+            .finish();
+        let _ = write!(stages_json, "{obj}");
+    }
+    stages_json.push(']');
+    let doc = ObjWriter::new()
+        .str("bench", "micro_hotpath")
+        .int("shard_rows", shard_rows as i64)
+        .num("decode_s", t_decode)
+        .raw("stages", &stages_json)
+        .finish();
+    let path = std::env::var("MICRO_HOTPATH_JSON")
+        .unwrap_or_else(|_| "micro_hotpath.json".into());
+    match std::fs::write(&path, &doc) {
+        Ok(()) => println!("(stage timings written to {path})"),
+        Err(e) => println!("(could not write {path}: {e})"),
+    }
 
     println!("\n== L3: scheduler control-step cost ==");
     use smartdiff_sched::config::{Caps, Policy};

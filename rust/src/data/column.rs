@@ -62,11 +62,40 @@ impl Bitmap {
     pub fn count_set(&self) -> usize {
         self.words.iter().map(|w| w.count_ones() as usize).sum()
     }
+    /// Backing words (bit i lives at `words[i / 64]`, LSB-first), for
+    /// word-at-a-time consumers (popcount scans, `all_set`-style
+    /// whole-column tests).
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+    /// True when every bit is set (no nulls): one popcount pass over
+    /// the words. The columnar gather/hash loops test this once per
+    /// column and take a branch-free dense path when it holds.
+    pub fn all_set(&self) -> bool {
+        self.count_set() == self.len
+    }
+    /// Word-level copy: each output word is stitched from at most two
+    /// input words instead of 64 per-bit get/set round trips.
     pub fn slice(&self, offset: usize, len: usize) -> Bitmap {
+        // Hard assert: fabricating null bits for an out-of-range tail
+        // would silently corrupt verdicts; runs once per shard slice.
+        assert!(offset + len <= self.len, "bitmap slice out of bounds");
         let mut out = Bitmap::new_unset(len);
-        for i in 0..len {
-            out.set(i, self.get(offset + i));
+        let base = offset / 64;
+        let shift = offset % 64;
+        let nw = out.words.len();
+        for wi in 0..nw {
+            let lo = self.words.get(base + wi).copied().unwrap_or(0) >> shift;
+            let hi = if shift == 0 {
+                0
+            } else {
+                self.words.get(base + wi + 1).copied().unwrap_or(0)
+                    << (64 - shift)
+            };
+            out.words[wi] = lo | hi;
         }
+        out.trim_tail();
         out
     }
     pub fn heap_bytes(&self) -> usize {
@@ -102,15 +131,30 @@ impl StrData {
         // Arena only ever receives &str pushes, so this is valid UTF-8.
         unsafe { std::str::from_utf8_unchecked(&self.bytes[lo..hi]) }
     }
+    /// Byte range of entry `i` in the shared arena.
+    #[inline]
+    pub fn byte_range(&self, i: usize) -> (usize, usize) {
+        (self.offsets[i] as usize, self.offsets[i + 1] as usize)
+    }
+    /// Raw payload bytes of entry `i` (hot-path view: no UTF-8 check,
+    /// no `Cell` construction).
+    #[inline]
+    pub fn bytes_at(&self, i: usize) -> &[u8] {
+        let (lo, hi) = self.byte_range(i);
+        &self.bytes[lo..hi]
+    }
+    /// Bulk copy: one byte-range memcpy plus an offset rebase, instead
+    /// of `len` per-element pushes.
     pub fn slice(&self, offset: usize, len: usize) -> StrData {
-        let mut out = StrData::new();
-        out.bytes.reserve(
-            self.offsets[offset + len] as usize - self.offsets[offset] as usize,
+        let lo = self.offsets[offset] as usize;
+        let hi = self.offsets[offset + len] as usize;
+        let mut offsets = Vec::with_capacity(len + 1);
+        offsets.extend(
+            self.offsets[offset..=offset + len]
+                .iter()
+                .map(|&o| o - lo as u32),
         );
-        for i in 0..len {
-            out.push(self.get(offset + i));
-        }
-        out
+        StrData { offsets, bytes: self.bytes[lo..hi].to_vec() }
     }
     pub fn heap_bytes(&self) -> usize {
         self.offsets.capacity() * 4 + self.bytes.capacity()
@@ -164,6 +208,59 @@ impl Values {
             Values::Date(v) => v.capacity() * 4,
             Values::Ts(v) => v.capacity() * 8,
             Values::Dec { mantissa, .. } => mantissa.capacity() * 16,
+        }
+    }
+    // Typed slice views. Callers on the Δ hot path match on the column
+    // type ONCE, grab the typed slice, and run a tight loop over rows —
+    // instead of constructing a `Cell` enum per cell. Each returns None
+    // when the variant does not match.
+    #[inline]
+    pub fn as_i64(&self) -> Option<&[i64]> {
+        match self {
+            Values::I64(v) => Some(v),
+            _ => None,
+        }
+    }
+    #[inline]
+    pub fn as_f64(&self) -> Option<&[f64]> {
+        match self {
+            Values::F64(v) => Some(v),
+            _ => None,
+        }
+    }
+    #[inline]
+    pub fn as_date(&self) -> Option<&[i32]> {
+        match self {
+            Values::Date(v) => Some(v),
+            _ => None,
+        }
+    }
+    #[inline]
+    pub fn as_ts(&self) -> Option<&[i64]> {
+        match self {
+            Values::Ts(v) => Some(v),
+            _ => None,
+        }
+    }
+    #[inline]
+    pub fn as_dec(&self) -> Option<(&[i128], u8)> {
+        match self {
+            Values::Dec { mantissa, scale } => Some((mantissa, *scale)),
+            _ => None,
+        }
+    }
+    #[inline]
+    pub fn as_str_data(&self) -> Option<&StrData> {
+        match self {
+            Values::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    #[inline]
+    pub fn as_bool_bitmap(&self) -> Option<&Bitmap> {
+        match self {
+            Values::Bool(b) => Some(b),
+            _ => None,
         }
     }
     pub fn slice(&self, offset: usize, len: usize) -> Values {
@@ -420,8 +517,62 @@ mod tests {
     fn bitmap_new_set_count() {
         let b = Bitmap::new_set(100);
         assert_eq!(b.count_set(), 100);
+        assert!(b.all_set());
         let s = b.slice(10, 50);
         assert_eq!(s.count_set(), 50);
+    }
+
+    #[test]
+    fn bitmap_slice_matches_per_bit_copy() {
+        // Word-level slice must agree with a bit-at-a-time copy across
+        // unaligned offsets, word boundaries, and ragged tails.
+        let n = 300;
+        let mut b = Bitmap::new_unset(n);
+        for i in 0..n {
+            if i % 3 == 0 || i % 17 == 0 {
+                b.set(i, true);
+            }
+        }
+        for &(off, len) in
+            &[(0, 64), (1, 64), (63, 65), (64, 128), (70, 130), (5, 0), (200, 100)]
+        {
+            let s = b.slice(off, len);
+            assert_eq!(s.len(), len);
+            for i in 0..len {
+                assert_eq!(s.get(i), b.get(off + i), "off={off} len={len} i={i}");
+            }
+            // No stray bits beyond `len` (count over words must match).
+            assert_eq!(
+                s.count_set(),
+                (0..len).filter(|&i| b.get(off + i)).count()
+            );
+        }
+    }
+
+    #[test]
+    fn typed_slice_accessors() {
+        let mut b = ColumnBuilder::new(ColumnType::Int64);
+        b.push_i64(3);
+        b.push_i64(-4);
+        let c = b.finish();
+        assert_eq!(c.values.as_i64(), Some(&[3i64, -4][..]));
+        assert!(c.values.as_f64().is_none());
+        assert!(c.values.as_str_data().is_none());
+
+        let mut b = ColumnBuilder::new(ColumnType::Decimal { scale: 2 });
+        b.push_dec(777);
+        let c = b.finish();
+        let (m, s) = c.values.as_dec().unwrap();
+        assert_eq!((m, s), (&[777i128][..], 2));
+
+        let mut b = ColumnBuilder::new(ColumnType::Utf8);
+        b.push_str("ab");
+        b.push_str("cde");
+        let c = b.finish();
+        let sd = c.values.as_str_data().unwrap();
+        assert_eq!(sd.byte_range(1), (2, 5));
+        assert_eq!(sd.bytes_at(0), b"ab");
+        assert_eq!(sd.bytes_at(1), b"cde");
     }
 
     #[test]

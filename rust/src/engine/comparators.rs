@@ -31,20 +31,33 @@ pub struct NumericBatch {
     pub rtol: Vec<f64>,
 }
 
+fn zero_resize(v: &mut Vec<f64>, n: usize) {
+    v.clear();
+    v.resize(n, 0.0);
+}
+
 impl NumericBatch {
     pub fn zeroed(rows: usize, cols: usize) -> Self {
-        NumericBatch {
-            rows,
-            cols,
-            a: vec![0.0; rows * cols],
-            b: vec![0.0; rows * cols],
-            na: vec![0.0; rows * cols],
-            nb: vec![0.0; rows * cols],
-            ra: vec![0.0; rows],
-            rb: vec![0.0; rows],
-            atol: vec![0.0; cols],
-            rtol: vec![0.0; cols],
-        }
+        let mut nb = NumericBatch::default();
+        nb.reset(rows, cols);
+        nb
+    }
+
+    /// Re-shape to rows×cols with all matrices zeroed, reusing existing
+    /// capacity — after warm-up this performs no heap allocation, which
+    /// is what makes the per-worker `ShardScratch` allocation-free.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        let n = rows * cols;
+        zero_resize(&mut self.a, n);
+        zero_resize(&mut self.b, n);
+        zero_resize(&mut self.na, n);
+        zero_resize(&mut self.nb, n);
+        zero_resize(&mut self.ra, rows);
+        zero_resize(&mut self.rb, rows);
+        zero_resize(&mut self.atol, cols);
+        zero_resize(&mut self.rtol, cols);
     }
     /// Scratch footprint in bytes (memory-model input).
     pub fn heap_bytes(&self) -> usize {
@@ -61,7 +74,7 @@ impl NumericBatch {
 }
 
 /// Output of a numeric batch diff (mirrors the L2 graph outputs).
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Default)]
 pub struct NumericDiffOut {
     /// R×C verdict codes.
     pub verdicts: Vec<i32>,
@@ -79,6 +92,17 @@ pub struct NumericDiffOut {
 pub trait NumericDeltaExec: Send + Sync {
     fn name(&self) -> &'static str;
     fn diff(&self, batch: &NumericBatch) -> Result<NumericDiffOut, String>;
+    /// Buffer-reusing variant: write the result into caller-owned
+    /// output buffers. The default falls back to `diff` (one fresh
+    /// allocation set); executors on the hot path override it.
+    fn diff_into(
+        &self,
+        batch: &NumericBatch,
+        out: &mut NumericDiffOut,
+    ) -> Result<(), String> {
+        *out = self.diff(batch)?;
+        Ok(())
+    }
 }
 
 /// Canonicalize like the L2 graph: zero masked cells, fold -0.0 → +0.0.
@@ -94,12 +118,26 @@ fn canon(x: f64, present: bool) -> f64 {
 /// Pure-rust numeric diff, semantically identical to the Pallas kernel +
 /// L2 canonicalization (see python/compile/kernels/ref.py).
 pub fn native_numeric_diff(batch: &NumericBatch) -> NumericDiffOut {
+    let mut out = NumericDiffOut::default();
+    native_numeric_diff_into(batch, &mut out);
+    out
+}
+
+/// Buffer-reusing form of [`native_numeric_diff`]: output vectors are
+/// resized in place (no allocation once capacities have warmed up).
+pub fn native_numeric_diff_into(batch: &NumericBatch, out: &mut NumericDiffOut) {
     let (r, c) = (batch.rows, batch.cols);
-    let mut verdicts = vec![Verdict::Absent as i32; r * c];
-    let mut counts = [0i64; 5];
-    let mut col_changed = vec![0i64; c];
-    let mut col_maxabs = vec![0f64; c];
-    let mut changed_rows = vec![0i32; r];
+    out.verdicts.clear();
+    out.verdicts.resize(r * c, Verdict::Absent as i32);
+    out.counts = [0i64; 5];
+    out.col_changed.clear();
+    out.col_changed.resize(c, 0);
+    out.col_maxabs.clear();
+    out.col_maxabs.resize(c, 0.0);
+    out.changed_rows.clear();
+    out.changed_rows.resize(r, 0);
+    let NumericDiffOut { verdicts, counts, col_changed, col_maxabs, changed_rows } =
+        out;
 
     for i in 0..r {
         let ra = batch.ra[i] > 0.5;
@@ -157,7 +195,6 @@ pub fn native_numeric_diff(batch: &NumericBatch) -> NumericDiffOut {
         }
         changed_rows[i] = row_diff as i32;
     }
-    NumericDiffOut { verdicts, counts, col_changed, col_maxabs, changed_rows }
 }
 
 /// Native executor (always available; no artifacts needed).
@@ -170,6 +207,14 @@ impl NumericDeltaExec for NativeExec {
     }
     fn diff(&self, batch: &NumericBatch) -> Result<NumericDiffOut, String> {
         Ok(native_numeric_diff(batch))
+    }
+    fn diff_into(
+        &self,
+        batch: &NumericBatch,
+        out: &mut NumericDiffOut,
+    ) -> Result<(), String> {
+        native_numeric_diff_into(batch, out);
+        Ok(())
     }
 }
 

@@ -2,17 +2,30 @@
 //! path) + native comparators → `BatchOutcome` with exact memory
 //! accounting. This is the work a backend worker executes per batch;
 //! the scheduler never looks inside.
+//!
+//! The hot path is columnar end-to-end: the numeric batch is filled by
+//! per-column typed gather loops (one `Values` match per column, then a
+//! tight strided write loop), native string/bool columns compare through
+//! direct `StrData` byte views / `Bitmap` reads, and every R×C-scale
+//! buffer lives in a reusable per-worker [`ShardScratch`] so that
+//! steady-state shard execution allocates nothing beyond the returned
+//! outcome. [`process_shard_ref`] keeps the original cell-at-a-time
+//! implementation as the parity oracle (see `rust/tests/hotpath_parity.rs`
+//! and the "Engine hot path" notes in `engine/mod.rs`).
 
 use std::sync::Arc;
 
 use crate::config::EngineConfig;
-use crate::data::column::Cell;
+use crate::data::column::{Cell, Column, Values};
 use crate::data::schema::ColumnType;
 use crate::data::table::Table;
 use crate::engine::comparators::{
     compare_bool, compare_str, null_aware, NumericBatch, NumericDeltaExec,
+    NumericDiffOut,
 };
-use crate::engine::row_align::{align_rows, Alignment};
+use crate::engine::row_align::{
+    align_rows_into, align_rows_ref, AlignScratch, Alignment,
+};
 use crate::engine::schema_align::{AlignedSchema, CompareKind};
 use crate::engine::verdict::{
     BatchOutcome, ColumnOutcome, RowCounts, Verdict, VerdictCounts,
@@ -74,6 +87,29 @@ impl ShardMemStats {
     }
 }
 
+/// Reusable per-worker Δ scratch: alignment state, the numeric batch,
+/// kernel outputs, and the row-diff flags. Ownership rule: exactly one
+/// `ShardScratch` per worker thread, threaded by `&mut` through
+/// `process_shard_with` — never shared across concurrently executing
+/// shards. After the first shard of a given shape the buffers are only
+/// resized within capacity, so steady-state execution is allocation-free
+/// (asserted by the capacity-stability test in `tests/hotpath_parity.rs`).
+///
+/// Memory-model note: `ShardMemStats.scratch_bytes` reports the
+/// capacity-based (real resident) footprint per batch, and the worker
+/// accounts it against its `MemTracker` while the batch executes. The
+/// warmed scratch also stays resident between shards — at most one
+/// shard's scratch per worker — which the per-batch ledger deliberately
+/// does not double-count while the worker is idle.
+#[derive(Debug, Default)]
+pub struct ShardScratch {
+    pub align: AlignScratch,
+    pub alignment: Alignment,
+    pub batch: NumericBatch,
+    pub diff: NumericDiffOut,
+    pub row_diff: Vec<bool>,
+}
+
 #[inline]
 fn numeric_value(table: &Table, col: usize, row: usize) -> Option<f64> {
     let c = table.column(col);
@@ -92,13 +128,130 @@ fn numeric_value(table: &Table, col: usize, row: usize) -> Option<f64> {
     }
 }
 
-fn fill_numeric_batch(
+/// Gather one column's numeric f64 view into the batch at column `j`,
+/// visiting `(slot, row)` pairs. The `Values` match happens once per
+/// call; each arm is a tight typed loop writing `vals`/`mask` strided.
+/// Value coercion is bit-identical to `numeric_value`.
+fn gather_numeric_column(
+    col: &Column,
+    rows: impl Iterator<Item = (usize, u32)>,
+    cols: usize,
+    j: usize,
+    vals: &mut [f64],
+    mask: &mut [f64],
+) {
+    // One whole-column validity test up front; fully-valid columns (the
+    // common case) take the branch-free dense loop.
+    let dense = col.validity.all_set();
+    macro_rules! typed_gather {
+        ($conv:expr) => {
+            if dense {
+                for (slot, row) in rows {
+                    let idx = slot * cols + j;
+                    vals[idx] = $conv(row as usize);
+                    mask[idx] = 1.0;
+                }
+            } else {
+                for (slot, row) in rows {
+                    let r = row as usize;
+                    if col.validity.get(r) {
+                        let idx = slot * cols + j;
+                        vals[idx] = $conv(r);
+                        mask[idx] = 1.0;
+                    }
+                }
+            }
+        };
+    }
+    match &col.values {
+        Values::I64(v) => typed_gather!(|r: usize| v[r] as f64),
+        Values::F64(v) => typed_gather!(|r: usize| v[r]),
+        Values::Date(v) => typed_gather!(|r: usize| v[r] as f64),
+        Values::Ts(v) => typed_gather!(|r: usize| v[r] as f64),
+        Values::Dec { mantissa, scale } => {
+            // Same divisor expression as `numeric_value` (division, not
+            // reciprocal multiply) so results stay bit-identical.
+            let div = 10f64.powi(*scale as i32);
+            typed_gather!(|r: usize| mantissa[r] as f64 / div)
+        }
+        // Non-numeric storage never reaches the accelerator path; the
+        // mask stays 0 exactly like `numeric_value` returning None.
+        Values::Str(_) | Values::Bool(_) => {}
+    }
+}
+
+/// Fill the numeric batch for one alignment via per-column typed
+/// gathers, reusing `nb`'s buffers. Row slot layout: aligned pairs,
+/// then removed (ra=1, rb=0), then added (ra=0, rb=1).
+pub fn fill_numeric_batch_into(
+    plan: &JobPlan,
+    a_tbl: &Table,
+    b_tbl: &Table,
+    al: &Alignment,
+    nb: &mut NumericBatch,
+) {
+    let rows = al.nrows();
+    let cols = plan.numeric_idx.len();
+    nb.reset(rows, cols);
+    nb.atol.copy_from_slice(&plan.atol);
+    nb.rtol.copy_from_slice(&plan.rtol);
+
+    let pairs_n = al.pairs.len();
+    let a_rows_n = pairs_n + al.removed.len();
+    for s in 0..a_rows_n {
+        nb.ra[s] = 1.0;
+    }
+    for s in 0..pairs_n {
+        nb.rb[s] = 1.0;
+    }
+    for s in a_rows_n..rows {
+        nb.rb[s] = 1.0;
+    }
+
+    for (j, &pi) in plan.numeric_idx.iter().enumerate() {
+        let p = &plan.aligned.pairs[pi];
+        gather_numeric_column(
+            a_tbl.column(p.a_idx),
+            al.pairs
+                .iter()
+                .map(|&(ar, _)| ar)
+                .chain(al.removed.iter().copied())
+                .enumerate(),
+            cols,
+            j,
+            &mut nb.a,
+            &mut nb.na,
+        );
+        gather_numeric_column(
+            b_tbl.column(p.b_idx),
+            al.pairs
+                .iter()
+                .map(|&(_, br)| br)
+                .enumerate()
+                .chain(
+                    al.added
+                        .iter()
+                        .copied()
+                        .enumerate()
+                        .map(|(i, br)| (a_rows_n + i, br)),
+                ),
+            cols,
+            j,
+            &mut nb.b,
+            &mut nb.nb,
+        );
+    }
+}
+
+/// Cell-at-a-time batch fill (the pre-columnar implementation), kept as
+/// the parity oracle for tests and the stage microbench baseline.
+pub fn fill_numeric_batch_ref(
     plan: &JobPlan,
     a_tbl: &Table,
     b_tbl: &Table,
     al: &Alignment,
 ) -> NumericBatch {
-    let rows = al.pairs.len() + al.removed.len() + al.added.len();
+    let rows = al.nrows();
     let cols = plan.numeric_idx.len();
     let mut nb = NumericBatch::zeroed(rows, cols);
     nb.atol.copy_from_slice(&plan.atol);
@@ -155,7 +308,109 @@ fn row_key(plan: &JobPlan, table: &Table, a_side: bool, row: u32) -> i64 {
     row as i64
 }
 
-/// Execute Δ over one decoded shard pair.
+/// Compare one native (string/bool) column pair over the aligned rows,
+/// with the type dispatch hoisted out of the row loop. Strings compare
+/// through direct `StrData` byte views (no `Cell`, no UTF-8 revalidation);
+/// equality under `string_ci` is ASCII-case-insensitive, byte-identical
+/// in outcome to `compare_str`.
+#[allow(clippy::too_many_arguments)]
+fn native_column_pass(
+    kind: CompareKind,
+    ac: &Column,
+    bc: &Column,
+    cfg: &EngineConfig,
+    al: &Alignment,
+    cells: &mut VerdictCounts,
+    row_diff: &mut [bool],
+) -> u64 {
+    let mut changed = 0u64;
+    match (&ac.values, &bc.values) {
+        (Values::Str(sa), Values::Str(sb)) => {
+            let ci = cfg.string_ci;
+            for (slot, &(ar, br)) in al.pairs.iter().enumerate() {
+                let (ar, br) = (ar as usize, br as usize);
+                let a_null = ac.is_null(ar);
+                let b_null = bc.is_null(br);
+                let eq = if a_null || b_null {
+                    a_null && b_null
+                } else {
+                    let xa = sa.bytes_at(ar);
+                    let xb = sb.bytes_at(br);
+                    if ci {
+                        xa.eq_ignore_ascii_case(xb)
+                    } else {
+                        xa == xb
+                    }
+                };
+                if eq {
+                    cells.equal += 1;
+                } else {
+                    cells.changed += 1;
+                    changed += 1;
+                    row_diff[slot] = true;
+                }
+            }
+        }
+        (Values::Bool(ba), Values::Bool(bb)) => {
+            for (slot, &(ar, br)) in al.pairs.iter().enumerate() {
+                let (ar, br) = (ar as usize, br as usize);
+                let a_null = ac.is_null(ar);
+                let b_null = bc.is_null(br);
+                let eq = if a_null || b_null {
+                    a_null && b_null
+                } else {
+                    ba.get(ar) == bb.get(br)
+                };
+                if eq {
+                    cells.equal += 1;
+                } else {
+                    cells.changed += 1;
+                    changed += 1;
+                    row_diff[slot] = true;
+                }
+            }
+        }
+        // Storage/kind mismatch (malformed plan): fall back to the
+        // defensive per-cell path, which reports Changed.
+        _ => {
+            for (slot, &(ar, br)) in al.pairs.iter().enumerate() {
+                let v = null_aware(
+                    ac.is_null(ar as usize),
+                    bc.is_null(br as usize),
+                    || match kind {
+                        CompareKind::String => {
+                            let (Cell::Str(x), Cell::Str(y)) =
+                                (ac.cell(ar as usize), bc.cell(br as usize))
+                            else {
+                                return Verdict::Changed;
+                            };
+                            compare_str(x, y, cfg)
+                        }
+                        CompareKind::Bool => {
+                            let (Cell::Bool(x), Cell::Bool(y)) =
+                                (ac.cell(ar as usize), bc.cell(br as usize))
+                            else {
+                                return Verdict::Changed;
+                            };
+                            compare_bool(x, y)
+                        }
+                        CompareKind::Numeric => unreachable!(),
+                    },
+                );
+                cells.record(v, 1);
+                if v == Verdict::Changed {
+                    changed += 1;
+                    row_diff[slot] = true;
+                }
+            }
+        }
+    }
+    changed
+}
+
+/// Execute Δ over one decoded shard pair with throwaway scratch.
+/// Workers on the hot path use [`process_shard_with`] instead, reusing
+/// a per-thread [`ShardScratch`].
 pub fn process_shard(
     shard_id: u64,
     a_tbl: &Table,
@@ -163,8 +418,23 @@ pub fn process_shard(
     plan: &JobPlan,
     exec: &Arc<dyn NumericDeltaExec>,
 ) -> Result<(BatchOutcome, ShardMemStats), String> {
-    let al = align_rows(a_tbl, b_tbl, &plan.aligned)?;
-    let nrows = al.pairs.len() + al.removed.len() + al.added.len();
+    let mut scratch = ShardScratch::default();
+    process_shard_with(shard_id, a_tbl, b_tbl, plan, exec, &mut scratch)
+}
+
+/// Execute Δ over one decoded shard pair, reusing `scratch` buffers.
+pub fn process_shard_with(
+    shard_id: u64,
+    a_tbl: &Table,
+    b_tbl: &Table,
+    plan: &JobPlan,
+    exec: &Arc<dyn NumericDeltaExec>,
+    scratch: &mut ShardScratch,
+) -> Result<(BatchOutcome, ShardMemStats), String> {
+    let ShardScratch { align, alignment, batch, diff, row_diff } = scratch;
+    align_rows_into(a_tbl, b_tbl, &plan.aligned, align, alignment)?;
+    let al: &Alignment = alignment;
+    let nrows = al.nrows();
     let ncols = plan.aligned.pairs.len();
 
     let mut cells = VerdictCounts::default();
@@ -174,24 +444,25 @@ pub fn process_shard(
         .iter()
         .map(|p| ColumnOutcome { name: p.name.clone(), changed: 0, max_abs_delta: 0.0 })
         .collect();
-    let mut row_diff = vec![false; nrows];
+    row_diff.clear();
+    row_diff.resize(nrows, false);
     let mut scratch_bytes = 0usize;
 
     // --- numeric columns: accelerator-path batch ---
     if !plan.numeric_idx.is_empty() && nrows > 0 {
-        let nb = fill_numeric_batch(plan, a_tbl, b_tbl, &al);
-        scratch_bytes += nb.heap_bytes();
-        let out = exec.diff(&nb)?;
-        scratch_bytes += out.verdicts.capacity() * 4;
-        if out.counts[Verdict::Absent as i32 as usize] != 0 {
+        fill_numeric_batch_into(plan, a_tbl, b_tbl, al, batch);
+        scratch_bytes += batch.heap_bytes();
+        exec.diff_into(batch, diff)?;
+        scratch_bytes += diff.verdicts.capacity() * 4;
+        if diff.counts[Verdict::Absent as i32 as usize] != 0 {
             return Err("kernel reported ABSENT cells for unpadded batch".into());
         }
-        cells.merge(&VerdictCounts::from_codes(&out.counts));
+        cells.merge(&VerdictCounts::from_codes(&diff.counts));
         for (j, &pi) in plan.numeric_idx.iter().enumerate() {
-            columns[pi].changed = out.col_changed[j] as u64;
-            columns[pi].max_abs_delta = out.col_maxabs[j];
+            columns[pi].changed = diff.col_changed[j] as u64;
+            columns[pi].max_abs_delta = diff.col_maxabs[j];
         }
-        for (i, flag) in out.changed_rows.iter().enumerate() {
+        for (i, flag) in diff.changed_rows.iter().enumerate() {
             if *flag != 0 {
                 row_diff[i] = true;
             }
@@ -201,38 +472,15 @@ pub fn process_shard(
     // --- native columns (strings, bools) ---
     for &pi in &plan.native_idx {
         let p = &plan.aligned.pairs[pi];
-        let (ac, bc) = (a_tbl.column(p.a_idx), b_tbl.column(p.b_idx));
-        let mut changed = 0u64;
-        for (slot, &(ar, br)) in al.pairs.iter().enumerate() {
-            let v = null_aware(
-                ac.is_null(ar as usize),
-                bc.is_null(br as usize),
-                || match p.kind {
-                    CompareKind::String => {
-                        let (Cell::Str(x), Cell::Str(y)) =
-                            (ac.cell(ar as usize), bc.cell(br as usize))
-                        else {
-                            return Verdict::Changed;
-                        };
-                        compare_str(x, y, &plan.cfg)
-                    }
-                    CompareKind::Bool => {
-                        let (Cell::Bool(x), Cell::Bool(y)) =
-                            (ac.cell(ar as usize), bc.cell(br as usize))
-                        else {
-                            return Verdict::Changed;
-                        };
-                        compare_bool(x, y)
-                    }
-                    CompareKind::Numeric => unreachable!(),
-                },
-            );
-            cells.record(v, 1);
-            if v == Verdict::Changed {
-                changed += 1;
-                row_diff[slot] = true;
-            }
-        }
+        let changed = native_column_pass(
+            p.kind,
+            a_tbl.column(p.a_idx),
+            b_tbl.column(p.b_idx),
+            &plan.cfg,
+            al,
+            &mut cells,
+            row_diff,
+        );
         // Removed/added rows contribute one removed/added cell per column.
         cells.record(Verdict::Removed, al.removed.len() as u64);
         cells.record(Verdict::Added, al.added.len() as u64);
@@ -275,6 +523,142 @@ pub fn process_shard(
 
     let expected_cells = (nrows as u64) * (ncols as u64);
     debug_assert_eq!(cells.total(), expected_cells, "cell accounting");
+
+    let outcome = BatchOutcome {
+        shard_id,
+        rows_a: a_tbl.nrows() as u64,
+        rows_b: b_tbl.nrows() as u64,
+        cells,
+        rows,
+        columns,
+        diff_keys,
+        diff_keys_truncated: truncated,
+    };
+    let mem = ShardMemStats {
+        decode_bytes: a_tbl.heap_bytes() + b_tbl.heap_bytes(),
+        align_bytes: al.align_state_bytes,
+        scratch_bytes,
+    };
+    Ok((outcome, mem))
+}
+
+/// Cell-at-a-time reference Δ (the pre-columnar implementation): per-row
+/// closures over `Column::cell()` everywhere. Retained as the oracle the
+/// parity property tests compare `process_shard` against; not used on
+/// any execution path.
+pub fn process_shard_ref(
+    shard_id: u64,
+    a_tbl: &Table,
+    b_tbl: &Table,
+    plan: &JobPlan,
+    exec: &Arc<dyn NumericDeltaExec>,
+) -> Result<(BatchOutcome, ShardMemStats), String> {
+    let al = align_rows_ref(a_tbl, b_tbl, &plan.aligned)?;
+    let nrows = al.nrows();
+    let ncols = plan.aligned.pairs.len();
+
+    let mut cells = VerdictCounts::default();
+    let mut columns: Vec<ColumnOutcome> = plan
+        .aligned
+        .pairs
+        .iter()
+        .map(|p| ColumnOutcome { name: p.name.clone(), changed: 0, max_abs_delta: 0.0 })
+        .collect();
+    let mut row_diff = vec![false; nrows];
+    let mut scratch_bytes = 0usize;
+
+    if !plan.numeric_idx.is_empty() && nrows > 0 {
+        let nb = fill_numeric_batch_ref(plan, a_tbl, b_tbl, &al);
+        scratch_bytes += nb.heap_bytes();
+        let out = exec.diff(&nb)?;
+        scratch_bytes += out.verdicts.capacity() * 4;
+        if out.counts[Verdict::Absent as i32 as usize] != 0 {
+            return Err("kernel reported ABSENT cells for unpadded batch".into());
+        }
+        cells.merge(&VerdictCounts::from_codes(&out.counts));
+        for (j, &pi) in plan.numeric_idx.iter().enumerate() {
+            columns[pi].changed = out.col_changed[j] as u64;
+            columns[pi].max_abs_delta = out.col_maxabs[j];
+        }
+        for (i, flag) in out.changed_rows.iter().enumerate() {
+            if *flag != 0 {
+                row_diff[i] = true;
+            }
+        }
+    }
+
+    for &pi in &plan.native_idx {
+        let p = &plan.aligned.pairs[pi];
+        let (ac, bc) = (a_tbl.column(p.a_idx), b_tbl.column(p.b_idx));
+        let mut changed = 0u64;
+        for (slot, &(ar, br)) in al.pairs.iter().enumerate() {
+            let v = null_aware(
+                ac.is_null(ar as usize),
+                bc.is_null(br as usize),
+                || match p.kind {
+                    CompareKind::String => {
+                        let (Cell::Str(x), Cell::Str(y)) =
+                            (ac.cell(ar as usize), bc.cell(br as usize))
+                        else {
+                            return Verdict::Changed;
+                        };
+                        compare_str(x, y, &plan.cfg)
+                    }
+                    CompareKind::Bool => {
+                        let (Cell::Bool(x), Cell::Bool(y)) =
+                            (ac.cell(ar as usize), bc.cell(br as usize))
+                        else {
+                            return Verdict::Changed;
+                        };
+                        compare_bool(x, y)
+                    }
+                    CompareKind::Numeric => unreachable!(),
+                },
+            );
+            cells.record(v, 1);
+            if v == Verdict::Changed {
+                changed += 1;
+                row_diff[slot] = true;
+            }
+        }
+        cells.record(Verdict::Removed, al.removed.len() as u64);
+        cells.record(Verdict::Added, al.added.len() as u64);
+        columns[pi].changed = changed;
+    }
+    let pairs_n = al.pairs.len();
+    for i in pairs_n..nrows {
+        row_diff[i] = true;
+    }
+
+    let mut rows = RowCounts {
+        aligned: pairs_n as u64,
+        added: al.added.len() as u64,
+        removed: al.removed.len() as u64,
+        changed_rows: 0,
+    };
+    let mut diff_keys = Vec::new();
+    let mut truncated = false;
+    let mut push_key = |k: i64| {
+        if diff_keys.len() < KEY_SAMPLE_CAP {
+            diff_keys.push(k);
+        } else {
+            truncated = true;
+        }
+    };
+    for (slot, &(ar, _br)) in al.pairs.iter().enumerate() {
+        if row_diff[slot] {
+            rows.changed_rows += 1;
+            push_key(row_key(plan, a_tbl, true, ar));
+        }
+    }
+    for &ar in &al.removed {
+        push_key(row_key(plan, a_tbl, true, ar));
+    }
+    for &br in &al.added {
+        push_key(row_key(plan, b_tbl, false, br));
+    }
+
+    debug_assert_eq!(cells.total(), (nrows as u64) * (ncols as u64));
 
     let outcome = BatchOutcome {
         shard_id,
@@ -391,5 +775,68 @@ mod tests {
         let (s, _) = process_shard(0, &a, &b, &strict, &exec).unwrap();
         let (l, _) = process_shard(0, &a, &b, &loose, &exec).unwrap();
         assert!(l.cells.changed < s.cells.changed);
+    }
+
+    #[test]
+    fn columnar_matches_reference_end_to_end() {
+        for seed in [1u64, 11, 29] {
+            let spec = GenSpec { rows: 700, seed, ..GenSpec::default() };
+            let (a, b, _) = generate_pair(&spec);
+            let aligned = align_schemas(&a.schema, &b.schema).unwrap();
+            let plan = JobPlan::new(aligned, EngineConfig::default());
+            let exec: Arc<dyn NumericDeltaExec> = Arc::new(NativeExec);
+            let (fast, _) = process_shard(0, &a, &b, &plan, &exec).unwrap();
+            let (slow, _) = process_shard_ref(0, &a, &b, &plan, &exec).unwrap();
+            assert_eq!(fast, slow, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_bit_identical_and_capacity_stable() {
+        let spec = GenSpec { rows: 600, seed: 41, ..GenSpec::default() };
+        let (a, b, _) = generate_pair(&spec);
+        let aligned = align_schemas(&a.schema, &b.schema).unwrap();
+        let plan = JobPlan::new(aligned, EngineConfig::default());
+        let exec: Arc<dyn NumericDeltaExec> = Arc::new(NativeExec);
+        let mut scratch = ShardScratch::default();
+        let (first, mem_first) =
+            process_shard_with(0, &a, &b, &plan, &exec, &mut scratch).unwrap();
+        let caps = (
+            scratch.batch.a.capacity(),
+            scratch.diff.verdicts.capacity(),
+            scratch.row_diff.capacity(),
+            scratch.alignment.pairs.capacity(),
+        );
+        for _ in 0..4 {
+            let (again, mem) =
+                process_shard_with(0, &a, &b, &plan, &exec, &mut scratch)
+                    .unwrap();
+            assert_eq!(again, first);
+            assert_eq!(mem, mem_first, "mem accounting must stay exact");
+        }
+        assert_eq!(
+            caps,
+            (
+                scratch.batch.a.capacity(),
+                scratch.diff.verdicts.capacity(),
+                scratch.row_diff.capacity(),
+                scratch.alignment.pairs.capacity(),
+            ),
+            "steady state must not reallocate"
+        );
+    }
+
+    #[test]
+    fn fill_into_matches_fill_ref() {
+        let spec = GenSpec { rows: 400, seed: 77, ..GenSpec::default() };
+        let (a, b, _) = generate_pair(&spec);
+        let aligned = align_schemas(&a.schema, &b.schema).unwrap();
+        let plan = JobPlan::new(aligned, EngineConfig::default());
+        let al =
+            crate::engine::row_align::align_rows(&a, &b, &plan.aligned).unwrap();
+        let reference = fill_numeric_batch_ref(&plan, &a, &b, &al);
+        let mut fast = NumericBatch::default();
+        fill_numeric_batch_into(&plan, &a, &b, &al, &mut fast);
+        assert_eq!(fast, reference);
     }
 }

@@ -2,6 +2,56 @@
 //! alignment, row alignment f, typed cell-wise Δ, stable merge, and the
 //! calibration microbenchmarks. The scheduler treats all of this as the
 //! workload; it never changes Δ semantics (paper §II).
+//!
+//! # Engine hot path
+//!
+//! The per-shard Δ pipeline is columnar end-to-end; the three contracts
+//! below are what every optimization (and every future accelerator
+//! backend) must preserve.
+//!
+//! ## NumericBatch kernel contract
+//!
+//! All numeric-family columns (i64 / f64 / decimal / date / timestamp)
+//! are gathered into one row-major R×C f64 batch
+//! ([`comparators::NumericBatch`]): value matrices `a`/`b`, cell
+//! presence masks `na`/`nb` (garbage values behind a 0 mask are legal
+//! and must never influence results), row presence `ra`/`rb` (slot
+//! layout: aligned pairs, then removed, then added; padding rows have
+//! `ra == rb == 0`), and per-column `atol`/`rtol`. Executors
+//! ([`comparators::NumericDeltaExec`]) map a batch to verdict codes,
+//! per-column changed counts and max-|Δ|, and per-row any-diff flags —
+//! the native Rust loop and the Pallas/PJRT executable must be
+//! observationally identical (`runtime::pjrt` cross-checks them).
+//! `diff_into` is the buffer-reusing entry point the hot path uses.
+//!
+//! ## Columnar gather design
+//!
+//! Per-cell enum dispatch (`Column::cell()`) is banned from row loops.
+//! The batch fill ([`delta::fill_numeric_batch_into`]) matches each
+//! column's `Values` storage **once**, then runs a tight typed loop
+//! writing strided `a`/`na` slots; native string/bool comparison reads
+//! `StrData` byte views and `Bitmap` bits directly. Row alignment
+//! ([`row_align::align_rows_into`]) hashes each key column in one typed
+//! pass into per-row `u64` accumulators (FNV-1a, null ⇒ a 0xff tag
+//! byte), then builds an open-addressed join table keyed by the
+//! precomputed hashes with full-key verification on hash hits. The
+//! original cell-at-a-time implementations are retained as oracles
+//! ([`delta::process_shard_ref`], [`row_align::align_rows_ref`]) and
+//! the parity property tests (`rust/tests/hotpath_parity.rs`) pin the
+//! two paths to bit-identical `Alignment` and `BatchOutcome`.
+//!
+//! ## Scratch-reuse ownership rules
+//!
+//! Every R×C-scale buffer lives in a [`delta::ShardScratch`] (numeric
+//! batch, kernel outputs, row-diff flags, alignment state + hash
+//! accumulators). Exactly **one** scratch exists per worker thread; it
+//! is threaded by `&mut` through `process_shard_with` and never shared
+//! across concurrently executing shards. Buffers are resized in place,
+//! so steady-state shard execution performs no scratch allocation —
+//! while `ShardMemStats` stays exact (capacity-based byte accounting:
+//! the scheduler's memory model is calibrated against these numbers, so
+//! reporting anything but the real resident footprint is a correctness
+//! bug, not a cosmetic one).
 
 pub mod comparators;
 pub mod delta;

@@ -2,14 +2,26 @@
 //! key (paper §II: primary keys, composite business keys, or surrogate
 //! row index).
 //!
-//! Implementation: hash join on the key cells with full-key verification
-//! (collisions compared cell-by-cell). The hash-table footprint is the
-//! paper's "alignment state for f" memory term — `align_state_bytes`
-//! reports it for the batch memory accounting.
+//! Implementation: hash join on the key columns with full-key
+//! verification (hash collisions compared cell-by-cell). Key hashing is
+//! *columnar*: each key column is hashed in one typed pass into a
+//! per-row `Vec<u64>` accumulator (the type dispatch happens once per
+//! column, not once per cell), and the join table is built from the
+//! precomputed hashes. The table itself is open-addressed with
+//! intrusive next-chains — no per-key `Vec` allocations — and all of it
+//! lives in a reusable [`AlignScratch`] so steady-state alignment is
+//! allocation-free. The hash-table footprint is the paper's "alignment
+//! state for f" memory term — `align_state_bytes` reports it for the
+//! batch memory accounting.
+//!
+//! [`align_rows_ref`] retains the original cell-at-a-time
+//! implementation as the oracle for the hot-path parity property tests
+//! (`rust/tests/hotpath_parity.rs`); both paths feed identical byte
+//! streams into FNV-1a, so they produce identical alignments.
 
 use std::collections::HashMap;
 
-use crate::data::column::Cell;
+use crate::data::column::{Cell, Column, Values};
 use crate::data::table::Table;
 use crate::engine::schema_align::AlignedSchema;
 
@@ -25,38 +37,126 @@ pub struct Alignment {
     pub align_state_bytes: usize,
 }
 
-/// FNV-1a over a cell's canonical bytes (cheap, deterministic).
+impl Alignment {
+    /// Total row slots the Δ batch derives from this alignment.
+    pub fn nrows(&self) -> usize {
+        self.pairs.len() + self.removed.len() + self.added.len()
+    }
+    fn clear(&mut self) {
+        self.pairs.clear();
+        self.removed.clear();
+        self.added.clear();
+        self.align_state_bytes = 0;
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// The 64-bit FNV prime 2^40 + 2^8 + 0xb3.
+const FNV_PRIME: u64 = 0x100_0000_01b3;
+/// Byte fed for a NULL key cell (distinct from any value payload start).
+const NULL_TAG: u8 = 0xff;
+
+#[inline]
+fn fnv_bytes(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a over a cell's canonical bytes (cheap, deterministic). Used by
+/// the per-cell reference path; the columnar pass feeds the same bytes.
 fn hash_cell(h: &mut u64, cell: &Cell) {
-    const PRIME: u64 = 0x1000_0000_01b3;
-    let mut feed = |bytes: &[u8]| {
-        for &b in bytes {
-            *h ^= b as u64;
-            *h = h.wrapping_mul(PRIME);
-        }
-    };
     match cell {
-        Cell::Null => feed(&[0xff]),
-        Cell::I64(x) => feed(&x.to_le_bytes()),
-        Cell::F64(x) => feed(&x.to_bits().to_le_bytes()),
-        Cell::Str(s) => feed(s.as_bytes()),
-        Cell::Bool(b) => feed(&[*b as u8]),
-        Cell::Date(d) => feed(&d.to_le_bytes()),
-        Cell::Ts(t) => feed(&t.to_le_bytes()),
+        Cell::Null => *h = fnv_bytes(*h, &[NULL_TAG]),
+        Cell::I64(x) => *h = fnv_bytes(*h, &x.to_le_bytes()),
+        Cell::F64(x) => *h = fnv_bytes(*h, &x.to_bits().to_le_bytes()),
+        Cell::Str(s) => *h = fnv_bytes(*h, s.as_bytes()),
+        Cell::Bool(b) => *h = fnv_bytes(*h, &[*b as u8]),
+        Cell::Date(d) => *h = fnv_bytes(*h, &d.to_le_bytes()),
+        Cell::Ts(t) => *h = fnv_bytes(*h, &t.to_le_bytes()),
         Cell::Dec { mantissa, scale } => {
-            feed(&mantissa.to_le_bytes());
-            feed(&[*scale]);
+            *h = fnv_bytes(*h, &mantissa.to_le_bytes());
+            *h = fnv_bytes(*h, &[*scale]);
         }
     }
 }
 
-fn key_hash(table: &Table, row: usize, key_cols_local: &[(usize, usize)],
-            side_b: bool) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &(a_idx, b_idx) in key_cols_local {
-        let idx = if side_b { b_idx } else { a_idx };
-        hash_cell(&mut h, &table.column(idx).cell(row));
+/// Fold one key column into the per-row hash accumulators: the `Values`
+/// match happens once here, then each variant runs a tight typed loop.
+/// Byte-compatible with `hash_cell` so the columnar and reference
+/// alignments are identical.
+fn hash_key_column(col: &Column, hashes: &mut [u64]) {
+    debug_assert_eq!(col.len(), hashes.len());
+    // One whole-column validity test up front; fully-valid key columns
+    // (the common case) skip the per-row null branch entirely.
+    let dense = col.validity.all_set();
+    macro_rules! typed_pass {
+        ($data:expr, $feed:expr) => {
+            #[allow(clippy::redundant_closure_call)]
+            if dense {
+                for (i, h) in hashes.iter_mut().enumerate() {
+                    *h = ($feed)($data, i, *h);
+                }
+            } else {
+                for (i, h) in hashes.iter_mut().enumerate() {
+                    if col.validity.get(i) {
+                        *h = ($feed)($data, i, *h);
+                    } else {
+                        *h = fnv_bytes(*h, &[NULL_TAG]);
+                    }
+                }
+            }
+        };
     }
-    h
+    match &col.values {
+        Values::I64(v) => {
+            typed_pass!(v, |d: &Vec<i64>, i: usize, h| fnv_bytes(
+                h,
+                &d[i].to_le_bytes()
+            ))
+        }
+        Values::F64(v) => {
+            typed_pass!(v, |d: &Vec<f64>, i: usize, h| fnv_bytes(
+                h,
+                &d[i].to_bits().to_le_bytes()
+            ))
+        }
+        Values::Str(s) => {
+            typed_pass!(s, |d: &crate::data::column::StrData, i: usize, h| {
+                fnv_bytes(h, d.bytes_at(i))
+            })
+        }
+        Values::Bool(b) => {
+            typed_pass!(b, |d: &crate::data::column::Bitmap, i: usize, h| {
+                fnv_bytes(h, &[d.get(i) as u8])
+            })
+        }
+        Values::Date(v) => {
+            typed_pass!(v, |d: &Vec<i32>, i: usize, h| fnv_bytes(
+                h,
+                &d[i].to_le_bytes()
+            ))
+        }
+        Values::Ts(v) => {
+            typed_pass!(v, |d: &Vec<i64>, i: usize, h| fnv_bytes(
+                h,
+                &d[i].to_le_bytes()
+            ))
+        }
+        Values::Dec { mantissa, scale } => {
+            let sc = *scale;
+            for (i, h) in hashes.iter_mut().enumerate() {
+                if col.validity.get(i) {
+                    *h = fnv_bytes(*h, &mantissa[i].to_le_bytes());
+                    *h = fnv_bytes(*h, &[sc]);
+                } else {
+                    *h = fnv_bytes(*h, &[NULL_TAG]);
+                }
+            }
+        }
+    }
 }
 
 fn keys_equal(
@@ -106,11 +206,168 @@ fn dec_f64(mantissa: i128, scale: u8) -> f64 {
     mantissa as f64 / 10f64.powi(scale as i32)
 }
 
+/// Sentinel for "no row" in heads/chains.
+const NONE: u32 = u32::MAX;
+
+/// Reusable alignment scratch: per-row hash accumulators plus the
+/// open-addressed join table. Owned by one worker thread; after warm-up
+/// the buffers are only resized within capacity, so steady-state
+/// alignment performs no heap allocation.
+#[derive(Debug, Default)]
+pub struct AlignScratch {
+    pub a_hash: Vec<u64>,
+    pub b_hash: Vec<u64>,
+    /// Open-addressed slots: (key hash, chain head B-row). A slot is
+    /// empty iff head == NONE (a real entry always has a head row).
+    pub slots: Vec<(u64, u32)>,
+    /// Intrusive chains linking B rows that share a key hash, in
+    /// ascending row order (positional duplicate matching relies on it).
+    pub next: Vec<u32>,
+    pub b_used: Vec<bool>,
+}
+
+impl AlignScratch {
+    /// Bytes currently held by the scratch buffers (capacity-based —
+    /// the real resident footprint).
+    pub fn heap_bytes(&self) -> usize {
+        (self.a_hash.capacity() + self.b_hash.capacity()) * 8
+            + self.slots.capacity() * std::mem::size_of::<(u64, u32)>()
+            + self.next.capacity() * 4
+            + self.b_used.capacity()
+    }
+}
+
+/// Spread a (already FNV-mixed) key hash over the table's power-of-two
+/// index space.
+#[inline]
+fn probe_start(h: u64, mask: usize) -> usize {
+    (h.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) as usize & mask
+}
+
 /// Align shard tables on the aligned key columns.
 ///
 /// Duplicate keys match positionally (i-th A occurrence ↔ i-th B
 /// occurrence), which keeps the outcome multiset deterministic.
+///
+/// Convenience wrapper over [`align_rows_into`] with throwaway scratch.
 pub fn align_rows(
+    a: &Table,
+    b: &Table,
+    aligned: &AlignedSchema,
+) -> Result<Alignment, String> {
+    let mut scratch = AlignScratch::default();
+    let mut out = Alignment::default();
+    align_rows_into(a, b, aligned, &mut scratch, &mut out)?;
+    Ok(out)
+}
+
+/// Columnar hash-join alignment writing into caller-owned buffers.
+pub fn align_rows_into(
+    a: &Table,
+    b: &Table,
+    aligned: &AlignedSchema,
+    scratch: &mut AlignScratch,
+    out: &mut Alignment,
+) -> Result<(), String> {
+    out.clear();
+    let key_cols: Vec<(usize, usize)> = aligned
+        .key_pairs()
+        .into_iter()
+        .map(|i| (aligned.pairs[i].a_idx, aligned.pairs[i].b_idx))
+        .collect();
+    if key_cols.is_empty() {
+        align_by_position(a, b, out);
+        return Ok(());
+    }
+    let (na, nb) = (a.nrows(), b.nrows());
+
+    // Columnar hash pass: one typed sweep per key column per side.
+    scratch.a_hash.clear();
+    scratch.a_hash.resize(na, FNV_OFFSET);
+    scratch.b_hash.clear();
+    scratch.b_hash.resize(nb, FNV_OFFSET);
+    for &(a_idx, b_idx) in &key_cols {
+        hash_key_column(a.column(a_idx), &mut scratch.a_hash);
+        hash_key_column(b.column(b_idx), &mut scratch.b_hash);
+    }
+
+    // Build hash → B-row chains in an open-addressed table. Inserting
+    // rows in reverse and prepending keeps each chain in ascending
+    // B-row order, which the positional duplicate rule requires.
+    let cap = (nb * 2).next_power_of_two().max(16);
+    let mask = cap - 1;
+    scratch.slots.clear();
+    scratch.slots.resize(cap, (0u64, NONE));
+    scratch.next.clear();
+    scratch.next.resize(nb, NONE);
+    for brow in (0..nb).rev() {
+        let h = scratch.b_hash[brow];
+        let mut idx = probe_start(h, mask);
+        loop {
+            let slot = &mut scratch.slots[idx];
+            if slot.1 == NONE {
+                *slot = (h, brow as u32);
+                break;
+            }
+            if slot.0 == h {
+                scratch.next[brow] = slot.1;
+                slot.1 = brow as u32;
+                break;
+            }
+            idx = (idx + 1) & mask;
+        }
+    }
+    // Probe with precomputed A-side hashes; verify full keys per cell
+    // only on hash hits (collision safety).
+    scratch.b_used.clear();
+    scratch.b_used.resize(nb, false);
+    // Snapshot the footprint only after every scratch buffer has been
+    // sized for this shard, so cold and warm calls report identically.
+    out.align_state_bytes = scratch.heap_bytes();
+    for arow in 0..na {
+        let h = scratch.a_hash[arow];
+        let mut matched = None;
+        let mut idx = probe_start(h, mask);
+        loop {
+            let (sh, head) = scratch.slots[idx];
+            if head == NONE {
+                break; // hash absent on the B side
+            }
+            if sh == h {
+                let mut cand = head;
+                while cand != NONE {
+                    if !scratch.b_used[cand as usize]
+                        && keys_equal(a, arow, b, cand as usize, &key_cols)
+                    {
+                        matched = Some(cand);
+                        break;
+                    }
+                    cand = scratch.next[cand as usize];
+                }
+                break;
+            }
+            idx = (idx + 1) & mask;
+        }
+        match matched {
+            Some(brow) => {
+                scratch.b_used[brow as usize] = true;
+                out.pairs.push((arow as u32, brow));
+            }
+            None => out.removed.push(arow as u32),
+        }
+    }
+    for (brow, used) in scratch.b_used.iter().enumerate() {
+        if !used {
+            out.added.push(brow as u32);
+        }
+    }
+    Ok(())
+}
+
+/// Cell-at-a-time reference alignment (the pre-columnar implementation).
+/// Retained as the oracle the property tests compare the hot path
+/// against; not used on any execution path.
+pub fn align_rows_ref(
     a: &Table,
     b: &Table,
     aligned: &AlignedSchema,
@@ -121,13 +378,22 @@ pub fn align_rows(
         .map(|i| (aligned.pairs[i].a_idx, aligned.pairs[i].b_idx))
         .collect();
     if key_cols.is_empty() {
-        return Ok(align_by_position(a, b));
+        let mut out = Alignment::default();
+        align_by_position(a, b, &mut out);
+        return Ok(out);
     }
+    let key_hash = |table: &Table, row: usize, side_b: bool| -> u64 {
+        let mut h = FNV_OFFSET;
+        for &(a_idx, b_idx) in &key_cols {
+            let idx = if side_b { b_idx } else { a_idx };
+            hash_cell(&mut h, &table.column(idx).cell(row));
+        }
+        h
+    };
 
-    // Build hash -> B-row list.
     let mut map: HashMap<u64, Vec<u32>> = HashMap::with_capacity(b.nrows());
     for brow in 0..b.nrows() {
-        let h = key_hash(b, brow, &key_cols, true);
+        let h = key_hash(b, brow, true);
         map.entry(h).or_default().push(brow as u32);
     }
     let align_state_bytes = map.capacity()
@@ -137,7 +403,7 @@ pub fn align_rows(
     let mut out = Alignment { align_state_bytes, ..Default::default() };
     let mut b_used = vec![false; b.nrows()];
     for arow in 0..a.nrows() {
-        let h = key_hash(a, arow, &key_cols, false);
+        let h = key_hash(a, arow, false);
         let mut matched = None;
         if let Some(cands) = map.get(&h) {
             for &brow in cands {
@@ -166,15 +432,11 @@ pub fn align_rows(
 }
 
 /// Surrogate alignment: i-th row of A ↔ i-th row of B.
-fn align_by_position(a: &Table, b: &Table) -> Alignment {
+fn align_by_position(a: &Table, b: &Table, out: &mut Alignment) {
     let n = a.nrows().min(b.nrows());
-    let mut out = Alignment {
-        pairs: (0..n as u32).map(|i| (i, i)).collect(),
-        ..Default::default()
-    };
-    out.removed = (n as u32..a.nrows() as u32).collect();
-    out.added = (n as u32..b.nrows() as u32).collect();
-    out
+    out.pairs.extend((0..n as u32).map(|i| (i, i)));
+    out.removed.extend(n as u32..a.nrows() as u32);
+    out.added.extend(n as u32..b.nrows() as u32);
 }
 
 #[cfg(test)]
@@ -195,6 +457,12 @@ mod tests {
             tb.col(1).push_f64(*v);
         }
         tb.finish()
+    }
+
+    #[test]
+    fn fnv_prime_is_the_64bit_prime() {
+        // 2^40 + 2^8 + 0xb3 — the canonical 64-bit FNV prime.
+        assert_eq!(FNV_PRIME, (1u64 << 40) + (1 << 8) + 0xb3);
     }
 
     #[test]
@@ -299,5 +567,51 @@ mod tests {
         assert!(cells_key_equal(&Cell::I64(42), &Cell::F64(42.0)));
         let r = align_rows(&a, &b, &al).unwrap();
         assert_eq!(r.pairs.len() + r.removed.len(), 1);
+    }
+
+    #[test]
+    fn columnar_matches_reference_on_mixed_keys() {
+        use crate::data::generator::{generate_pair, GenSpec};
+        let (a, b, _) = generate_pair(&GenSpec {
+            rows: 1_500,
+            seed: 99,
+            ..GenSpec::default()
+        });
+        let al = align_schemas(&a.schema, &b.schema).unwrap();
+        let fast = align_rows(&a, &b, &al).unwrap();
+        let slow = align_rows_ref(&a, &b, &al).unwrap();
+        assert_eq!(fast.pairs, slow.pairs);
+        assert_eq!(fast.removed, slow.removed);
+        assert_eq!(fast.added, slow.added);
+    }
+
+    #[test]
+    fn scratch_reuse_is_stable_and_correct() {
+        let a = keyed_table(&[1, 2, 3, 4, 5, 6], &[0.0; 6]);
+        let b = keyed_table(&[2, 4, 6, 7], &[0.0; 4]);
+        let al = align_schemas(&a.schema, &b.schema).unwrap();
+        let mut scratch = AlignScratch::default();
+        let mut out = Alignment::default();
+        align_rows_into(&a, &b, &al, &mut scratch, &mut out).unwrap();
+        let first = out.clone();
+        let caps = (
+            scratch.a_hash.capacity(),
+            scratch.b_hash.capacity(),
+            scratch.slots.capacity(),
+            scratch.next.capacity(),
+            scratch.b_used.capacity(),
+        );
+        for _ in 0..5 {
+            align_rows_into(&a, &b, &al, &mut scratch, &mut out).unwrap();
+            assert_eq!(out, first);
+        }
+        let caps_after = (
+            scratch.a_hash.capacity(),
+            scratch.b_hash.capacity(),
+            scratch.slots.capacity(),
+            scratch.next.capacity(),
+            scratch.b_used.capacity(),
+        );
+        assert_eq!(caps, caps_after, "steady-state must not reallocate");
     }
 }

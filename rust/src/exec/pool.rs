@@ -14,7 +14,8 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::exec::backend::{BatchReport, JobContext, ShardSpec};
-use crate::exec::worker::{execute_shard, CancelSet, MemTracker};
+use crate::engine::delta::ShardScratch;
+use crate::exec::worker::{execute_shard_with, CancelSet, MemTracker};
 use crate::util::mono_secs;
 
 /// Backend-specific execution profile.
@@ -223,6 +224,10 @@ impl Drop for Pool {
 }
 
 fn worker_loop(id: usize, shared: Arc<Shared>) {
+    // One Δ scratch per worker thread, reused across every shard this
+    // worker executes: after the first few shards its buffers reach
+    // steady-state capacity and shard execution stops allocating.
+    let mut scratch = ShardScratch::default();
     loop {
         // Retire if we are above the target worker count and idle.
         let task = {
@@ -254,12 +259,13 @@ fn worker_loop(id: usize, shared: Arc<Shared>) {
         } else {
             &shared.shared_tracker
         };
-        let res = execute_shard(
+        let res = execute_shard_with(
             &shared.ctx,
             task.spec,
             tracker,
             &shared.cancel,
             shared.profile.chunk_rows,
+            &mut scratch,
         );
         shared
             .busy_ns

@@ -6,7 +6,7 @@ use std::collections::HashSet;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::engine::delta::{process_shard, ShardMemStats};
+use crate::engine::delta::{process_shard_with, ShardMemStats, ShardScratch};
 use crate::engine::merge::Merger;
 use crate::engine::verdict::BatchOutcome;
 use crate::exec::backend::{BatchError, JobContext, ShardSpec};
@@ -99,7 +99,9 @@ pub struct ShardExecResult {
     pub io_bytes: u64,
 }
 
-/// Execute one key-aligned range pair with full accounting.
+/// Execute one key-aligned range pair with full accounting, reusing the
+/// caller's per-worker Δ scratch.
+#[allow(clippy::too_many_arguments)]
 fn execute_range(
     ctx: &JobContext,
     shard_id: u64,
@@ -108,6 +110,7 @@ fn execute_range(
     b_off: usize,
     b_len: usize,
     tracker: &Arc<MemTracker>,
+    scratch: &mut ShardScratch,
 ) -> Result<(BatchOutcome, ShardMemStats, u64), BatchError> {
     // Decode (T_read + parse): buffers are accounted as soon as they
     // exist; an estimate-first reservation would hide the real number.
@@ -117,10 +120,15 @@ fn execute_range(
     let _decode_guard = tracker.alloc(decode_bytes)?;
 
     let (outcome, mem) =
-        process_shard(shard_id, &a_tbl, &b_tbl, &ctx.plan, &ctx.exec)
+        process_shard_with(shard_id, &a_tbl, &b_tbl, &ctx.plan, &ctx.exec, scratch)
             .map_err(BatchError::Failed)?;
-    // Alignment state + Δ scratch materialized inside process_shard;
-    // account them post-hoc against the peak (they are freed on return).
+    // Alignment state + Δ scratch live in the reusable per-worker
+    // scratch; account them post-hoc against the peak for the window
+    // where they coexist with the decode buffers. Between shards the
+    // warmed scratch stays resident in the worker (bounded by one
+    // shard's scratch per worker) — that idle residency is deliberately
+    // outside the per-batch ledger; see the ownership notes in
+    // `engine::delta::ShardScratch`.
     let transient = (mem.align_bytes + mem.scratch_bytes) as u64;
     let _transient_guard = tracker.alloc(transient)?;
     Ok((outcome, mem, decode_bytes))
@@ -137,6 +145,22 @@ pub fn execute_shard(
     tracker: &Arc<MemTracker>,
     cancel: &Arc<CancelSet>,
     chunk_rows: Option<usize>,
+) -> ShardExecResult {
+    let mut scratch = ShardScratch::default();
+    execute_shard_with(ctx, spec, tracker, cancel, chunk_rows, &mut scratch)
+}
+
+/// Execute a shard reusing a per-worker Δ scratch. Worker threads keep
+/// one `ShardScratch` alive across shards (see `pool::worker_loop`) so
+/// steady-state execution performs no scratch allocation; `execute_shard`
+/// is the throwaway-scratch convenience wrapper.
+pub fn execute_shard_with(
+    ctx: &JobContext,
+    spec: ShardSpec,
+    tracker: &Arc<MemTracker>,
+    cancel: &Arc<CancelSet>,
+    chunk_rows: Option<usize>,
+    scratch: &mut ShardScratch,
 ) -> ShardExecResult {
     let peak_before = tracker.peak();
     let mut io_bytes = 0u64;
@@ -162,6 +186,7 @@ pub fn execute_shard(
                     spec.b_offset,
                     spec.b_len,
                     tracker,
+                    scratch,
                 )?;
                 mem_total = mem;
                 io_bytes = io;
@@ -185,6 +210,7 @@ pub fn execute_shard(
                         *bo,
                         *bl,
                         tracker,
+                        scratch,
                     )?;
                     io_bytes += io;
                     // Peak is the max over chunks, not the sum — buffers

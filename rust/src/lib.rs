@@ -1,5 +1,10 @@
 //! smartdiff-sched: adaptive execution scheduler for the SmartDiff
 //! differencing engine (CS.DC 2025 reproduction).
+//!
+//! The per-shard Δ work is columnar end-to-end (typed gathers,
+//! vectorized alignment hashing, per-worker scratch reuse) so the
+//! adaptive layer tunes real work rather than per-cell dispatch and
+//! allocator churn — see the "Engine hot path" notes in [`engine`].
 pub mod config;
 pub mod data;
 pub mod engine;

@@ -8,10 +8,10 @@ pub mod rng;
 
 /// Monotonic seconds since process start (cheap wall-clock for telemetry).
 pub fn mono_secs() -> f64 {
+    use std::sync::OnceLock;
     use std::time::Instant;
-    use once_cell::sync::Lazy;
-    static START: Lazy<Instant> = Lazy::new(Instant::now);
-    START.elapsed().as_secs_f64()
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
 }
 
 /// Current process RSS in bytes from /proc/self/statm (Linux). Ground

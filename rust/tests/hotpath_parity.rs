@@ -1,0 +1,263 @@
+//! Property tests pinning the columnar Δ hot path to the retained
+//! per-cell reference implementation: across random schemas, key types,
+//! null patterns, and perturbation mixes, `align_rows`/`process_shard`
+//! must produce bit-identical `Alignment` and `BatchOutcome` to
+//! `align_rows_ref`/`process_shard_ref`. A separate capacity-stability
+//! test proves the per-worker `ShardScratch` stops allocating once
+//! warmed up (the ISSUE-1 steady-state guarantee).
+
+use std::sync::Arc;
+
+use smartdiff_sched::config::EngineConfig;
+use smartdiff_sched::data::generator::{generate_pair, GenSpec};
+use smartdiff_sched::data::schema::{ColumnType, Field, Schema};
+use smartdiff_sched::data::table::{Table, TableBuilder};
+use smartdiff_sched::engine::comparators::{NativeExec, NumericDeltaExec};
+use smartdiff_sched::engine::delta::{
+    process_shard, process_shard_ref, process_shard_with, JobPlan, ShardScratch,
+};
+use smartdiff_sched::engine::row_align::{align_rows, align_rows_ref};
+use smartdiff_sched::engine::schema_align::align_schemas;
+use smartdiff_sched::util::prop::forall;
+use smartdiff_sched::util::rng::Rng;
+use smartdiff_sched::prop_assert_eq;
+
+fn native() -> Arc<dyn NumericDeltaExec> {
+    Arc::new(NativeExec)
+}
+
+/// Generator-driven parity: mixed-type schemas, random null rates and
+/// perturbation mixes.
+#[test]
+fn columnar_shard_matches_reference_on_generated_pairs() {
+    forall("columnar Δ == per-cell Δ (generator)", 25, |rng| {
+        let spec = GenSpec {
+            rows: rng.range_usize(50, 600),
+            extra_cols: rng.range_usize(0, 11),
+            null_rate: rng.uniform(0.0, 0.4),
+            change_rate: rng.uniform(0.0, 0.3),
+            remove_rate: rng.uniform(0.0, 0.1),
+            add_rate: rng.uniform(0.0, 0.1),
+            value_noise: rng.uniform(0.01, 0.5),
+            str_len: rng.range_usize(1, 40),
+            seed: rng.next_u64(),
+        };
+        let (a, b, _) = generate_pair(&spec);
+        let aligned = align_schemas(&a.schema, &b.schema)
+            .map_err(|e| format!("align_schemas: {e}"))?;
+
+        let fast_al = align_rows(&a, &b, &aligned).map_err(|e| e.to_string())?;
+        let ref_al =
+            align_rows_ref(&a, &b, &aligned).map_err(|e| e.to_string())?;
+        prop_assert_eq!(fast_al.pairs, ref_al.pairs, "alignment pairs");
+        prop_assert_eq!(fast_al.removed, ref_al.removed, "alignment removed");
+        prop_assert_eq!(fast_al.added, ref_al.added, "alignment added");
+
+        let plan = JobPlan::new(aligned, EngineConfig::default());
+        let exec = native();
+        let (fast, _) = process_shard(7, &a, &b, &plan, &exec)
+            .map_err(|e| e.to_string())?;
+        let (slow, _) = process_shard_ref(7, &a, &b, &plan, &exec)
+            .map_err(|e| e.to_string())?;
+        prop_assert_eq!(fast, slow, "BatchOutcome (spec {:?})", spec);
+        Ok(())
+    });
+}
+
+const KEY_TYPES: [ColumnType; 7] = [
+    ColumnType::Int64,
+    ColumnType::Float64,
+    ColumnType::Utf8,
+    ColumnType::Bool,
+    ColumnType::Date,
+    ColumnType::Timestamp,
+    ColumnType::Decimal { scale: 2 },
+];
+
+fn push_key_value(tb: &mut TableBuilder, col: usize, ty: ColumnType, k: i64) {
+    match ty {
+        ColumnType::Int64 => tb.col(col).push_i64(k),
+        ColumnType::Float64 => tb.col(col).push_f64(k as f64 * 0.5),
+        ColumnType::Utf8 => tb.col(col).push_str(&format!("key-{k}")),
+        ColumnType::Bool => tb.col(col).push_bool(k % 2 == 0),
+        ColumnType::Date => tb.col(col).push_date(k as i32),
+        ColumnType::Timestamp => tb.col(col).push_ts(k * 1_000_000),
+        ColumnType::Decimal { .. } => tb.col(col).push_dec(k as i128 * 100),
+    }
+}
+
+/// Build one side: `rows` rows drawing keys from a small pool (forcing
+/// duplicates and partial overlap), with nulls in both keys and payload.
+fn random_side(
+    rng: &mut Rng,
+    schema: &Schema,
+    key_tys: &[ColumnType],
+    rows: usize,
+    key_pool: i64,
+) -> Table {
+    let mut tb = TableBuilder::new(schema.clone());
+    for _ in 0..rows {
+        for (c, ty) in key_tys.iter().enumerate() {
+            if rng.chance(0.08) {
+                tb.col(c).push_null();
+            } else {
+                push_key_value(&mut tb, c, *ty, rng.range_i64(0, key_pool));
+            }
+        }
+        let base = key_tys.len();
+        if rng.chance(0.2) {
+            tb.col(base).push_null();
+        } else {
+            tb.col(base).push_f64(rng.normal());
+        }
+        if rng.chance(0.2) {
+            tb.col(base + 1).push_null();
+        } else {
+            tb.col(base + 1).push_str(&rng.alnum(rng.range_usize(0, 9) + 1));
+        }
+        if rng.chance(0.2) {
+            tb.col(base + 2).push_null();
+        } else {
+            tb.col(base + 2).push_bool(rng.chance(0.5));
+        }
+    }
+    tb.finish()
+}
+
+/// Adversarial alignment parity: random key column types (including
+/// strings, bools, decimals), composite keys, null keys, and heavy key
+/// duplication — the cases where hash chains and positional duplicate
+/// matching actually bite.
+#[test]
+fn columnar_alignment_matches_reference_on_random_keys() {
+    forall("columnar align == per-cell align (random keys)", 40, |rng| {
+        let nkeys = rng.range_usize(1, 3);
+        let key_tys: Vec<ColumnType> =
+            (0..nkeys).map(|_| *rng.choose(&KEY_TYPES)).collect();
+        let mut fields: Vec<Field> = key_tys
+            .iter()
+            .enumerate()
+            .map(|(i, ty)| Field::key(&format!("k{i}"), *ty))
+            .collect();
+        fields.push(Field::new("v", ColumnType::Float64));
+        fields.push(Field::new("s", ColumnType::Utf8));
+        fields.push(Field::new("f", ColumnType::Bool));
+        let schema = Schema::new(fields);
+
+        let key_pool = rng.range_i64(1, 30);
+        let a = random_side(
+            rng,
+            &schema,
+            &key_tys,
+            rng.range_usize(0, 80),
+            key_pool,
+        );
+        let b = random_side(
+            rng,
+            &schema,
+            &key_tys,
+            rng.range_usize(0, 80),
+            key_pool,
+        );
+        let aligned = align_schemas(&a.schema, &b.schema)
+            .map_err(|e| format!("align_schemas: {e}"))?;
+
+        let fast = align_rows(&a, &b, &aligned).map_err(|e| e.to_string())?;
+        let slow =
+            align_rows_ref(&a, &b, &aligned).map_err(|e| e.to_string())?;
+        prop_assert_eq!(fast.pairs, slow.pairs, "pairs (keys {:?})", key_tys);
+        prop_assert_eq!(fast.removed, slow.removed, "removed");
+        prop_assert_eq!(fast.added, slow.added, "added");
+
+        // Full Δ parity on the same adversarial tables.
+        let plan = JobPlan::new(aligned, EngineConfig::default());
+        let exec = native();
+        let (fo, _) =
+            process_shard(1, &a, &b, &plan, &exec).map_err(|e| e.to_string())?;
+        let (so, _) = process_shard_ref(1, &a, &b, &plan, &exec)
+            .map_err(|e| e.to_string())?;
+        prop_assert_eq!(fo, so, "BatchOutcome (keys {:?})", key_tys);
+        Ok(())
+    });
+}
+
+fn scratch_capacities(s: &ShardScratch) -> Vec<usize> {
+    vec![
+        s.batch.a.capacity(),
+        s.batch.b.capacity(),
+        s.batch.na.capacity(),
+        s.batch.nb.capacity(),
+        s.batch.ra.capacity(),
+        s.batch.rb.capacity(),
+        s.diff.verdicts.capacity(),
+        s.diff.col_changed.capacity(),
+        s.diff.col_maxabs.capacity(),
+        s.diff.changed_rows.capacity(),
+        s.row_diff.capacity(),
+        s.alignment.pairs.capacity(),
+        s.alignment.removed.capacity(),
+        s.alignment.added.capacity(),
+        s.align.a_hash.capacity(),
+        s.align.b_hash.capacity(),
+        s.align.slots.capacity(),
+        s.align.next.capacity(),
+        s.align.b_used.capacity(),
+    ]
+}
+
+/// Steady-state allocation freedom: after warming the scratch on the
+/// largest shard, processing further shards of equal-or-smaller size
+/// must not change any buffer capacity — i.e. `process_shard_with`
+/// performs no scratch allocation in steady state, while the memory
+/// stats stay exact and outcomes stay bit-identical to fresh-scratch
+/// execution.
+#[test]
+fn shard_scratch_is_allocation_free_in_steady_state() {
+    let (a, b, _) =
+        generate_pair(&GenSpec { rows: 3_000, seed: 55, ..GenSpec::default() });
+    let aligned = align_schemas(&a.schema, &b.schema).unwrap();
+    let plan = JobPlan::new(aligned, EngineConfig::default());
+    let exec = native();
+
+    // A mix of shard shapes, processed once as warm-up (the first,
+    // whole-pair shard dominates every buffer dimension; the disjoint
+    // last pair maximizes the removed/added output vectors).
+    let shards: Vec<(Table, Table)> = vec![
+        (a.slice(0, a.nrows()), b.slice(0, b.nrows())),
+        (a.slice(0, 1_000), b.slice(0, 1_000)),
+        (a.slice(500, 2_000), b.slice(400, 2_100)),
+        (a.slice(2_900, 100), b.slice(0, 50)),
+    ];
+    let mut scratch = ShardScratch::default();
+    let (whole, whole_mem) =
+        process_shard_with(0, &a, &b, &plan, &exec, &mut scratch).unwrap();
+    for (sa, sb) in &shards {
+        process_shard_with(0, sa, sb, &plan, &exec, &mut scratch).unwrap();
+    }
+    let caps = scratch_capacities(&scratch);
+
+    // Steady state: repeated rounds over every shape must not change a
+    // single buffer capacity — zero scratch allocation.
+    for round in 0..3 {
+        for (i, (sa, sb)) in shards.iter().enumerate() {
+            let (out, _mem) =
+                process_shard_with(0, sa, sb, &plan, &exec, &mut scratch)
+                    .unwrap();
+            // Same outcome as a fresh-scratch run: reuse is invisible.
+            let (fresh, _) = process_shard(0, sa, sb, &plan, &exec).unwrap();
+            assert_eq!(out, fresh, "round {round} shard {i}");
+            assert_eq!(
+                scratch_capacities(&scratch),
+                caps,
+                "scratch reallocated on round {round} shard {i}"
+            );
+        }
+    }
+
+    // Re-processing the warm-up shard reproduces outcome AND exact mem
+    // accounting (the scheduler's memory model input).
+    let (again, mem_again) =
+        process_shard_with(0, &a, &b, &plan, &exec, &mut scratch).unwrap();
+    assert_eq!(again, whole);
+    assert_eq!(mem_again, whole_mem, "ShardMemStats must stay exact");
+}
