@@ -11,28 +11,29 @@
 
 use std::sync::Arc;
 
-use smartdiff_sched::config::{DeltaPath, PolicyKind, SchedulerConfig};
+use smartdiff_sched::api::{DiffSession, JobBuilder};
+use smartdiff_sched::config::{Caps, DeltaPath, PolicyKind};
 use smartdiff_sched::data::generator::{generate_pair, GenSpec};
 use smartdiff_sched::data::io::InMemorySource;
 use smartdiff_sched::data::tpch::{generate_output_pair, TpchQuery};
-use smartdiff_sched::sched::scheduler::{run_job, JobResult};
+use smartdiff_sched::sched::scheduler::JobResult;
 
-fn base_cfg() -> SchedulerConfig {
-    let mut cfg = SchedulerConfig::default();
-    cfg.caps.cpu_cap = std::thread::available_parallelism()
-        .map(|n| n.get().max(2))
-        .unwrap_or(2);
-    cfg.caps.mem_cap_bytes = 8_000_000_000;
-    cfg.policy.b_min = 2_000;
-    cfg.engine.atol = 0.0;
-    cfg.engine.delta_path =
-        if std::path::Path::new("artifacts/manifest.json").exists() {
-            DeltaPath::Pjrt
-        } else {
-            eprintln!("WARNING: artifacts/ missing, falling back to native Δ");
-            DeltaPath::Native
-        };
-    cfg
+fn budget() -> Caps {
+    Caps {
+        mem_cap_bytes: 8_000_000_000,
+        cpu_cap: std::thread::available_parallelism()
+            .map(|n| n.get().max(2))
+            .unwrap_or(2),
+    }
+}
+
+fn delta_path() -> DeltaPath {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        DeltaPath::Pjrt
+    } else {
+        eprintln!("WARNING: artifacts/ missing, falling back to native Δ");
+        DeltaPath::Native
+    }
 }
 
 fn run_policy(
@@ -41,17 +42,23 @@ fn run_policy(
     a: &smartdiff_sched::data::table::Table,
     b: &smartdiff_sched::data::table::Table,
 ) -> JobResult {
-    let mut cfg = base_cfg();
-    cfg.policy_kind = kind;
-    cfg.telemetry_path =
-        Some(format!("/tmp/smartdiff_e2e_{}.jsonl", name.replace(' ', "_")));
-    let t0 = std::time::Instant::now();
-    let r = run_job(
-        &cfg,
+    let session = DiffSession::new(budget());
+    let job = JobBuilder::new(
         Arc::new(InMemorySource::new(a.clone())),
         Arc::new(InMemorySource::new(b.clone())),
     )
-    .expect("job");
+    .policy(kind)
+    .b_min(2_000)
+    .atol(0.0)
+    .delta_path(delta_path())
+    .telemetry(format!("/tmp/smartdiff_e2e_{}.jsonl", name.replace(' ', "_")))
+    .build()
+    .expect("valid job");
+    let t0 = std::time::Instant::now();
+    let mut handle = session.submit(job).expect("submit");
+    let r = handle.join().expect("job");
+    let events = handle.events();
+    assert!(events.iter().any(|e| e.kind() == "admitted"));
     println!(
         "  {name:<10} p95={:>7.1} ms  p50={:>7.1} ms  thr={:>9.0} rows/s  \
          peak={:>6.1} MB  batches={:<4} reconfigs={:<3} wall={:.2}s",

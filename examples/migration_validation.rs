@@ -15,12 +15,12 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use smartdiff_sched::config::SchedulerConfig;
+use smartdiff_sched::api::{DiffSession, JobBuilder};
+use smartdiff_sched::config::Caps;
 use smartdiff_sched::data::column::Cell;
 use smartdiff_sched::data::io::{write_csv, CsvFileSource};
 use smartdiff_sched::data::schema::{ColumnType, Field, Schema};
 use smartdiff_sched::data::table::{Table, TableBuilder};
-use smartdiff_sched::sched::scheduler::run_job;
 use smartdiff_sched::util::rng::Rng;
 
 const ROWS: usize = 20_000;
@@ -130,11 +130,16 @@ fn main() {
     let a = CsvFileSource::open(&src_path, source_schema()).expect("open src");
     let b = CsvFileSource::open(&dst_path, target_schema()).expect("open dst");
 
-    let mut cfg = SchedulerConfig::default();
-    cfg.caps.cpu_cap = 2;
-    cfg.caps.mem_cap_bytes = 512_000_000;
-    cfg.policy.b_min = 500;
-    let result = run_job(&cfg, Arc::new(a), Arc::new(b)).expect("diff");
+    let session = DiffSession::new(Caps {
+        mem_cap_bytes: 512_000_000,
+        cpu_cap: 2,
+    });
+    let job = JobBuilder::new(Arc::new(a), Arc::new(b))
+        .b_min(500)
+        .build()
+        .expect("valid job");
+    let mut handle = session.submit(job).expect("submit");
+    let result = handle.join().expect("diff");
 
     println!("\n== validation report ==\n{}", result.report.summary());
     for (name, agg) in &result.report.columns {

@@ -1,19 +1,26 @@
-//! Quickstart: diff two small tables with the adaptive scheduler.
+//! Quickstart: diff two small tables through the `DiffSession` service
+//! API.
 //!
 //!     cargo run --release --example quickstart
 //!
-//! Generates a synthetic pair (B = A + perturbations), runs the full
-//! pipeline — pre-flight profile → working-set gate → adaptive (b,k)
-//! control → Δ → merge — and prints the diff report plus scheduler
-//! stats. Uses the PJRT numeric-Δ path when `artifacts/` is built,
-//! falling back to the native path otherwise.
+//! Walkthrough: build a session owning a machine budget (memory + CPU
+//! caps), describe the job with the validating `JobBuilder`, `submit`
+//! for a non-blocking `JobHandle`, watch typed `JobEvent`s and
+//! `JobProgress` while the adaptive scheduler runs (pre-flight profile
+//! → admission → working-set gate → adaptive (b,k) control → Δ →
+//! merge), then `join` for the report. Uses the PJRT numeric-Δ path
+//! when `artifacts/` is built, falling back to the native path
+//! otherwise.
+//!
+//! (The legacy one-shot `run_job` still exists as a deprecated-but-
+//! stable shim over exactly this flow.)
 
 use std::sync::Arc;
 
-use smartdiff_sched::config::{DeltaPath, SchedulerConfig};
+use smartdiff_sched::api::{DiffSession, JobBuilder};
+use smartdiff_sched::config::{Caps, DeltaPath};
 use smartdiff_sched::data::generator::{generate_pair, GenSpec};
 use smartdiff_sched::data::io::InMemorySource;
-use smartdiff_sched::sched::scheduler::run_job;
 
 fn main() {
     // 1. Make a workload: 50k rows, mixed types, ~5% changed rows.
@@ -36,32 +43,67 @@ fn main() {
         truth.removed
     );
 
-    // 2. Configure the scheduler. Caps are per-job budget knobs; the
-    //    defaults are the paper's policy (κ=0.7, η=0.9, γ=0.6, τ=2, m=2).
-    let mut cfg = SchedulerConfig::default();
-    cfg.caps.cpu_cap = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(2);
-    cfg.caps.mem_cap_bytes = 4_000_000_000; // 4 GB job budget
-    cfg.policy.b_min = 1_000;
-    cfg.engine.delta_path =
-        if std::path::Path::new("artifacts/manifest.json").exists() {
-            DeltaPath::Pjrt
-        } else {
-            eprintln!("artifacts/ not built; using native Δ path");
-            DeltaPath::Native
-        };
-    cfg.engine.atol = 1e-9; // tolerate float noise below 1e-9
+    // 2. Open a session owning the machine budget. The session admits
+    //    any number of concurrent jobs against these caps; here we
+    //    submit one.
+    let session = DiffSession::new(Caps {
+        mem_cap_bytes: 4_000_000_000, // 4 GB budget
+        cpu_cap: std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(2),
+    });
 
-    // 3. Run.
-    let result = run_job(
-        &cfg,
+    // 3. Describe the job. `build()` validates every knob (same checks
+    //    as TOML loading) and returns a typed SchedError naming the
+    //    offending field on mistakes. Controller defaults are the
+    //    paper's policy (κ=0.7, η=0.9, γ=0.6, τ=2, m=2).
+    let delta_path = if std::path::Path::new("artifacts/manifest.json").exists() {
+        DeltaPath::Pjrt
+    } else {
+        eprintln!("artifacts/ not built; using native Δ path");
+        DeltaPath::Native
+    };
+    let job = JobBuilder::new(
         Arc::new(InMemorySource::new(a)),
         Arc::new(InMemorySource::new(b)),
     )
-    .expect("diff job");
+    .b_min(1_000)
+    .delta_path(delta_path)
+    .atol(1e-9) // tolerate float noise below 1e-9
+    .build()
+    .expect("valid job config");
 
-    // 4. Report.
+    // 4. Submit — non-blocking. Poll progress until the job finishes.
+    let mut handle = session.submit(job).expect("submit");
+    while !handle.is_finished() {
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let p = handle.progress();
+        if p.rows_total > 0 {
+            eprintln!(
+                "  ... {}/{} rows, (b,k)=({},{}), rss={:.1} MB",
+                p.rows_done,
+                p.rows_total,
+                p.current_b,
+                p.current_k,
+                p.rss_bytes as f64 / 1e6
+            );
+        }
+    }
+
+    // 5. Typed event stream: admission decision, reconfigs,
+    //    backpressure, straggler mitigations, completion.
+    println!("\n== events ==");
+    let events = handle.events();
+    for ev in &events {
+        println!("  {ev}");
+    }
+    assert!(
+        events.iter().any(|e| e.kind() == "admitted"),
+        "solo job must be admitted immediately"
+    );
+
+    // 6. Join for the report.
+    let result = handle.join().expect("diff job");
     println!("\n== diff report ==\n{}", result.report.summary());
     println!("\nper-column changes:");
     for (name, agg) in &result.report.columns {

@@ -13,20 +13,22 @@
 
 use std::sync::Arc;
 
-use smartdiff_sched::config::SchedulerConfig;
+use smartdiff_sched::api::{DiffSession, JobBuilder};
+use smartdiff_sched::config::Caps;
 use smartdiff_sched::data::io::InMemorySource;
 use smartdiff_sched::data::tpch::{generate_output_pair, TpchQuery};
-use smartdiff_sched::sched::scheduler::run_job;
 
 fn main() {
-    let mut cfg = SchedulerConfig::default();
-    cfg.caps.cpu_cap = 2;
-    // Small cap so the working-set gate has something to decide at demo
-    // scale: the estimator's fixed-buffer floor (β ≈ 150 MB) plus the
-    // growing result must cross κ·M_cap = 168 MB mid-week. (The paper's
-    // 64 GB cap corresponds to tens of millions of wide rows.)
-    cfg.caps.mem_cap_bytes = 240_000_000;
-    cfg.policy.b_min = 500;
+    // One long-lived session monitors the whole week: each nightly diff
+    // is submitted into the same shared budget. Small cap so the
+    // working-set gate has something to decide at demo scale: the
+    // estimator's fixed-buffer floor (β ≈ 150 MB) plus the growing
+    // result must cross κ·M_cap = 168 MB mid-week. (The paper's 64 GB
+    // cap corresponds to tens of millions of wide rows.)
+    let session = DiffSession::new(Caps {
+        mem_cap_bytes: 240_000_000,
+        cpu_cap: 2,
+    });
 
     println!("night | rows   | ws(MB) | thr(MB) | backend  | changed | added | removed | p95(ms)");
     let mut prev_backend = String::new();
@@ -42,12 +44,15 @@ fn main() {
             1000 + night,  // fresh seed per night
         );
         let _ = truth;
-        let result = run_job(
-            &cfg,
+        let job = JobBuilder::new(
             Arc::new(InMemorySource::new(a)),
             Arc::new(InMemorySource::new(b)),
         )
-        .expect("nightly diff");
+        .b_min(500)
+        .build()
+        .expect("valid job");
+        let mut handle = session.submit(job).expect("submit");
+        let result = handle.join().expect("nightly diff");
 
         let g = result.stats.gate.expect("gate decision");
         println!(

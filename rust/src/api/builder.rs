@@ -1,0 +1,216 @@
+//! `JobBuilder`: the typed, validating way to describe a diff job.
+//!
+//! Replaces hand-poking `SchedulerConfig` fields before calling the old
+//! one-shot `run_job`. Every knob is a fluent setter; `build()` runs the
+//! same validation as `SchedulerConfig::validate()` and rejects invalid
+//! configurations with a [`SchedError::InvalidConfig`] naming the exact
+//! field — builder and TOML loading share one validation surface.
+
+use std::sync::Arc;
+
+use crate::api::error::SchedError;
+use crate::config::{BackendChoice, DeltaPath, PolicyKind, SchedulerConfig};
+use crate::data::io::TableSource;
+
+/// A validated, ready-to-submit job: sources + configuration.
+///
+/// Produced by [`JobBuilder::build`]; consumed by
+/// [`DiffSession::submit`](crate::api::DiffSession::submit). The
+/// session owns the resource caps — any `caps` carried in the job's
+/// config are replaced by the session's budget at admission.
+pub struct JobSpec {
+    pub(crate) cfg: SchedulerConfig,
+    pub(crate) a: Arc<dyn TableSource>,
+    pub(crate) b: Arc<dyn TableSource>,
+}
+
+impl JobSpec {
+    /// The job's effective configuration (caps are superseded by the
+    /// session's at submit time).
+    pub fn config(&self) -> &SchedulerConfig {
+        &self.cfg
+    }
+    /// Aligned-row universe of the job: max(|A|, |B|).
+    pub fn rows(&self) -> usize {
+        self.a.nrows().max(self.b.nrows())
+    }
+}
+
+/// Fluent builder for [`JobSpec`].
+///
+/// ```text
+/// let job = JobBuilder::new(a, b)
+///     .policy(PolicyKind::Adaptive)
+///     .b_min(1_000)
+///     .atol(1e-9)
+///     .telemetry("run.jsonl")
+///     .build()?;
+/// ```
+pub struct JobBuilder {
+    cfg: SchedulerConfig,
+    a: Arc<dyn TableSource>,
+    b: Arc<dyn TableSource>,
+}
+
+impl JobBuilder {
+    /// Start from the paper-default configuration.
+    pub fn new(a: Arc<dyn TableSource>, b: Arc<dyn TableSource>) -> Self {
+        JobBuilder { cfg: SchedulerConfig::default(), a, b }
+    }
+
+    /// Start from an existing configuration (e.g. loaded from TOML).
+    pub fn from_config(
+        cfg: SchedulerConfig,
+        a: Arc<dyn TableSource>,
+        b: Arc<dyn TableSource>,
+    ) -> Self {
+        JobBuilder { cfg, a, b }
+    }
+
+    // --- execution choices ---
+
+    /// Backend selection (`Auto` = working-set gate, Eq. 1).
+    pub fn backend(mut self, backend: BackendChoice) -> Self {
+        self.cfg.backend = backend;
+        self
+    }
+    /// Tuning policy driving (b, k).
+    pub fn policy(mut self, kind: PolicyKind) -> Self {
+        self.cfg.policy_kind = kind;
+        self
+    }
+    /// Numeric-Δ execution path (native / PJRT / cross-check).
+    pub fn delta_path(mut self, path: DeltaPath) -> Self {
+        self.cfg.engine.delta_path = path;
+        self
+    }
+    /// Directory holding AOT PJRT artifacts.
+    pub fn artifact_dir(mut self, dir: impl Into<String>) -> Self {
+        self.cfg.engine.artifact_dir = dir.into();
+        self
+    }
+
+    // --- comparator tolerances ---
+
+    pub fn atol(mut self, atol: f64) -> Self {
+        self.cfg.engine.atol = atol;
+        self
+    }
+    pub fn rtol(mut self, rtol: f64) -> Self {
+        self.cfg.engine.rtol = rtol;
+        self
+    }
+    pub fn string_ci(mut self, ci: bool) -> Self {
+        self.cfg.engine.string_ci = ci;
+        self
+    }
+    pub fn ts_tolerance_us(mut self, us: i64) -> Self {
+        self.cfg.engine.ts_tolerance_us = us;
+        self
+    }
+
+    // --- controller / gating knobs (validated ranges) ---
+
+    /// Working-set gate safety factor κ (Eq. 1).
+    pub fn kappa(mut self, kappa: f64) -> Self {
+        self.cfg.policy.kappa = kappa;
+        self
+    }
+    /// Memory guard η (Eq. 4).
+    pub fn eta(mut self, eta: f64) -> Self {
+        self.cfg.policy.eta = eta;
+        self
+    }
+    /// Multiplicative backoff γ.
+    pub fn gamma(mut self, gamma: f64) -> Self {
+        self.cfg.policy.gamma = gamma;
+        self
+    }
+    /// Tail trigger τ (act when p95/p50 > τ).
+    pub fn tau(mut self, tau: f64) -> Self {
+        self.cfg.policy.tau = tau;
+        self
+    }
+    /// Batch-size bounds.
+    pub fn b_min(mut self, b_min: usize) -> Self {
+        self.cfg.policy.b_min = b_min;
+        self
+    }
+    pub fn b_max(mut self, b_max: usize) -> Self {
+        self.cfg.policy.b_max = b_max;
+        self
+    }
+    /// Minimum worker count.
+    pub fn k_min(mut self, k_min: usize) -> Self {
+        self.cfg.policy.k_min = k_min;
+        self
+    }
+
+    // --- bookkeeping ---
+
+    /// JSON-lines telemetry sink for this job.
+    pub fn telemetry(mut self, path: impl Into<String>) -> Self {
+        self.cfg.telemetry_path = Some(path.into());
+        self
+    }
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+    /// Pre-flight sample bounds (max rows, fraction of the job).
+    pub fn preflight_sample(mut self, max_rows: usize, fraction: f64) -> Self {
+        self.cfg.preflight_max_rows = max_rows;
+        self.cfg.preflight_fraction = fraction;
+        self
+    }
+
+    /// Validate and freeze the job. Rejects exactly the configurations
+    /// `SchedulerConfig::validate()` rejects, with the same
+    /// [`SchedError::InvalidConfig`] field names.
+    pub fn build(self) -> Result<JobSpec, SchedError> {
+        self.cfg.validate()?;
+        Ok(JobSpec { cfg: self.cfg, a: self.a, b: self.b })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generator::{generate_pair, GenSpec};
+    use crate::data::io::InMemorySource;
+
+    fn sources() -> (Arc<InMemorySource>, Arc<InMemorySource>) {
+        let (a, b, _) =
+            generate_pair(&GenSpec { rows: 100, seed: 1, ..GenSpec::default() });
+        (Arc::new(InMemorySource::new(a)), Arc::new(InMemorySource::new(b)))
+    }
+
+    #[test]
+    fn builder_applies_knobs() {
+        let (a, b) = sources();
+        let job = JobBuilder::new(a, b)
+            .backend(BackendChoice::InMem)
+            .policy(PolicyKind::Fixed { b: 500, k: 2 })
+            .delta_path(DeltaPath::Native)
+            .atol(1e-6)
+            .b_min(100)
+            .telemetry("x.jsonl")
+            .seed(9)
+            .build()
+            .unwrap();
+        let cfg = job.config();
+        assert_eq!(cfg.backend, BackendChoice::InMem);
+        assert_eq!(cfg.engine.atol, 1e-6);
+        assert_eq!(cfg.policy.b_min, 100);
+        assert_eq!(cfg.telemetry_path.as_deref(), Some("x.jsonl"));
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(job.rows(), 100);
+    }
+
+    #[test]
+    fn build_rejects_invalid_with_field_name() {
+        let (a, b) = sources();
+        let err = JobBuilder::new(a, b).eta(1.5).build().unwrap_err();
+        assert_eq!(err.field(), Some("policy.eta"));
+    }
+}

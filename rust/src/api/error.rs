@@ -1,0 +1,149 @@
+//! `SchedError`: the typed error surface of the public API.
+//!
+//! Every fallible entry point of the crate — config loading and
+//! validation, schema alignment, backend/runtime construction, job
+//! submission and `JobHandle::join` — returns `SchedError` instead of
+//! the stringly-typed `Result<_, String>` the crate grew up with.
+//! Variants carry the structured context a service caller needs to
+//! dispatch on (which config field, which shard, what cause chain);
+//! `Display` renders the human-readable message the old strings held.
+
+use std::error::Error;
+use std::fmt;
+
+use crate::exec::backend::BatchError;
+
+/// Typed error for the `DiffSession` service API and everything it
+/// composes. Implements [`std::error::Error`] with a `source()` chain
+/// (`ShardFailed` chains into [`BatchError`], which can chain further).
+#[derive(Debug, Clone)]
+pub enum SchedError {
+    /// A configuration field failed validation. `field` is the full
+    /// TOML-style key path (e.g. `policy.eta`), identical between
+    /// `SchedulerConfig::validate()` and `JobBuilder::build()`.
+    InvalidConfig { field: String, message: String },
+    /// A config file / TOML document / telemetry log failed to parse.
+    /// `context` names the input (a path, or `<inline>`).
+    Parse { context: String, message: String },
+    /// Schema alignment failed (no key mapping / incompatible types).
+    SchemaAlign { message: String },
+    /// Backend or Δ-runtime construction failed (e.g. PJRT artifacts
+    /// missing or the PJRT client unavailable in this build).
+    Runtime { message: String },
+    /// Filesystem I/O failure (config read, telemetry sink, CSV).
+    Io { path: String, message: String },
+    /// A shard failed permanently (original attempt and its retry).
+    ShardFailed { shard_id: u64, source: BatchError },
+    /// The job was cancelled through its `JobHandle`.
+    Cancelled,
+    /// The operation is not available through this entry point.
+    Unsupported { message: String },
+}
+
+impl SchedError {
+    pub fn invalid(field: impl Into<String>, message: impl Into<String>) -> Self {
+        SchedError::InvalidConfig { field: field.into(), message: message.into() }
+    }
+    pub fn parse(context: impl Into<String>, message: impl Into<String>) -> Self {
+        SchedError::Parse { context: context.into(), message: message.into() }
+    }
+    pub fn schema(message: impl Into<String>) -> Self {
+        SchedError::SchemaAlign { message: message.into() }
+    }
+    pub fn runtime(message: impl Into<String>) -> Self {
+        SchedError::Runtime { message: message.into() }
+    }
+    pub fn io(path: impl Into<String>, message: impl Into<String>) -> Self {
+        SchedError::Io { path: path.into(), message: message.into() }
+    }
+    pub fn unsupported(message: impl Into<String>) -> Self {
+        SchedError::Unsupported { message: message.into() }
+    }
+
+    /// The config field path, when this is an `InvalidConfig`.
+    pub fn field(&self) -> Option<&str> {
+        match self {
+            SchedError::InvalidConfig { field, .. } => Some(field),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for SchedError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SchedError::InvalidConfig { field, message } => {
+                write!(f, "invalid config: {field}: {message}")
+            }
+            SchedError::Parse { context, message } => {
+                write!(f, "parse {context}: {message}")
+            }
+            SchedError::SchemaAlign { message } => {
+                write!(f, "schema alignment: {message}")
+            }
+            SchedError::Runtime { message } => write!(f, "runtime: {message}"),
+            SchedError::Io { path, message } => write!(f, "io {path}: {message}"),
+            SchedError::ShardFailed { shard_id, source } => {
+                write!(f, "shard {shard_id} failed permanently: {source}")
+            }
+            SchedError::Cancelled => write!(f, "job cancelled"),
+            SchedError::Unsupported { message } => {
+                write!(f, "unsupported: {message}")
+            }
+        }
+    }
+}
+
+impl Error for SchedError {
+    fn source(&self) -> Option<&(dyn Error + 'static)> {
+        match self {
+            SchedError::ShardFailed { source, .. } => {
+                Some(source as &(dyn Error + 'static))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Compatibility bridge: lets `?` lift a `SchedError` into the
+/// `Result<_, String>` signatures that remain in binary-internal plumbing
+/// (the hand-rolled CLI). Library APIs should prefer `SchedError`.
+impl From<SchedError> for String {
+    fn from(e: SchedError) -> String {
+        e.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_field() {
+        let e = SchedError::invalid("policy.eta", "1.5 must be in (0, 1)");
+        assert_eq!(e.field(), Some("policy.eta"));
+        let s = e.to_string();
+        assert!(s.contains("policy.eta"), "{s}");
+        assert!(s.contains("(0, 1)"), "{s}");
+    }
+
+    #[test]
+    fn shard_failed_chains_batch_error() {
+        let cause = BatchError::failed_with(
+            "decode exploded",
+            std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"),
+        );
+        let e = SchedError::ShardFailed { shard_id: 7, source: cause };
+        assert!(e.to_string().contains("shard 7"));
+        let src = e.source().expect("batch error source");
+        assert!(src.to_string().contains("decode exploded"));
+        let root = src.source().expect("io source");
+        assert!(root.to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn string_bridge_preserves_message() {
+        let s: String = SchedError::Cancelled.into();
+        assert_eq!(s, "job cancelled");
+    }
+}

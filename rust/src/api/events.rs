@@ -1,0 +1,177 @@
+//! Typed job lifecycle events and progress snapshots.
+//!
+//! A `JobHandle` exposes two complementary views of a running job:
+//! [`JobProgress`] (a point-in-time snapshot — rows done, current
+//! (b, k), accounted RSS, backend) and a drained stream of
+//! [`JobEvent`]s (the discrete decisions the session and scheduler loop
+//! made on the job's behalf: admission, gating, reconfigurations,
+//! backpressure pauses, straggler mitigations, completion).
+
+use std::fmt;
+
+/// Lifecycle state of a submitted job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Submitted; pre-admission work (schema align, preflight) running.
+    Pending,
+    /// Waiting for budget: the session's admission controller is holding
+    /// the job because the committed working sets of running jobs plus
+    /// this job's estimate exceed the memory cap.
+    Gated,
+    /// Admitted and executing on a session-owned scheduler thread.
+    Running,
+    /// Finished successfully; `join()` returns `Ok(JobResult)`.
+    Done,
+    /// Finished with an error; `join()` returns the `SchedError`.
+    Failed,
+    /// Cancelled via `JobHandle::cancel()`.
+    Cancelled,
+}
+
+/// One typed scheduler/session decision, drained via
+/// `JobHandle::events()`. Events are recorded in order; draining is
+/// destructive (each event is observed exactly once).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobEvent {
+    /// Admission held the job: its working-set estimate did not fit the
+    /// budget left by already-running jobs.
+    Gated { ws_bytes: u64, available_bytes: u64 },
+    /// Admission released the job. `granted_bytes` is the memory
+    /// allowance the job runs under (the budget unclaimed by other jobs
+    /// at admission time); `concurrent` counts running jobs including
+    /// this one.
+    Admitted { ws_bytes: u64, granted_bytes: u64, concurrent: usize },
+    /// The controller (or a session budget re-partition) changed (b, k).
+    Reconfig {
+        b_from: usize,
+        b_to: usize,
+        k_from: usize,
+        k_to: usize,
+        reason: String,
+    },
+    /// Submission paused because the backend queue outgrew the
+    /// backpressure threshold.
+    Backpressure { queue_depth: usize },
+    /// A straggling shard was speculatively re-executed.
+    Speculation { shard_id: u64 },
+    /// A straggling shard was split into two key-aligned halves.
+    Split { shard_id: u64 },
+    /// The job finished (`ok == false` covers errors and cancellation).
+    Done { ok: bool },
+}
+
+impl JobEvent {
+    /// Stable lowercase tag for matching/telemetry.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            JobEvent::Gated { .. } => "gated",
+            JobEvent::Admitted { .. } => "admitted",
+            JobEvent::Reconfig { .. } => "reconfig",
+            JobEvent::Backpressure { .. } => "backpressure",
+            JobEvent::Speculation { .. } => "speculation",
+            JobEvent::Split { .. } => "split",
+            JobEvent::Done { .. } => "done",
+        }
+    }
+}
+
+impl fmt::Display for JobEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JobEvent::Gated { ws_bytes, available_bytes } => write!(
+                f,
+                "gated: ws={:.1}MB available={:.1}MB",
+                *ws_bytes as f64 / 1e6,
+                *available_bytes as f64 / 1e6
+            ),
+            JobEvent::Admitted { ws_bytes, granted_bytes, concurrent } => {
+                write!(
+                    f,
+                    "admitted: ws={:.1}MB granted={:.1}MB concurrent={concurrent}",
+                    *ws_bytes as f64 / 1e6,
+                    *granted_bytes as f64 / 1e6
+                )
+            }
+            JobEvent::Reconfig { b_from, b_to, k_from, k_to, reason } => {
+                write!(f, "reconfig: b {b_from}->{b_to} k {k_from}->{k_to} ({reason})")
+            }
+            JobEvent::Backpressure { queue_depth } => {
+                write!(f, "backpressure: queue={queue_depth}")
+            }
+            JobEvent::Speculation { shard_id } => {
+                write!(f, "speculation: shard={shard_id}")
+            }
+            JobEvent::Split { shard_id } => write!(f, "split: shard={shard_id}"),
+            JobEvent::Done { ok } => write!(f, "done: ok={ok}"),
+        }
+    }
+}
+
+/// Point-in-time snapshot of a job, via `JobHandle::progress()`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct JobProgress {
+    /// Aligned-row universe: max(|A|, |B|).
+    pub rows_total: u64,
+    /// Rows covered by accepted batches so far.
+    pub rows_done: u64,
+    /// Accepted batches so far.
+    pub batches: u64,
+    /// Current batch size b.
+    pub current_b: usize,
+    /// Current worker count k.
+    pub current_k: usize,
+    /// Accounted job RSS right now (base tables + live batch buffers +
+    /// idle per-worker scratch reservations).
+    pub rss_bytes: u64,
+    /// Peak accounted RSS so far.
+    pub peak_rss_bytes: u64,
+    /// Applied (b, k) changes so far.
+    pub reconfigs: u64,
+    /// Executing backend name ("inmem" / "dasklike"); empty before the
+    /// job is admitted.
+    pub backend: String,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_kinds_and_display() {
+        let evs = [
+            JobEvent::Gated { ws_bytes: 1_000_000, available_bytes: 0 },
+            JobEvent::Admitted {
+                ws_bytes: 1_000_000,
+                granted_bytes: 2_000_000,
+                concurrent: 2,
+            },
+            JobEvent::Reconfig {
+                b_from: 100,
+                b_to: 200,
+                k_from: 1,
+                k_to: 2,
+                reason: "increase-b".into(),
+            },
+            JobEvent::Backpressure { queue_depth: 9 },
+            JobEvent::Speculation { shard_id: 4 },
+            JobEvent::Split { shard_id: 5 },
+            JobEvent::Done { ok: true },
+        ];
+        let kinds: Vec<&str> = evs.iter().map(|e| e.kind()).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                "gated",
+                "admitted",
+                "reconfig",
+                "backpressure",
+                "speculation",
+                "split",
+                "done"
+            ]
+        );
+        for e in &evs {
+            assert!(e.to_string().starts_with(e.kind()), "{e}");
+        }
+    }
+}

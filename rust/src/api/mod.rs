@@ -1,0 +1,26 @@
+//! Public service API: [`DiffSession`] (multi-job admission over one
+//! CPU/memory budget), [`JobBuilder`] (typed, validating job
+//! construction), [`JobHandle`] (non-blocking progress / events /
+//! cancel / join), and [`SchedError`] (the typed error surface).
+//!
+//! ```text
+//! let session = DiffSession::new(Caps { mem_cap_bytes: 4e9 as u64, cpu_cap: 8 });
+//! let job = JobBuilder::new(a, b).atol(1e-9).build()?;
+//! let mut handle = session.submit(job)?;
+//! for ev in handle.events() { println!("{ev}"); }
+//! let result = handle.join()?;
+//! ```
+//!
+//! The legacy one-shot `sched::scheduler::run_job` remains as a
+//! deprecated-but-stable shim: it opens a single-job session, submits,
+//! and joins.
+
+pub mod builder;
+pub mod error;
+pub mod events;
+pub mod session;
+
+pub use builder::{JobBuilder, JobSpec};
+pub use error::SchedError;
+pub use events::{JobEvent, JobProgress, JobState};
+pub use session::{DiffSession, JobControl, JobHandle};

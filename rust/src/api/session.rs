@@ -1,0 +1,588 @@
+//! `DiffSession`: a long-lived service facade owning one machine budget
+//! (CPU + memory caps) and admitting many concurrent diff jobs into it.
+//!
+//! The session replaces per-job construction (the old blocking
+//! `run_job` free function owned the whole machine for one job) with a
+//! scheduler/runtime split:
+//!
+//! * **Admission control** — every submitted job is pre-flight profiled
+//!   and its working set estimated (Eq. 1, the same estimator the
+//!   backend gate uses). A job is admitted only while the committed
+//!   estimates of running jobs plus its own fit `mem_cap_bytes`;
+//!   otherwise it waits in the `Gated` state (FIFO among waiters) and
+//!   its handle records a [`JobEvent::Gated`]. Admission bounds the sum
+//!   of working-set *charges* by the budget; each admitted job's
+//!   accounting cap is the budget unclaimed by other jobs' charges at
+//!   its admission, and the per-job safety envelope keeps accounted
+//!   usage inside that cap — so jobs cannot fail with accounted OOMs.
+//!   A job admitted into an idle session keeps the full budget (legacy
+//!   `run_job` parity); shrinking already-running jobs' caps when later
+//!   jobs join is future work (see ROADMAP).
+//! * **CPU re-partitioning** — the session divides `cpu_cap` evenly
+//!   across running jobs and updates each job's share as jobs enter and
+//!   leave; the scheduler loop applies the share through
+//!   `Backend::set_workers`.
+//! * **Job handles** — `submit` returns immediately with a
+//!   [`JobHandle`]: `progress()` snapshots, typed `events()`,
+//!   `cancel()`, and `join()` for the final `Result<JobResult,
+//!   SchedError>`.
+//!
+//! A solo job admitted into an idle session receives the full budget
+//! and runs the exact legacy `run_job` pipeline — which is why
+//! `run_job` survives as a thin one-job shim over `DiffSession`.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::api::builder::JobSpec;
+use crate::api::error::SchedError;
+use crate::api::events::{JobEvent, JobProgress, JobState};
+use crate::config::{BackendChoice, Caps, PolicyKind};
+use crate::engine::delta::JobPlan;
+use crate::engine::schema_align::align_schemas;
+use crate::exec::backend::{Backend, JobContext};
+use crate::exec::dasklike::DaskLikeBackend;
+use crate::exec::inmem::InMemBackend;
+use crate::sched::controller::{AdaptiveController, TuningPolicy};
+use crate::sched::preflight::preflight;
+use crate::sched::scheduler::{drive, DriveInputs, JobResult};
+use crate::sched::telemetry::Telemetry;
+use crate::sched::working_set::{gate_backend, WorkingSetModel};
+
+/// Shared mutable per-job state: the bridge between a `JobHandle` (the
+/// caller's side) and the scheduler loop running the job (the session's
+/// side). All methods are lock-cheap and safe to call at any time.
+pub struct JobControl {
+    job_id: u64,
+    cancel: AtomicBool,
+    /// Session-granted worker allowance (0 = no session constraint).
+    cpu_share: AtomicUsize,
+    state: AtomicU8,
+    progress: Mutex<JobProgress>,
+    events: Mutex<Vec<JobEvent>>,
+}
+
+impl JobControl {
+    fn new(job_id: u64) -> Arc<Self> {
+        Arc::new(JobControl {
+            job_id,
+            cancel: AtomicBool::new(false),
+            cpu_share: AtomicUsize::new(0),
+            state: AtomicU8::new(0),
+            progress: Mutex::new(JobProgress::default()),
+            events: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn job_id(&self) -> u64 {
+        self.job_id
+    }
+    pub fn request_cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+    pub fn cancel_requested(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+    pub fn cpu_share(&self) -> usize {
+        self.cpu_share.load(Ordering::Relaxed)
+    }
+    pub(crate) fn set_cpu_share(&self, share: usize) {
+        self.cpu_share.store(share, Ordering::Relaxed);
+    }
+
+    pub fn state(&self) -> JobState {
+        match self.state.load(Ordering::Relaxed) {
+            0 => JobState::Pending,
+            1 => JobState::Gated,
+            2 => JobState::Running,
+            3 => JobState::Done,
+            4 => JobState::Failed,
+            _ => JobState::Cancelled,
+        }
+    }
+    pub(crate) fn set_state(&self, s: JobState) {
+        let v = match s {
+            JobState::Pending => 0,
+            JobState::Gated => 1,
+            JobState::Running => 2,
+            JobState::Done => 3,
+            JobState::Failed => 4,
+            JobState::Cancelled => 5,
+        };
+        self.state.store(v, Ordering::Relaxed);
+    }
+
+    pub fn progress(&self) -> JobProgress {
+        self.progress.lock().unwrap().clone()
+    }
+    pub(crate) fn update_progress(&self, f: impl FnOnce(&mut JobProgress)) {
+        f(&mut self.progress.lock().unwrap());
+    }
+
+    pub(crate) fn push_event(&self, ev: JobEvent) {
+        self.events.lock().unwrap().push(ev);
+    }
+    /// Drain all recorded events (destructive; order preserved).
+    pub fn drain_events(&self) -> Vec<JobEvent> {
+        std::mem::take(&mut *self.events.lock().unwrap())
+    }
+}
+
+/// One admitted, still-running job in the session ledger.
+struct RunningJob {
+    id: u64,
+    charge_bytes: u64,
+    control: Arc<JobControl>,
+}
+
+#[derive(Default)]
+struct AdmissionLedger {
+    /// Sum of working-set charges of admitted, unfinished jobs.
+    committed_bytes: u64,
+    running: Vec<RunningJob>,
+    /// Gated jobs in arrival order. Admission is FIFO among waiters:
+    /// a later (even smaller) job may not bypass the queue head, so a
+    /// large gated job cannot be starved by a stream of small ones.
+    waiters: std::collections::VecDeque<u64>,
+}
+
+struct SessionInner {
+    caps: Caps,
+    ws_model: WorkingSetModel,
+    ledger: Mutex<AdmissionLedger>,
+    cv: Condvar,
+    next_job: AtomicU64,
+}
+
+/// Best-effort extraction of a panic payload's message.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".into())
+}
+
+/// Divide the CPU cap evenly across running jobs (at least 1 worker
+/// each) and publish each job's share; the scheduler loops apply it via
+/// `Backend::set_workers`.
+fn repartition(caps: &Caps, ledger: &AdmissionLedger) {
+    let n = ledger.running.len().max(1);
+    let share = (caps.cpu_cap / n).max(1);
+    for job in &ledger.running {
+        job.control.set_cpu_share(share);
+    }
+}
+
+/// Long-lived multi-job diff service. See the module docs.
+pub struct DiffSession {
+    inner: Arc<SessionInner>,
+}
+
+impl DiffSession {
+    /// A session owning the given machine budget.
+    pub fn new(caps: Caps) -> DiffSession {
+        DiffSession {
+            inner: Arc::new(SessionInner {
+                caps,
+                ws_model: WorkingSetModel::default(),
+                ledger: Mutex::new(AdmissionLedger::default()),
+                cv: Condvar::new(),
+                next_job: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Paper-default budget (64 GB / 32 logical cores).
+    pub fn with_defaults() -> DiffSession {
+        DiffSession::new(Caps::default())
+    }
+
+    pub fn caps(&self) -> Caps {
+        self.inner.caps
+    }
+
+    /// Number of currently admitted (running) jobs.
+    pub fn active_jobs(&self) -> usize {
+        self.inner.ledger.lock().unwrap().running.len()
+    }
+
+    /// Bytes of the memory budget currently committed to running jobs.
+    pub fn committed_bytes(&self) -> u64 {
+        self.inner.ledger.lock().unwrap().committed_bytes
+    }
+
+    /// Submit a job. Returns immediately with a [`JobHandle`]; the job
+    /// runs on a session-owned thread, waiting in the `Gated` state if
+    /// its working-set estimate does not currently fit the budget.
+    ///
+    /// The session's caps supersede the job config's, so the config is
+    /// re-validated against them here (e.g. a `policy.k_min` above the
+    /// session's `cpu_cap` is a typed `InvalidConfig`, not a panic on
+    /// the job thread).
+    pub fn submit(&self, job: JobSpec) -> Result<JobHandle, SchedError> {
+        let mut effective = job.cfg.clone();
+        effective.caps = self.inner.caps;
+        effective.validate()?;
+        let id = self.inner.next_job.fetch_add(1, Ordering::Relaxed) + 1;
+        let control = JobControl::new(id);
+        let inner = Arc::clone(&self.inner);
+        let thread_control = Arc::clone(&control);
+        let thread = std::thread::Builder::new()
+            .name(format!("sdiff-job-{id}"))
+            .spawn(move || job_thread(&inner, id, job, &thread_control))
+            .map_err(|e| SchedError::runtime(format!("spawn job thread: {e}")))?;
+        Ok(JobHandle { id, control, thread: Some(thread) })
+    }
+}
+
+/// Handle to a submitted job. Dropping the handle does not cancel the
+/// job; it keeps running to completion on its session thread.
+pub struct JobHandle {
+    id: u64,
+    control: Arc<JobControl>,
+    thread: Option<std::thread::JoinHandle<Result<JobResult, SchedError>>>,
+}
+
+impl JobHandle {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+    /// Point-in-time snapshot (rows done, current b/k, accounted RSS,
+    /// backend).
+    pub fn progress(&self) -> JobProgress {
+        self.control.progress()
+    }
+    /// Lifecycle state right now.
+    pub fn state(&self) -> JobState {
+        self.control.state()
+    }
+    /// Drain the typed event stream recorded so far (admission,
+    /// reconfigs, backpressure, mitigations, completion).
+    pub fn events(&self) -> Vec<JobEvent> {
+        self.control.drain_events()
+    }
+    /// Request cooperative cancellation; `join()` then returns
+    /// `Err(SchedError::Cancelled)` unless the job already finished.
+    pub fn cancel(&self) {
+        self.control.request_cancel();
+    }
+    /// Whether the job's thread has finished (result ready to `join`).
+    pub fn is_finished(&self) -> bool {
+        self.thread.as_ref().map_or(true, |t| t.is_finished())
+    }
+    /// Block until the job finishes and take its result. A second call
+    /// returns an error (the result is consumed by the first).
+    pub fn join(&mut self) -> Result<JobResult, SchedError> {
+        match self.thread.take() {
+            Some(t) => match t.join() {
+                Ok(result) => result,
+                Err(payload) => Err(SchedError::runtime(format!(
+                    "job thread panicked: {}",
+                    panic_message(payload.as_ref())
+                ))),
+            },
+            None => Err(SchedError::runtime("job result already taken")),
+        }
+    }
+}
+
+/// Session-thread body: pre-admission pipeline, admission, execution,
+/// release, terminal event/state bookkeeping.
+fn job_thread(
+    inner: &SessionInner,
+    id: u64,
+    job: JobSpec,
+    control: &Arc<JobControl>,
+) -> Result<JobResult, SchedError> {
+    let outcome = run_with_admission(inner, id, &job, control);
+    match &outcome {
+        Ok(r) => {
+            control.push_event(JobEvent::Done { ok: r.stats.ooms == 0 });
+            control.set_state(JobState::Done);
+        }
+        Err(SchedError::Cancelled) => {
+            control.push_event(JobEvent::Done { ok: false });
+            control.set_state(JobState::Cancelled);
+        }
+        Err(_) => {
+            control.push_event(JobEvent::Done { ok: false });
+            control.set_state(JobState::Failed);
+        }
+    }
+    outcome
+}
+
+fn run_with_admission(
+    inner: &SessionInner,
+    id: u64,
+    job: &JobSpec,
+    control: &Arc<JobControl>,
+) -> Result<JobResult, SchedError> {
+    let a = Arc::clone(&job.a);
+    let b = Arc::clone(&job.b);
+
+    // --- pre-admission pipeline (cheap, runs outside the budget) ---
+    if matches!(job.cfg.backend, BackendChoice::Sim) {
+        return Err(SchedError::unsupported(
+            "sim backend is driven via sim::run_sim_job",
+        ));
+    }
+    let aligned = align_schemas(a.schema(), b.schema())?;
+    let plan = JobPlan::new(aligned, job.cfg.engine.clone());
+    let exec = crate::runtime::make_exec(&job.cfg.engine)?;
+    let profile = preflight(
+        a.as_ref(),
+        b.as_ref(),
+        job.cfg.preflight_max_rows,
+        job.cfg.preflight_fraction,
+    );
+    control.update_progress(|p| {
+        p.rows_total = a.nrows().max(b.nrows()) as u64;
+    });
+
+    // --- admission: Eq. 1 working-set estimate vs the shared budget ---
+    let ws = inner.ws_model.estimate(&profile);
+    let charge = (ws.max(1.0) as u64).min(inner.caps.mem_cap_bytes);
+    let granted = {
+        let mut ledger = inner.ledger.lock().unwrap();
+        let mut announced_gate = false;
+        loop {
+            if control.cancel_requested() {
+                // Leave the waiter queue so we never block the head slot.
+                ledger.waiters.retain(|w| *w != id);
+                return Err(SchedError::Cancelled);
+            }
+            // FIFO among waiters: budget must fit AND nobody older may
+            // still be queued (an idle session always admits).
+            let fits = ledger.running.is_empty()
+                || (ledger.committed_bytes + charge <= inner.caps.mem_cap_bytes
+                    && ledger.waiters.front().map_or(true, |w| *w == id));
+            if fits {
+                break;
+            }
+            if !announced_gate {
+                announced_gate = true;
+                ledger.waiters.push_back(id);
+                control.set_state(JobState::Gated);
+                control.push_event(JobEvent::Gated {
+                    ws_bytes: charge,
+                    available_bytes: inner
+                        .caps
+                        .mem_cap_bytes
+                        .saturating_sub(ledger.committed_bytes),
+                });
+            }
+            let (l, _) = inner
+                .cv
+                .wait_timeout(ledger, Duration::from_millis(10))
+                .unwrap();
+            ledger = l;
+        }
+        ledger.waiters.retain(|w| *w != id);
+        // The job's accounting cap is the budget unclaimed by other
+        // jobs' charges at admission. Admission bounds the sum of
+        // *charges* by the budget; the per-job safety envelope (Eq. 4)
+        // then keeps each job's accounted usage inside its own cap, so
+        // accounted OOMs cannot occur. (A job admitted alone keeps the
+        // full budget for legacy `run_job` parity; shrinking running
+        // jobs' caps when later jobs join is a ROADMAP item.)
+        let granted =
+            inner.caps.mem_cap_bytes.saturating_sub(ledger.committed_bytes).max(1);
+        ledger.committed_bytes += charge;
+        ledger.running.push(RunningJob {
+            id,
+            charge_bytes: charge,
+            control: Arc::clone(control),
+        });
+        repartition(&inner.caps, &ledger);
+        control.set_state(JobState::Running);
+        control.push_event(JobEvent::Admitted {
+            ws_bytes: charge,
+            granted_bytes: granted,
+            concurrent: ledger.running.len(),
+        });
+        granted
+    };
+
+    // Unwind guard: a panic anywhere in backend/policy/drive must not
+    // skip the release block below, or the job's charge would leak and
+    // gate later jobs forever.
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        execute_admitted(inner, job, &a, &b, plan, exec, profile, granted, control)
+    }))
+    .unwrap_or_else(|payload| {
+        Err(SchedError::runtime(format!(
+            "job panicked: {}",
+            panic_message(payload.as_ref())
+        )))
+    });
+
+    // Publish the terminal state BEFORE releasing the budget: observers
+    // must never see this job Running concurrently with a job the
+    // release is about to un-gate.
+    control.set_state(match &result {
+        Ok(_) => JobState::Done,
+        Err(SchedError::Cancelled) => JobState::Cancelled,
+        Err(_) => JobState::Failed,
+    });
+
+    // --- release: return the charge, re-partition, wake gated jobs ---
+    {
+        let mut ledger = inner.ledger.lock().unwrap();
+        if let Some(pos) = ledger.running.iter().position(|r| r.id == id) {
+            let done = ledger.running.remove(pos);
+            ledger.committed_bytes =
+                ledger.committed_bytes.saturating_sub(done.charge_bytes);
+        }
+        repartition(&inner.caps, &ledger);
+        inner.cv.notify_all();
+    }
+    result
+}
+
+/// Build backend + policy + telemetry for an admitted job and drive it.
+#[allow(clippy::too_many_arguments)]
+fn execute_admitted(
+    inner: &SessionInner,
+    job: &JobSpec,
+    a: &Arc<dyn crate::data::io::TableSource>,
+    b: &Arc<dyn crate::data::io::TableSource>,
+    plan: JobPlan,
+    exec: Arc<dyn crate::engine::comparators::NumericDeltaExec>,
+    profile: crate::sched::preflight::PreflightProfile,
+    granted_bytes: u64,
+    control: &Arc<JobControl>,
+) -> Result<JobResult, SchedError> {
+    let mut cfg = job.cfg.clone();
+    cfg.caps = Caps {
+        mem_cap_bytes: granted_bytes,
+        cpu_cap: inner.caps.cpu_cap,
+    };
+
+    let gate = gate_backend(&inner.ws_model, &profile, &cfg.caps, &cfg.policy);
+    let choice = match cfg.backend {
+        BackendChoice::Auto => gate.backend,
+        other => other,
+    };
+
+    let ctx = JobContext::new(
+        Arc::clone(a),
+        Arc::clone(b),
+        plan,
+        exec,
+        cfg.caps.mem_cap_bytes,
+    );
+    let k0 = (cfg.caps.cpu_cap / 4).max(cfg.policy.k_min);
+    let mut backend: Box<dyn Backend> = match choice {
+        BackendChoice::InMem => {
+            Box::new(InMemBackend::new(ctx, k0, cfg.caps.cpu_cap))
+        }
+        BackendChoice::DaskLike => {
+            // Sub-chunk so one task's decode buffer is ~64 MB at Ŵ.
+            let chunk = ((64.0e6 / profile.w_hat.max(1.0)) as usize)
+                .clamp(4_096, 1_000_000);
+            Box::new(DaskLikeBackend::new(ctx, k0, cfg.caps.cpu_cap, chunk))
+        }
+        BackendChoice::Sim | BackendChoice::Auto => unreachable!(),
+    };
+
+    let mut policy: Box<dyn TuningPolicy> = match cfg.policy_kind {
+        PolicyKind::Adaptive => Box::new(AdaptiveController::new()),
+        PolicyKind::Fixed { b, k } => {
+            Box::new(crate::baselines::FixedPolicy::new(b, k))
+        }
+        PolicyKind::Heuristic => {
+            Box::new(crate::baselines::HeuristicPolicy::paper_default())
+        }
+    };
+
+    let mut telemetry = match &cfg.telemetry_path {
+        Some(p) => Telemetry::to_file(p)?,
+        None => Telemetry::disabled(),
+    };
+    let mut inputs = DriveInputs {
+        cfg: &cfg,
+        profile,
+        gate: Some(gate),
+        telemetry: &mut telemetry,
+        consts: crate::engine::microbench::CostConstants::default(),
+        control: Some(Arc::clone(control)),
+    };
+    drive(backend.as_mut(), a.as_ref(), b.as_ref(), policy.as_mut(), &mut inputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::builder::JobBuilder;
+    use crate::config::DeltaPath;
+    use crate::data::generator::{generate_pair, GenSpec};
+    use crate::data::io::InMemorySource;
+
+    fn job(rows: usize, seed: u64) -> JobSpec {
+        let (a, b, _) =
+            generate_pair(&GenSpec { rows, seed, ..GenSpec::default() });
+        JobBuilder::new(
+            Arc::new(InMemorySource::new(a)),
+            Arc::new(InMemorySource::new(b)),
+        )
+        .delta_path(DeltaPath::Native)
+        .b_min(200)
+        .build()
+        .unwrap()
+    }
+
+    fn small_caps() -> Caps {
+        Caps { mem_cap_bytes: 2_000_000_000, cpu_cap: 2 }
+    }
+
+    #[test]
+    fn solo_job_runs_and_releases_budget() {
+        let session = DiffSession::new(small_caps());
+        let mut h = session.submit(job(2_000, 5)).unwrap();
+        let r = h.join().unwrap();
+        assert_eq!(r.stats.ooms, 0);
+        assert!(r.stats.batches > 0);
+        assert_eq!(session.active_jobs(), 0);
+        assert_eq!(session.committed_bytes(), 0);
+        assert_eq!(h.state(), JobState::Done);
+        let events = h.events();
+        assert_eq!(events.first().map(|e| e.kind()), Some("admitted"));
+        assert_eq!(events.last().map(|e| e.kind()), Some("done"));
+        let p = h.progress();
+        assert!(p.rows_done > 0);
+        assert!(p.batches > 0);
+        assert!(p.rss_bytes > 0 || p.peak_rss_bytes > 0);
+        assert!(!p.backend.is_empty());
+    }
+
+    #[test]
+    fn sim_backend_is_rejected_typed() {
+        let session = DiffSession::new(small_caps());
+        let (a, b, _) =
+            generate_pair(&GenSpec { rows: 100, seed: 1, ..GenSpec::default() });
+        let spec = JobBuilder::new(
+            Arc::new(InMemorySource::new(a)),
+            Arc::new(InMemorySource::new(b)),
+        )
+        .backend(BackendChoice::Sim)
+        .build()
+        .unwrap();
+        let mut h = session.submit(spec).unwrap();
+        match h.join() {
+            Err(SchedError::Unsupported { .. }) => {}
+            other => panic!("expected Unsupported, got {other:?}"),
+        }
+        assert_eq!(h.state(), JobState::Failed);
+    }
+
+    #[test]
+    fn second_join_errors() {
+        let session = DiffSession::new(small_caps());
+        let mut h = session.submit(job(500, 9)).unwrap();
+        h.join().unwrap();
+        assert!(h.join().is_err());
+    }
+}

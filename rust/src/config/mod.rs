@@ -4,6 +4,7 @@
 
 pub mod toml_lite;
 
+use crate::api::error::SchedError;
 use crate::util::bytes;
 use toml_lite::TomlDoc;
 
@@ -96,13 +97,15 @@ pub enum BackendChoice {
 }
 
 impl BackendChoice {
-    pub fn parse(s: &str) -> Result<Self, String> {
+    pub fn parse(s: &str) -> Result<Self, SchedError> {
         match s.to_ascii_lowercase().as_str() {
             "auto" => Ok(BackendChoice::Auto),
             "inmem" | "in-mem" | "in_memory" => Ok(BackendChoice::InMem),
             "dask" | "dasklike" | "dask-like" => Ok(BackendChoice::DaskLike),
             "sim" | "simulator" => Ok(BackendChoice::Sim),
-            other => Err(format!("unknown backend {other:?}")),
+            other => {
+                Err(SchedError::invalid("backend", format!("unknown backend {other:?}")))
+            }
         }
     }
     pub fn name(&self) -> &'static str {
@@ -211,52 +214,77 @@ impl SchedulerConfig {
     /// Load from a TOML-subset file; unknown keys are an error (configs
     /// are part of the reproducibility surface — typos must not pass
     /// silently).
-    pub fn from_file(path: &str) -> Result<Self, String> {
+    pub fn from_file(path: &str) -> Result<Self, SchedError> {
         let text = std::fs::read_to_string(path)
-            .map_err(|e| format!("read {path}: {e}"))?;
-        Self::from_toml_str(&text)
+            .map_err(|e| SchedError::io(path, e.to_string()))?;
+        Self::load_str(&text, path)
     }
 
-    pub fn from_toml_str(text: &str) -> Result<Self, String> {
-        let doc = toml_lite::parse(text)?;
+    pub fn from_toml_str(text: &str) -> Result<Self, SchedError> {
+        Self::load_str(text, "<toml>")
+    }
+
+    fn load_str(text: &str, context: &str) -> Result<Self, SchedError> {
+        let doc = toml_lite::parse(text)
+            .map_err(|m| SchedError::parse(context, m))?;
         let mut cfg = SchedulerConfig::default();
+        // apply_doc errors are already field-named InvalidConfig values;
+        // wrapping them would hide `field()` from callers.
         apply_doc(&mut cfg, &doc)?;
         cfg.validate()?;
         Ok(cfg)
     }
 
-    pub fn validate(&self) -> Result<(), String> {
+    /// Range-check every field. Errors are `SchedError::InvalidConfig`
+    /// naming the full TOML-style key path — `JobBuilder::build()`
+    /// reports the identical field names.
+    pub fn validate(&self) -> Result<(), SchedError> {
         let p = &self.policy;
-        for (name, v, lo, hi) in [
-            ("kappa", p.kappa, 0.0, 1.0),
-            ("eta", p.eta, 0.0, 1.0),
-            ("gamma", p.gamma, 0.0, 1.0),
-            ("rho_star", p.rho_star, 0.0, 1.0),
-            ("rho_smooth", p.rho_smooth, 0.0, 1.0),
-            ("lambda_b", p.lambda_b, 0.0, 1.0),
-            ("lambda_k", p.lambda_k, 0.0, 1.0),
+        for (field, v, lo, hi) in [
+            ("policy.kappa", p.kappa, 0.0, 1.0),
+            ("policy.eta", p.eta, 0.0, 1.0),
+            ("policy.gamma", p.gamma, 0.0, 1.0),
+            ("policy.rho_star", p.rho_star, 0.0, 1.0),
+            ("policy.rho_smooth", p.rho_smooth, 0.0, 1.0),
+            ("policy.lambda_b", p.lambda_b, 0.0, 1.0),
+            ("policy.lambda_k", p.lambda_k, 0.0, 1.0),
         ] {
             if !(v > lo && v < hi) {
-                return Err(format!("{name}={v} must be in ({lo}, {hi})"));
+                return Err(SchedError::invalid(
+                    field,
+                    format!("{v} must be in ({lo}, {hi})"),
+                ));
             }
         }
         if p.tau <= 1.0 {
-            return Err(format!("tau={} must be > 1", p.tau));
+            return Err(SchedError::invalid(
+                "policy.tau",
+                format!("{} must be > 1", p.tau),
+            ));
         }
         if p.b_min == 0 || p.b_min > p.b_max {
-            return Err("b_min must be in [1, b_max]".into());
+            return Err(SchedError::invalid(
+                "policy.b_min",
+                format!("{} must be in [1, b_max={}]", p.b_min, p.b_max),
+            ));
         }
-        if self.caps.cpu_cap == 0 || self.caps.mem_cap_bytes == 0 {
-            return Err("caps must be positive".into());
+        if self.caps.mem_cap_bytes == 0 {
+            return Err(SchedError::invalid("caps.mem_cap", "must be positive"));
+        }
+        if self.caps.cpu_cap == 0 {
+            return Err(SchedError::invalid("caps.cpu_cap", "must be positive"));
         }
         if p.k_min == 0 || p.k_min > self.caps.cpu_cap {
-            return Err("k_min must be in [1, cpu_cap]".into());
+            return Err(SchedError::invalid(
+                "policy.k_min",
+                format!("{} must be in [1, cpu_cap={}]", p.k_min, self.caps.cpu_cap),
+            ));
         }
         Ok(())
     }
 }
 
-fn apply_doc(cfg: &mut SchedulerConfig, doc: &TomlDoc) -> Result<(), String> {
+fn apply_doc(cfg: &mut SchedulerConfig, doc: &TomlDoc) -> Result<(), SchedError> {
     for (section, kv) in doc {
         for (key, val) in kv {
             let full = if section.is_empty() {
@@ -274,33 +302,42 @@ fn apply_key(
     cfg: &mut SchedulerConfig,
     key: &str,
     val: &toml_lite::TomlValue,
-) -> Result<(), String> {
+) -> Result<(), SchedError> {
     use toml_lite::TomlValue as V;
-    let f = |v: &V| v.as_f64().ok_or_else(|| format!("{key}: expected number"));
+    let f = |v: &V| {
+        v.as_f64().ok_or_else(|| SchedError::invalid(key, "expected number"))
+    };
     let i = |v: &V| {
         v.as_i64()
             .and_then(|x| usize::try_from(x).ok())
-            .ok_or_else(|| format!("{key}: expected non-negative integer"))
+            .ok_or_else(|| {
+                SchedError::invalid(key, "expected non-negative integer")
+            })
     };
     let p = &mut cfg.policy;
     match key {
         "seed" => cfg.seed = i(val)? as u64,
         "telemetry" => {
-            cfg.telemetry_path =
-                Some(val.as_str().ok_or("telemetry: expected string")?.into())
+            cfg.telemetry_path = Some(
+                val.as_str()
+                    .ok_or_else(|| SchedError::invalid(key, "expected string"))?
+                    .into(),
+            )
         }
         "backend" => {
             cfg.backend = BackendChoice::parse(
-                val.as_str().ok_or("backend: expected string")?,
+                val.as_str()
+                    .ok_or_else(|| SchedError::invalid(key, "expected string"))?,
             )?
         }
         "caps.mem_cap" => {
             cfg.caps.mem_cap_bytes = match val {
-                V::Str(s) => bytes::parse(s)?,
+                V::Str(s) => bytes::parse(s)
+                    .map_err(|m| SchedError::invalid(key, m))?,
                 other => other
                     .as_i64()
                     .map(|x| x as u64)
-                    .ok_or("caps.mem_cap: expected size")?,
+                    .ok_or_else(|| SchedError::invalid(key, "expected size"))?,
             }
         }
         "caps.cpu_cap" => cfg.caps.cpu_cap = i(val)?,
@@ -326,30 +363,40 @@ fn apply_key(
         "engine.atol" => cfg.engine.atol = f(val)?,
         "engine.rtol" => cfg.engine.rtol = f(val)?,
         "engine.string_ci" => {
-            cfg.engine.string_ci =
-                val.as_bool().ok_or("engine.string_ci: expected bool")?
+            cfg.engine.string_ci = val
+                .as_bool()
+                .ok_or_else(|| SchedError::invalid(key, "expected bool"))?
         }
         "engine.ts_tolerance_us" => {
             cfg.engine.ts_tolerance_us = val
                 .as_i64()
-                .ok_or("engine.ts_tolerance_us: expected integer")?
+                .ok_or_else(|| SchedError::invalid(key, "expected integer"))?
         }
         "engine.artifact_dir" => {
             cfg.engine.artifact_dir = val
                 .as_str()
-                .ok_or("engine.artifact_dir: expected string")?
+                .ok_or_else(|| SchedError::invalid(key, "expected string"))?
                 .into()
         }
         "engine.delta_path" => {
-            cfg.engine.delta_path =
-                match val.as_str().ok_or("engine.delta_path: string")? {
-                    "pjrt" => DeltaPath::Pjrt,
-                    "native" => DeltaPath::Native,
-                    "check" => DeltaPath::Check,
-                    o => return Err(format!("unknown delta_path {o:?}")),
+            cfg.engine.delta_path = match val
+                .as_str()
+                .ok_or_else(|| SchedError::invalid(key, "expected string"))?
+            {
+                "pjrt" => DeltaPath::Pjrt,
+                "native" => DeltaPath::Native,
+                "check" => DeltaPath::Check,
+                o => {
+                    return Err(SchedError::invalid(
+                        key,
+                        format!("unknown delta_path {o:?}"),
+                    ))
                 }
+            }
         }
-        other => return Err(format!("unknown config key {other:?}")),
+        other => {
+            return Err(SchedError::invalid(other, "unknown config key"))
+        }
     }
     Ok(())
 }
@@ -412,6 +459,19 @@ mod tests {
         assert!(SchedulerConfig::from_toml_str("[policy]\neta = 1.5").is_err());
         assert!(SchedulerConfig::from_toml_str("[policy]\ntau = 0.5").is_err());
         assert!(SchedulerConfig::from_toml_str("[caps]\ncpu_cap = 0").is_err());
+    }
+
+    #[test]
+    fn validation_errors_name_the_field() {
+        let err = SchedulerConfig::from_toml_str("[policy]\neta = 1.5")
+            .unwrap_err();
+        assert_eq!(err.field(), Some("policy.eta"));
+        let mut c = SchedulerConfig::default();
+        c.caps.cpu_cap = 0;
+        assert_eq!(c.validate().unwrap_err().field(), Some("caps.cpu_cap"));
+        let mut c = SchedulerConfig::default();
+        c.policy.k_min = 99;
+        assert_eq!(c.validate().unwrap_err().field(), Some("policy.k_min"));
     }
 
     #[test]

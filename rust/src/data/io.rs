@@ -16,6 +16,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::api::error::SchedError;
 use crate::data::column::Cell;
 use crate::data::schema::{ColumnType, Schema};
 use crate::data::table::{Table, TableBuilder};
@@ -259,7 +260,12 @@ pub struct CsvFileSource {
 }
 
 impl CsvFileSource {
-    pub fn open(path: &Path, schema: Schema) -> Result<Self, String> {
+    pub fn open(path: &Path, schema: Schema) -> Result<Self, SchedError> {
+        Self::open_inner(path, schema)
+            .map_err(|m| SchedError::io(path.display().to_string(), m))
+    }
+
+    fn open_inner(path: &Path, schema: Schema) -> Result<Self, String> {
         let text_file =
             std::fs::File::open(path).map_err(|e| format!("open: {e}"))?;
         let mut reader = std::io::BufReader::new(text_file);

@@ -88,6 +88,16 @@ pub struct NumericDiffOut {
     pub changed_rows: Vec<i32>,
 }
 
+impl NumericDiffOut {
+    /// Scratch footprint in bytes (capacity-based; memory-model input).
+    pub fn heap_bytes(&self) -> usize {
+        self.verdicts.capacity() * 4
+            + self.col_changed.capacity() * 8
+            + self.col_maxabs.capacity() * 8
+            + self.changed_rows.capacity() * 4
+    }
+}
+
 /// Executor for numeric batches: native rust or the AOT PJRT executable.
 pub trait NumericDeltaExec: Send + Sync {
     fn name(&self) -> &'static str;

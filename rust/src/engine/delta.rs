@@ -110,6 +110,24 @@ pub struct ShardScratch {
     pub row_diff: Vec<bool>,
 }
 
+impl ShardScratch {
+    /// Resident bytes held by a warmed scratch between shards
+    /// (capacity-based). The worker pool accounts this as a persistent
+    /// per-worker reservation while the worker is idle, so
+    /// `Backend::current_rss()` reflects the real steady-state
+    /// footprint between batches (during a batch the per-batch ledger
+    /// covers the same buffers instead).
+    pub fn heap_bytes(&self) -> usize {
+        self.align.heap_bytes()
+            + self.alignment.pairs.capacity() * 8
+            + self.alignment.removed.capacity() * 4
+            + self.alignment.added.capacity() * 4
+            + self.batch.heap_bytes()
+            + self.diff.heap_bytes()
+            + self.row_diff.capacity()
+    }
+}
+
 #[inline]
 fn numeric_value(table: &Table, col: usize, row: usize) -> Option<f64> {
     let c = table.column(col);

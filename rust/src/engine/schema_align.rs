@@ -7,6 +7,7 @@
 //! reported (they do not fail the job — the engine diffs the aligned
 //! intersection, like SmartDiff).
 
+use crate::api::error::SchedError;
 use crate::data::schema::{ColumnType, Schema};
 
 /// How an aligned column pair is compared (dispatch for Δ).
@@ -96,7 +97,10 @@ pub fn normalize_name(name: &str) -> String {
 /// Errors if the key columns of A cannot all be aligned (diffing without
 /// a consistent row-alignment key is a job-definition error; surrogate
 /// keyless mode is handled upstream by synthesizing a row-index key).
-pub fn align_schemas(a: &Schema, b: &Schema) -> Result<AlignedSchema, String> {
+pub fn align_schemas(
+    a: &Schema,
+    b: &Schema,
+) -> Result<AlignedSchema, SchedError> {
     let mut out = AlignedSchema::default();
     let mut b_norm: Vec<(String, usize)> = b
         .fields
@@ -109,14 +113,18 @@ pub fn align_schemas(a: &Schema, b: &Schema) -> Result<AlignedSchema, String> {
         let mut seen = std::collections::HashSet::new();
         for (n, _) in &b_norm {
             if !seen.insert(n.clone()) {
-                return Err(format!("ambiguous attribute {n:?} in target schema"));
+                return Err(SchedError::schema(format!(
+                    "ambiguous attribute {n:?} in target schema"
+                )));
             }
         }
         let mut seen = std::collections::HashSet::new();
         for f in &a.fields {
             let n = normalize_name(&f.name);
             if !seen.insert(n.clone()) {
-                return Err(format!("ambiguous attribute {n:?} in source schema"));
+                return Err(SchedError::schema(format!(
+                    "ambiguous attribute {n:?} in source schema"
+                )));
             }
         }
     }
@@ -163,7 +171,9 @@ pub fn align_schemas(a: &Schema, b: &Schema) -> Result<AlignedSchema, String> {
         .collect();
     for k in &a_keys {
         if !out.pairs.iter().any(|p| p.is_key && p.name == *k) {
-            return Err(format!("key column {k:?} not aligned across schemas"));
+            return Err(SchedError::schema(format!(
+                "key column {k:?} not aligned across schemas"
+            )));
         }
     }
     Ok(out)

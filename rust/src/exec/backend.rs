@@ -31,15 +31,81 @@ impl ShardSpec {
 }
 
 /// Why a batch failed.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// Implements [`std::error::Error`]: `Failed` carries an optional typed
+/// cause chain (`source()`), so job handles can surface the root cause
+/// instead of a flattened string. Equality compares the failure
+/// *identity* (variant + message/amounts), not the cause chain.
+#[derive(Debug, Clone)]
 pub enum BatchError {
     /// Accounted memory exceeded the cap — the failure the safety
     /// envelope (Eq. 4) exists to prevent. Fatal for the job.
     Oom { needed_bytes: u64, cap_bytes: u64 },
     /// Cooperative cancellation (straggler speculation won).
     Cancelled,
-    /// Any other execution error.
-    Failed(String),
+    /// Any other execution error, with an optional typed cause.
+    Failed {
+        message: String,
+        source: Option<Arc<dyn std::error::Error + Send + Sync + 'static>>,
+    },
+}
+
+impl BatchError {
+    /// A failure with no structured cause.
+    pub fn failed(message: impl Into<String>) -> Self {
+        BatchError::Failed { message: message.into(), source: None }
+    }
+    /// A failure chaining a typed cause (exposed via `source()`).
+    pub fn failed_with(
+        message: impl Into<String>,
+        source: impl std::error::Error + Send + Sync + 'static,
+    ) -> Self {
+        BatchError::Failed {
+            message: message.into(),
+            source: Some(Arc::new(source)),
+        }
+    }
+}
+
+impl PartialEq for BatchError {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (
+                BatchError::Oom { needed_bytes: n1, cap_bytes: c1 },
+                BatchError::Oom { needed_bytes: n2, cap_bytes: c2 },
+            ) => n1 == n2 && c1 == c2,
+            (BatchError::Cancelled, BatchError::Cancelled) => true,
+            (
+                BatchError::Failed { message: m1, .. },
+                BatchError::Failed { message: m2, .. },
+            ) => m1 == m2,
+            _ => false,
+        }
+    }
+}
+
+impl std::fmt::Display for BatchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BatchError::Oom { needed_bytes, cap_bytes } => write!(
+                f,
+                "accounted OOM: needed {needed_bytes} bytes, cap {cap_bytes}"
+            ),
+            BatchError::Cancelled => write!(f, "cancelled"),
+            BatchError::Failed { message, .. } => write!(f, "{message}"),
+        }
+    }
+}
+
+impl std::error::Error for BatchError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            BatchError::Failed { source: Some(s), .. } => {
+                Some(s.as_ref() as &(dyn std::error::Error + 'static))
+            }
+            _ => None,
+        }
+    }
 }
 
 /// Completion record for one batch (the paper's per-batch telemetry:
@@ -127,7 +193,10 @@ pub trait Backend {
     fn inflight(&self) -> usize;
     /// Backend clock in seconds (virtual for the simulator).
     fn now(&self) -> f64;
-    /// Job-level accounted RSS right now (base + active batch buffers).
+    /// Job-level accounted RSS right now: base tables + active batch
+    /// buffers + idle per-worker scratch reservations (warmed
+    /// `ShardScratch` stays resident between batches and is accounted
+    /// here while its worker is idle).
     fn current_rss(&self) -> u64;
     /// CPU utilization since the previous call, as a fraction of the
     /// *CPU cap* (not of k), in [0, 1].
@@ -164,5 +233,26 @@ mod tests {
         assert_eq!(r.exec_time(), 1.5);
         assert!(!r.is_oom());
         assert_eq!(r.shard.rows(), 12);
+    }
+
+    #[test]
+    fn batch_error_display_and_source_chain() {
+        use std::error::Error;
+        let plain = BatchError::failed("decode failed");
+        assert_eq!(plain.to_string(), "decode failed");
+        assert!(plain.source().is_none());
+
+        let chained = BatchError::failed_with(
+            "decode failed",
+            std::io::Error::new(std::io::ErrorKind::Other, "short read"),
+        );
+        assert_eq!(chained.to_string(), "decode failed");
+        assert!(chained.source().unwrap().to_string().contains("short read"));
+        // Equality is by message, not by cause chain.
+        assert_eq!(plain, chained);
+        assert_ne!(plain, BatchError::Cancelled);
+        assert!(BatchError::Oom { needed_bytes: 1, cap_bytes: 2 }
+            .to_string()
+            .contains("OOM"));
     }
 }

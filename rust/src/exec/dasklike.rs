@@ -12,6 +12,12 @@
 //!   per-task buffer, so memory behaviour near the cap is much safer
 //!   than the shared-heap inmem backend, at the cost of per-task
 //!   overhead and worse locality.
+//!
+//! `current_rss()` sums the per-worker arenas plus the idle-scratch
+//! reservations (warmed per-worker `ShardScratch` between batches), and
+//! `set_workers` re-splits the arena caps — driven by the controller
+//! and, under a `DiffSession`, by the session's budget re-partitioning
+//! as jobs enter and leave.
 
 use std::collections::HashMap;
 use std::sync::Arc;

@@ -3,6 +3,12 @@
 //! fast choice when the working set comfortably fits in RAM. Memory is
 //! one shared pool; an aggressive (b, k) can genuinely blow the cap,
 //! which is exactly the failure mode the working-set gate avoids.
+//!
+//! `current_rss()` reports the shared pool's live batch buffers plus
+//! the per-worker idle-scratch reservations (see `pool::Shared`), so a
+//! `DiffSession` job handle sees the true steady-state footprint
+//! between batches. Worker-count changes arrive via `set_workers` from
+//! both the (b, k) controller and the session's CPU re-partitioning.
 
 use std::sync::Arc;
 

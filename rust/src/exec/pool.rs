@@ -47,6 +47,13 @@ struct Shared {
     shared_tracker: Arc<MemTracker>,
     /// Per-worker arenas (dask-like); indexed by worker id.
     worker_trackers: Vec<Arc<MemTracker>>,
+    /// Per-worker scratch reservations, indexed by worker id: the
+    /// resident bytes of each worker's warmed `ShardScratch`, refreshed
+    /// after every batch and held between batches. Summed into
+    /// `current_rss()` so the steady-state footprint is visible while
+    /// workers are idle (and during decode+Δ, which the batch ledger
+    /// only accounts post-hoc).
+    idle_scratch: Vec<AtomicU64>,
     cancel: Arc<CancelSet>,
     report_tx: Mutex<Sender<BatchReport>>,
 }
@@ -89,6 +96,7 @@ impl Pool {
             shutdown: AtomicUsize::new(0),
             shared_tracker,
             worker_trackers,
+            idle_scratch: (0..max_workers).map(|_| AtomicU64::new(0)).collect(),
             cancel: CancelSet::new(),
             report_tx: Mutex::new(tx),
         });
@@ -192,14 +200,22 @@ impl Pool {
         self.shared.cancel.cancel(shard_id);
     }
 
-    /// Job-level accounted RSS (base tables + live batch buffers).
+    /// Job-level accounted RSS: base tables + live batch buffers + idle
+    /// per-worker scratch reservations (warmed `ShardScratch` that stays
+    /// resident between batches — the ROADMAP memory-model item).
     pub fn current_rss(&self) -> u64 {
         let batch: u64 = if self.shared.profile.per_worker_memory {
             self.shared.worker_trackers.iter().map(|t| t.current()).sum()
         } else {
             self.shared.shared_tracker.current()
         };
-        self.shared.ctx.base_rss_bytes + batch
+        let idle: u64 = self
+            .shared
+            .idle_scratch
+            .iter()
+            .map(|s| s.load(Ordering::Relaxed))
+            .sum();
+        self.shared.ctx.base_rss_bytes + batch + idle
     }
 
     pub fn utilization_sample(&mut self, cpu_cap: usize) -> f64 {
@@ -259,6 +275,12 @@ fn worker_loop(id: usize, shared: Arc<Shared>) {
         } else {
             &shared.shared_tracker
         };
+        // The reservation stays in place WHILE the batch executes: the
+        // warmed scratch is resident throughout, and the batch ledger
+        // only accounts it post-hoc (after the Δ returns). Keeping the
+        // reservation avoids under-reporting during decode+Δ; the brief
+        // overlap with the post-hoc transient guard at batch tail
+        // over-counts conservatively.
         let res = execute_shard_with(
             &shared.ctx,
             task.spec,
@@ -267,6 +289,8 @@ fn worker_loop(id: usize, shared: Arc<Shared>) {
             shared.profile.chunk_rows,
             &mut scratch,
         );
+        shared.idle_scratch[id]
+            .store(scratch.heap_bytes() as u64, Ordering::Relaxed);
         shared
             .busy_ns
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
@@ -348,6 +372,15 @@ mod tests {
         }
         assert_eq!(pool.inflight(), 0);
         assert!(pool.utilization_sample(4) >= 0.0);
+        // The warmed per-worker scratch stays accounted as a persistent
+        // reservation while workers are idle: with no batch executing,
+        // current_rss must still exceed the base table footprint.
+        assert!(
+            pool.current_rss() > ctx.base_rss_bytes,
+            "idle scratch reservation missing: rss={} base={}",
+            pool.current_rss(),
+            ctx.base_rss_bytes
+        );
     }
 
     #[test]

@@ -121,7 +121,7 @@ fn execute_range(
 
     let (outcome, mem) =
         process_shard_with(shard_id, &a_tbl, &b_tbl, &ctx.plan, &ctx.exec, scratch)
-            .map_err(BatchError::Failed)?;
+            .map_err(BatchError::failed)?;
     // Alignment state + Δ scratch live in the reusable per-worker
     // scratch; account them post-hoc against the peak for the window
     // where they coexist with the decode buffers. Between shards the

@@ -1,10 +1,73 @@
 //! smartdiff-sched: adaptive execution scheduler for the SmartDiff
-//! differencing engine (CS.DC 2025 reproduction).
+//! differencing engine (CS.DC 2025 reproduction), exposed as a
+//! multi-job service.
+//!
+//! # The service API: `DiffSession` + `JobBuilder`
+//!
+//! The crate's public surface is the [`api`] module. A [`api::DiffSession`]
+//! is a long-lived facade owning one machine budget ([`config::Caps`]:
+//! memory + CPU caps); jobs are described with the validating
+//! [`api::JobBuilder`] and admitted concurrently against that budget:
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use smartdiff_sched::api::{DiffSession, JobBuilder};
+//! use smartdiff_sched::config::Caps;
+//! use smartdiff_sched::data::generator::{generate_pair, GenSpec};
+//! use smartdiff_sched::data::io::InMemorySource;
+//!
+//! let session = DiffSession::new(Caps { mem_cap_bytes: 4_000_000_000, cpu_cap: 8 });
+//! let (a, b, _) = generate_pair(&GenSpec { rows: 50_000, ..GenSpec::default() });
+//! let job = JobBuilder::new(
+//!     Arc::new(InMemorySource::new(a)),
+//!     Arc::new(InMemorySource::new(b)),
+//! )
+//! .atol(1e-9)
+//! .build()?;
+//!
+//! let mut handle = session.submit(job)?;          // non-blocking
+//! let progress = handle.progress();               // rows done, (b,k), RSS
+//! for event in handle.events() {                  // typed decisions
+//!     println!("{event}");                        // Admitted/Gated/Reconfig/...
+//! }
+//! let result = handle.join()?;                    // Result<JobResult, SchedError>
+//! # Ok::<(), smartdiff_sched::api::SchedError>(())
+//! ```
+//!
+//! Admission reuses the paper's working-set estimate (Eq. 1) per job: a
+//! job whose estimate does not fit the budget left by running jobs
+//! waits in the `Gated` state, so N concurrent jobs share one memory
+//! cap with zero accounted OOMs. The session re-partitions the CPU cap
+//! across running jobs and drives `Backend::set_workers` as jobs enter
+//! and leave. All fallible entry points return the typed
+//! [`api::SchedError`] (no stringly-typed errors on the public surface).
+//!
+//! The historical one-shot entry point `sched::scheduler::run_job` is
+//! **deprecated-but-stable**: it now opens a single-job session,
+//! submits, and joins — a solo job receives the full budget, preserving
+//! the legacy behaviour bit-for-bit.
+//!
+//! # Engine
 //!
 //! The per-shard Δ work is columnar end-to-end (typed gathers,
 //! vectorized alignment hashing, per-worker scratch reuse) so the
 //! adaptive layer tunes real work rather than per-cell dispatch and
 //! allocator churn — see the "Engine hot path" notes in [`engine`].
+
+// Style lints are silenced crate-wide so `cargo clippy -- -D warnings`
+// (CI) enforces only the correctness-relevant classes in this
+// numeric-kernel-heavy codebase.
+#![allow(
+    clippy::too_many_arguments,
+    clippy::needless_range_loop,
+    clippy::new_without_default,
+    clippy::type_complexity,
+    clippy::field_reassign_with_default,
+    clippy::collapsible_else_if,
+    clippy::manual_flatten
+)]
+
+pub mod api;
 pub mod config;
 pub mod data;
 pub mod engine;

@@ -4,6 +4,9 @@
 //!   diff       — diff two CSV files (--schema describes the columns;
 //!                `key` marks row-alignment key components)
 //!   run        — synthetic workload through the full pipeline
+//!   serve      — multi-job DiffSession demo: N concurrent jobs admitted
+//!                against one shared CPU/memory budget, with live
+//!                progress + typed event streaming
 //!   profile    — pre-flight profile + gate decision only
 //!   reproduce  — regenerate the paper's Tables I–III on the sim testbed
 //!   ablate     — run one §VII/§VIII ablation (guard|kappa|hysteresis|rho|safety)
@@ -11,6 +14,7 @@
 
 use std::sync::Arc;
 
+use smartdiff_sched::api::{DiffSession, JobBuilder};
 use smartdiff_sched::bench::tables;
 use smartdiff_sched::cli::Args;
 use smartdiff_sched::config::{BackendChoice, DeltaPath, PolicyKind, SchedulerConfig};
@@ -31,6 +35,7 @@ USAGE:
                        [--telemetry out.jsonl] [--pjrt]
   smartdiff-sched run [--rows N] [--seed S] [--policy adaptive|heuristic|fixed]
                       [--b N --k N] [--backend ...] [--config cfg.toml] [--pjrt]
+  smartdiff-sched serve [--jobs N] [--rows N] [--seed S] [--config cfg.toml]
   smartdiff-sched profile [--rows N] [--config cfg.toml]
   smartdiff-sched reproduce [--quick] [--trials N]
   smartdiff-sched ablate <guard|kappa|hysteresis|rho|safety> [--quick]
@@ -105,7 +110,7 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
     let args = Args::parse(argv, &["quick", "pjrt"])?;
     let known = [
         "config", "backend", "telemetry", "policy", "b", "k", "rows",
-        "seed", "trials", "schema",
+        "seed", "trials", "schema", "jobs",
     ];
     args.expect_known(&known)?;
     match args.subcommand.as_deref() {
@@ -153,6 +158,13 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
             )?;
             print_result(&r);
             Ok(())
+        }
+        Some("serve") => {
+            let cfg = load_cfg(&args)?;
+            let jobs = args.get_usize("jobs")?.unwrap_or(4).max(1);
+            let rows = args.get_usize("rows")?.unwrap_or(50_000);
+            let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
+            serve(&cfg, jobs, rows, seed)
         }
         Some("profile") => {
             let cfg = load_cfg(&args)?;
@@ -234,6 +246,95 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
         Some(other) => Err(format!("unknown subcommand {other:?}")),
         None => Err("missing subcommand".into()),
     }
+}
+
+/// Multi-job service demo: submit N synthetic jobs into one
+/// `DiffSession` budget, stream typed events and progress while they
+/// run, then join and summarize each.
+fn serve(
+    cfg: &SchedulerConfig,
+    jobs: usize,
+    rows: usize,
+    seed: u64,
+) -> Result<(), String> {
+    let session = DiffSession::new(cfg.caps);
+    println!(
+        "session: mem_cap={:.2} GB cpu_cap={} — submitting {jobs} jobs of \
+         {rows} rows each",
+        cfg.caps.mem_cap_bytes as f64 / 1e9,
+        cfg.caps.cpu_cap
+    );
+    let mut handles = Vec::new();
+    for j in 0..jobs {
+        let (a, b, _) = generate_pair(&GenSpec {
+            rows,
+            seed: seed + j as u64,
+            ..GenSpec::default()
+        });
+        let job = JobBuilder::from_config(
+            cfg.clone(),
+            Arc::new(InMemorySource::new(a)),
+            Arc::new(InMemorySource::new(b)),
+        )
+        .build()?;
+        let handle = session.submit(job)?;
+        println!("job {}: submitted", handle.id());
+        handles.push(handle);
+    }
+
+    // Event/progress pump: drain typed events as they arrive until every
+    // job's thread has finished.
+    loop {
+        let mut all_done = true;
+        for h in &handles {
+            for ev in h.events() {
+                println!("job {}: {ev}", h.id());
+            }
+            if !h.is_finished() {
+                all_done = false;
+            }
+        }
+        if all_done {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+
+    // Join every job — one failure must not abandon the others' results.
+    let mut failures = 0usize;
+    for h in &mut handles {
+        for ev in h.events() {
+            println!("job {}: {ev}", h.id());
+        }
+        let id = h.id();
+        match h.join() {
+            Ok(r) => {
+                let s = &r.stats;
+                println!(
+                    "job {id}: changed={} added={} removed={} | backend={} \
+                     batches={} p95={:.3}s peak_rss={:.1}MB reconfigs={} ooms={}",
+                    r.report.rows.changed_rows,
+                    r.report.rows.added,
+                    r.report.rows.removed,
+                    s.backend,
+                    s.batches,
+                    s.p95_latency,
+                    s.peak_rss_bytes as f64 / 1e6,
+                    s.reconfigs,
+                    s.ooms
+                );
+            }
+            Err(e) => {
+                failures += 1;
+                println!("job {id}: FAILED: {e}");
+            }
+        }
+    }
+    if failures > 0 {
+        return Err(format!("{failures} of {jobs} jobs failed"));
+    }
+    println!("serve OK: {jobs} jobs completed under one shared budget");
+    Ok(())
 }
 
 /// Parse "name[:key]:type,..." schema specs for csv diff.

@@ -8,6 +8,7 @@
 //! telemetry file, and renders text curves. `smartdiff-sched analyze
 //! run.jsonl` is the CLI entry.
 
+use crate::api::error::SchedError;
 use crate::metrics::quantile::weighted_quantile;
 use crate::util::json::{parse, Json};
 
@@ -35,17 +36,18 @@ pub struct TelemetryLog {
 }
 
 impl TelemetryLog {
-    pub fn parse_str(text: &str) -> Result<TelemetryLog, String> {
+    pub fn parse_str(text: &str) -> Result<TelemetryLog, SchedError> {
         let mut log = TelemetryLog::default();
         for (i, line) in text.lines().enumerate() {
             if line.trim().is_empty() {
                 continue;
             }
-            let v = parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
-            let ev = v
-                .get("ev")
-                .and_then(|e| e.as_str())
-                .ok_or_else(|| format!("line {}: missing ev", i + 1))?;
+            let v = parse(line).map_err(|e| {
+                SchedError::parse("telemetry", format!("line {}: {e}", i + 1))
+            })?;
+            let ev = v.get("ev").and_then(|e| e.as_str()).ok_or_else(|| {
+                SchedError::parse("telemetry", format!("line {}: missing ev", i + 1))
+            })?;
             match ev {
                 "batch" => {
                     let f = |k: &str| v.get(k).and_then(|x| x.as_f64());
@@ -77,9 +79,9 @@ impl TelemetryLog {
         Ok(log)
     }
 
-    pub fn load(path: &str) -> Result<TelemetryLog, String> {
+    pub fn load(path: &str) -> Result<TelemetryLog, SchedError> {
         let text = std::fs::read_to_string(path)
-            .map_err(|e| format!("read {path}: {e}"))?;
+            .map_err(|e| SchedError::io(path, format!("read: {e}")))?;
         Self::parse_str(&text)
     }
 
@@ -260,6 +262,6 @@ mod tests {
     #[test]
     fn bad_lines_error_with_location() {
         let err = TelemetryLog::parse_str("not json").unwrap_err();
-        assert!(err.contains("line 1"));
+        assert!(err.to_string().contains("line 1"));
     }
 }

@@ -5,15 +5,19 @@
 
 pub mod manifest;
 pub mod pjrt;
+pub mod xla_stub;
 
 use std::path::Path;
 use std::sync::Arc;
 
+use crate::api::error::SchedError;
 use crate::config::{DeltaPath, EngineConfig};
 use crate::engine::comparators::{NativeExec, NumericDeltaExec};
 
 /// Build the numeric-Δ executor selected by the engine config.
-pub fn make_exec(cfg: &EngineConfig) -> Result<Arc<dyn NumericDeltaExec>, String> {
+pub fn make_exec(
+    cfg: &EngineConfig,
+) -> Result<Arc<dyn NumericDeltaExec>, SchedError> {
     match cfg.delta_path {
         DeltaPath::Native => Ok(Arc::new(NativeExec)),
         DeltaPath::Pjrt => {

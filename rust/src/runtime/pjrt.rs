@@ -20,9 +20,13 @@ use std::path::{Path, PathBuf};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Mutex;
 
+use crate::api::error::SchedError;
 use crate::engine::comparators::{NumericBatch, NumericDeltaExec, NumericDiffOut};
 use crate::engine::verdict::Verdict;
 use crate::runtime::manifest::Manifest;
+// Stub mirroring the `xla` crate's API so this service compiles without
+// the external dependency; see `xla_stub.rs` for the swap-in note.
+use crate::runtime::xla_stub as xla;
 
 struct Request {
     batch: NumericBatch,
@@ -52,8 +56,8 @@ impl NumericDeltaExec for PjrtHandle {
 
 /// Spawn the PJRT service for `artifact_dir`. Fails fast (before
 /// spawning workers) if the manifest or client is unavailable.
-pub fn spawn_service(artifact_dir: &Path) -> Result<PjrtHandle, String> {
-    let manifest = Manifest::load(artifact_dir)?;
+pub fn spawn_service(artifact_dir: &Path) -> Result<PjrtHandle, SchedError> {
+    let manifest = Manifest::load(artifact_dir).map_err(SchedError::runtime)?;
     let (tx, rx) = channel::<Request>();
     let (ready_tx, ready_rx) = channel::<Result<(), String>>();
     std::thread::Builder::new()
@@ -74,10 +78,11 @@ pub fn spawn_service(artifact_dir: &Path) -> Result<PjrtHandle, String> {
                 let _ = req.resp.send(out);
             }
         })
-        .map_err(|e| format!("spawn pjrt service: {e}"))?;
+        .map_err(|e| SchedError::runtime(format!("spawn pjrt service: {e}")))?;
     ready_rx
         .recv()
-        .map_err(|_| "pjrt service died during init".to_string())??;
+        .map_err(|_| SchedError::runtime("pjrt service died during init"))?
+        .map_err(SchedError::runtime)?;
     Ok(PjrtHandle { tx: Mutex::new(tx) })
 }
 

@@ -1,0 +1,110 @@
+//! Build-time stub for the `xla` PJRT bindings.
+//!
+//! The crate builds with zero external dependencies (the image's
+//! offline crate cache has no `xla` facade), but the PJRT service in
+//! [`super::pjrt`] is written against the `xla` crate's API. This
+//! module mirrors exactly the surface `pjrt.rs` uses —
+//! `PjRtClient::cpu`, `compile`, `execute`, `HloModuleProto`,
+//! `XlaComputation`, `Literal` — so the service compiles unchanged and
+//! fails *at runtime, typed and early*: `PjRtClient::cpu()` returns an
+//! error, `spawn_service` surfaces it before any worker spawns, and the
+//! engine falls back to the bit-identical native Δ path
+//! (`DeltaPath::Native`, the default).
+//!
+//! Swapping in the real bindings is a two-line change: add the `xla`
+//! dependency and replace the `use crate::runtime::xla_stub as xla;`
+//! import in `pjrt.rs`. No other code changes.
+
+use std::path::Path;
+
+/// Error type standing in for `xla::Error` (only ever `Debug`-formatted
+/// by the service layer).
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+fn unavailable() -> XlaError {
+    XlaError(
+        "xla PJRT bindings are not built into this binary \
+         (engine.delta_path = \"native\" is the supported path)"
+            .to_string(),
+    )
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Always fails in the stub: there is no PJRT runtime to attach to.
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Err(unavailable())
+    }
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(unavailable())
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(
+        _path: P,
+    ) -> Result<HloModuleProto, XlaError> {
+        Err(unavailable())
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(unavailable())
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(unavailable())
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_values: &[f64]) -> Literal {
+        Literal
+    }
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        Err(unavailable())
+    }
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, XlaError> {
+        Err(unavailable())
+    }
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_fast_and_typed() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("nope.hlo.txt").is_err());
+        let err = Literal::vec1(&[1.0]).reshape(&[1]).unwrap_err();
+        assert!(format!("{err:?}").contains("not built"));
+    }
+}

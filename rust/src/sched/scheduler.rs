@@ -6,25 +6,25 @@
 
 use std::sync::Arc;
 
-use crate::config::{BackendChoice, PolicyKind, SchedulerConfig};
+use crate::api::error::SchedError;
+use crate::api::events::JobEvent;
+use crate::api::session::JobControl;
+use crate::api::{DiffSession, JobBuilder};
+use crate::config::{PolicyKind, SchedulerConfig};
 use crate::data::io::TableSource;
-use crate::engine::delta::JobPlan;
 use crate::engine::merge::{JobReport, Merger};
-use crate::engine::schema_align::align_schemas;
-use crate::exec::backend::{Backend, BatchError, JobContext, ShardSpec};
-use crate::exec::dasklike::DaskLikeBackend;
-use crate::exec::inmem::InMemBackend;
+use crate::exec::backend::{Backend, BatchError, ShardSpec};
 use crate::exec::partition::Partitioner;
 use crate::metrics::quantile::{weighted_quantile, RollingWindow};
 use crate::sched::backpressure::Backpressure;
-use crate::sched::controller::{AdaptiveController, PolicyEnv, Signals, TuningPolicy};
+use crate::sched::controller::{PolicyEnv, Signals, TuningPolicy};
 use crate::sched::cost_model::CostModel;
 use crate::sched::ewma::Ewma;
 use crate::sched::memory_model::MemoryModel;
-use crate::sched::preflight::{preflight, PreflightProfile};
+use crate::sched::preflight::PreflightProfile;
 use crate::sched::straggler::{Mitigation, StragglerTracker};
 use crate::sched::telemetry::Telemetry;
-use crate::sched::working_set::{gate_backend, GateDecision, WorkingSetModel};
+use crate::sched::working_set::GateDecision;
 
 /// Job-level statistics (the raw material for Tables I–III).
 #[derive(Debug, Clone)]
@@ -151,17 +151,25 @@ pub struct DriveInputs<'a> {
     /// (microbench-calibrated for the real engine; paper-engine for the
     /// simulated testbed).
     pub consts: crate::engine::microbench::CostConstants,
+    /// Session bridge for jobs driven through `DiffSession`: progress
+    /// snapshots, typed events, cooperative cancellation, and the
+    /// session's CPU-share re-partitioning. `None` for standalone runs
+    /// (the simulator testbed).
+    pub control: Option<Arc<JobControl>>,
 }
 
 /// The scheduler loop. Returns the merged report + stats. An OOM aborts
-/// the job (recorded in stats); transient failures retry once.
+/// the job (recorded in stats); transient failures retry once; a
+/// permanent shard failure or a handle cancellation returns a typed
+/// error. Re-entrant per job: all state is local, so one loop runs per
+/// admitted job on its own session thread.
 pub fn drive(
     backend: &mut dyn Backend,
     a: &dyn TableSource,
     b: &dyn TableSource,
     policy: &mut dyn TuningPolicy,
     inputs: &mut DriveInputs,
-) -> Result<JobResult, String> {
+) -> Result<JobResult, SchedError> {
     let cfg = inputs.cfg;
     let pol = &cfg.policy;
     let caps = &cfg.caps;
@@ -188,9 +196,22 @@ pub fn drive(
         job_rows: a.nrows().max(b.nrows()),
         b_hint: cost_model.overhead_balanced_b(3.0),
     };
+    // Session CPU allowance: the session re-partitions `cpu_cap` across
+    // running jobs; the loop tracks the published share and applies it
+    // through `set_workers` (0 = no session constraint).
+    let mut cpu_allow = caps.cpu_cap;
+    if let Some(c) = &inputs.control {
+        let share = c.cpu_share();
+        if share > 0 {
+            cpu_allow = share.min(caps.cpu_cap).max(1);
+        }
+    }
+    // k_min is validated <= cpu_cap on the session path, but clamp
+    // defensively (the sim testbed runs unvalidated configs).
+    let k_lo = pol.k_min.min(caps.cpu_cap);
     let (mut b_cur, mut k_cur) = policy.initial(&env);
     b_cur = b_cur.clamp(pol.b_min, pol.b_max);
-    k_cur = k_cur.clamp(pol.k_min, caps.cpu_cap);
+    k_cur = k_cur.clamp(k_lo, caps.cpu_cap).min(cpu_allow).max(1);
     backend.set_workers(k_cur);
 
     // --- loop state ---
@@ -237,8 +258,25 @@ pub fn drive(
     let mut t_first_submit: Option<f64> = None;
     let mut t_last_finish: f64 = 0.0;
     let mut aborted = false;
+    let mut cancelled = false;
     let mut actions_total: u64 = 0;
     let mut actions_kept: u64 = 0;
+    let mut rows_done: u64 = 0;
+    let mut bp_pauses_seen: u64 = 0;
+    // Shard ids submitted and not yet reported — the cancellation
+    // broadcast set.
+    let mut inflight_ids: std::collections::HashSet<u64> = Default::default();
+
+    if let Some(c) = &inputs.control {
+        let backend_name = backend.name().to_string();
+        let total = a.nrows().max(b.nrows()) as u64;
+        c.update_progress(|p| {
+            p.backend = backend_name;
+            p.rows_total = total;
+            p.current_b = b_cur;
+            p.current_k = k_cur;
+        });
+    }
 
     if let Some(g) = &inputs.gate {
         inputs.telemetry.event(
@@ -254,8 +292,53 @@ pub fn drive(
     }
 
     loop {
+        // --- session bridge: cancellation + CPU-share re-partitioning ---
+        if let Some(c) = &inputs.control {
+            if !cancelled && c.cancel_requested() {
+                cancelled = true;
+                aborted = true;
+                for id in &inflight_ids {
+                    backend.cancel(*id);
+                }
+                inputs.telemetry.event("cancel", "handle", backend.now());
+            }
+            let share = c.cpu_share();
+            if share > 0 {
+                let new_allow = share.min(caps.cpu_cap).max(1);
+                if new_allow != cpu_allow {
+                    cpu_allow = new_allow;
+                    if k_cur > cpu_allow {
+                        let k_from = k_cur;
+                        k_cur = cpu_allow;
+                        backend.set_workers(k_cur);
+                        stats.reconfigs += 1;
+                        inputs.telemetry.event(
+                            "reconfig",
+                            &format!("k {k_from}->{k_cur} (session-budget)"),
+                            backend.now(),
+                        );
+                        c.push_event(JobEvent::Reconfig {
+                            b_from: b_cur,
+                            b_to: b_cur,
+                            k_from,
+                            k_to: k_cur,
+                            reason: "session-budget".into(),
+                        });
+                    }
+                }
+            }
+        }
+
         // --- submission (paper: pause when queue grows / guard active) ---
         let allow = backpressure.update(backend.queue_depth(), k_cur) && !aborted;
+        if backpressure.pause_count() > bp_pauses_seen {
+            bp_pauses_seen = backpressure.pause_count();
+            if let Some(c) = &inputs.control {
+                c.push_event(JobEvent::Backpressure {
+                    queue_depth: backend.queue_depth(),
+                });
+            }
+        }
         while allow
             && backend.queue_depth() < k_cur.max(1)
             && backend.inflight() < 2 * k_cur.max(1)
@@ -265,6 +348,7 @@ pub fn drive(
                 let now = backend.now();
                 t_first_submit.get_or_insert(now);
                 stragglers.on_submit(spec, now);
+                inflight_ids.insert(spec.shard_id);
                 backend.submit(spec);
             }
         }
@@ -288,6 +372,7 @@ pub fn drive(
 
         for r in &reports {
             stragglers.on_complete(r.shard.shard_id);
+            inflight_ids.remove(&r.shard.shard_id);
             match &r.result {
                 Ok(outcome) => {
                     if !coverage.try_accept(&r.shard) {
@@ -308,6 +393,7 @@ pub fn drive(
                     merger.push(outcome.clone());
                     completed += 1;
                     stats.batches += 1;
+                    rows_done += r.shard.rows() as u64;
                     t_last_finish = t_last_finish.max(r.finished_at);
 
                     // model + signal updates
@@ -329,7 +415,7 @@ pub fn drive(
                         now,
                     );
                 }
-                Err(BatchError::Failed(e)) => {
+                Err(err @ BatchError::Failed { .. }) => {
                     let n = retries.entry(r.shard.shard_id).or_insert(0);
                     if *n < 1 {
                         *n += 1;
@@ -338,15 +424,32 @@ pub fn drive(
                             ..r.shard
                         };
                         stragglers.on_submit(retry, now);
+                        inflight_ids.insert(retry.shard_id);
                         backend.submit(retry);
-                        inputs.telemetry.event("retry", e, now);
+                        inputs.telemetry.event("retry", &err.to_string(), now);
                     } else {
-                        return Err(format!(
-                            "shard {} failed twice: {e}",
-                            r.shard.shard_id
-                        ));
+                        return Err(SchedError::ShardFailed {
+                            shard_id: r.shard.shard_id,
+                            source: err.clone(),
+                        });
                     }
                 }
+            }
+        }
+
+        // --- progress snapshot for the job handle ---
+        if !reports.is_empty() {
+            if let Some(c) = &inputs.control {
+                let rss_now = backend.current_rss();
+                c.update_progress(|p| {
+                    p.rows_done = rows_done;
+                    p.batches = stats.batches;
+                    p.current_b = b_cur;
+                    p.current_k = k_cur;
+                    p.rss_bytes = rss_now;
+                    p.peak_rss_bytes = stats.peak_rss_bytes;
+                    p.reconfigs = stats.reconfigs;
+                });
             }
         }
 
@@ -393,8 +496,10 @@ pub fn drive(
                     nb = safe_b;
                     clamped = true;
                 }
-                nk = nk.clamp(pol.k_min, caps.cpu_cap);
+                nk = nk.clamp(k_lo, caps.cpu_cap);
             }
+            // Session budget wins over any policy proposal.
+            nk = nk.min(cpu_allow).max(1);
             if !clamped {
                 actions_kept += 1;
             }
@@ -405,6 +510,15 @@ pub fn drive(
                     &format!("b {b_cur}->{nb} k {k_cur}->{nk} ({})", step.reason),
                     now,
                 );
+                if let Some(c) = &inputs.control {
+                    c.push_event(JobEvent::Reconfig {
+                        b_from: b_cur,
+                        b_to: nb,
+                        k_from: k_cur,
+                        k_to: nk,
+                        reason: step.reason.to_string(),
+                    });
+                }
                 if nk != k_cur {
                     backend.set_workers(nk);
                 }
@@ -429,6 +543,12 @@ pub fn drive(
                             &format!("shard={}", spec.shard_id),
                             now,
                         );
+                        if let Some(c) = &inputs.control {
+                            c.push_event(JobEvent::Speculation {
+                                shard_id: spec.shard_id,
+                            });
+                        }
+                        inflight_ids.insert(spec.shard_id);
                         backend.submit(spec);
                     }
                     Mitigation::Split(spec) => {
@@ -446,6 +566,13 @@ pub fn drive(
                             &format!("shard={} -> {}+{}", spec.shard_id, l.a_len, rgt.a_len),
                             now,
                         );
+                        if let Some(c) = &inputs.control {
+                            c.push_event(JobEvent::Split {
+                                shard_id: spec.shard_id,
+                            });
+                        }
+                        inflight_ids.insert(l.shard_id);
+                        inflight_ids.insert(rgt.shard_id);
                         backend.submit(l);
                         backend.submit(rgt);
                     }
@@ -456,6 +583,11 @@ pub fn drive(
         if aborted && backend.inflight() == 0 {
             break;
         }
+    }
+
+    if cancelled {
+        inputs.telemetry.flush();
+        return Err(SchedError::Cancelled);
     }
 
     // --- job aggregates (paper §V measurement) ---
@@ -485,86 +617,34 @@ pub fn drive(
     Ok(JobResult { report, stats })
 }
 
-/// Full job entry point over the real backends: schema-align, pre-flight
-/// profile, gate (Eq. 1), build backend + policy from config, drive.
+/// One-shot job entry point — retained as a thin, deprecated-but-stable
+/// compatibility shim over the [`DiffSession`] service API: it opens a
+/// single-job session owning `cfg.caps`, submits, and joins. A solo job
+/// in an idle session receives the full budget, so behaviour matches
+/// the historical blocking `run_job` for every valid configuration; the
+/// one deliberate change is that `cfg` is now validated up front, so
+/// out-of-range configs that previously ran unchecked return a typed
+/// `SchedError::InvalidConfig` instead.
+///
+/// New code should use [`crate::api::DiffSession`] +
+/// [`crate::api::JobBuilder`] directly: multi-job admission over one
+/// budget, non-blocking handles with progress snapshots, typed events,
+/// and cancellation.
 pub fn run_job(
     cfg: &SchedulerConfig,
     a: Arc<dyn TableSource>,
     b: Arc<dyn TableSource>,
-) -> Result<JobResult, String> {
-    let aligned = align_schemas(a.schema(), b.schema())?;
-    let plan = JobPlan::new(aligned, cfg.engine.clone());
-    let exec = crate::runtime::make_exec(&cfg.engine)?;
-
-    let profile = preflight(
-        a.as_ref(),
-        b.as_ref(),
-        cfg.preflight_max_rows,
-        cfg.preflight_fraction,
-    );
-    let gate = gate_backend(
-        &WorkingSetModel::default(),
-        &profile,
-        &cfg.caps,
-        &cfg.policy,
-    );
-    let choice = match cfg.backend {
-        BackendChoice::Auto => gate.backend,
-        other => other,
-    };
-
-    let ctx = JobContext::new(
-        Arc::clone(&a),
-        Arc::clone(&b),
-        plan,
-        exec,
-        cfg.caps.mem_cap_bytes,
-    );
-    let k0 = (cfg.caps.cpu_cap / 4).max(cfg.policy.k_min);
-    let mut backend: Box<dyn Backend> = match choice {
-        BackendChoice::InMem => {
-            Box::new(InMemBackend::new(ctx, k0, cfg.caps.cpu_cap))
-        }
-        BackendChoice::DaskLike => {
-            // Sub-chunk so one task's decode buffer is ~64 MB at Ŵ.
-            let chunk = ((64.0e6 / profile.w_hat.max(1.0)) as usize)
-                .clamp(4_096, 1_000_000);
-            Box::new(DaskLikeBackend::new(ctx, k0, cfg.caps.cpu_cap, chunk))
-        }
-        BackendChoice::Sim => {
-            return Err("sim backend is driven via sim::run_sim_job".into())
-        }
-        BackendChoice::Auto => unreachable!(),
-    };
-
-    let mut policy: Box<dyn TuningPolicy> = match cfg.policy_kind {
-        PolicyKind::Adaptive => Box::new(AdaptiveController::new()),
-        PolicyKind::Fixed { b, k } => {
-            Box::new(crate::baselines::FixedPolicy::new(b, k))
-        }
-        PolicyKind::Heuristic => {
-            Box::new(crate::baselines::HeuristicPolicy::paper_default())
-        }
-    };
-
-    let mut telemetry = match &cfg.telemetry_path {
-        Some(p) => Telemetry::to_file(p)?,
-        None => Telemetry::disabled(),
-    };
-    let mut inputs = DriveInputs {
-        cfg,
-        profile,
-        gate: Some(gate),
-        telemetry: &mut telemetry,
-        consts: crate::engine::microbench::CostConstants::default(),
-    };
-    drive(backend.as_mut(), a.as_ref(), b.as_ref(), policy.as_mut(), &mut inputs)
+) -> Result<JobResult, SchedError> {
+    let session = DiffSession::new(cfg.caps);
+    let job = JobBuilder::from_config(cfg.clone(), a, b).build()?;
+    let mut handle = session.submit(job)?;
+    handle.join()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::DeltaPath;
+    use crate::config::{BackendChoice, DeltaPath};
     use crate::data::generator::{generate_pair, GenSpec};
     use crate::data::io::InMemorySource;
 

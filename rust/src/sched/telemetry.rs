@@ -5,6 +5,7 @@
 
 use std::io::Write;
 
+use crate::api::error::SchedError;
 use crate::exec::backend::BatchReport;
 use crate::util::json::ObjWriter;
 
@@ -19,9 +20,9 @@ impl Telemetry {
         Telemetry { out: None, lines: 0 }
     }
 
-    pub fn to_file(path: &str) -> Result<Self, String> {
+    pub fn to_file(path: &str) -> Result<Self, SchedError> {
         let f = std::fs::File::create(path)
-            .map_err(|e| format!("create {path}: {e}"))?;
+            .map_err(|e| SchedError::io(path, format!("create: {e}")))?;
         Ok(Telemetry { out: Some(std::io::BufWriter::new(f)), lines: 0 })
     }
 

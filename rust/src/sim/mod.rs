@@ -6,6 +6,7 @@
 pub mod simexec;
 pub mod source;
 
+use crate::api::error::SchedError;
 use crate::config::{BackendChoice, PolicyKind, SchedulerConfig};
 use crate::engine::microbench::CostConstants;
 use crate::sched::controller::AdaptiveController;
@@ -40,7 +41,7 @@ pub fn run_sim_job(
     cfg: &SchedulerConfig,
     wl: &SimWorkload,
     consts: &CostConstants,
-) -> Result<JobResult, String> {
+) -> Result<JobResult, SchedError> {
     let profile = PreflightProfile {
         w_hat: wl.w_hat,
         b_read: 2.5e9,
@@ -111,6 +112,7 @@ pub fn run_sim_job(
         gate: Some(gate),
         telemetry: &mut telemetry,
         consts: *consts,
+        control: None,
     };
     drive(&mut backend, &a, &b, policy.as_mut(), &mut inputs)
 }

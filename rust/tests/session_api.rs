@@ -1,0 +1,230 @@
+//! Integration tests for the `DiffSession` service API: concurrent
+//! admission against one shared budget, Gated serialization when
+//! combined working sets exceed the cap, builder/validate parity, typed
+//! cancellation, and the run_job compatibility shim.
+
+use std::sync::Arc;
+
+use smartdiff_sched::api::{DiffSession, JobBuilder, JobState, SchedError};
+use smartdiff_sched::config::{Caps, DeltaPath, SchedulerConfig};
+use smartdiff_sched::data::generator::{generate_pair, GenSpec};
+use smartdiff_sched::data::io::InMemorySource;
+use smartdiff_sched::sched::scheduler::run_job;
+
+fn sources(rows: usize, seed: u64) -> (Arc<InMemorySource>, Arc<InMemorySource>) {
+    let (a, b, _) = generate_pair(&GenSpec { rows, seed, ..GenSpec::default() });
+    (Arc::new(InMemorySource::new(a)), Arc::new(InMemorySource::new(b)))
+}
+
+fn cfg_for(caps: Caps) -> SchedulerConfig {
+    let mut cfg = SchedulerConfig::default();
+    cfg.caps = caps;
+    cfg.policy.b_min = 200;
+    cfg.policy.b_step_min = 50;
+    cfg.engine.delta_path = DeltaPath::Native;
+    cfg
+}
+
+fn job(cfg: &SchedulerConfig, rows: usize, seed: u64) -> smartdiff_sched::api::JobSpec {
+    let (a, b) = sources(rows, seed);
+    JobBuilder::from_config(cfg.clone(), a, b).build().unwrap()
+}
+
+fn solo(cfg: &SchedulerConfig, rows: usize, seed: u64) -> smartdiff_sched::sched::scheduler::JobResult {
+    let (a, b) = sources(rows, seed);
+    run_job(cfg, a, b).unwrap()
+}
+
+/// Acceptance: two concurrent jobs under a shared 4 GB cap complete
+/// with zero OOMs, reports bit-identical to solo `run_job` runs, and
+/// each handle records its admission decision.
+#[test]
+fn concurrent_jobs_share_budget_bit_identical() {
+    let caps = Caps { mem_cap_bytes: 4_000_000_000, cpu_cap: 2 };
+    let cfg = cfg_for(caps);
+    let session = DiffSession::new(caps);
+
+    let mut h1 = session.submit(job(&cfg, 5_000, 11)).unwrap();
+    let mut h2 = session.submit(job(&cfg, 4_000, 13)).unwrap();
+    let r1 = h1.join().unwrap();
+    let r2 = h2.join().unwrap();
+
+    assert_eq!(r1.stats.ooms, 0);
+    assert_eq!(r2.stats.ooms, 0);
+
+    // Each handle recorded an admission decision (both estimates fit a
+    // 4 GB budget, so both are Admitted without gating).
+    for h in [&h1, &h2] {
+        let events = h.events();
+        assert!(
+            events.iter().any(|e| e.kind() == "admitted"),
+            "missing admitted event: {events:?}"
+        );
+        assert_eq!(events.last().map(|e| e.kind()), Some("done"));
+    }
+    assert_eq!(session.active_jobs(), 0);
+    assert_eq!(session.committed_bytes(), 0);
+
+    // Bit-identical to solo runs of the same (seeded) workloads.
+    let s1 = solo(&cfg, 5_000, 11);
+    let s2 = solo(&cfg, 4_000, 13);
+    assert!(r1.report.same_diff(&s1.report), "job 1 diverged from solo run");
+    assert!(r2.report.same_diff(&s2.report), "job 2 diverged from solo run");
+}
+
+/// Satellite: two jobs whose combined working-set estimates exceed
+/// `mem_cap_bytes` must serialize — the second waits in the `Gated`
+/// state — with zero OOMs and both diffs bit-identical to solo runs.
+#[test]
+fn over_budget_jobs_serialize_with_gated_event() {
+    // Eq. 1 floors every estimate at β ≈ 150 MB, so under a 256 MB cap
+    // any two jobs over-commit (each fits alone, together they don't).
+    let caps = Caps { mem_cap_bytes: 256_000_000, cpu_cap: 1 };
+    let cfg = cfg_for(caps);
+    let session = DiffSession::new(caps);
+
+    // Job 1 is big enough to still be running while job 2 reaches
+    // admission (preflight on 5k rows is orders of magnitude faster
+    // than a 120k-row diff on one worker).
+    let mut h1 = session.submit(job(&cfg, 120_000, 21)).unwrap();
+    let t0 = std::time::Instant::now();
+    while h1.state() != JobState::Running && t0.elapsed().as_secs() < 30 {
+        std::thread::yield_now();
+    }
+    assert_eq!(h1.state(), JobState::Running, "job 1 never started");
+
+    let mut h2 = session.submit(job(&cfg, 5_000, 23)).unwrap();
+    // While both are alive, the admission controller must never let
+    // them run concurrently.
+    let mut saw_gated_state = false;
+    while !h1.is_finished() {
+        let (s1, s2) = (h1.state(), h2.state());
+        assert!(
+            !(s1 == JobState::Running && s2 == JobState::Running),
+            "over-budget jobs ran concurrently"
+        );
+        saw_gated_state |= s2 == JobState::Gated;
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+
+    let r1 = h1.join().unwrap();
+    let r2 = h2.join().unwrap();
+    assert_eq!(r1.stats.ooms, 0);
+    assert_eq!(r2.stats.ooms, 0);
+    assert!(saw_gated_state, "job 2 never observed in Gated state");
+    let ev2 = h2.events();
+    assert!(
+        ev2.iter().any(|e| e.kind() == "gated"),
+        "job 2 missing gated event: {ev2:?}"
+    );
+    assert!(
+        ev2.iter().any(|e| e.kind() == "admitted"),
+        "job 2 missing admitted event: {ev2:?}"
+    );
+
+    // Serialization must not change either diff.
+    let s1 = solo(&cfg, 120_000, 21);
+    let s2 = solo(&cfg, 5_000, 23);
+    assert!(r1.report.same_diff(&s1.report));
+    assert!(r2.report.same_diff(&s2.report));
+}
+
+/// Satellite: every invalid config rejected by
+/// `SchedulerConfig::validate()` is rejected by `JobBuilder::build()`
+/// with a `SchedError::InvalidConfig` naming the same field.
+#[test]
+fn builder_validation_parity() {
+    let cases: [(&str, fn(&mut SchedulerConfig)); 14] = [
+        ("policy.kappa", |c| c.policy.kappa = 0.0),
+        ("policy.eta", |c| c.policy.eta = 1.5),
+        ("policy.gamma", |c| c.policy.gamma = 1.0),
+        ("policy.rho_star", |c| c.policy.rho_star = -0.1),
+        ("policy.rho_smooth", |c| c.policy.rho_smooth = 1.0),
+        ("policy.lambda_b", |c| c.policy.lambda_b = 0.0),
+        ("policy.lambda_k", |c| c.policy.lambda_k = 2.0),
+        ("policy.tau", |c| c.policy.tau = 1.0),
+        ("policy.b_min", |c| c.policy.b_min = 0),
+        ("policy.b_min", |c| {
+            c.policy.b_min = 100;
+            c.policy.b_max = 50;
+        }),
+        ("caps.mem_cap", |c| c.caps.mem_cap_bytes = 0),
+        ("caps.cpu_cap", |c| c.caps.cpu_cap = 0),
+        ("policy.k_min", |c| c.policy.k_min = 0),
+        ("policy.k_min", |c| c.policy.k_min = c.caps.cpu_cap + 1),
+    ];
+    for (field, mutate) in cases {
+        let mut cfg = SchedulerConfig::default();
+        mutate(&mut cfg);
+
+        let verr = cfg.validate().unwrap_err();
+        assert_eq!(verr.field(), Some(field), "validate(): {verr}");
+
+        let (a, b) = sources(100, 1);
+        let berr = JobBuilder::from_config(cfg, a, b).build().unwrap_err();
+        match &berr {
+            SchedError::InvalidConfig { field: f, .. } => {
+                assert_eq!(f, field, "build(): {berr}")
+            }
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
+    }
+}
+
+/// Valid configs build on both paths too (parity in the accept
+/// direction).
+#[test]
+fn builder_accepts_what_validate_accepts() {
+    let cfg = cfg_for(Caps { mem_cap_bytes: 1_000_000_000, cpu_cap: 2 });
+    cfg.validate().unwrap();
+    let (a, b) = sources(100, 2);
+    JobBuilder::from_config(cfg, a, b).build().unwrap();
+}
+
+/// Cancellation through the handle is cooperative and typed.
+#[test]
+fn cancel_returns_typed_error() {
+    let caps = Caps { mem_cap_bytes: 2_000_000_000, cpu_cap: 1 };
+    let cfg = cfg_for(caps);
+    let session = DiffSession::new(caps);
+    let mut h = session.submit(job(&cfg, 200_000, 31)).unwrap();
+    h.cancel();
+    match h.join() {
+        Err(SchedError::Cancelled) => {
+            assert_eq!(h.state(), JobState::Cancelled);
+            let events = h.events();
+            assert_eq!(events.last().map(|e| e.kind()), Some("done"));
+        }
+        // The job can legitimately outrun the cancellation request on a
+        // fast machine; completing correctly is also acceptable.
+        Ok(r) => assert_eq!(r.stats.ooms, 0),
+        Err(other) => panic!("expected Cancelled, got {other}"),
+    }
+    // Budget fully released either way.
+    assert_eq!(session.active_jobs(), 0);
+    assert_eq!(session.committed_bytes(), 0);
+}
+
+/// The legacy shim still behaves like the historical run_job: full
+/// budget, deterministic report, typed error surface.
+#[test]
+fn run_job_shim_matches_session_solo() {
+    let caps = Caps { mem_cap_bytes: 2_000_000_000, cpu_cap: 2 };
+    let cfg = cfg_for(caps);
+    let shim = solo(&cfg, 4_000, 41);
+
+    let session = DiffSession::new(caps);
+    let mut h = session.submit(job(&cfg, 4_000, 41)).unwrap();
+    let direct = h.join().unwrap();
+
+    assert!(shim.report.same_diff(&direct.report));
+    assert_eq!(shim.stats.ooms, 0);
+
+    // Progress snapshot reflects the finished job.
+    let p = h.progress();
+    assert!(p.batches > 0);
+    assert!(p.rows_done > 0);
+    assert!(p.rows_total >= 4_000);
+    assert!(p.current_b > 0 && p.current_k > 0);
+    assert!(!p.backend.is_empty());
+}
