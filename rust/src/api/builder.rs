@@ -38,13 +38,38 @@ impl JobSpec {
 
 /// Fluent builder for [`JobSpec`].
 ///
-/// ```text
-/// let job = JobBuilder::new(a, b)
-///     .policy(PolicyKind::Adaptive)
-///     .b_min(1_000)
-///     .atol(1e-9)
-///     .telemetry("run.jsonl")
-///     .build()?;
+/// ```
+/// use std::sync::Arc;
+/// use smartdiff_sched::api::JobBuilder;
+/// use smartdiff_sched::config::{DeltaPath, PolicyKind};
+/// use smartdiff_sched::data::generator::{generate_pair, GenSpec};
+/// use smartdiff_sched::data::io::InMemorySource;
+///
+/// let (a, b, _) =
+///     generate_pair(&GenSpec { rows: 500, seed: 7, ..GenSpec::default() });
+/// let job = JobBuilder::new(
+///     Arc::new(InMemorySource::new(a)),
+///     Arc::new(InMemorySource::new(b)),
+/// )
+/// .policy(PolicyKind::Adaptive)
+/// .delta_path(DeltaPath::Native)
+/// .b_min(1_000)
+/// .atol(1e-9)
+/// .build()?;
+/// assert_eq!(job.rows(), 500);
+///
+/// // Invalid knobs are rejected with the offending field named:
+/// let (a, b, _) =
+///     generate_pair(&GenSpec { rows: 10, seed: 7, ..GenSpec::default() });
+/// let err = JobBuilder::new(
+///     Arc::new(InMemorySource::new(a)),
+///     Arc::new(InMemorySource::new(b)),
+/// )
+/// .eta(1.5)
+/// .build()
+/// .unwrap_err();
+/// assert_eq!(err.field(), Some("policy.eta"));
+/// # Ok::<(), smartdiff_sched::api::SchedError>(())
 /// ```
 pub struct JobBuilder {
     cfg: SchedulerConfig,
@@ -92,18 +117,22 @@ impl JobBuilder {
 
     // --- comparator tolerances ---
 
+    /// Absolute tolerance for numeric comparators (|Δ| ≤ atol is equal).
     pub fn atol(mut self, atol: f64) -> Self {
         self.cfg.engine.atol = atol;
         self
     }
+    /// Relative tolerance for numeric comparators.
     pub fn rtol(mut self, rtol: f64) -> Self {
         self.cfg.engine.rtol = rtol;
         self
     }
+    /// Case-insensitive string comparison.
     pub fn string_ci(mut self, ci: bool) -> Self {
         self.cfg.engine.string_ci = ci;
         self
     }
+    /// Timestamp tolerance in microseconds.
     pub fn ts_tolerance_us(mut self, us: i64) -> Self {
         self.cfg.engine.ts_tolerance_us = us;
         self
@@ -131,11 +160,12 @@ impl JobBuilder {
         self.cfg.policy.tau = tau;
         self
     }
-    /// Batch-size bounds.
+    /// Lower batch-size bound for the controller.
     pub fn b_min(mut self, b_min: usize) -> Self {
         self.cfg.policy.b_min = b_min;
         self
     }
+    /// Upper batch-size bound for the controller.
     pub fn b_max(mut self, b_max: usize) -> Self {
         self.cfg.policy.b_max = b_max;
         self
@@ -153,6 +183,7 @@ impl JobBuilder {
         self.cfg.telemetry_path = Some(path.into());
         self
     }
+    /// Deterministic seed for seeded components (simulator, generators).
     pub fn seed(mut self, seed: u64) -> Self {
         self.cfg.seed = seed;
         self

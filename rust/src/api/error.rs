@@ -41,21 +41,27 @@ pub enum SchedError {
 }
 
 impl SchedError {
+    /// An `InvalidConfig` naming the offending field.
     pub fn invalid(field: impl Into<String>, message: impl Into<String>) -> Self {
         SchedError::InvalidConfig { field: field.into(), message: message.into() }
     }
+    /// A `Parse` error naming the input being parsed.
     pub fn parse(context: impl Into<String>, message: impl Into<String>) -> Self {
         SchedError::Parse { context: context.into(), message: message.into() }
     }
+    /// A schema-alignment failure.
     pub fn schema(message: impl Into<String>) -> Self {
         SchedError::SchemaAlign { message: message.into() }
     }
+    /// A backend/runtime construction or execution failure.
     pub fn runtime(message: impl Into<String>) -> Self {
         SchedError::Runtime { message: message.into() }
     }
+    /// A filesystem I/O failure at `path`.
     pub fn io(path: impl Into<String>, message: impl Into<String>) -> Self {
         SchedError::Io { path: path.into(), message: message.into() }
     }
+    /// An operation unavailable through this entry point.
     pub fn unsupported(message: impl Into<String>) -> Self {
         SchedError::Unsupported { message: message.into() }
     }

@@ -41,6 +41,18 @@ pub enum JobEvent {
     /// at admission time); `concurrent` counts running jobs including
     /// this one.
     Admitted { ws_bytes: u64, granted_bytes: u64, concurrent: usize },
+    /// The session re-partitioned this job's elastic memory grant
+    /// (another job was admitted or completed, or the session budget
+    /// was resized). A shrink takes effect on the safety envelope
+    /// immediately — forcing batch-size down-steps if the current batch
+    /// size is no longer safe — and the backend's hard accounting cap
+    /// follows once live usage drains below the new grant.
+    MemGrant {
+        /// The grant before the re-partition (bytes).
+        from_bytes: u64,
+        /// The grant now in force (bytes).
+        to_bytes: u64,
+    },
     /// The controller (or a session budget re-partition) changed (b, k).
     Reconfig {
         b_from: usize,
@@ -66,6 +78,7 @@ impl JobEvent {
         match self {
             JobEvent::Gated { .. } => "gated",
             JobEvent::Admitted { .. } => "admitted",
+            JobEvent::MemGrant { .. } => "mem_grant",
             JobEvent::Reconfig { .. } => "reconfig",
             JobEvent::Backpressure { .. } => "backpressure",
             JobEvent::Speculation { .. } => "speculation",
@@ -92,6 +105,12 @@ impl fmt::Display for JobEvent {
                     *granted_bytes as f64 / 1e6
                 )
             }
+            JobEvent::MemGrant { from_bytes, to_bytes } => write!(
+                f,
+                "mem_grant: {:.1}MB -> {:.1}MB",
+                *from_bytes as f64 / 1e6,
+                *to_bytes as f64 / 1e6
+            ),
             JobEvent::Reconfig { b_from, b_to, k_from, k_to, reason } => {
                 write!(f, "reconfig: b {b_from}->{b_to} k {k_from}->{k_to} ({reason})")
             }
@@ -145,6 +164,7 @@ mod tests {
                 granted_bytes: 2_000_000,
                 concurrent: 2,
             },
+            JobEvent::MemGrant { from_bytes: 4_000_000, to_bytes: 2_000_000 },
             JobEvent::Reconfig {
                 b_from: 100,
                 b_to: 200,
@@ -163,6 +183,7 @@ mod tests {
             vec![
                 "gated",
                 "admitted",
+                "mem_grant",
                 "reconfig",
                 "backpressure",
                 "speculation",

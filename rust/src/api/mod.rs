@@ -1,19 +1,46 @@
-//! Public service API: [`DiffSession`] (multi-job admission over one
-//! CPU/memory budget), [`JobBuilder`] (typed, validating job
-//! construction), [`JobHandle`] (non-blocking progress / events /
-//! cancel / join), and [`SchedError`] (the typed error surface).
+//! Public service API: [`DiffSession`] (multi-job admission and elastic
+//! per-job memory grants over one CPU/memory budget), [`JobBuilder`]
+//! (typed, validating job construction), [`JobHandle`] (non-blocking
+//! progress / events / cancel / join), and [`SchedError`] (the typed
+//! error surface).
 //!
-//! ```text
-//! let session = DiffSession::new(Caps { mem_cap_bytes: 4e9 as u64, cpu_cap: 8 });
-//! let job = JobBuilder::new(a, b).atol(1e-9).build()?;
-//! let mut handle = session.submit(job)?;
-//! for ev in handle.events() { println!("{ev}"); }
-//! let result = handle.join()?;
 //! ```
+//! use std::sync::Arc;
+//! use smartdiff_sched::api::{DiffSession, JobBuilder};
+//! use smartdiff_sched::config::{Caps, DeltaPath};
+//! use smartdiff_sched::data::generator::{generate_pair, GenSpec};
+//! use smartdiff_sched::data::io::InMemorySource;
+//!
+//! let session =
+//!     DiffSession::new(Caps { mem_cap_bytes: 1_000_000_000, cpu_cap: 2 });
+//! let (a, b, _) =
+//!     generate_pair(&GenSpec { rows: 300, seed: 3, ..GenSpec::default() });
+//! let job = JobBuilder::new(
+//!     Arc::new(InMemorySource::new(a)),
+//!     Arc::new(InMemorySource::new(b)),
+//! )
+//! .delta_path(DeltaPath::Native)
+//! .b_min(100)
+//! .atol(1e-9)
+//! .build()?;
+//! let mut handle = session.submit(job)?;
+//! for ev in handle.events() {
+//!     println!("{ev}"); // Admitted/Gated/MemGrant/Reconfig/...
+//! }
+//! let result = handle.join()?;
+//! assert_eq!(result.stats.ooms, 0);
+//! # Ok::<(), smartdiff_sched::api::SchedError>(())
+//! ```
+//!
+//! The session re-partitions its budget as jobs enter and leave: CPU
+//! shares drive `Backend::set_workers`, and elastic memory grants drive
+//! `Backend::set_mem_budget` — see [`DiffSession`] and
+//! [`JobEvent::MemGrant`].
 //!
 //! The legacy one-shot `sched::scheduler::run_job` remains as a
 //! deprecated-but-stable shim: it opens a single-job session, submits,
 //! and joins.
+#![warn(missing_docs)]
 
 pub mod builder;
 pub mod error;

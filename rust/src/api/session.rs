@@ -11,13 +11,22 @@
 //!   estimates of running jobs plus its own fit `mem_cap_bytes`;
 //!   otherwise it waits in the `Gated` state (FIFO among waiters) and
 //!   its handle records a [`JobEvent::Gated`]. Admission bounds the sum
-//!   of working-set *charges* by the budget; each admitted job's
-//!   accounting cap is the budget unclaimed by other jobs' charges at
-//!   its admission, and the per-job safety envelope keeps accounted
-//!   usage inside that cap — so jobs cannot fail with accounted OOMs.
-//!   A job admitted into an idle session keeps the full budget (legacy
-//!   `run_job` parity); shrinking already-running jobs' caps when later
-//!   jobs join is future work (see ROADMAP).
+//!   of working-set *charges* by the budget.
+//! * **Elastic memory grants** — every admit, completion, and
+//!   [`DiffSession::set_mem_budget`] call re-partitions the memory
+//!   budget into per-job *grants*: each running job is granted its
+//!   admission charge plus an even share of the spare budget, so grants
+//!   **never sum past the budget at any instant** (shrunken grants are
+//!   published before expanded ones). A job admitted into an idle
+//!   session is granted the full budget (legacy `run_job` parity); when
+//!   later jobs join, running jobs' grants shrink down toward their
+//!   charges, and they re-expand as jobs complete. The scheduler loop
+//!   observes grant changes mid-flight ([`JobEvent::MemGrant`]): a
+//!   shrink tightens the safety envelope immediately (forcing
+//!   batch-size down-steps), pauses submission while accounted usage
+//!   drains, and applies the backend's hard accounting cap through
+//!   `Backend::set_mem_budget` once usage is under the new grant — so
+//!   caps change mid-job without accounted OOMs.
 //! * **CPU re-partitioning** — the session divides `cpu_cap` evenly
 //!   across running jobs and updates each job's share as jobs enter and
 //!   leave; the scheduler loop applies the share through
@@ -58,6 +67,10 @@ pub struct JobControl {
     cancel: AtomicBool,
     /// Session-granted worker allowance (0 = no session constraint).
     cpu_share: AtomicUsize,
+    /// Session-granted memory allowance in bytes (0 = not yet granted).
+    /// Updated only under the session's ledger lock, so lock-holding
+    /// readers observe a consistent partition.
+    mem_grant: AtomicU64,
     state: AtomicU8,
     progress: Mutex<JobProgress>,
     events: Mutex<Vec<JobEvent>>,
@@ -69,28 +82,44 @@ impl JobControl {
             job_id,
             cancel: AtomicBool::new(false),
             cpu_share: AtomicUsize::new(0),
+            mem_grant: AtomicU64::new(0),
             state: AtomicU8::new(0),
             progress: Mutex::new(JobProgress::default()),
             events: Mutex::new(Vec::new()),
         })
     }
 
+    /// Session-assigned job id (also on the job's [`JobHandle`]).
     pub fn job_id(&self) -> u64 {
         self.job_id
     }
+    /// Ask the scheduler loop to stop cooperatively.
     pub fn request_cancel(&self) {
         self.cancel.store(true, Ordering::Relaxed);
     }
+    /// Whether cancellation has been requested.
     pub fn cancel_requested(&self) -> bool {
         self.cancel.load(Ordering::Relaxed)
     }
+    /// The session's current worker allowance for this job (0 = no
+    /// session constraint).
     pub fn cpu_share(&self) -> usize {
         self.cpu_share.load(Ordering::Relaxed)
     }
     pub(crate) fn set_cpu_share(&self, share: usize) {
         self.cpu_share.store(share, Ordering::Relaxed);
     }
+    /// The session's current memory grant for this job in bytes (0 =
+    /// not yet granted). The scheduler loop polls this every iteration
+    /// and reacts to changes mid-flight.
+    pub fn mem_grant(&self) -> u64 {
+        self.mem_grant.load(Ordering::Relaxed)
+    }
+    pub(crate) fn set_mem_grant(&self, bytes: u64) {
+        self.mem_grant.store(bytes, Ordering::Relaxed);
+    }
 
+    /// Lifecycle state right now.
     pub fn state(&self) -> JobState {
         match self.state.load(Ordering::Relaxed) {
             0 => JobState::Pending,
@@ -113,6 +142,7 @@ impl JobControl {
         self.state.store(v, Ordering::Relaxed);
     }
 
+    /// Point-in-time progress snapshot.
     pub fn progress(&self) -> JobProgress {
         self.progress.lock().unwrap().clone()
     }
@@ -149,6 +179,11 @@ struct AdmissionLedger {
 
 struct SessionInner {
     caps: Caps,
+    /// Elastic session memory budget in bytes. Starts at
+    /// `caps.mem_cap_bytes`; `DiffSession::set_mem_budget` resizes it at
+    /// runtime. Written only together with a grant re-partition under
+    /// the ledger lock.
+    mem_budget: AtomicU64,
     ws_model: WorkingSetModel,
     ledger: Mutex<AdmissionLedger>,
     cv: Condvar,
@@ -164,14 +199,70 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
         .unwrap_or_else(|| "non-string panic payload".into())
 }
 
-/// Divide the CPU cap evenly across running jobs (at least 1 worker
-/// each) and publish each job's share; the scheduler loops apply it via
-/// `Backend::set_workers`.
-fn repartition(caps: &Caps, ledger: &AdmissionLedger) {
-    let n = ledger.running.len().max(1);
-    let share = (caps.cpu_cap / n).max(1);
+/// Re-partition the session budget across running jobs. Called under
+/// the ledger lock on every admit, completion, and budget resize.
+///
+/// * **CPU** — `cpu_cap` divided evenly (at least 1 worker each); the
+///   scheduler loops apply shares via `Backend::set_workers`.
+/// * **Memory** — each job is granted its admission charge plus an even
+///   share of the spare budget, so a solo job holds the entire budget
+///   (legacy `run_job` parity) and grants shrink toward charges as the
+///   session fills. If the budget has been resized below the committed
+///   charges, grants scale proportionally to charges instead (summing
+///   to exactly `max(budget, n)` via cumulative rounding). Shrunken
+///   grants are published before expanded ones, so the sum of grants
+///   never exceeds the budget at any instant whenever the budget covers
+///   at least one byte per running job (the integer spare split may
+///   leave up to `n-1` bytes unassigned).
+fn repartition(inner: &SessionInner, ledger: &AdmissionLedger) {
+    let n = ledger.running.len();
+    if n == 0 {
+        return;
+    }
+    let share = (inner.caps.cpu_cap / n).max(1);
     for job in &ledger.running {
         job.control.set_cpu_share(share);
+    }
+
+    let budget = inner.mem_budget.load(Ordering::Relaxed);
+    let total: u64 = ledger.running.iter().map(|j| j.charge_bytes).sum();
+    let grants: Vec<u64> = if total <= budget {
+        let spare = (budget - total) / n as u64;
+        ledger
+            .running
+            .iter()
+            .map(|j| j.charge_bytes.saturating_add(spare).max(1))
+            .collect()
+    } else {
+        // Over-committed (the budget was resized below the committed
+        // charges): one byte per job plus telescoping proportional
+        // shares of the rest. The cumulative rounding makes the grants
+        // sum to exactly max(budget, n), so the partition stays within
+        // the budget whenever it covers a byte per job.
+        let eff = budget.max(n as u64) - n as u64;
+        let mut prefix: u128 = 0;
+        let mut last: u64 = 0;
+        ledger
+            .running
+            .iter()
+            .map(|j| {
+                prefix += j.charge_bytes as u128;
+                let cum = ((eff as u128 * prefix) / (total as u128)) as u64;
+                let g = 1 + (cum - last);
+                last = cum;
+                g
+            })
+            .collect()
+    };
+    for pass in 0..2 {
+        for (job, &new) in ledger.running.iter().zip(&grants) {
+            let old = job.control.mem_grant();
+            let shrink = old != 0 && new <= old;
+            // Pass 0 publishes shrinks, pass 1 grows (incl. first grants).
+            if (pass == 0) == shrink && new != old {
+                job.control.set_mem_grant(new);
+            }
+        }
     }
 }
 
@@ -186,6 +277,7 @@ impl DiffSession {
         DiffSession {
             inner: Arc::new(SessionInner {
                 caps,
+                mem_budget: AtomicU64::new(caps.mem_cap_bytes),
                 ws_model: WorkingSetModel::default(),
                 ledger: Mutex::new(AdmissionLedger::default()),
                 cv: Condvar::new(),
@@ -199,8 +291,46 @@ impl DiffSession {
         DiffSession::new(Caps::default())
     }
 
+    /// The machine budget this session was created with. The *current*
+    /// memory budget may differ after [`DiffSession::set_mem_budget`];
+    /// see [`DiffSession::mem_budget`].
     pub fn caps(&self) -> Caps {
         self.inner.caps
+    }
+
+    /// The session memory budget currently in force, in bytes.
+    pub fn mem_budget(&self) -> u64 {
+        self.inner.mem_budget.load(Ordering::Relaxed)
+    }
+
+    /// Elastically resize the session's memory budget at runtime (e.g. a
+    /// multi-tenant operator reclaiming or returning RAM). Running jobs'
+    /// grants are re-partitioned immediately — shrinking toward their
+    /// admission charges (proportionally below them if the new budget no
+    /// longer covers the committed charges) or re-expanding — and each
+    /// affected job observes the change mid-flight through its scheduler
+    /// loop ([`JobEvent::MemGrant`]). Gated jobs are re-evaluated against
+    /// the new budget. `bytes` is floored at 1.
+    pub fn set_mem_budget(&self, bytes: u64) {
+        let ledger = self.inner.ledger.lock().unwrap();
+        self.inner.mem_budget.store(bytes.max(1), Ordering::Relaxed);
+        repartition(&self.inner, &ledger);
+        drop(ledger);
+        self.inner.cv.notify_all();
+    }
+
+    /// Snapshot of the current per-job memory grants as `(job_id,
+    /// grant_bytes)` pairs. Taken under the ledger lock, so the grants
+    /// are a consistent instantaneous partition: their sum never exceeds
+    /// [`DiffSession::mem_budget`] as long as the budget covers at least
+    /// one byte per running job (grants are floored at one byte each).
+    pub fn mem_grants(&self) -> Vec<(u64, u64)> {
+        let ledger = self.inner.ledger.lock().unwrap();
+        ledger
+            .running
+            .iter()
+            .map(|j| (j.id, j.control.mem_grant()))
+            .collect()
     }
 
     /// Number of currently admitted (running) jobs.
@@ -221,6 +351,34 @@ impl DiffSession {
     /// re-validated against them here (e.g. a `policy.k_min` above the
     /// session's `cpu_cap` is a typed `InvalidConfig`, not a panic on
     /// the job thread).
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use smartdiff_sched::api::{DiffSession, JobBuilder};
+    /// use smartdiff_sched::config::{Caps, DeltaPath};
+    /// use smartdiff_sched::data::generator::{generate_pair, GenSpec};
+    /// use smartdiff_sched::data::io::InMemorySource;
+    ///
+    /// let session =
+    ///     DiffSession::new(Caps { mem_cap_bytes: 1_000_000_000, cpu_cap: 2 });
+    /// let (a, b, _) =
+    ///     generate_pair(&GenSpec { rows: 400, seed: 1, ..GenSpec::default() });
+    /// let job = JobBuilder::new(
+    ///     Arc::new(InMemorySource::new(a)),
+    ///     Arc::new(InMemorySource::new(b)),
+    /// )
+    /// .delta_path(DeltaPath::Native)
+    /// .b_min(100)
+    /// .build()?;
+    ///
+    /// let mut handle = session.submit(job)?; // non-blocking
+    /// let result = handle.join()?;
+    /// assert_eq!(result.stats.ooms, 0);
+    /// assert!(handle.events().iter().any(|e| e.kind() == "admitted"));
+    /// # Ok::<(), smartdiff_sched::api::SchedError>(())
+    /// ```
     pub fn submit(&self, job: JobSpec) -> Result<JobHandle, SchedError> {
         let mut effective = job.cfg.clone();
         effective.caps = self.inner.caps;
@@ -246,6 +404,7 @@ pub struct JobHandle {
 }
 
 impl JobHandle {
+    /// Session-assigned job id.
     pub fn id(&self) -> u64 {
         self.id
     }
@@ -344,7 +503,8 @@ fn run_with_admission(
 
     // --- admission: Eq. 1 working-set estimate vs the shared budget ---
     let ws = inner.ws_model.estimate(&profile);
-    let charge = (ws.max(1.0) as u64).min(inner.caps.mem_cap_bytes);
+    let charge =
+        (ws.max(1.0) as u64).min(inner.mem_budget.load(Ordering::Relaxed));
     let granted = {
         let mut ledger = inner.ledger.lock().unwrap();
         let mut announced_gate = false;
@@ -355,9 +515,11 @@ fn run_with_admission(
                 return Err(SchedError::Cancelled);
             }
             // FIFO among waiters: budget must fit AND nobody older may
-            // still be queued (an idle session always admits).
+            // still be queued (an idle session always admits). The
+            // budget is re-read every round — it is elastic.
+            let budget = inner.mem_budget.load(Ordering::Relaxed);
             let fits = ledger.running.is_empty()
-                || (ledger.committed_bytes + charge <= inner.caps.mem_cap_bytes
+                || (ledger.committed_bytes + charge <= budget
                     && ledger.waiters.front().map_or(true, |w| *w == id));
             if fits {
                 break;
@@ -368,9 +530,7 @@ fn run_with_admission(
                 control.set_state(JobState::Gated);
                 control.push_event(JobEvent::Gated {
                     ws_bytes: charge,
-                    available_bytes: inner
-                        .caps
-                        .mem_cap_bytes
+                    available_bytes: budget
                         .saturating_sub(ledger.committed_bytes),
                 });
             }
@@ -381,22 +541,21 @@ fn run_with_admission(
             ledger = l;
         }
         ledger.waiters.retain(|w| *w != id);
-        // The job's accounting cap is the budget unclaimed by other
-        // jobs' charges at admission. Admission bounds the sum of
-        // *charges* by the budget; the per-job safety envelope (Eq. 4)
-        // then keeps each job's accounted usage inside its own cap, so
-        // accounted OOMs cannot occur. (A job admitted alone keeps the
-        // full budget for legacy `run_job` parity; shrinking running
-        // jobs' caps when later jobs join is a ROADMAP item.)
-        let granted =
-            inner.caps.mem_cap_bytes.saturating_sub(ledger.committed_bytes).max(1);
+        // Admission bounds the sum of *charges* by the budget; the
+        // grant re-partition then hands every running job its charge
+        // plus an even share of the spare budget, shrinking the others'
+        // grants toward their charges to make room. The per-job safety
+        // envelope (Eq. 4) keeps each job's accounted usage inside its
+        // grant, so accounted OOMs cannot occur. A job admitted alone
+        // is granted the full budget (legacy `run_job` parity).
         ledger.committed_bytes += charge;
         ledger.running.push(RunningJob {
             id,
             charge_bytes: charge,
             control: Arc::clone(control),
         });
-        repartition(&inner.caps, &ledger);
+        repartition(inner, &ledger);
+        let granted = control.mem_grant().max(1);
         control.set_state(JobState::Running);
         control.push_event(JobEvent::Admitted {
             ws_bytes: charge,
@@ -428,7 +587,8 @@ fn run_with_admission(
         Err(_) => JobState::Failed,
     });
 
-    // --- release: return the charge, re-partition, wake gated jobs ---
+    // --- release: return the charge, re-partition (surviving jobs'
+    // grants re-expand), wake gated jobs ---
     {
         let mut ledger = inner.ledger.lock().unwrap();
         if let Some(pos) = ledger.running.iter().position(|r| r.id == id) {
@@ -436,7 +596,7 @@ fn run_with_admission(
             ledger.committed_bytes =
                 ledger.committed_bytes.saturating_sub(done.charge_bytes);
         }
-        repartition(&inner.caps, &ledger);
+        repartition(inner, &ledger);
         inner.cv.notify_all();
     }
     result
@@ -576,6 +736,30 @@ mod tests {
             other => panic!("expected Unsupported, got {other:?}"),
         }
         assert_eq!(h.state(), JobState::Failed);
+    }
+
+    #[test]
+    fn budget_resize_is_observable_when_idle() {
+        let session = DiffSession::new(small_caps());
+        assert_eq!(session.mem_budget(), small_caps().mem_cap_bytes);
+        assert!(session.mem_grants().is_empty());
+        session.set_mem_budget(1_000_000);
+        assert_eq!(session.mem_budget(), 1_000_000);
+        // Floored at 1 byte.
+        session.set_mem_budget(0);
+        assert_eq!(session.mem_budget(), 1);
+    }
+
+    #[test]
+    fn solo_job_is_granted_the_full_budget() {
+        let session = DiffSession::new(small_caps());
+        let mut h = session.submit(job(1_000, 7)).unwrap();
+        h.join().unwrap();
+        let granted = h.events().iter().find_map(|e| match e {
+            JobEvent::Admitted { granted_bytes, .. } => Some(*granted_bytes),
+            _ => None,
+        });
+        assert_eq!(granted, Some(small_caps().mem_cap_bytes));
     }
 
     #[test]

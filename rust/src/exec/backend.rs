@@ -186,7 +186,19 @@ pub trait Backend {
     /// Request a new worker count (takes effect asap; k is the paper's
     /// control variable).
     fn set_workers(&mut self, k: usize);
+    /// Current target worker count.
     fn workers(&self) -> usize;
+    /// Request a new job-level memory budget in bytes — the session's
+    /// elastic grant, driven like `set_workers`. The backend re-caps its
+    /// accounting ledgers (shared pool or per-worker arenas) for new
+    /// allocations immediately; it does not evict live buffers, so the
+    /// scheduler loop defers *shrink* application until the pipeline has
+    /// drained and accounted usage fits under the new budget (otherwise
+    /// inflight batches sized for the old budget would spuriously fail
+    /// with accounted OOMs).
+    fn set_mem_budget(&mut self, bytes: u64);
+    /// The memory budget the backend currently enforces, in bytes.
+    fn mem_budget(&self) -> u64;
     /// Shards submitted but not yet started.
     fn queue_depth(&self) -> usize;
     /// Shards submitted but not yet finished.

@@ -102,6 +102,12 @@ impl Backend for DaskLikeBackend {
     fn workers(&self) -> usize {
         self.pool.workers()
     }
+    fn set_mem_budget(&mut self, bytes: u64) {
+        self.pool.set_mem_budget(bytes);
+    }
+    fn mem_budget(&self) -> u64 {
+        self.pool.mem_budget()
+    }
     fn queue_depth(&self) -> usize {
         self.pool.queue_depth()
     }

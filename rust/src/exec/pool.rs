@@ -43,6 +43,12 @@ struct Shared {
     inflight: AtomicUsize,
     busy_ns: AtomicU64,
     shutdown: AtomicUsize, // 1 = drain and exit
+    /// Job-level memory budget currently enforced (bytes, including the
+    /// base table footprint). Starts at `ctx.mem_cap_bytes`; the
+    /// session's elastic grant re-partitioning updates it mid-job via
+    /// `set_mem_budget`, and `set_workers` re-splits per-worker arenas
+    /// against it rather than the construction-time cap.
+    mem_budget: AtomicU64,
     /// Shared pool (inmem) — also used as the job-level RSS ledger.
     shared_tracker: Arc<MemTracker>,
     /// Per-worker arenas (dask-like); indexed by worker id.
@@ -76,6 +82,7 @@ impl Pool {
         max_workers: usize,
     ) -> Pool {
         let (tx, rx) = channel();
+        let initial_budget = ctx.mem_cap_bytes;
         let budget = ctx
             .mem_cap_bytes
             .saturating_sub(ctx.base_rss_bytes)
@@ -94,6 +101,7 @@ impl Pool {
             inflight: AtomicUsize::new(0),
             busy_ns: AtomicU64::new(0),
             shutdown: AtomicUsize::new(0),
+            mem_budget: AtomicU64::new(initial_budget),
             shared_tracker,
             worker_trackers,
             idle_scratch: (0..max_workers).map(|_| AtomicU64::new(0)).collect(),
@@ -172,19 +180,45 @@ impl Pool {
         self.shared.target_workers.store(k, Ordering::Relaxed);
         self.ensure_spawned(k);
         if self.shared.profile.per_worker_memory {
-            // Re-split the memory budget across active arenas (Dask
-            // semantics: per-worker memory_limit = total / n_workers).
-            let budget = self
-                .shared
-                .ctx
-                .mem_cap_bytes
-                .saturating_sub(self.shared.ctx.base_rss_bytes)
-                .max(1);
-            for t in &self.shared.worker_trackers {
-                t.set_cap(budget / k as u64);
-            }
+            self.apply_mem_budget(k);
         }
         self.shared.cv.notify_all();
+    }
+
+    /// Re-apply the current memory budget to the accounting ledgers:
+    /// the shared tracker cap (inmem), or the per-worker arena split at
+    /// budget/k (Dask semantics: per-worker memory_limit = total /
+    /// n_workers). Single source of truth for the split rule — both
+    /// `set_workers` and `set_mem_budget` route through here.
+    fn apply_mem_budget(&self, k: usize) {
+        let budget = self
+            .shared
+            .mem_budget
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.shared.ctx.base_rss_bytes)
+            .max(1);
+        if self.shared.profile.per_worker_memory {
+            for t in &self.shared.worker_trackers {
+                t.set_cap(budget / k.max(1) as u64);
+            }
+        } else {
+            self.shared.shared_tracker.set_cap(budget);
+        }
+    }
+
+    /// Re-cap the job-level memory budget (the session's elastic grant):
+    /// the shared tracker (inmem) or the per-worker arena split
+    /// (dask-like) is updated for new allocations immediately. Live
+    /// buffers are not evicted — callers shrink only after accounted
+    /// usage has drained below the new budget.
+    pub fn set_mem_budget(&mut self, bytes: u64) {
+        self.shared.mem_budget.store(bytes.max(1), Ordering::Relaxed);
+        self.apply_mem_budget(self.workers());
+    }
+
+    /// The job-level memory budget currently enforced (bytes).
+    pub fn mem_budget(&self) -> u64 {
+        self.shared.mem_budget.load(Ordering::Relaxed)
     }
 
     pub fn workers(&self) -> usize {
@@ -381,6 +415,36 @@ mod tests {
             pool.current_rss(),
             ctx.base_rss_bytes
         );
+    }
+
+    #[test]
+    fn shrunk_budget_ooms_oversized_batch() {
+        let ctx = mk_ctx(2_000);
+        let mut pool = Pool::new(
+            Arc::clone(&ctx),
+            PoolProfile { chunk_rows: None, per_worker_memory: false },
+            1,
+            2,
+        );
+        assert_eq!(pool.mem_budget(), u64::MAX);
+        // Leave ~10 KB of batch headroom above the base tables: decoding
+        // the whole 2k-row table needs far more, so the shrunken ledger
+        // must reject it as an accounted OOM.
+        pool.set_mem_budget(ctx.base_rss_bytes + 10_000);
+        assert_eq!(pool.mem_budget(), ctx.base_rss_bytes + 10_000);
+        pool.submit(ShardSpec {
+            shard_id: 0,
+            attempt: 0,
+            a_offset: 0,
+            a_len: ctx.a.nrows(),
+            b_offset: 0,
+            b_len: ctx.b.nrows(),
+        });
+        let mut got = Vec::new();
+        while got.is_empty() {
+            got = pool.wait_any();
+        }
+        assert!(got[0].is_oom(), "expected accounted OOM, got {:?}", got[0].result);
     }
 
     #[test]

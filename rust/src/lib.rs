@@ -37,10 +37,19 @@
 //! Admission reuses the paper's working-set estimate (Eq. 1) per job: a
 //! job whose estimate does not fit the budget left by running jobs
 //! waits in the `Gated` state, so N concurrent jobs share one memory
-//! cap with zero accounted OOMs. The session re-partitions the CPU cap
-//! across running jobs and drives `Backend::set_workers` as jobs enter
-//! and leave. All fallible entry points return the typed
-//! [`api::SchedError`] (no stringly-typed errors on the public surface).
+//! cap with zero accounted OOMs. The session re-partitions its budget
+//! as jobs enter and leave — CPU shares through `Backend::set_workers`,
+//! and **elastic memory grants** through `Backend::set_mem_budget`:
+//! every admit/completion (and any runtime
+//! [`api::DiffSession::set_mem_budget`] resize) shrinks running jobs'
+//! grants toward their admission charges or re-expands them, with the
+//! per-instant sum of grants never exceeding the budget. A scheduler
+//! loop that observes a shrunken grant mid-flight tightens its safety
+//! envelope immediately (down-stepping the batch size when needed),
+//! drains accounted usage under the new grant, and only then re-caps
+//! the backend's accounting ledger — cap changes without accounted
+//! OOMs. All fallible entry points return the typed [`api::SchedError`]
+//! (no stringly-typed errors on the public surface).
 //!
 //! The historical one-shot entry point `sched::scheduler::run_job` is
 //! **deprecated-but-stable**: it now opens a single-job session,

@@ -1,21 +1,38 @@
 //! Backpressure gate (paper §IV: "backpressure reduces k or pauses
-//! submission when queue depth grows"). Hysteresis: pause above
-//! `depth_factor · k`, resume below half of that.
+//! submission when queue depth grows"). Two dimensions gate submission:
+//!
+//! * **queue depth** — hysteresis: pause above `depth_factor · k`,
+//!   resume below half of that;
+//! * **memory** — pause while accounted job RSS exceeds the (possibly
+//!   elastically shrunken) session grant and there is inflight work to
+//!   drain, so a mid-job `set_mem_budget` shrink drains toward the new
+//!   cap instead of overshooting it.
 
+/// Submission gate combining queue-depth hysteresis with a memory-drain
+/// pause (see the module docs).
 #[derive(Debug, Clone, Copy)]
 pub struct Backpressure {
     depth_factor: f64,
     paused: bool,
+    mem_paused: bool,
     pauses: u64,
+    mem_pauses: u64,
 }
 
 impl Backpressure {
+    /// A gate pausing above `depth_factor · k` queued shards.
     pub fn new(depth_factor: f64) -> Self {
-        Backpressure { depth_factor: depth_factor.max(1.0), paused: false, pauses: 0 }
+        Backpressure {
+            depth_factor: depth_factor.max(1.0),
+            paused: false,
+            mem_paused: false,
+            pauses: 0,
+            mem_pauses: 0,
+        }
     }
 
     /// Update with the current queue depth; returns whether submission
-    /// is currently allowed.
+    /// is currently allowed by the queue dimension.
     pub fn update(&mut self, queue_depth: usize, k: usize) -> bool {
         let hi = (self.depth_factor * k.max(1) as f64).ceil();
         let lo = (hi / 2.0).floor();
@@ -30,11 +47,45 @@ impl Backpressure {
         !self.paused
     }
 
-    pub fn is_paused(&self) -> bool {
-        self.paused
+    /// Memory dimension: pause while accounted RSS exceeds the job's
+    /// memory budget *and* inflight work exists to drain it; resume once
+    /// usage is back under the budget. The `inflight == 0` escape keeps
+    /// a job whose irreducible footprint (base tables, warmed scratch)
+    /// exceeds a shrunken grant making minimal progress instead of
+    /// deadlocking — the budget is then enforced as far as accounting
+    /// can without evicting live data.
+    pub fn update_mem(
+        &mut self,
+        rss_bytes: u64,
+        budget_bytes: u64,
+        inflight: usize,
+    ) -> bool {
+        if self.mem_paused {
+            if rss_bytes <= budget_bytes || inflight == 0 {
+                self.mem_paused = false;
+            }
+        } else if rss_bytes > budget_bytes && inflight > 0 {
+            self.mem_paused = true;
+            self.mem_pauses += 1;
+        }
+        !self.mem_paused
     }
+
+    /// Whether either dimension currently pauses submission.
+    pub fn is_paused(&self) -> bool {
+        self.paused || self.mem_paused
+    }
+    /// Queue-dimension pause transitions so far (the paper's
+    /// backpressure statistic; memory-drain pauses are counted
+    /// separately by [`Backpressure::mem_pause_count`]).
     pub fn pause_count(&self) -> u64 {
         self.pauses
+    }
+    /// Memory-dimension pause transitions so far (grant-drain pauses;
+    /// these can legitimately cycle once per batch while a job whose
+    /// irreducible footprint exceeds a shrunken grant trickles forward).
+    pub fn mem_pause_count(&self) -> u64 {
+        self.mem_pauses
     }
 }
 
@@ -58,6 +109,34 @@ mod tests {
         let mut bp = Backpressure::new(4.0);
         assert!(bp.update(20, 8)); // hi = 32
         assert!(!bp.update(32, 8));
+    }
+
+    #[test]
+    fn memory_gate_pauses_until_drained() {
+        let mut bp = Backpressure::new(4.0);
+        assert!(bp.update_mem(100, 200, 3)); // under budget
+        assert!(!bp.update_mem(250, 200, 3)); // over budget, can drain
+        assert!(bp.is_paused());
+        assert!(!bp.update_mem(210, 200, 1)); // still draining
+        assert!(bp.update_mem(190, 200, 1)); // drained -> resume
+        assert_eq!(bp.mem_pause_count(), 1);
+        // The dimensions are counted independently: a memory pause does
+        // not inflate the paper's queue-backpressure statistic.
+        assert_eq!(bp.pause_count(), 0);
+        assert!(bp.update(0, 2));
+    }
+
+    #[test]
+    fn memory_gate_escapes_when_nothing_inflight() {
+        let mut bp = Backpressure::new(4.0);
+        // Irreducible footprint above the budget with nothing to drain:
+        // submission must not deadlock.
+        assert!(bp.update_mem(300, 200, 0));
+        assert!(!bp.is_paused());
+        // Pause engages only when draining is possible, and the escape
+        // also releases an engaged pause once inflight hits zero.
+        assert!(!bp.update_mem(300, 200, 2));
+        assert!(bp.update_mem(300, 200, 0));
     }
 
     #[test]

@@ -18,8 +18,9 @@ use crate::config::{Caps, Policy};
 /// completion round (paper §II instrumentation).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Signals {
-    /// Rolling-window batch-latency quantiles (seconds).
+    /// Rolling-window batch-latency p50 (seconds).
     pub p50: f64,
+    /// Rolling-window batch-latency p95 (seconds).
     pub p95: f64,
     /// EWMA-smoothed window p95 (the hill-climb objective signal; raw
     /// p95 is too straggler-noisy to judge single actions against).
@@ -30,6 +31,7 @@ pub struct Signals {
     pub mem_signal: f64,
     /// EWMA-smoothed p95 CPU utilization as a fraction of the CPU cap.
     pub cpu_p95: f64,
+    /// Shards submitted but not yet started.
     pub queue_depth: usize,
     /// Shards submitted but not finished (pipeline depth — increases
     /// are judged only after the pre-increase pipeline drains).
@@ -41,7 +43,12 @@ pub struct Signals {
 /// Environment the scheduler provides to a policy step.
 #[derive(Debug, Clone, Copy)]
 pub struct PolicyEnv {
+    /// Resource caps in force. Under a `DiffSession`, `mem_cap_bytes`
+    /// tracks the job's *current elastic grant*, not the admission-time
+    /// cap — the scheduler loop updates it when the session
+    /// re-partitions.
     pub caps: Caps,
+    /// Controller/gating policy parameters.
     pub policy: Policy,
     /// Eq. 4 pruning: largest safe b at the *current* k.
     pub b_max_safe: usize,
@@ -58,17 +65,22 @@ pub struct PolicyEnv {
 /// One policy decision.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PolicyStep {
+    /// Proposed batch size.
     pub b: usize,
+    /// Proposed worker count.
     pub k: usize,
+    /// Whether (b, k) differs from the previous decision.
     pub changed: bool,
     /// Whether the Eq. 4 envelope clipped the proposal (the §VIII
     /// "actions kept" statistic counts the complement).
     pub clamped: bool,
+    /// Human-readable decision tag (telemetry / `JobEvent::Reconfig`).
     pub reason: &'static str,
 }
 
 /// A (b,k) tuning policy.
 pub trait TuningPolicy: Send {
+    /// Stable policy name ("adaptive" / "fixed" / "heuristic").
     fn name(&self) -> &'static str;
     /// Initial (b, k) before any batch completes.
     fn initial(&mut self, env: &PolicyEnv) -> (usize, usize);
@@ -125,6 +137,7 @@ pub struct AdaptiveController {
 }
 
 impl AdaptiveController {
+    /// A controller in its pre-`initial` state.
     pub fn new() -> Self {
         AdaptiveController {
             b: 0,
@@ -139,6 +152,7 @@ impl AdaptiveController {
             last_change_at: 0,
         }
     }
+    /// The (b, k) currently held by the controller.
     pub fn bk(&self) -> (usize, usize) {
         (self.b, self.k)
     }

@@ -11,11 +11,15 @@ use crate::engine::microbench::CostConstants;
 use crate::sched::ewma::Ewma;
 use crate::sched::preflight::PreflightProfile;
 
+/// Online Eq. 2 latency model: microbench-calibrated constants plus an
+/// EWMA-smoothed multiplicative correction from observed batches.
 #[derive(Debug, Clone)]
 pub struct CostModel {
+    /// Engine cost constants (microbench-calibrated).
     pub consts: CostConstants,
-    /// Ŵ and B̂_read from pre-flight.
+    /// Ŵ (bytes per aligned row) from pre-flight.
     pub w_hat: f64,
+    /// B̂_read (effective read bandwidth, bytes/s) from pre-flight.
     pub b_read: f64,
     /// Columns entering Δ (cells per row ≈ ncols).
     pub ncols: f64,
@@ -27,6 +31,7 @@ pub struct CostModel {
 }
 
 impl CostModel {
+    /// A model seeded from the pre-flight profile, smoothing with ρ.
     pub fn new(consts: CostConstants, profile: &PreflightProfile, rho: f64) -> Self {
         CostModel {
             consts,
@@ -75,6 +80,7 @@ impl CostModel {
         observed_secs - before
     }
 
+    /// Current observed/predicted correction (1.0 before any sample).
     pub fn correction_factor(&self) -> f64 {
         self.correction.get_or(1.0)
     }

@@ -9,10 +9,13 @@ pub struct Ewma {
 }
 
 impl Ewma {
+    /// An empty EWMA with smoothing factor ρ ∈ [0, 1].
     pub fn new(rho: f64) -> Self {
         assert!((0.0..=1.0).contains(&rho), "rho in [0,1]");
         Ewma { rho, value: None }
     }
+    /// Fold in a sample and return the new smoothed value (the first
+    /// sample passes through unsmoothed).
     pub fn update(&mut self, x: f64) -> f64 {
         let v = match self.value {
             None => x,
@@ -21,12 +24,15 @@ impl Ewma {
         self.value = Some(v);
         v
     }
+    /// Current smoothed value, if any sample has been seen.
     pub fn get(&self) -> Option<f64> {
         self.value
     }
+    /// Current smoothed value, or `default` before the first sample.
     pub fn get_or(&self, default: f64) -> f64 {
         self.value.unwrap_or(default)
     }
+    /// Forget all samples.
     pub fn reset(&mut self) {
         self.value = None;
     }
@@ -41,20 +47,27 @@ pub struct ResidualWindow {
 }
 
 impl ResidualWindow {
+    /// A window keeping the last `cap` residuals (minimum 2).
     pub fn new(cap: usize) -> Self {
         ResidualWindow {
             buf: std::collections::VecDeque::with_capacity(cap.max(2)),
             cap: cap.max(2),
         }
     }
+    /// Record a residual, evicting the oldest when full.
     pub fn push(&mut self, residual: f64) {
         if self.buf.len() == self.cap {
             self.buf.pop_front();
         }
         self.buf.push_back(residual);
     }
+    /// Residuals currently held.
     pub fn len(&self) -> usize {
         self.buf.len()
+    }
+    /// Whether no residuals have been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
     }
     /// Half-width of the (z-scaled) prediction interval: z·σ̂ of the
     /// residuals (+ |mean| to absorb bias before the model converges).

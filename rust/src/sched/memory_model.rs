@@ -12,6 +12,11 @@
 
 use crate::sched::ewma::{Ewma, ResidualWindow};
 
+/// Online Eq. 3 memory model with the Eq. 4 safety envelope. The
+/// `mem_cap` parameter of [`MemoryModel::is_safe`] /
+/// [`MemoryModel::safe_b_max`] is whatever cap currently binds the job —
+/// under a `DiffSession` that is the elastic memory grant, which can
+/// shrink mid-job.
 #[derive(Debug, Clone)]
 pub struct MemoryModel {
     /// Per-worker fixed buffers (bytes).
@@ -30,6 +35,8 @@ pub struct MemoryModel {
 }
 
 impl MemoryModel {
+    /// A model seeded with Ŵ from pre-flight and the paper's priors
+    /// (β₀ = 16 MB, β₁ = 1.6, β₂ = 16 B/row), corrected online.
     pub fn new(
         w_hat: f64,
         base_bytes: f64,
@@ -126,9 +133,11 @@ impl MemoryModel {
         self.residuals.push(observed_peak_bytes - pred);
     }
 
+    /// Residuals currently backing the δ_M interval.
     pub fn residual_count(&self) -> usize {
         self.residuals.len()
     }
+    /// Current observed/predicted correction (1.0 before any sample).
     pub fn correction_factor(&self) -> f64 {
         self.correction.get_or(1.0)
     }

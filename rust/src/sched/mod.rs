@@ -3,6 +3,10 @@
 //! gating (Eq. 1), online cost/memory models (Eq. 2–3), the safety
 //! envelope (Eq. 4), the guarded proportional hill-climb controller
 //! (Eq. 5–6), backpressure, straggler mitigation, and telemetry.
+//!
+//! See `ARCHITECTURE.md` at the repository root for the full paper →
+//! module map.
+#![warn(missing_docs)]
 
 pub mod backpressure;
 pub mod controller;

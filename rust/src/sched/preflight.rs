@@ -4,6 +4,7 @@
 
 use crate::data::io::TableSource;
 
+/// What the pre-flight pass learned about a job before scheduling.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PreflightProfile {
     /// Estimated bytes per aligned row (keys + compared attributes,
@@ -11,8 +12,11 @@ pub struct PreflightProfile {
     pub w_hat: f64,
     /// Effective read bandwidth during sampling, bytes/s.
     pub b_read: f64,
+    /// Rows in table A.
     pub rows_a: usize,
+    /// Rows in table B.
     pub rows_b: usize,
+    /// Rows actually sampled across both sides.
     pub sampled_rows: usize,
     /// Numeric/native column counts (cost-model inputs).
     pub ncols: usize,

@@ -29,11 +29,15 @@ use crate::sched::working_set::GateDecision;
 /// Job-level statistics (the raw material for Tables I–III).
 #[derive(Debug, Clone)]
 pub struct JobStats {
+    /// Executing backend name ("inmem" / "dasklike" / "sim-…").
     pub backend: String,
+    /// Tuning policy name ("adaptive" / "fixed" / "heuristic").
     pub policy: String,
+    /// First submission to last completion (backend-clock seconds).
     pub makespan_secs: f64,
-    /// Job-level p50/p95 batch latency, row-weighted (paper §V).
+    /// Job-level p50 batch latency, row-weighted (paper §V).
     pub p50_latency: f64,
+    /// Job-level p95 batch latency, row-weighted (paper §V).
     pub p95_latency: f64,
     /// Peak accounted job RSS (bytes) — Table II's metric.
     pub peak_rss_bytes: u64,
@@ -41,21 +45,34 @@ pub struct JobStats {
     pub throughput_rows_per_s: f64,
     /// Applied (b,k) changes — Table III "reconfigs/job".
     pub reconfigs: u64,
+    /// Accounted-OOM batch failures (0 whenever the envelope holds).
     pub ooms: u64,
+    /// Accepted batch completions.
     pub batches: u64,
+    /// Speculative duplicates launched for stragglers.
     pub speculations: u64,
+    /// Straggling shards split into key-aligned halves.
     pub splits: u64,
+    /// Queue-depth backpressure pauses (the paper's statistic;
+    /// memory-grant drain pauses are counted separately and surface in
+    /// telemetry as `mem_pause` events).
     pub backpressure_pauses: u64,
+    /// Batch size in force when the job finished.
     pub final_b: usize,
+    /// Worker count in force when the job finished.
     pub final_k: usize,
+    /// The Eq. 1 backend gate decision (None for pre-gated runs).
     pub gate: Option<GateDecision>,
     /// Fraction of candidate actions kept by the envelope (§VIII).
     pub actions_kept: f64,
 }
 
+/// What a finished job returns: the merged diff plus scheduler stats.
 #[derive(Debug, Clone)]
 pub struct JobResult {
+    /// The merged diff report (row/cell verdicts, per-column aggregates).
     pub report: JobReport,
+    /// Scheduler-level statistics for the run.
     pub stats: JobStats,
 }
 
@@ -143,9 +160,13 @@ fn split_spec(
 
 /// Everything `drive` needs beyond the backend and sources.
 pub struct DriveInputs<'a> {
+    /// Full scheduler configuration (caps, policy, engine, seeds).
     pub cfg: &'a SchedulerConfig,
+    /// Pre-flight profile (Ŵ, B̂_read, row counts) the models start from.
     pub profile: PreflightProfile,
+    /// The Eq. 1 gate decision, recorded into stats/telemetry.
     pub gate: Option<GateDecision>,
+    /// Telemetry sink (JSON lines; may be disabled).
     pub telemetry: &'a mut Telemetry,
     /// Cost constants describing the engine actually executing batches
     /// (microbench-calibrated for the real engine; paper-engine for the
@@ -163,6 +184,15 @@ pub struct DriveInputs<'a> {
 /// permanent shard failure or a handle cancellation returns a typed
 /// error. Re-entrant per job: all state is local, so one loop runs per
 /// admitted job on its own session thread.
+///
+/// Under a `DiffSession` (`inputs.control` present), the loop also
+/// applies the session's elastic re-partitioning mid-flight: CPU-share
+/// changes through `Backend::set_workers`, and memory-grant changes
+/// through `Backend::set_mem_budget` — a shrunken grant immediately
+/// tightens the Eq. 4 envelope (forcing a batch-size down-step when the
+/// current b is no longer safe), pauses submission while accounted
+/// usage drains, and only then re-caps the backend's ledger, so the cap
+/// change cannot fail inflight batches.
 pub fn drive(
     backend: &mut dyn Backend,
     a: &dyn TableSource,
@@ -206,6 +236,20 @@ pub fn drive(
             cpu_allow = share.min(caps.cpu_cap).max(1);
         }
     }
+    // Session memory grant (elastic): `mem_allow` is the grant currently
+    // in force — the safety envelope prunes against it from the moment
+    // it changes. `mem_applied` is the budget the backend's accounting
+    // ledger enforces; a *shrink* is only pushed down once accounted
+    // usage has drained below the new grant (clamping the ledger under
+    // live usage would fail inflight batches), while an expansion is
+    // pushed immediately. `grant_clamp` records that the session has
+    // re-partitioned at least once; from then on every policy proposal
+    // (including the memory-blind baselines) is pruned against the
+    // grant, because the grant — not the admission-time cap — is the
+    // binding contract.
+    let mut mem_allow = caps.mem_cap_bytes;
+    let mut mem_applied = caps.mem_cap_bytes;
+    let mut grant_clamp = false;
     // k_min is validated <= cpu_cap on the session path, but clamp
     // defensively (the sim testbed runs unvalidated configs).
     let k_lo = pol.k_min.min(caps.cpu_cap);
@@ -263,6 +307,7 @@ pub fn drive(
     let mut actions_kept: u64 = 0;
     let mut rows_done: u64 = 0;
     let mut bp_pauses_seen: u64 = 0;
+    let mut mem_pauses_seen: u64 = 0;
     // Shard ids submitted and not yet reported — the cancellation
     // broadcast set.
     let mut inflight_ids: std::collections::HashSet<u64> = Default::default();
@@ -327,10 +372,85 @@ pub fn drive(
                     }
                 }
             }
+            // Elastic memory grant: react to session re-partitioning.
+            let grant = c.mem_grant();
+            if grant > 0 && grant != mem_allow {
+                let from = mem_allow;
+                mem_allow = grant;
+                env.caps.mem_cap_bytes = grant;
+                grant_clamp = true;
+                c.push_event(JobEvent::MemGrant {
+                    from_bytes: from,
+                    to_bytes: grant,
+                });
+                inputs.telemetry.event(
+                    "mem_grant",
+                    &format!("{from}->{grant}"),
+                    backend.now(),
+                );
+                if grant >= mem_applied {
+                    // Expansion: the ledger can widen immediately.
+                    backend.set_mem_budget(grant);
+                    mem_applied = grant;
+                } else if b_cur > pol.b_min {
+                    // Shrink: force a batch-size down-step right now if
+                    // the current b is no longer inside the envelope at
+                    // the shrunken grant (overshoot would otherwise be
+                    // guaranteed before the policy's next step).
+                    let safe_b = mem_model
+                        .safe_b_max(k_cur, pol.eta, mem_allow)
+                        .max(pol.b_min);
+                    if b_cur > safe_b {
+                        let b_from = b_cur;
+                        b_cur = safe_b;
+                        stats.reconfigs += 1;
+                        inputs.telemetry.event(
+                            "reconfig",
+                            &format!("b {b_from}->{b_cur} (mem-grant)"),
+                            backend.now(),
+                        );
+                        c.push_event(JobEvent::Reconfig {
+                            b_from,
+                            b_to: b_cur,
+                            k_from: k_cur,
+                            k_to: k_cur,
+                            reason: "mem-grant".into(),
+                        });
+                    }
+                }
+            }
+        }
+        // Deferred shrink application: push the shrunken grant into the
+        // backend's hard accounting cap only once the pipeline has fully
+        // drained (no queued or executing shard sized at the pre-shrink
+        // b remains — a picked-up shard allocates incrementally, so an
+        // rss check alone could re-cap under a shard that is about to
+        // allocate past the new cap) and accounted usage fits under the
+        // new grant. Until then the envelope bounds all *new* work at
+        // the shrunken grant, so accounted usage stays within the old,
+        // wider cap without overshooting the target for long.
+        if mem_applied > mem_allow
+            && backend.inflight() == 0
+            && backend.current_rss() <= mem_allow
+        {
+            backend.set_mem_budget(mem_allow);
+            mem_applied = mem_allow;
         }
 
-        // --- submission (paper: pause when queue grows / guard active) ---
-        let allow = backpressure.update(backend.queue_depth(), k_cur) && !aborted;
+        // --- submission (paper: pause when queue grows / guard active;
+        // plus the memory gate: drain instead of overshooting a
+        // shrunken grant). The memory gate only arms once the session
+        // has re-partitioned this job's grant — legacy solo/sim runs
+        // (and memory-blind baselines) keep their historical submission
+        // behavior bit-for-bit. ---
+        let queue_ok = backpressure.update(backend.queue_depth(), k_cur);
+        let mem_ok = !grant_clamp
+            || backpressure.update_mem(
+                backend.current_rss(),
+                mem_allow,
+                backend.inflight(),
+            );
+        let allow = queue_ok && mem_ok && !aborted;
         if backpressure.pause_count() > bp_pauses_seen {
             bp_pauses_seen = backpressure.pause_count();
             if let Some(c) = &inputs.control {
@@ -338,6 +458,18 @@ pub fn drive(
                     queue_depth: backend.queue_depth(),
                 });
             }
+        }
+        // Memory-drain pauses are telemetry-only: they can legitimately
+        // cycle once per batch while a tight grant trickles work
+        // through, which would flood the handle's event stream and
+        // corrupt the queue-backpressure statistic.
+        if backpressure.mem_pause_count() > mem_pauses_seen {
+            mem_pauses_seen = backpressure.mem_pause_count();
+            inputs.telemetry.event(
+                "mem_pause",
+                &format!("rss over grant {mem_allow}"),
+                backend.now(),
+            );
         }
         while allow
             && backend.queue_depth() < k_cur.max(1)
@@ -479,18 +611,21 @@ pub fn drive(
         // --- policy step, pruned by the envelope (Eq. 4, continuous) ---
         if !aborted && completed > 0 && !reports.is_empty() {
             env.b_max_safe = mem_model
-                .safe_b_max(k_cur, pol.eta, caps.mem_cap_bytes)
+                .safe_b_max(k_cur, pol.eta, mem_allow)
                 .max(pol.b_min);
             let step = policy.step(&signals, &env);
             actions_total += 1;
             let mut nb = step.b;
             let mut nk = step.k;
             let mut clamped = step.clamped;
-            if matches!(cfg.policy_kind, PolicyKind::Adaptive) {
+            if matches!(cfg.policy_kind, PolicyKind::Adaptive) || grant_clamp {
                 // Continuous envelope enforcement: re-clamp the proposal
-                // against the safe set at the *proposed* k.
+                // against the safe set at the *proposed* k. Baselines
+                // are deliberately memory-blind, but once the session
+                // has re-partitioned the grant mid-job, the grant binds
+                // every policy (legacy solo runs never take this path).
                 let safe_b = mem_model
-                    .safe_b_max(nk, pol.eta, caps.mem_cap_bytes)
+                    .safe_b_max(nk, pol.eta, mem_allow)
                     .max(pol.b_min);
                 if nb > safe_b {
                     nb = safe_b;
@@ -628,8 +763,16 @@ pub fn drive(
 ///
 /// New code should use [`crate::api::DiffSession`] +
 /// [`crate::api::JobBuilder`] directly: multi-job admission over one
-/// budget, non-blocking handles with progress snapshots, typed events,
-/// and cancellation.
+/// budget, elastic per-job memory grants, non-blocking handles with
+/// progress snapshots, typed events, and cancellation. The migration is
+/// mechanical:
+///
+/// ```text
+/// // before                         // after
+/// let r = run_job(&cfg, a, b)?;     let session = DiffSession::new(cfg.caps);
+///                                   let job = JobBuilder::from_config(cfg, a, b).build()?;
+///                                   let r = session.submit(job)?.join()?;
+/// ```
 pub fn run_job(
     cfg: &SchedulerConfig,
     a: Arc<dyn TableSource>,

@@ -29,18 +29,21 @@ struct Tracked {
 #[derive(Debug, Default)]
 pub struct StragglerTracker {
     inflight: HashMap<u64, Tracked>,
+    /// Speculative duplicates issued so far.
     pub speculations: u64,
+    /// Shard splits issued so far.
     pub splits: u64,
 }
 
 impl StragglerTracker {
+    /// An empty tracker.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record a submission at backend time `now`. Only primary attempts
+    /// are tracked (speculative attempts are themselves the mitigation).
     pub fn on_submit(&mut self, spec: ShardSpec, now: f64) {
-        // Only primary attempts are tracked (speculative attempts are
-        // themselves the mitigation).
         if spec.attempt == 0 {
             self.inflight.insert(
                 spec.shard_id,
@@ -49,10 +52,12 @@ impl StragglerTracker {
         }
     }
 
+    /// Stop tracking a shard that reported (any attempt).
     pub fn on_complete(&mut self, shard_id: u64) {
         self.inflight.remove(&shard_id);
     }
 
+    /// Primary attempts currently tracked.
     pub fn inflight(&self) -> usize {
         self.inflight.len()
     }

@@ -16,16 +16,19 @@ pub struct Telemetry {
 }
 
 impl Telemetry {
+    /// A sink that drops every record (zero overhead).
     pub fn disabled() -> Self {
         Telemetry { out: None, lines: 0 }
     }
 
+    /// A sink writing JSON lines to `path` (created/truncated).
     pub fn to_file(path: &str) -> Result<Self, SchedError> {
         let f = std::fs::File::create(path)
             .map_err(|e| SchedError::io(path, format!("create: {e}")))?;
         Ok(Telemetry { out: Some(std::io::BufWriter::new(f)), lines: 0 })
     }
 
+    /// Records emitted so far (0 for a disabled sink).
     pub fn lines_written(&self) -> u64 {
         self.lines
     }
@@ -88,6 +91,7 @@ impl Telemetry {
         self.emit(line);
     }
 
+    /// Flush buffered records to the underlying file.
     pub fn flush(&mut self) {
         if let Some(out) = &mut self.out {
             let _ = out.flush();

@@ -9,7 +9,9 @@ use crate::sched::preflight::PreflightProfile;
 /// the fixed process/runtime footprint.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct WorkingSetModel {
+    /// Replication factor on raw row bytes (decode + align + scratch).
     pub alpha: f64,
+    /// Fixed process/runtime footprint (bytes).
     pub beta_bytes: f64,
 }
 
@@ -36,8 +38,11 @@ impl WorkingSetModel {
 /// Gate decision with its inputs (telemetry/report material).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct GateDecision {
+    /// Eq. 1 working-set estimate ŴS (bytes).
     pub ws_bytes: f64,
+    /// κ·M_cap threshold the estimate was compared against (bytes).
     pub threshold_bytes: f64,
+    /// The backend the gate selected.
     pub backend: BackendChoice,
 }
 

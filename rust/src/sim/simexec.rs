@@ -319,6 +319,14 @@ impl Backend for SimBackend {
     fn workers(&self) -> usize {
         self.k
     }
+    fn set_mem_budget(&mut self, bytes: u64) {
+        // The virtual machine's RAM shrinks/expands; admission checks at
+        // dispatch time use the new cap for subsequently started batches.
+        self.p.mem_cap = bytes.max(1);
+    }
+    fn mem_budget(&self) -> u64 {
+        self.p.mem_cap
+    }
     fn queue_depth(&self) -> usize {
         self.queue.len()
     }

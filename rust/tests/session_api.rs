@@ -1,14 +1,16 @@
 //! Integration tests for the `DiffSession` service API: concurrent
 //! admission against one shared budget, Gated serialization when
-//! combined working sets exceed the cap, builder/validate parity, typed
-//! cancellation, and the run_job compatibility shim.
+//! combined working sets exceed the cap, elastic memory grants
+//! (grants never sum past the budget; mid-flight shrinks force
+//! batch-size down-steps without tracker overshoot), builder/validate
+//! parity, typed cancellation, and the run_job compatibility shim.
 
 use std::sync::Arc;
 
-use smartdiff_sched::api::{DiffSession, JobBuilder, JobState, SchedError};
-use smartdiff_sched::config::{Caps, DeltaPath, SchedulerConfig};
+use smartdiff_sched::api::{DiffSession, JobBuilder, JobEvent, JobState, SchedError};
+use smartdiff_sched::config::{BackendChoice, Caps, DeltaPath, PolicyKind, SchedulerConfig};
 use smartdiff_sched::data::generator::{generate_pair, GenSpec};
-use smartdiff_sched::data::io::InMemorySource;
+use smartdiff_sched::data::io::{InMemorySource, TableSource};
 use smartdiff_sched::sched::scheduler::run_job;
 
 fn sources(rows: usize, seed: u64) -> (Arc<InMemorySource>, Arc<InMemorySource>) {
@@ -127,6 +129,128 @@ fn over_budget_jobs_serialize_with_gated_event() {
     let s2 = solo(&cfg, 5_000, 23);
     assert!(r1.report.same_diff(&s1.report));
     assert!(r2.report.same_diff(&s2.report));
+}
+
+/// Tentpole acceptance: across admit/complete of three concurrent jobs,
+/// the sum of per-job memory grants never exceeds the session budget at
+/// any instant, and once the session drains, a fresh solo job is
+/// granted the full budget again (grants re-expanded and released).
+#[test]
+fn grants_never_sum_past_budget_across_three_jobs() {
+    let caps = Caps { mem_cap_bytes: 2_000_000_000, cpu_cap: 2 };
+    let cfg = cfg_for(caps);
+    let session = DiffSession::new(caps);
+
+    let mut handles: Vec<_> = [(60_000u64, 51u64), (50_000, 52), (40_000, 53)]
+        .iter()
+        .map(|(rows, seed)| {
+            session.submit(job(&cfg, *rows as usize, *seed)).unwrap()
+        })
+        .collect();
+
+    let mut polls = 0u64;
+    let mut saw_concurrent = false;
+    while handles.iter().any(|h| !h.is_finished()) {
+        let grants = session.mem_grants();
+        let sum: u64 = grants.iter().map(|(_, g)| *g).sum();
+        assert!(
+            sum <= caps.mem_cap_bytes,
+            "instantaneous grant sum {sum} exceeds budget {} ({grants:?})",
+            caps.mem_cap_bytes
+        );
+        saw_concurrent |= grants.len() >= 2;
+        polls += 1;
+        std::thread::sleep(std::time::Duration::from_micros(200));
+    }
+    assert!(polls > 0);
+    for h in &mut handles {
+        let r = h.join().unwrap();
+        assert_eq!(r.stats.ooms, 0);
+    }
+    assert_eq!(session.active_jobs(), 0);
+    assert_eq!(session.committed_bytes(), 0);
+    assert!(session.mem_grants().is_empty());
+    // At least one poll should have observed a shared session (three
+    // jobs submitted back-to-back against a 2 GB budget all fit).
+    assert!(saw_concurrent, "jobs never overlapped; test saw nothing");
+
+    // A fresh solo job re-expands to the whole budget.
+    let mut h = session.submit(job(&cfg, 2_000, 54)).unwrap();
+    h.join().unwrap();
+    let granted = h.events().iter().find_map(|e| match e {
+        JobEvent::Admitted { granted_bytes, .. } => Some(*granted_bytes),
+        _ => None,
+    });
+    assert_eq!(granted, Some(caps.mem_cap_bytes));
+}
+
+/// Tentpole acceptance: a mid-flight `set_mem_budget` shrink
+/// re-partitions the running job's grant downward, which provably
+/// forces a batch-size down-step (a `Reconfig` with reason
+/// "mem-grant" and `b_to < b_from`) and completes with zero accounted
+/// OOMs — the backend's hard cap is only applied after usage drains
+/// below the new grant, so the tracker never overshoots.
+#[test]
+fn mid_flight_budget_shrink_forces_down_step() {
+    let caps = Caps { mem_cap_bytes: 2_000_000_000, cpu_cap: 1 };
+    let mut cfg = cfg_for(caps);
+    // A fixed, memory-blind policy: without the session's grant clamp,
+    // b would stay at 2_000 for the whole job — any down-step observed
+    // below is attributable to the grant shrink alone.
+    cfg.policy_kind = PolicyKind::Fixed { b: 2_000, k: 1 };
+    cfg.backend = BackendChoice::InMem;
+    let session = DiffSession::new(caps);
+
+    let (a, b) = sources(200_000, 61);
+    let base = a.resident_bytes() + b.resident_bytes();
+    let mut h = session
+        .submit(JobBuilder::from_config(cfg, a, b).build().unwrap())
+        .unwrap();
+
+    // Wait until the job is provably mid-flight at b = 2_000 (a 200k-row
+    // job yields ~100 batches, so there is ample runway after this).
+    let t0 = std::time::Instant::now();
+    while h.progress().batches < 2
+        && !h.is_finished()
+        && t0.elapsed().as_secs() < 120
+    {
+        std::thread::yield_now();
+    }
+    assert!(
+        !h.is_finished(),
+        "job finished before the shrink could be applied; cannot test"
+    );
+
+    // Shrink the session budget to the job's base tables plus ~300 KB
+    // of headroom: η·grant − base is then far below what b = 2_000
+    // needs (a 2_000-row batch peaks at several hundred KB of decode +
+    // scratch), so the envelope must force a down-step toward b_min —
+    // while leaving b_min-sized batches comfortable room once the hard
+    // cap is applied.
+    let new_budget = (base as f64 / 0.9) as u64 + 300_000;
+    session.set_mem_budget(new_budget);
+
+    let r = h.join().unwrap();
+    assert_eq!(r.stats.ooms, 0, "shrink caused accounted OOMs (overshoot)");
+
+    let events = h.events();
+    let shrank = events.iter().any(|e| {
+        matches!(e, JobEvent::MemGrant { from_bytes, to_bytes }
+            if to_bytes < from_bytes && *to_bytes == new_budget)
+    });
+    assert!(shrank, "missing MemGrant shrink event: {events:?}");
+    let down_step = events.iter().any(|e| {
+        matches!(e, JobEvent::Reconfig { b_from, b_to, reason, .. }
+            if b_to < b_from && reason == "mem-grant")
+    });
+    assert!(
+        down_step,
+        "grant shrink did not force a batch-size down-step: {events:?}"
+    );
+
+    // The shrunken run still produces a complete diff.
+    let s = solo(&cfg_for(caps), 200_000, 61);
+    assert!(r.report.same_diff(&s.report), "shrink changed the diff");
 }
 
 /// Satellite: every invalid config rejected by
