@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Large-file smoke: a CSV pair larger than a tiny memory cap must
+open, gate to the dask-like backend, and diff with zero accounted OOMs
+and peak accounted RSS under the cap.
+
+Run from the repo root after `cargo build --release`:
+
+    python3 ci/large_file_smoke.py [path-to-binary]
+"""
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+ROWS = 200_000
+CAP_BYTES = 10 * 1024 * 1024  # 10 MiB — far below the ~20 MB CSVs
+
+
+def write_csv(path, bump):
+    with open(path, "w") as f:
+        f.write("id,v,s\n")
+        for i in range(ROWS):
+            # Even keys, a float payload, and a string payload that pads
+            # the row to ~100 bytes so the file comfortably exceeds the
+            # cap.
+            f.write("%d,%f,%s\n" % (2 * i, i + bump, "x%078d" % i))
+
+
+def main():
+    binary = sys.argv[1] if len(sys.argv) > 1 else "target/release/smartdiff-sched"
+    with tempfile.TemporaryDirectory() as d:
+        pa = os.path.join(d, "a.csv")
+        pb = os.path.join(d, "b.csv")
+        write_csv(pa, 0.0)
+        write_csv(pb, 0.25)
+        size = os.path.getsize(pa)
+        assert size > CAP_BYTES, "test CSV (%d B) must exceed the cap (%d B)" % (
+            size,
+            CAP_BYTES,
+        )
+        cfg = os.path.join(d, "cfg.toml")
+        with open(cfg, "w") as f:
+            f.write(
+                "[caps]\n"
+                "mem_cap = \"10MiB\"\n"
+                "cpu_cap = 2\n"
+                "[policy]\n"
+                "b_min = 300\n"
+                "[engine]\n"
+                "delta_path = \"native\"\n"
+            )
+        out = subprocess.run(
+            [
+                binary,
+                "diff",
+                pa,
+                pb,
+                "--schema",
+                "id:key:int64,v:float64,s:utf8",
+                "--config",
+                cfg,
+            ],
+            capture_output=True,
+            text=True,
+            timeout=1800,
+        )
+        sys.stdout.write(out.stdout)
+        sys.stderr.write(out.stderr)
+        assert out.returncode == 0, "diff exited %d" % out.returncode
+
+        stats = re.search(
+            r"peak_rss=(?P<peak>[0-9.]+)MB .*ooms=(?P<ooms>\d+)", out.stdout
+        )
+        assert stats, "stats line not found in output"
+        assert stats.group("ooms") == "0", "accounted OOMs: %s" % stats.group("ooms")
+        peak_mb = float(stats.group("peak"))
+        cap_mb = CAP_BYTES / 1e6
+        # The CLI prints peak_rss rounded to one decimal: allow the
+        # half-step of print rounding so a run sitting legitimately just
+        # under the cap (e.g. 10.47 MB -> "10.5") doesn't fail.
+        assert peak_mb <= cap_mb + 0.05, "peak RSS %.1f MB exceeds cap %.2f MB" % (
+            peak_mb,
+            cap_mb,
+        )
+        assert "backend=dasklike" in out.stdout, "expected the dask-like gate"
+        print(
+            "large-file smoke OK: %d B file, cap %d B, peak %.1f MB, 0 OOMs"
+            % (size, CAP_BYTES, peak_mb)
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,334 @@
+"""Fuzz: chunked quote-parity CSV row indexer vs a whole-file reference.
+
+`chunked_index` is a line-for-line port of the streaming `RowIndexer`
+in `rust/src/data/io.rs` (keep the two in sync): it scans the file in
+fixed-size chunks, carrying quote parity and the in-progress key field
+across chunk boundaries, and never materializes the file. The reference
+implementation splits records over the whole buffer and extracts the
+key via a full field split — a structurally different computation of
+the same spec.
+
+Per repo convention the container has no Rust toolchain, so this is
+where the pure-logic core of the ingest path gets fuzzed: randomized
+CSVs with embedded newlines, `""` escapes, CRLF line endings, missing
+trailing newlines, and chunk sizes from 1 byte to 64 KiB.
+"""
+import random
+import re
+
+import pytest
+
+QUOTE = ord('"')
+NEWLINE = ord("\n")
+COMMA = ord(",")
+
+# Rust's str::parse::<i64>() accepts exactly an optional sign followed
+# by ASCII digits — no whitespace, no underscores (Python's int() is
+# looser, so gate with this before converting).
+INT_RE = re.compile(rb"[+-]?[0-9]+\Z")
+
+
+class BadCsv(Exception):
+    pass
+
+
+def parse_key(raw):
+    """Parse a key field with Rust parse::<i64> semantics."""
+    if not INT_RE.match(raw):
+        raise ValueError(raw)
+    value = int(raw)
+    if not -(2**63) <= value < 2**63:
+        raise ValueError(raw)  # i64 overflow
+    return value
+
+
+def chunked_index(data, n_fields, key_col, chunk_size):
+    """Port of rust RowIndexer: feed(data in chunks) + finish().
+
+    Returns (row_offsets_with_eof_sentinel, keys_or_None).
+    """
+    assert chunk_size >= 1
+    key_is_last = key_col is not None and key_col == n_fields - 1
+    state = {
+        "in_quotes": False,
+        "quote_just_closed": False,
+        "in_header": True,
+        "pos": 0,
+        "record_start": 0,
+        "field_idx": 0,
+    }
+    key_buf = bytearray()
+    offsets = []
+    keys = []
+
+    def end_record():
+        if state["in_header"]:
+            state["in_header"] = False
+        else:
+            offsets.append(state["record_start"])
+            if key_col is not None:
+                buf = bytes(key_buf)
+                if key_is_last and buf.endswith(b"\r"):
+                    buf = buf[:-1]
+                try:
+                    keys.append(parse_key(buf))
+                except ValueError:
+                    raise BadCsv("row %d: null/bad key" % len(keys))
+        state["field_idx"] = 0
+        key_buf.clear()
+
+    for chunk_start in range(0, len(data), chunk_size):
+        for byte in data[chunk_start : chunk_start + chunk_size]:
+            was_close = state["quote_just_closed"]
+            state["quote_just_closed"] = False
+            if byte == QUOTE and state["in_quotes"]:
+                state["in_quotes"] = False
+                state["quote_just_closed"] = True
+            elif byte == QUOTE:
+                state["in_quotes"] = True
+                # `""` escape: emit the literal quote the decoder sees.
+                if (
+                    was_close
+                    and not state["in_header"]
+                    and key_col == state["field_idx"]
+                ):
+                    key_buf.append(QUOTE)
+            elif byte == NEWLINE and not state["in_quotes"]:
+                end_record()
+                state["pos"] += 1
+                state["record_start"] = state["pos"]
+                continue
+            elif byte == COMMA and not state["in_quotes"]:
+                state["field_idx"] += 1
+            elif not state["in_header"] and key_col == state["field_idx"]:
+                key_buf.append(byte)
+            state["pos"] += 1
+
+    if state["in_quotes"]:
+        raise BadCsv("unterminated quoted field at EOF")
+    if state["record_start"] < state["pos"] and not state["in_header"]:
+        end_record()
+    offsets.append(state["pos"])
+    return offsets, (keys if key_col is not None else None)
+
+
+def split_record(line):
+    """Port of rust split_record: one record -> list of field bytes
+    (quotes removed, `""` unescaped)."""
+    fields = []
+    cur = bytearray()
+    in_quotes = False
+    i = 0
+    while i < len(line):
+        byte = line[i]
+        if byte == QUOTE and in_quotes:
+            if i + 1 < len(line) and line[i + 1] == QUOTE:
+                cur.append(QUOTE)
+                i += 1
+            else:
+                in_quotes = False
+        elif byte == QUOTE:
+            in_quotes = True
+        elif byte == COMMA and not in_quotes:
+            fields.append(bytes(cur))
+            cur.clear()
+        else:
+            cur.append(byte)
+        i += 1
+    fields.append(bytes(cur))
+    return fields
+
+
+def reference_index(data, n_fields, key_col):
+    """Whole-file reference: record spans by quote parity over the full
+    buffer, key extracted by splitting the complete record."""
+    spans = []
+    in_quotes = False
+    start = 0
+    for i, byte in enumerate(data):
+        if byte == QUOTE:
+            in_quotes = not in_quotes
+        elif byte == NEWLINE and not in_quotes:
+            spans.append((start, i))
+            start = i + 1
+    if in_quotes:
+        raise BadCsv("unterminated quoted field at EOF")
+    if start < len(data):
+        spans.append((start, len(data)))
+    rows = spans[1:]  # drop the header line
+    offsets = [s for s, _ in rows] + [len(data)]
+    if key_col is None:
+        return offsets, None
+    keys = []
+    for idx, (s, e) in enumerate(rows):
+        line = data[s:e]
+        if line.endswith(b"\r"):
+            line = line[:-1]
+        fields = split_record(line)
+        if key_col >= len(fields):
+            raise BadCsv("row %d: null/bad key" % idx)
+        try:
+            keys.append(parse_key(fields[key_col]))
+        except ValueError:
+            raise BadCsv("row %d: null/bad key" % idx)
+    return offsets, keys
+
+
+# ---------------- CSV writer (mirrors rust write_csv quoting) ----------
+
+
+def write_field(value):
+    if any(c in value for c in (b",", b'"', b"\n", b"\r")):
+        return b'"' + value.replace(b'"', b'""') + b'"'
+    return value
+
+
+MESSY = [b",", b'"', b"\n", b"\r", b"a", b"B", b"0", b" ", b"\xc3\xa9"]
+
+
+def random_field(rng):
+    kind = rng.random()
+    if kind < 0.15:
+        return b""  # NULL (bare empty)
+    if kind < 0.25:
+        return b'""'  # quoted empty string
+    if kind < 0.55:
+        n = rng.randrange(1, 8)
+        return write_field(b"".join(rng.choice(MESSY) for _ in range(n)))
+    if kind < 0.75:
+        return str(rng.randrange(-10**9, 10**9)).encode()
+    n = rng.randrange(1, 20)
+    return bytes(rng.choice(b"abcdefgh123") for _ in range(n))
+
+
+def random_csv(rng):
+    """Random CSV + its expected shape. Key fields are plain integers
+    (optionally quoted) — the realistic key shape both implementations
+    must agree on; the messy content goes in the other fields."""
+    n_fields = rng.randrange(1, 6)
+    key_col = rng.choice([None] + list(range(n_fields)))
+    n_rows = rng.randrange(0, 40)
+    crlf = rng.random() < 0.3
+    eol = b"\r\n" if crlf else b"\n"
+    lines = [b",".join(b"f%d" % i for i in range(n_fields))]
+    keys = []
+    bad_key = False
+    for _ in range(n_rows):
+        fields = [random_field(rng) for _ in range(n_fields)]
+        if key_col is not None:
+            if rng.random() < 0.05:
+                # Malformed key: both implementations must reject it
+                # (escaped quotes unescape to a literal `"`; int() is
+                # gated by the strict INT_RE).
+                fields[key_col] = rng.choice(
+                    [b'""', b'"1""2"', b"12x", b"1 2", b"+", b"- 3", b"3_0"]
+                )
+                bad_key = True
+            else:
+                k = rng.randrange(-10**6, 10**6)
+                keys.append(k)
+                text = str(k).encode()
+                fields[key_col] = (
+                    b'"%s"' % text if rng.random() < 0.1 else text
+                )
+        lines.append(b",".join(fields))
+    data = eol.join(lines)
+    if n_rows == 0 or rng.random() < 0.8:
+        data += eol
+    else:
+        # Missing trailing newline: the final record must still index,
+        # unless it would be ambiguous (a bare-\r tail is consumed as a
+        # line terminator by neither side consistently; keep it simple
+        # and always terminate CRLF files).
+        if crlf:
+            data += eol
+    return data, n_fields, key_col, (None if bad_key else keys)
+
+
+def check_equivalent(data, n_fields, key_col, chunk_size):
+    try:
+        want = reference_index(data, n_fields, key_col)
+        want_err = None
+    except BadCsv as e:
+        want, want_err = None, str(e)
+    try:
+        got = chunked_index(data, n_fields, key_col, chunk_size)
+        got_err = None
+    except BadCsv as e:
+        got, got_err = None, str(e)
+    context = "chunk=%d key_col=%r data=%r" % (chunk_size, key_col, data)
+    assert (want_err is None) == (got_err is None), (
+        "error mismatch: ref=%r chunked=%r (%s)" % (want_err, got_err, context)
+    )
+    assert got == want, context
+    return got
+
+
+def test_fuzz_chunked_vs_reference():
+    rng = random.Random(0xC5F)
+    for round_no in range(400):
+        data, n_fields, key_col, keys = random_csv(rng)
+        chunk_sizes = {1, 2, 3, rng.randrange(4, 64 * 1024)}
+        results = [
+            check_equivalent(data, n_fields, key_col, c)
+            for c in sorted(chunk_sizes)
+        ]
+        # Chunk-size invariance.
+        for r in results[1:]:
+            assert r == results[0], "round %d" % round_no
+        # Against the generator's ground truth (when no error and no
+        # malformed key was injected).
+        if results[0] is not None and key_col is not None and keys is not None:
+            assert results[0][1] == keys, "round %d" % round_no
+
+
+def test_edge_cases():
+    header = b"id,x\n"
+    cases = [
+        # (data, key_col, expected offsets, expected keys)
+        (header, 0, [5], []),
+        (header + b"1,a\n2,b\n", 0, [5, 9, 13], [1, 2]),
+        # Missing trailing newline.
+        (header + b"1,a\n2,b", 0, [5, 9, 12], [1, 2]),
+        # Embedded newline + escaped quotes inside a quoted field.
+        (header + b'1,"a\nb""c"\n7,d\n', 0, [5, 16, 20], [1, 7]),
+        # CRLF with key in the last position.
+        (b"x,id\r\n10,1\r\n20,2\r\n", 1, [6, 12, 18], [1, 2]),
+        # Quoted key.
+        (header + b'"42",z\n', 0, [5, 12], [42]),
+    ]
+    for data, key_col, offsets, keys in cases:
+        for chunk in (1, 2, 5, 4096):
+            got_off, got_keys = chunked_index(data, 2, key_col, chunk)
+            assert got_off == offsets, data
+            assert got_keys == keys, data
+            ref_off, ref_keys = reference_index(data, 2, key_col)
+            assert (ref_off, ref_keys) == (offsets, keys), data
+
+
+def test_bad_key_and_unterminated_quote_raise():
+    with pytest.raises(BadCsv, match="bad key"):
+        chunked_index(b"id,x\n1,a\nnope,b\n", 2, 0, 7)
+    with pytest.raises(BadCsv, match="bad key"):
+        reference_index(b"id,x\n1,a\nnope,b\n", 2, 0)
+    with pytest.raises(BadCsv, match="unterminated"):
+        chunked_index(b'id,x\n1,"abc\n', 2, 0, 3)
+    with pytest.raises(BadCsv, match="unterminated"):
+        reference_index(b'id,x\n1,"abc\n', 2, 0)
+    # NULL key (bare empty field).
+    with pytest.raises(BadCsv, match="null/bad key"):
+        chunked_index(b"id,x\n,a\n", 2, 0, 1)
+    # Escaped quote inside the key unescapes to a literal `"` — both
+    # sides must reject it identically (regression: the indexer used to
+    # drop quote bytes and silently index key 12 here).
+    for chunk in (1, 3, 4096):
+        with pytest.raises(BadCsv, match="bad key"):
+            chunked_index(b'id,x\n"1""2",5\n', 2, 0, chunk)
+    with pytest.raises(BadCsv, match="bad key"):
+        reference_index(b'id,x\n"1""2",5\n', 2, 0)
+
+
+def test_keyless_schema_skips_key_extraction():
+    offsets, keys = chunked_index(b"a,b\n1,2\nx,y\n", 2, None, 2)
+    assert offsets == [4, 8, 12]
+    assert keys is None

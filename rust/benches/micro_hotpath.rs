@@ -151,7 +151,7 @@ fn main() {
 
     let src = InMemorySource::new(a.clone());
     let t_decode = time_it(5, || {
-        std::hint::black_box(src.read_range(0, shard_rows).nrows());
+        std::hint::black_box(src.read_range(0, shard_rows).unwrap().nrows());
     });
 
     let mut stages = Vec::new();

@@ -496,7 +496,7 @@ fn run_with_admission(
         b.as_ref(),
         job.cfg.preflight_max_rows,
         job.cfg.preflight_fraction,
-    );
+    )?;
     control.update_progress(|p| {
         p.rows_total = a.nrows().max(b.nrows()) as u64;
     });

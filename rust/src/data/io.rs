@@ -9,11 +9,29 @@
 //!   (a real decode-buffer allocation, so memory accounting stays honest).
 //! * `CsvFileSource` — row-indexed CSV file; read = seek + parse, which
 //!   exercises the real parse/normalize cost the cost model fits.
+//!
+//! # Bounded-memory ingest
+//!
+//! `CsvFileSource::open` never materializes the file: the row-offset
+//! index is built by scanning the file in fixed-size chunks
+//! ([`INDEX_CHUNK_BYTES`]) with CSV quote parity carried across chunk
+//! boundaries, and the key column is extracted during that same scan by
+//! parsing only the key field of each record. The only per-file state
+//! that stays resident is the offset index (8 B/row) and the key index
+//! (8 B/row) — reported through `resident_bytes()` and counted against
+//! the memory cap as the job's base RSS — so a file larger than RAM
+//! opens in O(index) memory and `storage_bytes()` (not resident bytes)
+//! is what bounds file-backed jobs at open.
+//!
+//! All decode paths are typed-fallible: `read_range` returns
+//! `Result<Table, SchedError>` and a malformed row, invalid UTF-8, or a
+//! short read surfaces as `SchedError::Io` instead of panicking a pool
+//! worker.
 
 use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::api::error::SchedError;
@@ -21,28 +39,90 @@ use crate::data::column::Cell;
 use crate::data::schema::{ColumnType, Schema};
 use crate::data::table::{Table, TableBuilder};
 
+/// Chunk size of the streaming open scan (row indexing + key
+/// extraction). Any value ≥ 1 is correct — quote parity and the
+/// in-progress key field carry across chunk boundaries — this is just
+/// the I/O granularity.
+pub const INDEX_CHUNK_BYTES: usize = 256 * 1024;
+
+/// Pooled `read_range` file handles kept open per source (reused across
+/// batches instead of a fresh `File::open` per read).
+const MAX_POOLED_HANDLES: usize = 8;
+
 /// Cumulative read-side counters (shared across worker threads).
+///
+/// `bytes` counts *transferred* bytes (file bytes for file-backed
+/// sources, decoded heap bytes for in-memory ones); `nanos` the time
+/// spent inside reads. The pair is kept consistent with a seqlock so a
+/// reader never observes bytes from one batch paired with nanos from
+/// another (preflight divides one by the other).
 #[derive(Debug, Default)]
 pub struct ReadMeter {
+    /// Seqlock word: even = stable, odd = a writer is mid-update.
+    seq: AtomicU64,
     bytes: AtomicU64,
     nanos: AtomicU64,
 }
 
 impl ReadMeter {
     pub fn record(&self, bytes: u64, elapsed_nanos: u64) {
+        // Writer lock: CAS the seqlock word from even to odd. Contention
+        // is one CAS per batch read, so the spin is nearly always free.
+        let mut cur = self.seq.load(Ordering::Relaxed);
+        loop {
+            if cur & 1 == 1 {
+                std::hint::spin_loop();
+                cur = self.seq.load(Ordering::Relaxed);
+                continue;
+            }
+            match self.seq.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::Acquire,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(now) => cur = now,
+            }
+        }
+        // Release fence: the data writes below must not become visible
+        // before the odd seq value (crossbeam SeqLock write pattern) —
+        // without it a weakly-ordered CPU could let a reader observe
+        // new bytes under an even seq and pass validation torn.
+        std::sync::atomic::fence(Ordering::Release);
         self.bytes.fetch_add(bytes, Ordering::Relaxed);
         self.nanos.fetch_add(elapsed_nanos, Ordering::Relaxed);
+        self.seq.store(cur + 2, Ordering::Release);
     }
+
+    /// Consistent (bytes, nanos) pair: both counters from the same set
+    /// of completed `record` calls.
+    pub fn snapshot(&self) -> (u64, u64) {
+        loop {
+            let s1 = self.seq.load(Ordering::Acquire);
+            if s1 & 1 == 0 {
+                let b = self.bytes.load(Ordering::Relaxed);
+                let n = self.nanos.load(Ordering::Relaxed);
+                std::sync::atomic::fence(Ordering::Acquire);
+                if self.seq.load(Ordering::Relaxed) == s1 {
+                    return (b, n);
+                }
+            }
+            std::hint::spin_loop();
+        }
+    }
+
     pub fn bytes(&self) -> u64 {
-        self.bytes.load(Ordering::Relaxed)
+        self.snapshot().0
     }
+
     /// Effective bandwidth in bytes/sec (None until something was read).
     pub fn bandwidth(&self) -> Option<f64> {
-        let ns = self.nanos.load(Ordering::Relaxed);
-        if ns == 0 {
+        let (bytes, nanos) = self.snapshot();
+        if nanos == 0 {
             return None;
         }
-        Some(self.bytes.load(Ordering::Relaxed) as f64 / (ns as f64 * 1e-9))
+        Some(bytes as f64 / (nanos as f64 * 1e-9))
     }
 }
 
@@ -51,8 +131,10 @@ pub trait TableSource: Send + Sync {
     fn schema(&self) -> &Schema;
     fn nrows(&self) -> usize;
     /// Read+decode a contiguous row range into an owned Table (the
-    /// per-batch decode buffer).
-    fn read_range(&self, offset: usize, len: usize) -> Table;
+    /// per-batch decode buffer). Malformed input, short reads, and I/O
+    /// failures are typed errors — never panics — so a bad row fails
+    /// the batch (and, after the retry, the job), not the pool worker.
+    fn read_range(&self, offset: usize, len: usize) -> Result<Table, SchedError>;
     /// Primary-key value at `row` (i64 surrogate/PK; the range
     /// partitioner requires key-sorted sources). None if keyless.
     fn key_at(&self, row: usize) -> Option<i64>;
@@ -60,7 +142,8 @@ pub trait TableSource: Send + Sync {
     fn storage_bytes(&self) -> u64;
     /// Bytes *resident in RAM* for the lifetime of the job (counted
     /// against the memory cap as the base RSS). In-memory sources pin
-    /// their whole table; file sources only pin their key index.
+    /// their whole table; file sources only pin their row-offset and
+    /// key indexes.
     fn resident_bytes(&self) -> u64;
     /// Read metering for B̂_read estimation.
     fn meter(&self) -> &ReadMeter;
@@ -90,12 +173,21 @@ impl TableSource for InMemorySource {
     fn nrows(&self) -> usize {
         self.table.nrows()
     }
-    fn read_range(&self, offset: usize, len: usize) -> Table {
+    fn read_range(&self, offset: usize, len: usize) -> Result<Table, SchedError> {
+        if offset + len > self.table.nrows() {
+            return Err(SchedError::io(
+                "<in-memory>",
+                format!(
+                    "row range {offset}+{len} out of bounds ({} rows)",
+                    self.table.nrows()
+                ),
+            ));
+        }
         let t0 = Instant::now();
         let out = self.table.slice(offset, len);
         self.meter
             .record(out.heap_bytes() as u64, t0.elapsed().as_nanos() as u64);
-        out
+        Ok(out)
     }
     fn key_at(&self, row: usize) -> Option<i64> {
         let kc = self.key_col?;
@@ -246,84 +338,235 @@ fn parse_cell(
     Ok(())
 }
 
+/// Streaming row indexer: fed the file chunk by chunk, it builds the
+/// row-offset index and extracts the key column, carrying CSV quote
+/// parity (and the in-progress key field) across chunk boundaries. The
+/// mirror of this state machine is fuzz-tested against a whole-file
+/// reference splitter in `python/tests/test_csv_indexer.py`.
+struct RowIndexer {
+    /// Which field of each record is the key (None = keyless schema).
+    key_col: Option<usize>,
+    /// Whether the key is the record's last field (a trailing `\r` from
+    /// a CRLF line ending must then be stripped before parsing).
+    key_is_last: bool,
+    in_quotes: bool,
+    /// The previous byte was a `"` that closed a quoted section. A `"`
+    /// arriving now is a CSV `""` escape: `split_record` unescapes it
+    /// to a literal quote, so the key extractor must too (a literal
+    /// quote then fails the i64 parse — consistent with what decoding
+    /// the row would do — instead of silently indexing a wrong key).
+    quote_just_closed: bool,
+    /// Still inside the header line (not a data record).
+    in_header: bool,
+    /// Absolute byte offset of the next byte to be fed.
+    pos: u64,
+    /// Absolute byte offset where the current record started.
+    record_start: u64,
+    /// 0-based field index within the current record.
+    field_idx: usize,
+    /// Accumulated bytes of the current record's key field.
+    key_buf: Vec<u8>,
+    row_offsets: Vec<u64>,
+    keys: Vec<i64>,
+}
+
+impl RowIndexer {
+    fn new(schema: &Schema) -> RowIndexer {
+        let key_col = schema.key_indices().first().copied();
+        RowIndexer {
+            key_col,
+            key_is_last: key_col == Some(schema.len().saturating_sub(1)),
+            in_quotes: false,
+            quote_just_closed: false,
+            in_header: true,
+            pos: 0,
+            record_start: 0,
+            field_idx: 0,
+            key_buf: Vec::new(),
+            row_offsets: Vec::new(),
+            keys: Vec::new(),
+        }
+    }
+
+    /// Scan one chunk of the file (any size ≥ 1; boundaries may fall
+    /// anywhere, including inside quotes or inside the key field).
+    fn feed(&mut self, chunk: &[u8]) -> Result<(), String> {
+        for &byte in chunk {
+            let was_close = self.quote_just_closed;
+            self.quote_just_closed = false;
+            match byte {
+                b'"' if self.in_quotes => {
+                    self.in_quotes = false;
+                    self.quote_just_closed = true;
+                }
+                b'"' => {
+                    self.in_quotes = true;
+                    // `""` escape: emit the literal quote the decoder
+                    // would see (see `quote_just_closed`).
+                    if was_close
+                        && !self.in_header
+                        && self.key_col == Some(self.field_idx)
+                    {
+                        self.key_buf.push(b'"');
+                    }
+                }
+                b'\n' if !self.in_quotes => {
+                    self.end_record()?;
+                    self.pos += 1;
+                    self.record_start = self.pos;
+                    continue;
+                }
+                b',' if !self.in_quotes => self.field_idx += 1,
+                _ => {
+                    if !self.in_header && self.key_col == Some(self.field_idx) {
+                        self.key_buf.push(byte);
+                    }
+                }
+            }
+            self.pos += 1;
+        }
+        Ok(())
+    }
+
+    /// Finalize the record ending at the current position.
+    fn end_record(&mut self) -> Result<(), String> {
+        if self.in_header {
+            self.in_header = false;
+        } else {
+            self.row_offsets.push(self.record_start);
+            if self.key_col.is_some() {
+                // CRLF line endings leave a trailing \r on the last
+                // field only (mirrors `parse_line`'s strip).
+                if self.key_is_last && self.key_buf.last() == Some(&b'\r') {
+                    self.key_buf.pop();
+                }
+                let row = self.keys.len();
+                let key = std::str::from_utf8(&self.key_buf)
+                    .ok()
+                    .and_then(|s| s.parse::<i64>().ok())
+                    .ok_or_else(|| format!("row {row}: null/bad key"))?;
+                self.keys.push(key);
+            }
+        }
+        self.field_idx = 0;
+        self.key_buf.clear();
+        Ok(())
+    }
+
+    /// Finish the scan: close a final unterminated record, validate
+    /// quote parity, and return (row_offsets with EOF sentinel, keys).
+    fn finish(mut self) -> Result<(Vec<u64>, Option<Vec<i64>>), String> {
+        if self.in_quotes {
+            return Err("unterminated quoted field at EOF".into());
+        }
+        if self.record_start < self.pos && !self.in_header {
+            // Final record without a trailing newline.
+            self.end_record()?;
+        }
+        self.row_offsets.push(self.pos);
+        // The indexes live for the whole job and are what
+        // `resident_bytes` charges against the memory cap: drop the
+        // push-growth slack.
+        self.row_offsets.shrink_to_fit();
+        self.keys.shrink_to_fit();
+        let keys =
+            if self.key_col.is_some() { Some(self.keys) } else { None };
+        Ok((self.row_offsets, keys))
+    }
+}
+
 /// CSV-backed source with a prebuilt row offset index (byte position of
 /// every row) so `read_range` is a single seek + sequential parse.
+///
+/// Opening is bounded-memory: the index and the key column are built in
+/// one chunked streaming scan (see the module docs); only the two
+/// indexes stay resident. `read_range` reuses a small pool of open file
+/// handles instead of reopening the file per batch.
 pub struct CsvFileSource {
     path: PathBuf,
     schema: Schema,
     /// Byte offset of row i (data rows; header excluded); last entry = EOF.
     row_offsets: Vec<u64>,
-    /// Key column values, loaded once (alignment/partitioning state —
-    /// this is part of the paper's "alignment state for f" memory term).
+    /// Key column values, extracted during the open scan (alignment /
+    /// partitioning state — part of the paper's "alignment state for f"
+    /// memory term).
     keys: Option<Vec<i64>>,
+    /// Reusable read handles (checked out per `read_range`, returned
+    /// after; capped at `MAX_POOLED_HANDLES`).
+    handles: Mutex<Vec<std::fs::File>>,
     meter: ReadMeter,
 }
 
 impl CsvFileSource {
+    /// Open a CSV file, building the row-offset and key indexes in one
+    /// chunked streaming scan — the file is never materialized, so a
+    /// larger-than-RAM input opens in O(rows × 16 bytes) memory.
     pub fn open(path: &Path, schema: Schema) -> Result<Self, SchedError> {
-        Self::open_inner(path, schema)
+        Self::open_with_chunk_size(path, schema, INDEX_CHUNK_BYTES)
+    }
+
+    /// `open` with an explicit scan-chunk size (any value ≥ 1 yields
+    /// identical indexes; exposed for boundary-condition tests).
+    pub fn open_with_chunk_size(
+        path: &Path,
+        schema: Schema,
+        chunk_bytes: usize,
+    ) -> Result<Self, SchedError> {
+        Self::open_inner(path, schema, chunk_bytes.max(1))
             .map_err(|m| SchedError::io(path.display().to_string(), m))
     }
 
-    fn open_inner(path: &Path, schema: Schema) -> Result<Self, String> {
-        let text_file =
+    fn open_inner(
+        path: &Path,
+        schema: Schema,
+        chunk_bytes: usize,
+    ) -> Result<Self, String> {
+        let mut file =
             std::fs::File::open(path).map_err(|e| format!("open: {e}"))?;
-        let mut reader = std::io::BufReader::new(text_file);
-        let mut all = String::new();
-        reader
-            .read_to_string(&mut all)
-            .map_err(|e| format!("read: {e}"))?;
-        // Index row start offsets. CSV quoting may contain newlines; we
-        // track quote parity to only split on record boundaries.
-        let bytes = all.as_bytes();
-        let mut row_offsets = Vec::new();
-        let mut in_quotes = false;
-        let mut line_start = 0u64;
-        let mut first = true;
-        for (i, &b) in bytes.iter().enumerate() {
-            match b {
-                b'"' => in_quotes = !in_quotes,
-                b'\n' if !in_quotes => {
-                    if first {
-                        first = false; // header line
-                    } else {
-                        row_offsets.push(line_start);
-                    }
-                    line_start = i as u64 + 1;
-                }
-                _ => {}
-            }
+        let mut indexer = RowIndexer::new(&schema);
+        let mut buf = vec![0u8; chunk_bytes];
+        let t0 = Instant::now();
+        let mut scanned = 0u64;
+        loop {
+            let n = match file.read(&mut buf) {
+                Ok(0) => break,
+                Ok(n) => n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(format!("read: {e}")),
+            };
+            scanned += n as u64;
+            indexer.feed(&buf[..n])?;
         }
-        if line_start < bytes.len() as u64 && !first {
-            row_offsets.push(line_start);
-        }
-        row_offsets.push(bytes.len() as u64);
+        let (row_offsets, keys) = indexer.finish()?;
+        let meter = ReadMeter::default();
+        // The indexing scan is a real sequential read of the whole
+        // file: record it so B̂_read has signal before the first batch.
+        meter.record(scanned, t0.elapsed().as_nanos() as u64);
 
-        let key_col = schema.key_indices().first().copied();
-        let mut src = CsvFileSource {
+        Ok(CsvFileSource {
             path: path.to_path_buf(),
             schema,
             row_offsets,
-            keys: None,
-            meter: ReadMeter::default(),
-        };
-        if let Some(kc) = key_col {
-            let n = src.nrows();
-            if n > 0 {
-                let t = src.read_range(0, n);
-                let mut keys = Vec::with_capacity(n);
-                for i in 0..n {
-                    match t.column(kc).cell(i) {
-                        Cell::I64(k) => keys.push(k),
-                        _ => return Err(format!("row {i}: null/bad key")),
-                    }
-                }
-                src.keys = Some(keys);
-            } else {
-                src.keys = Some(Vec::new());
-            }
+            keys,
+            handles: Mutex::new(vec![file]),
+            meter,
+        })
+    }
+
+    /// Check a read handle out of the pool (opening a new one only when
+    /// the pool is empty).
+    fn checkout_handle(&self) -> Result<std::fs::File, String> {
+        if let Some(f) = self.handles.lock().unwrap().pop() {
+            return Ok(f);
         }
-        Ok(src)
+        std::fs::File::open(&self.path).map_err(|e| format!("open: {e}"))
+    }
+
+    fn return_handle(&self, f: std::fs::File) {
+        let mut pool = self.handles.lock().unwrap();
+        if pool.len() < MAX_POOLED_HANDLES {
+            pool.push(f);
+        }
     }
 
     fn parse_rows(&self, text: &str, expect: usize) -> Result<Table, String> {
@@ -338,9 +581,6 @@ impl CsvFileSource {
                 b'\n' if !in_quotes => {
                     let line = &text[start..i];
                     start = i + 1;
-                    if line.is_empty() {
-                        continue;
-                    }
                     self.parse_line(&mut tb, line)?;
                     parsed += 1;
                 }
@@ -381,25 +621,45 @@ impl TableSource for CsvFileSource {
     fn nrows(&self) -> usize {
         self.row_offsets.len() - 1
     }
-    fn read_range(&self, offset: usize, len: usize) -> Table {
-        assert!(offset + len < self.row_offsets.len(), "range out of bounds");
+    fn read_range(&self, offset: usize, len: usize) -> Result<Table, SchedError> {
+        let path = || self.path.display().to_string();
+        if offset + len >= self.row_offsets.len() {
+            return Err(SchedError::io(
+                path(),
+                format!(
+                    "row range {offset}+{len} out of bounds ({} rows)",
+                    self.nrows()
+                ),
+            ));
+        }
         if len == 0 {
-            return Table::empty(self.schema.clone());
+            return Ok(Table::empty(self.schema.clone()));
         }
         let t0 = Instant::now();
         let lo = self.row_offsets[offset];
         let hi = self.row_offsets[offset + len];
-        let mut f = std::fs::File::open(&self.path).expect("reopen csv");
-        f.seek(SeekFrom::Start(lo)).expect("seek");
+        let mut f = self.checkout_handle().map_err(|m| SchedError::io(path(), m))?;
         let mut buf = vec![0u8; (hi - lo) as usize];
-        f.read_exact(&mut buf).expect("read range");
-        let text = String::from_utf8(buf).expect("utf8 csv");
+        let read = f
+            .seek(SeekFrom::Start(lo))
+            .map_err(|e| format!("seek: {e}"))
+            .and_then(|_| {
+                f.read_exact(&mut buf)
+                    .map_err(|e| format!("read {} bytes at {lo}: {e}", hi - lo))
+            });
+        match read {
+            // Only a handle that completed its read cleanly goes back
+            // in the pool.
+            Ok(()) => self.return_handle(f),
+            Err(m) => return Err(SchedError::io(path(), m)),
+        }
+        let text = String::from_utf8(buf)
+            .map_err(|e| SchedError::io(path(), format!("invalid utf-8: {e}")))?;
         let table = self
             .parse_rows(&text, len)
-            .unwrap_or_else(|e| panic!("csv parse {:?}: {e}", self.path));
-        self.meter
-            .record(hi - lo, t0.elapsed().as_nanos() as u64);
-        table
+            .map_err(|m| SchedError::io(path(), m))?;
+        self.meter.record(hi - lo, t0.elapsed().as_nanos() as u64);
+        Ok(table)
     }
     fn key_at(&self, row: usize) -> Option<i64> {
         self.keys.as_ref().map(|k| k[row])
@@ -439,7 +699,7 @@ mod tests {
         write_csv(&t, &path).unwrap();
         let src = CsvFileSource::open(&path, t.schema.clone()).unwrap();
         assert_eq!(src.nrows(), t.nrows());
-        let back = src.read_range(0, t.nrows());
+        let back = src.read_range(0, t.nrows()).unwrap();
         assert_eq!(back, t);
         std::fs::remove_file(path).ok();
     }
@@ -452,8 +712,165 @@ mod tests {
         write_csv(&t, &path).unwrap();
         let src = CsvFileSource::open(&path, t.schema.clone()).unwrap();
         for (off, len) in [(0usize, 10usize), (50, 100), (290, 10), (299, 1)] {
-            assert_eq!(src.read_range(off, len), t.slice(off, len));
+            assert_eq!(src.read_range(off, len).unwrap(), t.slice(off, len));
         }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn chunked_indexing_is_chunk_size_invariant() {
+        // Quote parity and key extraction must carry across chunk
+        // boundaries: pathological chunk sizes (1, 2, 3, 7 bytes) must
+        // produce the identical index as one big chunk.
+        use crate::data::schema::{ColumnType, Field, Schema};
+        let schema = Schema::new(vec![
+            Field::key("id", ColumnType::Int64),
+            Field::new("s", ColumnType::Utf8),
+        ]);
+        let mut tb = TableBuilder::new(schema.clone());
+        for (i, s) in [
+            "plain",
+            "comma, inside",
+            "quote \" inside",
+            "multi\nline\nvalue",
+            "trailing\r",
+            "",
+        ]
+        .iter()
+        .enumerate()
+        {
+            tb.col(0).push_i64(3 * i as i64);
+            tb.col(1).push_str(s);
+        }
+        let t = tb.finish();
+        let path = tmpdir().join("chunked.csv");
+        write_csv(&t, &path).unwrap();
+        let big = CsvFileSource::open(&path, schema.clone()).unwrap();
+        for chunk in [1usize, 2, 3, 7, 64] {
+            let src =
+                CsvFileSource::open_with_chunk_size(&path, schema.clone(), chunk)
+                    .unwrap();
+            assert_eq!(src.row_offsets, big.row_offsets, "chunk={chunk}");
+            assert_eq!(src.keys, big.keys, "chunk={chunk}");
+            assert_eq!(src.read_range(0, t.nrows()).unwrap(), t, "chunk={chunk}");
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn missing_trailing_newline_still_indexed() {
+        use crate::data::schema::{ColumnType, Field, Schema};
+        let schema = Schema::new(vec![
+            Field::key("id", ColumnType::Int64),
+            Field::new("x", ColumnType::Int64),
+        ]);
+        let path = tmpdir().join("notrail.csv");
+        std::fs::write(&path, "id,x\n1,10\n2,20").unwrap();
+        for chunk in [1usize, 4, 1024] {
+            let src =
+                CsvFileSource::open_with_chunk_size(&path, schema.clone(), chunk)
+                    .unwrap();
+            assert_eq!(src.nrows(), 2);
+            assert_eq!(src.key_at(1), Some(2));
+            let t = src.read_range(0, 2).unwrap();
+            assert_eq!(t.nrows(), 2);
+            assert_eq!(t.column(1).cell(1), Cell::I64(20));
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn crlf_line_endings_and_key_last_field() {
+        use crate::data::schema::{ColumnType, Field, Schema};
+        // Key is the LAST field: the CRLF \r lands at the end of the
+        // key bytes and must be stripped before parsing.
+        let schema = Schema::new(vec![
+            Field::new("x", ColumnType::Int64),
+            Field::key("id", ColumnType::Int64),
+        ]);
+        let path = tmpdir().join("crlf.csv");
+        std::fs::write(&path, "x,id\r\n10,1\r\n20,2\r\n").unwrap();
+        let src = CsvFileSource::open_with_chunk_size(&path, schema, 3).unwrap();
+        assert_eq!(src.nrows(), 2);
+        assert_eq!(src.key_at(0), Some(1));
+        assert_eq!(src.key_at(1), Some(2));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn open_errors_are_typed() {
+        use crate::data::schema::{ColumnType, Field, Schema};
+        let schema = Schema::new(vec![
+            Field::key("id", ColumnType::Int64),
+            Field::new("x", ColumnType::Int64),
+        ]);
+        // Bad key (non-integer) fails at open with a typed error.
+        let path = tmpdir().join("badkey.csv");
+        std::fs::write(&path, "id,x\n1,10\nnope,20\n").unwrap();
+        match CsvFileSource::open(&path, schema.clone()) {
+            Err(SchedError::Io { message, .. }) => {
+                assert!(message.contains("bad key"), "{message}");
+            }
+            Err(other) => panic!("expected Io error, got {other:?}"),
+            Ok(_) => panic!("expected Io error, got Ok"),
+        }
+        std::fs::remove_file(&path).ok();
+        // Escaped quote in the key field unescapes to a literal `"` —
+        // rejected at open exactly like the row decoder would reject
+        // it (never silently indexed as key 12).
+        let path = tmpdir().join("escquote.csv");
+        std::fs::write(&path, "id,x\n\"1\"\"2\",5\n").unwrap();
+        for chunk in [1usize, 3, 4096] {
+            match CsvFileSource::open_with_chunk_size(
+                &path,
+                schema.clone(),
+                chunk,
+            ) {
+                Err(SchedError::Io { message, .. }) => {
+                    assert!(message.contains("bad key"), "{message}");
+                }
+                Err(other) => panic!("expected Io error, got {other:?}"),
+                Ok(_) => panic!("expected Io error, got Ok (chunk={chunk})"),
+            }
+        }
+        std::fs::remove_file(&path).ok();
+        // Unterminated quote fails at open.
+        let path = tmpdir().join("openquote.csv");
+        std::fs::write(&path, "id,x\n1,\"abc\n").unwrap();
+        match CsvFileSource::open(&path, schema) {
+            Err(SchedError::Io { message, .. }) => {
+                assert!(message.contains("unterminated"), "{message}");
+            }
+            Err(other) => panic!("expected Io error, got {other:?}"),
+            Ok(_) => panic!("expected Io error, got Ok"),
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn read_range_errors_are_typed_not_panics() {
+        use crate::data::schema::{ColumnType, Field, Schema};
+        let schema = Schema::new(vec![
+            Field::key("id", ColumnType::Int64),
+            Field::new("x", ColumnType::Int64),
+        ]);
+        // Key column parses at open, payload column is malformed: the
+        // failure must surface from read_range as a typed SchedError.
+        let path = tmpdir().join("badrow.csv");
+        std::fs::write(&path, "id,x\n1,10\n2,oops\n3,30\n").unwrap();
+        let src = CsvFileSource::open(&path, schema).unwrap();
+        assert_eq!(src.nrows(), 3);
+        assert!(src.read_range(0, 1).is_ok());
+        match src.read_range(1, 1) {
+            Err(SchedError::Io { message, .. }) => {
+                assert!(message.contains("bad"), "{message}");
+            }
+            other => panic!("expected Io error, got {other:?}"),
+        }
+        // Out-of-bounds range: typed error, not an assert.
+        assert!(src.read_range(2, 5).is_err());
+        // The source stays usable after a failed read.
+        assert!(src.read_range(2, 1).is_ok());
         std::fs::remove_file(path).ok();
     }
 
@@ -473,7 +890,7 @@ mod tests {
         let path = tmpdir().join("quotes.csv");
         write_csv(&t, &path).unwrap();
         let src = CsvFileSource::open(&path, schema).unwrap();
-        assert_eq!(src.read_range(0, 2), t);
+        assert_eq!(src.read_range(0, 2).unwrap(), t);
         std::fs::remove_file(path).ok();
     }
 
@@ -481,9 +898,41 @@ mod tests {
     fn meter_records_reads() {
         let t = generate_table(&GenSpec { rows: 100, ..GenSpec::default() });
         let src = InMemorySource::new(t);
-        let _ = src.read_range(0, 100);
+        let _ = src.read_range(0, 100).unwrap();
         assert!(src.meter().bytes() > 0);
         assert!(src.meter().bandwidth().unwrap_or(0.0) > 0.0);
+    }
+
+    #[test]
+    fn meter_snapshots_are_never_torn() {
+        // Writers always record (n, n) pairs; a torn read would observe
+        // bytes and nanos from different record() calls and the pair
+        // would disagree.
+        let meter = Arc::new(ReadMeter::default());
+        let mut writers = Vec::new();
+        for _ in 0..4 {
+            let m = Arc::clone(&meter);
+            writers.push(std::thread::spawn(move || {
+                for i in 1..=2_000u64 {
+                    m.record(i, i);
+                }
+            }));
+        }
+        let reader = {
+            let m = Arc::clone(&meter);
+            std::thread::spawn(move || {
+                for _ in 0..20_000 {
+                    let (b, n) = m.snapshot();
+                    assert_eq!(b, n, "torn meter snapshot: bytes={b} nanos={n}");
+                }
+            })
+        };
+        for w in writers {
+            w.join().unwrap();
+        }
+        reader.join().unwrap();
+        let total = 4 * (2_000 * 2_001 / 2);
+        assert_eq!(meter.snapshot(), (total, total));
     }
 
     #[test]
@@ -514,7 +963,7 @@ mod tests {
         let path = tmpdir().join("nulls.csv");
         write_csv(&t, &path).unwrap();
         let src = CsvFileSource::open(&path, schema).unwrap();
-        let back = src.read_range(0, 1);
+        let back = src.read_range(0, 1).unwrap();
         assert!(back.column(1).is_null(0));
         std::fs::remove_file(path).ok();
     }

@@ -98,7 +98,9 @@ pub fn calibrate(rows: usize, seed: u64) -> CostConstants {
     let chunks = 8.max(rows / 4096);
     let chunk = rows / chunks;
     for i in 0..chunks {
-        let t = src.read_range(i * chunk, chunk);
+        let t = src
+            .read_range(i * chunk, chunk)
+            .expect("in-memory calibration reads are infallible");
         decoded_bytes += t.heap_bytes() as u64;
     }
     let decode_ns = t0.elapsed().as_nanos() as f64;

@@ -6,6 +6,15 @@
 //! exactly one shard regardless of b — that is what makes the merged
 //! outcome invariant to batch size. Keyless jobs shard by position.
 //!
+//! Boundaries are additionally snapped to the end of a *key run*: keys
+//! may repeat (duplicates align positionally inside a shard), and a
+//! boundary cutting a run of equal A-side keys would strand the later
+//! A occurrences in the next shard while every matching B row binds to
+//! the earlier one — making the report depend on `b`, which violates
+//! the merge-invariance contract in `engine/merge.rs`. Snapping keeps
+//! each key run whole (so a shard can exceed `b` by the tail of one
+//! run — bounded by the longest duplicate-key run in the input).
+//!
 //! Partitioning is incremental (`next(b)`) because the controller
 //! changes b while the job runs.
 
@@ -68,7 +77,22 @@ impl<'a> Partitioner<'a> {
             // A exhausted: the rest of B is one trailing added-range.
             (0, (b_n - self.b_pos).min(batch_rows))
         } else {
-            let a_len = batch_rows.min(a_n - self.a_pos);
+            let mut a_len = batch_rows.min(a_n - self.a_pos);
+            if self.a_pos + a_len < a_n {
+                // Snap the cut to the end of the key run: all A rows
+                // sharing the boundary key stay in this shard (their
+                // matching B rows bind here via the upper bound below).
+                let boundary = self
+                    .a
+                    .key_at(self.a_pos + a_len - 1)
+                    .expect("keyed source");
+                a_len = upper_bound_key_in(
+                    self.a,
+                    self.a_pos + a_len,
+                    a_n,
+                    boundary,
+                ) - self.a_pos;
+            }
             let b_hi = if self.a_pos + a_len >= a_n {
                 b_n // last A shard absorbs the B tail
             } else {
@@ -77,7 +101,7 @@ impl<'a> Partitioner<'a> {
                     .a
                     .key_at(self.a_pos + a_len - 1)
                     .expect("keyed source");
-                upper_bound_key(self.b, self.b_pos, boundary)
+                upper_bound_key_in(self.b, self.b_pos, b_n, boundary)
             };
             (a_len, b_hi - self.b_pos)
         };
@@ -97,24 +121,46 @@ impl<'a> Partitioner<'a> {
     }
 }
 
-/// First row index in [lo, nrows) with key > `key` (binary search over a
-/// key-sorted source).
-fn upper_bound_key(src: &dyn TableSource, lo: usize, key: i64) -> usize {
+/// Generic upper bound: first index in [lo, hi) where `le` turns false
+/// (`le(i)` = "row i's key is <= the boundary"; key-sorted rows make it
+/// monotone). Single binary search shared by every boundary derivation
+/// — the merge-invariance contract depends on all of them snapping key
+/// runs identically.
+pub(crate) fn upper_bound_by(
+    lo: usize,
+    hi: usize,
+    le: impl Fn(usize) -> bool,
+) -> usize {
     let mut lo = lo;
-    let mut hi = src.nrows();
+    let mut hi = hi;
     while lo < hi {
         let mid = lo + (hi - lo) / 2;
-        match src.key_at(mid) {
-            Some(k) if k <= key => lo = mid + 1,
-            _ => hi = mid,
+        if le(mid) {
+            lo = mid + 1;
+        } else {
+            hi = mid;
         }
     }
     lo
 }
 
+/// First row index in [lo, hi) with key > `key` over a key-sorted
+/// source. Used by the partitioner, the worker's sub-chunker, and the
+/// scheduler's straggler splitter.
+pub(crate) fn upper_bound_key_in(
+    src: &dyn TableSource,
+    lo: usize,
+    hi: usize,
+    key: i64,
+) -> usize {
+    upper_bound_by(lo, hi, |i| matches!(src.key_at(i), Some(k) if k <= key))
+}
+
 /// Split decoded shard tables into sub-chunks of at most `chunk_rows`
-/// A-side rows, key-range aligned (used by the dask-like backend's
-/// finer-grained tasks and by straggler shard splitting).
+/// A-side rows (plus the tail of a duplicate-key run straddling a cut —
+/// boundaries are snapped to key-run ends just like `Partitioner`),
+/// key-range aligned (used by the dask-like backend's finer-grained
+/// tasks and by straggler shard splitting).
 pub fn partition_tables(
     a: &Table,
     b: &Table,
@@ -123,6 +169,12 @@ pub fn partition_tables(
     let key_a = a.schema.key_indices().first().copied();
     let key_b = b.schema.key_indices().first().copied();
     let chunk_rows = chunk_rows.max(1);
+    let cell_key = |t: &Table, col: usize, row: usize| -> i64 {
+        match t.column(col).cell(row) {
+            crate::data::column::Cell::I64(k) => k,
+            _ => i64::MAX,
+        }
+    };
     let mut out = Vec::new();
     let (mut ap, mut bp) = (0usize, 0usize);
     while ap < a.nrows() || bp < b.nrows() {
@@ -130,28 +182,20 @@ pub fn partition_tables(
             out.push(((ap, 0), (bp, b.nrows() - bp)));
             break;
         }
-        let a_len = chunk_rows.min(a.nrows() - ap);
+        let mut a_len = chunk_rows.min(a.nrows() - ap);
+        if let Some(ka) = key_a {
+            if ap + a_len < a.nrows() {
+                // Snap to the end of the A-side key run.
+                let boundary = cell_key(a, ka, ap + a_len - 1);
+                a_len = upper_bound_by(ap + a_len, a.nrows(), |i| {
+                    cell_key(a, ka, i) <= boundary
+                }) - ap;
+            }
+        }
         let b_hi = match (key_a, key_b) {
             (Some(ka), Some(kb)) if ap + a_len < a.nrows() => {
-                let boundary = match a.column(ka).cell(ap + a_len - 1) {
-                    crate::data::column::Cell::I64(k) => k,
-                    _ => i64::MAX,
-                };
-                let mut lo = bp;
-                let mut hi = b.nrows();
-                while lo < hi {
-                    let mid = lo + (hi - lo) / 2;
-                    let k = match b.column(kb).cell(mid) {
-                        crate::data::column::Cell::I64(k) => k,
-                        _ => i64::MAX,
-                    };
-                    if k <= boundary {
-                        lo = mid + 1;
-                    } else {
-                        hi = mid;
-                    }
-                }
-                lo
+                let boundary = cell_key(a, ka, ap + a_len - 1);
+                upper_bound_by(bp, b.nrows(), |i| cell_key(b, kb, i) <= boundary)
             }
             _ if ap + a_len < a.nrows() => (bp + a_len).min(b.nrows()),
             _ => b.nrows(),
@@ -262,6 +306,102 @@ mod tests {
             assert_eq!(bo, bp);
             ap += al;
             bp += bl;
+        }
+    }
+
+    #[test]
+    fn duplicate_key_runs_never_split() {
+        use crate::data::schema::{ColumnType, Field, Schema};
+        use crate::data::table::TableBuilder;
+        // A-side keys with runs of 1..6 equal keys; B shares the key
+        // universe. No batch size may cut a run: the row after every
+        // shard must carry a different key than the shard's last row.
+        let schema = Schema::new(vec![
+            Field::key("id", ColumnType::Int64),
+            Field::new("v", ColumnType::Int64),
+        ]);
+        let mk = |runs: &[(i64, usize)]| {
+            let mut tb = TableBuilder::new(schema.clone());
+            let mut v = 0i64;
+            for &(key, n) in runs {
+                for _ in 0..n {
+                    tb.col(0).push_i64(key);
+                    tb.col(1).push_i64(v);
+                    v += 1;
+                }
+            }
+            tb.finish()
+        };
+        let runs_a: Vec<(i64, usize)> =
+            (0..400).map(|k| (k, 1 + (k as usize * 7) % 6)).collect();
+        let runs_b: Vec<(i64, usize)> =
+            (0..400).map(|k| (k, 1 + (k as usize * 5) % 6)).collect();
+        let a = InMemorySource::new(mk(&runs_a));
+        let b = InMemorySource::new(mk(&runs_b));
+        for batch in [1usize, 2, 3, 7, 50, 333] {
+            let mut p = Partitioner::new(&a, &b);
+            let (mut a_seen, mut b_seen) = (0, 0);
+            while let Some(s) = p.next(batch) {
+                a_seen += s.a_len;
+                b_seen += s.b_len;
+                if s.a_len > 0 && s.a_offset + s.a_len < a.nrows() {
+                    let last = a.key_at(s.a_offset + s.a_len - 1).unwrap();
+                    let next = a.key_at(s.a_offset + s.a_len).unwrap();
+                    assert_ne!(
+                        last, next,
+                        "batch={batch}: shard cut key run {last} at row {}",
+                        s.a_offset + s.a_len
+                    );
+                    if s.b_len > 0 {
+                        // Every B row with the boundary key binds here.
+                        let b_last =
+                            b.key_at(s.b_offset + s.b_len - 1).unwrap();
+                        assert!(b_last <= last);
+                    }
+                    if s.b_offset + s.b_len < b.nrows() {
+                        let b_next = b.key_at(s.b_offset + s.b_len).unwrap();
+                        assert!(b_next > last, "B row with shard key leaked");
+                    }
+                }
+            }
+            assert_eq!((a_seen, b_seen), (a.nrows(), b.nrows()));
+        }
+    }
+
+    #[test]
+    fn partition_tables_snaps_key_runs() {
+        use crate::data::column::Cell;
+        use crate::data::schema::{ColumnType, Field, Schema};
+        use crate::data::table::TableBuilder;
+        let schema = Schema::new(vec![Field::key("id", ColumnType::Int64)]);
+        let mk = |keys: &[i64]| {
+            let mut tb = TableBuilder::new(schema.clone());
+            for &k in keys {
+                tb.col(0).push_i64(k);
+            }
+            tb.finish()
+        };
+        // Run of four 5s straddles every small chunk boundary.
+        let a = mk(&[1, 2, 5, 5, 5, 5, 8, 9, 9, 10]);
+        let b = mk(&[1, 5, 5, 8, 9, 11]);
+        for chunk in [1usize, 2, 3, 4] {
+            let parts = partition_tables(&a, &b, chunk);
+            let a_total: usize = parts.iter().map(|c| c.0 .1).sum();
+            let b_total: usize = parts.iter().map(|c| c.1 .1).sum();
+            assert_eq!((a_total, b_total), (a.nrows(), b.nrows()));
+            for ((ao, al), _) in &parts {
+                if *al > 0 && ao + al < a.nrows() {
+                    let last = match a.column(0).cell(ao + al - 1) {
+                        Cell::I64(k) => k,
+                        _ => unreachable!(),
+                    };
+                    let next = match a.column(0).cell(ao + al) {
+                        Cell::I64(k) => k,
+                        _ => unreachable!(),
+                    };
+                    assert_ne!(last, next, "chunk={chunk} cut a key run");
+                }
+            }
         }
     }
 

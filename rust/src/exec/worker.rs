@@ -10,6 +10,7 @@ use crate::engine::delta::{process_shard_with, ShardMemStats, ShardScratch};
 use crate::engine::merge::Merger;
 use crate::engine::verdict::BatchOutcome;
 use crate::exec::backend::{BatchError, JobContext, ShardSpec};
+use crate::exec::partition::upper_bound_key_in;
 
 /// Shared accounting for a memory pool (job-wide for inmem; per-worker
 /// for the dask-like backend). Exceeding the cap is the OOM failure the
@@ -114,8 +115,21 @@ fn execute_range(
 ) -> Result<(BatchOutcome, ShardMemStats, u64), BatchError> {
     // Decode (T_read + parse): buffers are accounted as soon as they
     // exist; an estimate-first reservation would hide the real number.
-    let a_tbl = ctx.a.read_range(a_off, a_len);
-    let b_tbl = ctx.b.read_range(b_off, b_len);
+    // Read failures (malformed rows, short reads, transient I/O) are
+    // typed batch failures — the scheduler retries once, then fails the
+    // job with the cause chain — never worker panics.
+    let a_tbl = ctx.a.read_range(a_off, a_len).map_err(|e| {
+        BatchError::failed_with(
+            format!("read A rows {a_off}..{}", a_off + a_len),
+            e,
+        )
+    })?;
+    let b_tbl = ctx.b.read_range(b_off, b_len).map_err(|e| {
+        BatchError::failed_with(
+            format!("read B rows {b_off}..{}", b_off + b_len),
+            e,
+        )
+    })?;
     let decode_bytes = (a_tbl.heap_bytes() + b_tbl.heap_bytes()) as u64;
     let _decode_guard = tracker.alloc(decode_bytes)?;
 
@@ -270,21 +284,20 @@ fn sub_partition(
     let a_end = spec.a_offset + spec.a_len;
     let b_end = spec.b_offset + spec.b_len;
     while ap < a_end {
-        let al = chunk.min(a_end - ap);
+        let mut al = chunk.min(a_end - ap);
+        if ap + al < a_end {
+            // Snap the cut to the end of the key run (duplicate keys
+            // align positionally within one chunk; a cut run would bind
+            // all matching B rows to the earlier chunk).
+            let boundary = ctx.a.key_at(ap + al - 1).unwrap_or(i64::MAX);
+            al = upper_bound_key_in(ctx.a.as_ref(), ap + al, a_end, boundary)
+                - ap;
+        }
         let b_hi = if ap + al >= a_end {
             b_end
         } else {
             let boundary = ctx.a.key_at(ap + al - 1).unwrap_or(i64::MAX);
-            let mut lo = bp;
-            let mut hi = b_end;
-            while lo < hi {
-                let mid = lo + (hi - lo) / 2;
-                match ctx.b.key_at(mid) {
-                    Some(k) if k <= boundary => lo = mid + 1,
-                    _ => hi = mid,
-                }
-            }
-            lo
+            upper_bound_key_in(ctx.b.as_ref(), bp, b_end, boundary)
         };
         out.push(((ap, al), (bp, b_hi - bp)));
         ap += al;

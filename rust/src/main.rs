@@ -180,7 +180,7 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
                 &sb,
                 cfg.preflight_max_rows,
                 cfg.preflight_fraction,
-            );
+            )?;
             println!(
                 "preflight: w_hat={:.1} B/row  b_read={:.2} GB/s  sampled={} rows",
                 p.w_hat,

@@ -1,7 +1,13 @@
 //! Pre-flight profiler (paper §III): estimate Ŵ (bytes per aligned row)
 //! and B̂_read (effective read bandwidth) from a sample of
 //! min(10⁶ rows, 1% of the job) before scheduling starts.
+//!
+//! B̂_read is measured from the sources' [`ReadMeter`]s — the bytes the
+//! source actually transferred (file bytes for file-backed sources) —
+//! not from decoded heap bytes, which can differ from storage bytes by
+//! a large factor and would bias the Eq. 2 read-time term.
 
+use crate::api::error::SchedError;
 use crate::data::io::TableSource;
 
 /// What the pre-flight pass learned about a job before scheduling.
@@ -29,13 +35,15 @@ pub fn sample_size(total_rows: usize, max_rows: usize, fraction: f64) -> usize {
 }
 
 /// Run the pre-flight pass. Samples evenly spaced ranges (not just the
-/// head) so skewed string widths don't bias Ŵ.
+/// head) so skewed string widths don't bias Ŵ. A sample read that fails
+/// (e.g. a malformed row in a file source) is a typed error — the job
+/// is rejected before admission rather than panicking mid-profile.
 pub fn preflight(
     a: &dyn TableSource,
     b: &dyn TableSource,
     max_rows: usize,
     fraction: f64,
-) -> PreflightProfile {
+) -> Result<PreflightProfile, SchedError> {
     let rows_a = a.nrows();
     let rows_b = b.nrows();
     let total = rows_a.max(rows_b).max(1);
@@ -43,7 +51,11 @@ pub fn preflight(
 
     let mut w_sum = 0.0;
     let mut sampled = 0usize;
-    let mut bytes = 0u64;
+    // Meter snapshots bracket the sampling reads: B̂_read is computed
+    // from the *transferred* bytes the sources report (real file bytes
+    // for CsvFileSource), not from the decoded heap bytes of the sample
+    // tables.
+    let meter0 = (a.meter().snapshot(), b.meter().snapshot());
     let t0 = std::time::Instant::now();
     for (src, nrows) in [(a, rows_a), (b, rows_b)] {
         if nrows == 0 {
@@ -56,25 +68,33 @@ pub fn preflight(
         for i in 0..chunks {
             let stride = nrows / chunks;
             let off = (i * stride).min(nrows - chunk_len);
-            let t = src.read_range(off, chunk_len);
+            let t = src.read_range(off, chunk_len)?;
             w_sum += t.measured_row_bytes() * t.nrows() as f64;
-            bytes += t.heap_bytes() as u64;
             sampled += t.nrows();
         }
     }
     let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
     let per_row = if sampled > 0 { w_sum / sampled as f64 } else { 64.0 };
+    let meter1 = (a.meter().snapshot(), b.meter().snapshot());
+    let bytes = (meter1.0 .0 - meter0.0 .0) + (meter1.1 .0 - meter0.1 .0);
+    let nanos = (meter1.0 .1 - meter0.0 .1) + (meter1.1 .1 - meter0.1 .1);
+    // In-read time from the meters when available; wall time otherwise.
+    let b_read = if nanos > 0 {
+        bytes as f64 / (nanos as f64 * 1e-9)
+    } else {
+        bytes as f64 / elapsed
+    };
 
-    PreflightProfile {
+    Ok(PreflightProfile {
         // Ŵ covers *both sides* of an aligned row (the working set holds
         // A and B buffers simultaneously).
         w_hat: 2.0 * per_row,
-        b_read: bytes as f64 / elapsed,
+        b_read,
         rows_a,
         rows_b,
         sampled_rows: sampled,
         ncols: a.schema().len(),
-    }
+    })
 }
 
 #[cfg(test)]
@@ -114,8 +134,8 @@ mod tests {
             InMemorySource::new(wide_pair.0),
             InMemorySource::new(wide_pair.1),
         );
-        let narrow = preflight(&na, &nb, 1_000_000, 0.25);
-        let wide = preflight(&wa, &wb, 1_000_000, 0.25);
+        let narrow = preflight(&na, &nb, 1_000_000, 0.25).unwrap();
+        let wide = preflight(&wa, &wb, 1_000_000, 0.25).unwrap();
         assert!(wide.w_hat > narrow.w_hat + 20.0);
         assert!(narrow.b_read > 0.0);
         assert!(narrow.sampled_rows > 0);
@@ -131,7 +151,7 @@ mod tests {
         let true_w = (a.heap_bytes() + b.heap_bytes()) as f64
             / a.nrows().max(b.nrows()) as f64;
         let (sa, sb) = (InMemorySource::new(a), InMemorySource::new(b));
-        let p = preflight(&sa, &sb, 1_000_000, 0.5);
+        let p = preflight(&sa, &sb, 1_000_000, 0.5).unwrap();
         let ratio = p.w_hat / true_w;
         assert!(
             (0.5..2.0).contains(&ratio),

@@ -120,26 +120,47 @@ impl Coverage {
 }
 
 /// Key-aligned split of a shard into two halves (B boundary re-derived
-/// from the key index; positional when keyless).
+/// from the key index; positional when keyless). The midpoint is
+/// snapped to the end of the A-side key run so a duplicate-key run is
+/// never cut. If one run spans the whole shard, the "split" degenerates
+/// to the original shard plus an empty right half — the caller detects
+/// the empty half and falls back to speculation instead of submitting
+/// a no-op task.
 fn split_spec(
     a: &dyn TableSource,
     b: &dyn TableSource,
     spec: ShardSpec,
 ) -> (ShardSpec, ShardSpec) {
-    let half = (spec.a_len / 2).max(1);
+    let mut half = (spec.a_len / 2).max(1);
     let keyed = a.key_at(0).is_some() && b.nrows() > 0 && b.key_at(0).is_some();
+    if keyed && half < spec.a_len {
+        let boundary = a.key_at(spec.a_offset + half - 1).unwrap_or(i64::MAX);
+        half = crate::exec::partition::upper_bound_key_in(
+            a,
+            spec.a_offset + half,
+            spec.a_offset + spec.a_len,
+            boundary,
+        ) - spec.a_offset;
+    }
+    if half >= spec.a_len {
+        // One key run spans the whole shard: nothing to split.
+        let right = ShardSpec {
+            a_offset: spec.a_offset + spec.a_len,
+            a_len: 0,
+            b_offset: spec.b_offset + spec.b_len,
+            b_len: 0,
+            ..spec
+        };
+        return (spec, right);
+    }
     let b_mid = if keyed {
         let boundary = a.key_at(spec.a_offset + half - 1).unwrap_or(i64::MAX);
-        let mut lo = spec.b_offset;
-        let mut hi = spec.b_offset + spec.b_len;
-        while lo < hi {
-            let mid = lo + (hi - lo) / 2;
-            match b.key_at(mid) {
-                Some(k) if k <= boundary => lo = mid + 1,
-                _ => hi = mid,
-            }
-        }
-        lo
+        crate::exec::partition::upper_bound_key_in(
+            b,
+            spec.b_offset,
+            spec.b_offset + spec.b_len,
+            boundary,
+        )
     } else {
         spec.b_offset + (spec.b_len / 2).min(spec.b_len)
     };
@@ -687,8 +708,29 @@ pub fn drive(
                         backend.submit(spec);
                     }
                     Mitigation::Split(spec) => {
-                        stats.splits += 1;
                         let (mut l, mut rgt) = split_spec(a, b, spec);
+                        if rgt.a_len == 0 && rgt.b_len == 0 {
+                            // Unsplittable: one key run spans the whole
+                            // shard. The detector chose Split because
+                            // the shard is large — duplicating the full
+                            // span as a speculation would double its
+                            // decode-buffer demand (exactly the shards
+                            // the run snap let grow past b), risking
+                            // the accounted OOM the envelope exists to
+                            // prevent. Leave the original running
+                            // (detect() already marked it mitigated, so
+                            // this does not re-fire).
+                            inputs.telemetry.event(
+                                "split-skipped",
+                                &format!(
+                                    "shard={} single key run",
+                                    spec.shard_id
+                                ),
+                                now,
+                            );
+                            continue;
+                        }
+                        stats.splits += 1;
                         l.shard_id = next_split_id;
                         rgt.shard_id = next_split_id + 1;
                         next_split_id += 2;
@@ -894,6 +936,51 @@ mod tests {
         assert!(c.try_accept(&s(100, 50))); // adjacent ok
         assert!(!c.try_accept(&s(120, 10))); // inside accepted
         assert!(c.try_accept(&s(150, 10)));
+    }
+
+    #[test]
+    fn split_spec_never_cuts_a_key_run() {
+        use crate::data::schema::{ColumnType, Field, Schema};
+        use crate::data::table::TableBuilder;
+        let schema = Schema::new(vec![Field::key("id", ColumnType::Int64)]);
+        let mk = |keys: &[i64]| {
+            let mut tb = TableBuilder::new(schema.clone());
+            for &k in keys {
+                tb.col(0).push_i64(k);
+            }
+            InMemorySource::new(tb.finish())
+        };
+        // The run of 7s straddles the naive midpoint (a_len 6, half 3).
+        let a = mk(&[1, 2, 7, 7, 7, 9]);
+        let b = mk(&[1, 7, 7, 7, 9, 9]);
+        let spec = ShardSpec {
+            shard_id: 1,
+            attempt: 0,
+            a_offset: 0,
+            a_len: 6,
+            b_offset: 0,
+            b_len: 6,
+        };
+        let (l, r) = split_spec(&a, &b, spec);
+        assert_eq!(l.a_len + r.a_len, 6);
+        assert_eq!(l.b_len + r.b_len, 6);
+        // Left absorbs the whole run of 7s on both sides.
+        assert_eq!(l.a_len, 5);
+        assert_eq!(l.b_len, 4);
+        // A single-run shard degenerates to (whole, empty).
+        let one_run = mk(&[4, 4, 4]);
+        let spec = ShardSpec {
+            shard_id: 2,
+            attempt: 0,
+            a_offset: 0,
+            a_len: 3,
+            b_offset: 0,
+            b_len: 2,
+        };
+        let (l, r) = split_spec(&one_run, &mk(&[4, 4]), spec);
+        assert_eq!((l.a_len, l.b_len), (3, 2));
+        assert_eq!((r.a_len, r.b_len), (0, 0));
+        assert_eq!(r.a_offset, 3);
     }
 
     #[test]

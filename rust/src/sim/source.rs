@@ -1,8 +1,10 @@
 //! Virtual table sources for the simulated testbed: they describe a
 //! workload's shape (rows, width, keys) without materializing data.
 //! The sim backend never decodes rows, so `read_range` is unreachable
-//! by construction (it panics to make any misuse loud).
+//! by construction (it returns a typed `Unsupported` error to make any
+//! misuse loud without panicking a worker).
 
+use crate::api::error::SchedError;
 use crate::data::io::{ReadMeter, TableSource};
 use crate::data::schema::Schema;
 use crate::data::table::mixed_schema;
@@ -36,8 +38,14 @@ impl TableSource for VirtualSource {
     fn nrows(&self) -> usize {
         self.nrows
     }
-    fn read_range(&self, offset: usize, len: usize) -> crate::data::table::Table {
-        unreachable!("virtual source cannot decode rows ({offset}+{len})")
+    fn read_range(
+        &self,
+        offset: usize,
+        len: usize,
+    ) -> Result<crate::data::table::Table, SchedError> {
+        Err(SchedError::unsupported(format!(
+            "virtual source cannot decode rows ({offset}+{len})"
+        )))
     }
     fn key_at(&self, row: usize) -> Option<i64> {
         if row < self.nrows {
@@ -73,9 +81,13 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "virtual source")]
-    fn read_range_panics() {
+    fn read_range_is_a_typed_error() {
         let s = VirtualSource::new(10, 100.0, 4);
-        let _ = s.read_range(0, 1);
+        match s.read_range(0, 1) {
+            Err(SchedError::Unsupported { message }) => {
+                assert!(message.contains("virtual source"), "{message}");
+            }
+            other => panic!("expected Unsupported, got {other:?}"),
+        }
     }
 }

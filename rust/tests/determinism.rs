@@ -129,6 +129,72 @@ fn outcome_matches_generator_truth() {
     });
 }
 
+/// Build a key-sorted table whose keys repeat in runs. `(key, n, base)`
+/// per run: n rows with the same key and payload values base, base+1, …
+fn run_table(runs: &[(i64, usize, i64)]) -> smartdiff_sched::data::table::Table {
+    use smartdiff_sched::data::schema::{ColumnType, Field, Schema};
+    use smartdiff_sched::data::table::TableBuilder;
+    let schema = Schema::new(vec![
+        Field::key("id", ColumnType::Int64),
+        Field::new("v", ColumnType::Int64),
+        Field::new("s", ColumnType::Utf8),
+    ]);
+    let mut tb = TableBuilder::new(schema);
+    for &(key, n, base) in runs {
+        for i in 0..n {
+            tb.col(0).push_i64(key);
+            tb.col(1).push_i64(base + i as i64);
+            tb.col(2).push_str(&format!("s{key}-{i}"));
+        }
+    }
+    tb.finish()
+}
+
+#[test]
+fn duplicate_key_runs_are_batch_size_invariant() {
+    // Regression for the partitioner cutting a run of equal A-side keys
+    // at a shard boundary: all matching B rows bound to the earlier
+    // shard, so the report varied with b. Key runs of length 1..=9
+    // guarantee runs straddle every boundary a small b would cut.
+    let mut runs_a = Vec::new();
+    let mut runs_b = Vec::new();
+    for k in 0..250i64 {
+        let na = 1 + (k as usize * 7) % 9;
+        let nb = 1 + (k as usize * 3) % 9;
+        // Payload bases differ on every third key -> real diffs inside
+        // runs; differing run lengths -> added/removed rows inside runs.
+        runs_a.push((k, na, k * 10));
+        runs_b.push((k, nb, k * 10 + i64::from(k % 3 == 0)));
+    }
+    let a = run_table(&runs_a);
+    let b = run_table(&runs_b);
+
+    let mut reports = Vec::new();
+    for (policy, b_min) in [
+        (PolicyKind::Fixed { b: 7, k: 1 }, 7),
+        (PolicyKind::Fixed { b: 64, k: 2 }, 50),
+        (PolicyKind::Fixed { b: 5_000, k: 2 }, 100),
+        (PolicyKind::Adaptive, 20),
+    ] {
+        for backend in [BackendChoice::InMem, BackendChoice::DaskLike] {
+            let r = run_job(
+                &cfg(backend, policy, b_min),
+                Arc::new(InMemorySource::new(a.clone())),
+                Arc::new(InMemorySource::new(b.clone())),
+            )
+            .expect("job");
+            reports.push((policy, backend, r.report));
+        }
+    }
+    let (p0, be0, first) = &reports[0];
+    for (p, be, r) in &reports[1..] {
+        assert!(
+            first.same_diff(r),
+            "diff differs: ({p0:?}, {be0:?}) vs ({p:?}, {be:?})"
+        );
+    }
+}
+
 #[test]
 fn repeated_runs_identical() {
     forall("same seed same report", 4, |rng| {

@@ -5,8 +5,9 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use smartdiff_sched::api::{DiffSession, JobBuilder, SchedError};
 use smartdiff_sched::config::{
-    BackendChoice, DeltaPath, PolicyKind, SchedulerConfig,
+    BackendChoice, Caps, DeltaPath, PolicyKind, SchedulerConfig,
 };
 use smartdiff_sched::data::generator::{generate_pair, GenSpec};
 use smartdiff_sched::data::io::{write_csv, CsvFileSource, InMemorySource};
@@ -205,6 +206,129 @@ fn gate_override_is_respected() {
         .unwrap();
         assert_eq!(r.stats.backend, want);
     }
+}
+
+#[test]
+fn corrupt_csv_fails_typed_and_session_survives() {
+    use smartdiff_sched::data::schema::{ColumnType, Field, Schema};
+    use smartdiff_sched::data::table::TableBuilder;
+    let schema = Schema::new(vec![
+        Field::key("id", ColumnType::Int64),
+        Field::new("v", ColumnType::Float64),
+    ]);
+    let mk = |n: usize, bump: f64| {
+        let mut tb = TableBuilder::new(schema.clone());
+        for i in 0..n {
+            tb.col(0).push_i64(2 * i as i64);
+            tb.col(1).push_f64(i as f64 + bump);
+        }
+        tb.finish()
+    };
+    let a = mk(3_000, 0.0);
+    let b = mk(3_000, 0.25);
+    let pa = tmp("corrupt_a.csv");
+    let pb = tmp("corrupt_b.csv");
+    write_csv(&a, &pa).unwrap();
+    write_csv(&b, &pb).unwrap();
+    // Corrupt a payload field mid-file (the key column stays valid, so
+    // open succeeds and the failure happens at batch decode).
+    let text = std::fs::read_to_string(&pb).unwrap();
+    let corrupted =
+        text.replacen("\n3000,1500.25\n", "\n3000,not-a-float\n", 1);
+    assert_ne!(text, corrupted, "corruption target row not found");
+    std::fs::write(&pb, corrupted).unwrap();
+
+    let session =
+        DiffSession::new(Caps { mem_cap_bytes: 2_000_000_000, cpu_cap: 2 });
+    let sa = CsvFileSource::open(&pa, schema.clone()).unwrap();
+    let sb = CsvFileSource::open(&pb, schema.clone()).unwrap();
+    assert_eq!(sb.nrows(), 3_000, "open indexes the corrupt file fine");
+    let job = JobBuilder::new(Arc::new(sa), Arc::new(sb))
+        .delta_path(DeltaPath::Native)
+        .b_min(300)
+        // Sample only the head so preflight doesn't trip on the corrupt
+        // row first — the point is the worker-path error.
+        .preflight_sample(200, 0.001)
+        .build()
+        .unwrap();
+    let mut handle = session.submit(job).unwrap();
+    match handle.join() {
+        Err(SchedError::ShardFailed { source, .. }) => {
+            // The cause chain bottoms out in the typed CSV error.
+            use std::error::Error;
+            let root = source.source().expect("batch error cause");
+            assert!(
+                root.to_string().contains("bad"),
+                "unexpected root cause: {root}"
+            );
+        }
+        other => panic!("expected ShardFailed, got {other:?}"),
+    }
+
+    // The session stays usable: a clean job right after succeeds.
+    let job = JobBuilder::new(
+        Arc::new(CsvFileSource::open(&pa, schema.clone()).unwrap()),
+        Arc::new(CsvFileSource::open(&pa, schema).unwrap()),
+    )
+    .delta_path(DeltaPath::Native)
+    .b_min(300)
+    .build()
+    .unwrap();
+    let r = session.submit(job).unwrap().join().unwrap();
+    assert_eq!(r.report.rows.changed_rows, 0);
+    assert_eq!(r.stats.ooms, 0);
+    assert_eq!(session.active_jobs(), 0);
+    std::fs::remove_file(pa).ok();
+    std::fs::remove_file(pb).ok();
+}
+
+#[test]
+fn larger_than_cap_csv_job_stays_under_cap() {
+    // The headline bounded-memory claim for file-backed jobs: a CSV
+    // pair whose *file size* exceeds the memory cap must open (no
+    // whole-file materialization), gate to the dask-like backend, and
+    // complete with accounted peak RSS under the cap and zero OOMs.
+    let spec = GenSpec { rows: 60_000, str_len: 48, seed: 77, ..GenSpec::default() };
+    let (a, b, _) = generate_pair(&spec);
+    let pa = tmp("big_a.csv");
+    let pb = tmp("big_b.csv");
+    write_csv(&a, &pa).unwrap();
+    write_csv(&b, &pb).unwrap();
+    let file_bytes = std::fs::metadata(&pa).unwrap().len();
+
+    let sa = CsvFileSource::open(&pa, a.schema.clone()).unwrap();
+    let sb = CsvFileSource::open(&pb, b.schema.clone()).unwrap();
+    // Cap below the file size, but above the resident indexes (16 B/row
+    // per source): storage_bytes, not resident bytes, exceeds the cap.
+    let cap = (file_bytes * 2) / 3;
+    assert!(
+        sa.resident_bytes() + sb.resident_bytes() < cap / 2,
+        "index footprint {}+{} should be well under cap {cap}",
+        sa.resident_bytes(),
+        sb.resident_bytes()
+    );
+
+    let mut cfg = small_cfg();
+    cfg.caps.mem_cap_bytes = cap;
+    let r = run_job(&cfg, Arc::new(sa), Arc::new(sb)).unwrap();
+    assert_eq!(r.stats.backend, "dasklike", "tiny cap must gate off inmem");
+    assert_eq!(r.stats.ooms, 0, "safety envelope must hold");
+    assert!(
+        r.stats.peak_rss_bytes <= cap,
+        "accounted peak {} exceeds cap {cap}",
+        r.stats.peak_rss_bytes
+    );
+
+    // Same diff as the unconstrained in-memory run.
+    let r_mem = run_job(
+        &small_cfg(),
+        Arc::new(InMemorySource::new(a)),
+        Arc::new(InMemorySource::new(b)),
+    )
+    .unwrap();
+    assert!(r.report.same_diff(&r_mem.report));
+    std::fs::remove_file(pa).ok();
+    std::fs::remove_file(pb).ok();
 }
 
 #[test]
