@@ -1,12 +1,21 @@
 #!/usr/bin/env python3
-"""Large-file smoke: a CSV pair larger than a tiny memory cap must
+"""Large-file smoke: bounded-memory ingest + extreme-join-skew.
+
+Scenario 1 (unique keys): a CSV pair larger than a tiny memory cap must
 open, gate to the dask-like backend, and diff with zero accounted OOMs
 and peak accounted RSS under the cap.
+
+Scenario 2 (hot key): a CSV pair where a SINGLE key's rows exceed the
+cap — the extreme-join-skew shape run-snapped partitioning aborted with
+a typed OOM. Occurrence-indexed cuts must gate it to dasklike, finish
+with 0 OOMs, keep peak under the cap, and produce a report identical to
+an uncapped in-memory run of the same pair.
 
 Run from the repo root after `cargo build --release`:
 
     python3 ci/large_file_smoke.py [path-to-binary]
 """
+import json
 import os
 import re
 import subprocess
@@ -14,7 +23,8 @@ import sys
 import tempfile
 
 ROWS = 200_000
-CAP_BYTES = 10 * 1024 * 1024  # 10 MiB — far below the ~20 MB CSVs
+HOT_ROWS = 150_000
+CAP_BYTES = 10 * 1024 * 1024  # 10 MiB — far below the ~20/15 MB CSVs
 
 
 def write_csv(path, bump):
@@ -27,67 +37,141 @@ def write_csv(path, bump):
             f.write("%d,%f,%s\n" % (2 * i, i + bump, "x%078d" % i))
 
 
+def write_hot_csv(path, side_b):
+    """One key (2) spans every row — its run alone exceeds the cap. The
+    B side differs in a *small* number of rows (so the diff-key sample
+    is never truncated and reports can be compared verbatim): 100
+    changed payloads, 2 occurrences removed from the run's tail, and 3
+    added rows of a later key."""
+    with open(path, "w") as f:
+        f.write("id,v,s\n")
+        n = HOT_ROWS - 2 if side_b else HOT_ROWS
+        for i in range(n):
+            bump = 0.5 if side_b and i % 1500 == 0 else 0.0
+            f.write("2,%f,%s\n" % (i + bump, "x%078d" % i))
+        if side_b:
+            for i in range(3):
+                f.write("5,%f,added-%d\n" % (float(i), i))
+
+
+def run_diff(binary, pa, pb, cfg_path, backend=None):
+    cmd = [
+        binary,
+        "diff",
+        pa,
+        pb,
+        "--schema",
+        "id:key:int64,v:float64,s:utf8",
+        "--config",
+        cfg_path,
+    ]
+    if backend:
+        cmd += ["--backend", backend]
+    out = subprocess.run(cmd, capture_output=True, text=True, timeout=1800)
+    sys.stdout.write(out.stdout)
+    sys.stderr.write(out.stderr)
+    assert out.returncode == 0, "diff exited %d" % out.returncode
+    return out.stdout
+
+
+def write_cfg(path, mem_cap):
+    with open(path, "w") as f:
+        f.write(
+            "[caps]\n"
+            'mem_cap = "%s"\n'
+            "cpu_cap = 2\n"
+            "[policy]\n"
+            "b_min = 300\n"
+            "[engine]\n"
+            'delta_path = "native"\n' % mem_cap
+        )
+
+
+def assert_capped_stats(stdout, cap_bytes):
+    stats = re.search(
+        r"peak_rss=(?P<peak>[0-9.]+)MB .*ooms=(?P<ooms>\d+)", stdout
+    )
+    assert stats, "stats line not found in output"
+    assert stats.group("ooms") == "0", "accounted OOMs: %s" % stats.group("ooms")
+    peak_mb = float(stats.group("peak"))
+    cap_mb = cap_bytes / 1e6
+    # The CLI prints peak_rss rounded to one decimal: allow the
+    # half-step of print rounding so a run sitting legitimately just
+    # under the cap (e.g. 10.47 MB -> "10.5") doesn't fail.
+    assert peak_mb <= cap_mb + 0.05, "peak RSS %.1f MB exceeds cap %.2f MB" % (
+        peak_mb,
+        cap_mb,
+    )
+    assert "backend=dasklike" in stdout, "expected the dask-like gate"
+    return peak_mb
+
+
+def report_diff(stdout):
+    """The diff-describing part of the CLI's report JSON: everything
+    except `batches`, which counts merged shard outcomes and therefore
+    legitimately varies with the schedule (mirrors JobReport::same_diff)."""
+    for line in stdout.splitlines():
+        if line.startswith("report: "):
+            report = json.loads(line[len("report: "):])
+            report.pop("batches", None)
+            return report
+    raise AssertionError("report line not found in output")
+
+
+def scenario_unique_keys(binary, d):
+    pa = os.path.join(d, "a.csv")
+    pb = os.path.join(d, "b.csv")
+    write_csv(pa, 0.0)
+    write_csv(pb, 0.25)
+    size = os.path.getsize(pa)
+    assert size > CAP_BYTES, "test CSV (%d B) must exceed the cap (%d B)" % (
+        size,
+        CAP_BYTES,
+    )
+    cfg = os.path.join(d, "cfg.toml")
+    write_cfg(cfg, "10MiB")
+    out = run_diff(binary, pa, pb, cfg)
+    peak_mb = assert_capped_stats(out, CAP_BYTES)
+    print(
+        "large-file smoke OK: %d B file, cap %d B, peak %.1f MB, 0 OOMs"
+        % (size, CAP_BYTES, peak_mb)
+    )
+
+
+def scenario_hot_key(binary, d):
+    pa = os.path.join(d, "hot_a.csv")
+    pb = os.path.join(d, "hot_b.csv")
+    write_hot_csv(pa, side_b=False)
+    write_hot_csv(pb, side_b=True)
+    size = os.path.getsize(pa)
+    # The single key's run IS the file (minus the header): it must
+    # exceed the cap on its own for this to exercise the skew path.
+    assert size > CAP_BYTES, "hot-key CSV (%d B) must exceed the cap" % size
+
+    capped_cfg = os.path.join(d, "hot_capped.toml")
+    write_cfg(capped_cfg, "10MiB")
+    capped = run_diff(binary, pa, pb, capped_cfg)
+    peak_mb = assert_capped_stats(capped, CAP_BYTES)
+
+    uncapped_cfg = os.path.join(d, "hot_uncapped.toml")
+    write_cfg(uncapped_cfg, "8GiB")
+    uncapped = run_diff(binary, pa, pb, uncapped_cfg, backend="inmem")
+    assert "backend=inmem" in uncapped, "uncapped run must stay in-memory"
+
+    assert report_diff(capped) == report_diff(uncapped), (
+        "capped dasklike report differs from the uncapped in-memory run"
+    )
+    print(
+        "hot-key smoke OK: single-key run %d B > cap %d B, peak %.1f MB, "
+        "0 OOMs, report identical to uncapped run" % (size, CAP_BYTES, peak_mb)
+    )
+
+
 def main():
     binary = sys.argv[1] if len(sys.argv) > 1 else "target/release/smartdiff-sched"
     with tempfile.TemporaryDirectory() as d:
-        pa = os.path.join(d, "a.csv")
-        pb = os.path.join(d, "b.csv")
-        write_csv(pa, 0.0)
-        write_csv(pb, 0.25)
-        size = os.path.getsize(pa)
-        assert size > CAP_BYTES, "test CSV (%d B) must exceed the cap (%d B)" % (
-            size,
-            CAP_BYTES,
-        )
-        cfg = os.path.join(d, "cfg.toml")
-        with open(cfg, "w") as f:
-            f.write(
-                "[caps]\n"
-                "mem_cap = \"10MiB\"\n"
-                "cpu_cap = 2\n"
-                "[policy]\n"
-                "b_min = 300\n"
-                "[engine]\n"
-                "delta_path = \"native\"\n"
-            )
-        out = subprocess.run(
-            [
-                binary,
-                "diff",
-                pa,
-                pb,
-                "--schema",
-                "id:key:int64,v:float64,s:utf8",
-                "--config",
-                cfg,
-            ],
-            capture_output=True,
-            text=True,
-            timeout=1800,
-        )
-        sys.stdout.write(out.stdout)
-        sys.stderr.write(out.stderr)
-        assert out.returncode == 0, "diff exited %d" % out.returncode
-
-        stats = re.search(
-            r"peak_rss=(?P<peak>[0-9.]+)MB .*ooms=(?P<ooms>\d+)", out.stdout
-        )
-        assert stats, "stats line not found in output"
-        assert stats.group("ooms") == "0", "accounted OOMs: %s" % stats.group("ooms")
-        peak_mb = float(stats.group("peak"))
-        cap_mb = CAP_BYTES / 1e6
-        # The CLI prints peak_rss rounded to one decimal: allow the
-        # half-step of print rounding so a run sitting legitimately just
-        # under the cap (e.g. 10.47 MB -> "10.5") doesn't fail.
-        assert peak_mb <= cap_mb + 0.05, "peak RSS %.1f MB exceeds cap %.2f MB" % (
-            peak_mb,
-            cap_mb,
-        )
-        assert "backend=dasklike" in out.stdout, "expected the dask-like gate"
-        print(
-            "large-file smoke OK: %d B file, cap %d B, peak %.1f MB, 0 OOMs"
-            % (size, CAP_BYTES, peak_mb)
-        )
+        scenario_unique_keys(binary, d)
+        scenario_hot_key(binary, d)
 
 
 if __name__ == "__main__":

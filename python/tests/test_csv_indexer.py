@@ -45,7 +45,10 @@ def parse_key(raw):
 def chunked_index(data, n_fields, key_col, chunk_size):
     """Port of rust RowIndexer: feed(data in chunks) + finish().
 
-    Returns (row_offsets_with_eof_sentinel, keys_or_None).
+    Returns (row_offsets_with_eof_sentinel, keys_or_None, occs_or_None):
+    `occs[i]` is row i's occurrence ordinal within its run of equal keys
+    (0 for the first row of a run), computed in the same pass — the
+    partitioner's cross-shard duplicate-alignment input.
     """
     assert chunk_size >= 1
     key_is_last = key_col is not None and key_col == n_fields - 1
@@ -60,6 +63,7 @@ def chunked_index(data, n_fields, key_col, chunk_size):
     key_buf = bytearray()
     offsets = []
     keys = []
+    occs = []
 
     def end_record():
         if state["in_header"]:
@@ -71,9 +75,16 @@ def chunked_index(data, n_fields, key_col, chunk_size):
                 if key_is_last and buf.endswith(b"\r"):
                     buf = buf[:-1]
                 try:
-                    keys.append(parse_key(buf))
+                    key = parse_key(buf)
                 except ValueError:
                     raise BadCsv("row %d: null/bad key" % len(keys))
+                # Occurrence ordinal within the run of equal keys —
+                # mirrors the O(1)-per-row update in rust RowIndexer.
+                if keys and keys[-1] == key:
+                    occs.append(occs[-1] + 1)
+                else:
+                    occs.append(0)
+                keys.append(key)
         state["field_idx"] = 0
         key_buf.clear()
 
@@ -109,7 +120,9 @@ def chunked_index(data, n_fields, key_col, chunk_size):
     if state["record_start"] < state["pos"] and not state["in_header"]:
         end_record()
     offsets.append(state["pos"])
-    return offsets, (keys if key_col is not None else None)
+    if key_col is None:
+        return offsets, None, None
+    return offsets, keys, occs
 
 
 def split_record(line):
@@ -141,7 +154,9 @@ def split_record(line):
 
 def reference_index(data, n_fields, key_col):
     """Whole-file reference: record spans by quote parity over the full
-    buffer, key extracted by splitting the complete record."""
+    buffer, key extracted by splitting the complete record, occurrence
+    ordinals derived in a *second* pass over the complete key list (a
+    structurally different computation from the chunked single-pass)."""
     spans = []
     in_quotes = False
     start = 0
@@ -158,7 +173,7 @@ def reference_index(data, n_fields, key_col):
     rows = spans[1:]  # drop the header line
     offsets = [s for s, _ in rows] + [len(data)]
     if key_col is None:
-        return offsets, None
+        return offsets, None, None
     keys = []
     for idx, (s, e) in enumerate(rows):
         line = data[s:e]
@@ -171,7 +186,22 @@ def reference_index(data, n_fields, key_col):
             keys.append(parse_key(fields[key_col]))
         except ValueError:
             raise BadCsv("row %d: null/bad key" % idx)
-    return offsets, keys
+    occs = reference_occurrences(keys)
+    return offsets, keys, occs
+
+
+def reference_occurrences(keys):
+    """Whole-list occurrence reference: group consecutive equal keys and
+    number each group 0..len-1."""
+    occs = []
+    i = 0
+    while i < len(keys):
+        j = i
+        while j < len(keys) and keys[j] == keys[i]:
+            j += 1
+        occs.extend(range(j - i))
+        i = j
+    return occs
 
 
 # ---------------- CSV writer (mirrors rust write_csv quoting) ----------
@@ -285,25 +315,41 @@ def test_fuzz_chunked_vs_reference():
 def test_edge_cases():
     header = b"id,x\n"
     cases = [
-        # (data, key_col, expected offsets, expected keys)
-        (header, 0, [5], []),
-        (header + b"1,a\n2,b\n", 0, [5, 9, 13], [1, 2]),
+        # (data, key_col, expected offsets, expected keys, expected occs)
+        (header, 0, [5], [], []),
+        (header + b"1,a\n2,b\n", 0, [5, 9, 13], [1, 2], [0, 0]),
         # Missing trailing newline.
-        (header + b"1,a\n2,b", 0, [5, 9, 12], [1, 2]),
+        (header + b"1,a\n2,b", 0, [5, 9, 12], [1, 2], [0, 0]),
         # Embedded newline + escaped quotes inside a quoted field.
-        (header + b'1,"a\nb""c"\n7,d\n', 0, [5, 16, 20], [1, 7]),
+        (header + b'1,"a\nb""c"\n7,d\n', 0, [5, 16, 20], [1, 7], [0, 0]),
         # CRLF with key in the last position.
-        (b"x,id\r\n10,1\r\n20,2\r\n", 1, [6, 12, 18], [1, 2]),
+        (b"x,id\r\n10,1\r\n20,2\r\n", 1, [6, 12, 18], [1, 2], [0, 0]),
         # Quoted key.
-        (header + b'"42",z\n', 0, [5, 12], [42]),
+        (header + b'"42",z\n', 0, [5, 12], [42], [0]),
+        # Duplicate-key runs: occurrence ordinals restart per run.
+        (
+            header + b"5,a\n5,b\n5,c\n9,d\n9,e\n",
+            0,
+            [5, 9, 13, 17, 21, 25],
+            [5, 5, 5, 9, 9],
+            [0, 1, 2, 0, 1],
+        ),
+        # A run resumed after a different key is a *new* run.
+        (
+            header + b"3,a\n4,b\n3,c\n",
+            0,
+            [5, 9, 13, 17],
+            [3, 4, 3],
+            [0, 0, 0],
+        ),
     ]
-    for data, key_col, offsets, keys in cases:
+    for data, key_col, offsets, keys, occs in cases:
         for chunk in (1, 2, 5, 4096):
-            got_off, got_keys = chunked_index(data, 2, key_col, chunk)
+            got_off, got_keys, got_occs = chunked_index(data, 2, key_col, chunk)
             assert got_off == offsets, data
             assert got_keys == keys, data
-            ref_off, ref_keys = reference_index(data, 2, key_col)
-            assert (ref_off, ref_keys) == (offsets, keys), data
+            assert got_occs == occs, data
+            assert reference_index(data, 2, key_col) == (offsets, keys, occs), data
 
 
 def test_bad_key_and_unterminated_quote_raise():
@@ -329,6 +375,55 @@ def test_bad_key_and_unterminated_quote_raise():
 
 
 def test_keyless_schema_skips_key_extraction():
-    offsets, keys = chunked_index(b"a,b\n1,2\nx,y\n", 2, None, 2)
+    offsets, keys, occs = chunked_index(b"a,b\n1,2\nx,y\n", 2, None, 2)
     assert offsets == [4, 8, 12]
     assert keys is None
+    assert occs is None
+
+
+def run_length_csv(rng):
+    """Sorted duplicate-key-run CSV: random run lengths (with occasional
+    hot runs) plus messy payload fields, so runs straddle arbitrary
+    chunk boundaries. Returns (data, n_fields, key_col, expected_occs)."""
+    n_fields = rng.randrange(2, 5)
+    key_col = rng.randrange(0, n_fields)
+    crlf = rng.random() < 0.3
+    eol = b"\r\n" if crlf else b"\n"
+    lines = [b",".join(b"f%d" % i for i in range(n_fields))]
+    key = rng.randrange(-1000, 1000)
+    expected = []
+    for _ in range(rng.randrange(1, 15)):
+        run = rng.randrange(1, 12)
+        if rng.random() < 0.1:
+            run = rng.randrange(12, 60)  # occasional hot run
+        for occ in range(run):
+            fields = [random_field(rng) for _ in range(n_fields)]
+            text = str(key).encode()
+            fields[key_col] = b'"%s"' % text if rng.random() < 0.1 else text
+            lines.append(b",".join(fields))
+            expected.append(occ)
+        key += rng.randrange(1, 5)
+    data = eol.join(lines) + eol
+    return data, n_fields, key_col, expected
+
+
+def test_fuzz_occurrence_ordinals_vs_reference():
+    """Satellite fuzz: randomized run lengths straddling chunk
+    boundaries — the chunked single-pass occurrence computation must
+    match both the whole-file reference and the generator's ground
+    truth, for chunk sizes from 1 byte up."""
+    rng = random.Random(0x0CC)
+    for round_no in range(300):
+        data, n_fields, key_col, expected = run_length_csv(rng)
+        chunk_sizes = sorted({1, 2, 3, rng.randrange(4, 64 * 1024)})
+        results = [
+            check_equivalent(data, n_fields, key_col, c) for c in chunk_sizes
+        ]
+        for r in results[1:]:
+            assert r == results[0], "round %d" % round_no
+        got_offsets, got_keys, got_occs = results[0]
+        assert got_occs == expected, "round %d" % round_no
+        assert got_occs == reference_occurrences(got_keys), (
+            "round %d" % round_no
+        )
+        assert len(got_offsets) == len(got_keys) + 1

@@ -235,6 +235,57 @@ fn main() {
         t_shard / shard_rows as f64 * 1e9
     );
 
+    // -- skew scenario family: Δ over Zipf-hot-key duplicate runs --
+    // (the positional duplicate-pairing path; `skew_one_key` is the
+    // adversarial single-run shape the occurrence-indexed partitioner
+    // opened — tracked per PR via the JSON dump below)
+    println!("\n== skew family: duplicate-run shards, columnar vs reference ==");
+    println!(
+        "{:>14} {:>8} {:>9} {:>12} {:>12} {:>9}",
+        "scenario", "rows", "max run", "columnar ms", "ref ms", "speedup"
+    );
+    struct SkewTime {
+        name: &'static str,
+        rows: usize,
+        longest_run: usize,
+        new_s: f64,
+        ref_s: f64,
+    }
+    let mut skews = Vec::new();
+    for (name, sspec) in smartdiff_sched::bench::tables::skew_family() {
+        let (ka, kb, longest_run) =
+            smartdiff_sched::data::generator::generate_skewed_pair(&sspec);
+        let k_aligned = align_schemas(&ka.schema, &kb.schema).unwrap();
+        let k_plan = JobPlan::new(k_aligned, EngineConfig::default());
+        let mut k_scratch = ShardScratch::default();
+        let t_new = time_it(5, || {
+            let (o, _) =
+                process_shard_with(0, &ka, &kb, &k_plan, &exec, &mut k_scratch)
+                    .unwrap();
+            std::hint::black_box(o.cells.total());
+        });
+        let t_ref = time_it(3, || {
+            let (o, _) = process_shard_ref(0, &ka, &kb, &k_plan, &exec).unwrap();
+            std::hint::black_box(o.cells.total());
+        });
+        println!(
+            "{:>14} {:>8} {:>9} {:>12.3} {:>12.3} {:>8.2}x",
+            name,
+            ka.nrows(),
+            longest_run,
+            t_new * 1e3,
+            t_ref * 1e3,
+            t_ref / t_new
+        );
+        skews.push(SkewTime {
+            name,
+            rows: ka.nrows(),
+            longest_run,
+            new_s: t_new,
+            ref_s: t_ref,
+        });
+    }
+
     // Machine-readable dump for the bench trajectory / CI artifact.
     let mut stages_json = String::from("[");
     for (i, s) in stages.iter().enumerate() {
@@ -250,11 +301,28 @@ fn main() {
         let _ = write!(stages_json, "{obj}");
     }
     stages_json.push(']');
+    let mut skew_json = String::from("[");
+    for (i, s) in skews.iter().enumerate() {
+        if i > 0 {
+            skew_json.push(',');
+        }
+        let obj = ObjWriter::new()
+            .str("scenario", s.name)
+            .int("rows", s.rows as i64)
+            .int("longest_run", s.longest_run as i64)
+            .num("columnar_s", s.new_s)
+            .num("reference_s", s.ref_s)
+            .num("speedup", s.ref_s / s.new_s)
+            .finish();
+        let _ = write!(skew_json, "{obj}");
+    }
+    skew_json.push(']');
     let doc = ObjWriter::new()
         .str("bench", "micro_hotpath")
         .int("shard_rows", shard_rows as i64)
         .num("decode_s", t_decode)
         .raw("stages", &stages_json)
+        .raw("skew", &skew_json)
         .finish();
     let path = std::env::var("MICRO_HOTPATH_JSON")
         .unwrap_or_else(|_| "micro_hotpath.json".into());

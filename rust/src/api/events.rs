@@ -66,8 +66,12 @@ pub enum JobEvent {
     Backpressure { queue_depth: usize },
     /// A straggling shard was speculatively re-executed.
     Speculation { shard_id: u64 },
-    /// A straggling shard was split into two key-aligned halves.
-    Split { shard_id: u64 },
+    /// A straggling shard was split into two (key, occurrence)-aligned
+    /// halves. `in_run` flags a cut landing *inside* a duplicate-key
+    /// run — the occurrence-indexed path that makes single-run
+    /// straggler shards splittable (counted separately as
+    /// `JobStats::splits_in_run`).
+    Split { shard_id: u64, in_run: bool },
     /// The job finished (`ok == false` covers errors and cancellation).
     Done { ok: bool },
 }
@@ -120,7 +124,13 @@ impl fmt::Display for JobEvent {
             JobEvent::Speculation { shard_id } => {
                 write!(f, "speculation: shard={shard_id}")
             }
-            JobEvent::Split { shard_id } => write!(f, "split: shard={shard_id}"),
+            JobEvent::Split { shard_id, in_run } => {
+                if *in_run {
+                    write!(f, "split: shard={shard_id} (in-run)")
+                } else {
+                    write!(f, "split: shard={shard_id}")
+                }
+            }
             JobEvent::Done { ok } => write!(f, "done: ok={ok}"),
         }
     }
@@ -174,7 +184,7 @@ mod tests {
             },
             JobEvent::Backpressure { queue_depth: 9 },
             JobEvent::Speculation { shard_id: 4 },
-            JobEvent::Split { shard_id: 5 },
+            JobEvent::Split { shard_id: 5, in_run: true },
             JobEvent::Done { ok: true },
         ];
         let kinds: Vec<&str> = evs.iter().map(|e| e.kind()).collect();

@@ -43,6 +43,22 @@ pub fn paper_cfg() -> SchedulerConfig {
     SchedulerConfig::default() // κ=0.7 η=0.9 γ=0.6 τ=2 m=2, 64 GB / 32c
 }
 
+/// Skew scenario family (Zipf-hot-key duplicate runs): the bench
+/// trajectory's join-skew axis, from mild skew to the adversarial
+/// one-key-spans-everything shape the occurrence-indexed partitioner
+/// opened. Shared by the `micro_hotpath` bench (stage timings + JSON
+/// dump) so skew numbers are captured per PR alongside the hot-path
+/// stages; `hot_key_mass` is the top key's share of all rows.
+pub fn skew_family() -> Vec<(&'static str, crate::data::generator::SkewSpec)> {
+    use crate::data::generator::SkewSpec;
+    let base = SkewSpec { rows: 30_000, seed: 7, ..SkewSpec::default() };
+    vec![
+        ("skew_mild", SkewSpec { hot_key_mass: 0.1, ..base.clone() }),
+        ("skew_hot", SkewSpec { hot_key_mass: 0.5, ..base.clone() }),
+        ("skew_one_key", SkewSpec { hot_key_mass: 1.0, ..base }),
+    ]
+}
+
 /// Trials per configuration (paper: 3).
 pub const TRIALS: usize = 3;
 

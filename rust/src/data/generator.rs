@@ -217,6 +217,133 @@ pub fn generate_table(spec: &GenSpec) -> Table {
     generate_pair(spec).0
 }
 
+/// Shape of an extreme-join-skew workload: duplicate-key runs whose
+/// lengths follow a Zipf law, with a configurable fraction of all rows
+/// concentrated on the single hottest key. `hot_key_mass = 1.0` is the
+/// adversarial case — one key spanning every row — that run-snapped
+/// partitioning could not subdivide (ROADMAP "extreme join skew").
+#[derive(Debug, Clone)]
+pub struct SkewSpec {
+    /// Rows in table A.
+    pub rows: usize,
+    /// Fraction of A's rows carried by the hottest key (0.0..=1.0).
+    pub hot_key_mass: f64,
+    /// Zipf exponent shaping the remaining keys' run lengths (s ≠ 1).
+    pub zipf_s: f64,
+    /// Distinct keys besides the hot one (ignored when
+    /// `hot_key_mass >= 1.0`).
+    pub cold_keys: usize,
+    /// Payload columns beyond the key (mixed types).
+    pub extra_cols: usize,
+    /// Probability a copied row gets perturbed payload cells.
+    pub change_rate: f64,
+    /// Per-run length jitter on the B side (adds/removes occurrences,
+    /// producing added/removed rows *inside* runs).
+    pub run_jitter: f64,
+    pub seed: u64,
+}
+
+impl Default for SkewSpec {
+    fn default() -> Self {
+        SkewSpec {
+            rows: 10_000,
+            hot_key_mass: 0.3,
+            zipf_s: 1.2,
+            cold_keys: 500,
+            extra_cols: 3,
+            change_rate: 0.05,
+            run_jitter: 0.2,
+            seed: 42,
+        }
+    }
+}
+
+/// Generate a key-sorted (A, B) pair with Zipf-hot-key duplicate runs.
+///
+/// A's hottest key (key 0) carries `hot_key_mass` of the rows; the rest
+/// spread over `cold_keys` keys with Zipf-drawn run lengths. B copies
+/// A's runs with `run_jitter`-probability length changes (so added and
+/// removed rows land *inside* runs) and `change_rate` payload
+/// perturbation. Returns (A, B, longest A-side run length) — the run
+/// length is what skew scenarios compare against the memory grant.
+pub fn generate_skewed_pair(spec: &SkewSpec) -> (Table, Table, usize) {
+    let schema = mixed_schema(spec.extra_cols);
+    let mut rng = Rng::new(spec.seed);
+
+    // Per-key A-side run lengths, keys ascending. Key 0 is the hot key.
+    let hot = ((spec.rows as f64 * spec.hot_key_mass.clamp(0.0, 1.0)) as usize)
+        .min(spec.rows);
+    let mut runs: Vec<(i64, usize)> = Vec::new();
+    if hot > 0 {
+        runs.push((0, hot));
+    }
+    let mut remaining = spec.rows - hot;
+    let mut key = 1i64;
+    while remaining > 0 {
+        // Zipf rank → run length: rank 0 is the longest cold run.
+        let rank = rng.zipf(spec.cold_keys.max(1), spec.zipf_s);
+        let len = (spec.cold_keys.max(1) / (rank + 1)).clamp(1, 64).min(remaining);
+        runs.push((key, len));
+        key += 1;
+        remaining -= len;
+    }
+    let longest_run = runs.iter().map(|&(_, n)| n).max().unwrap_or(0);
+
+    // Table A.
+    let a_gspec = GenSpec {
+        rows: spec.rows,
+        extra_cols: spec.extra_cols,
+        seed: spec.seed,
+        ..GenSpec::default()
+    };
+    let mut ta = TableBuilder::new(schema.clone());
+    for &(k, n) in &runs {
+        for _ in 0..n {
+            ta.col(0).push_i64(k);
+            push_random_payload(&mut ta, &schema, &mut rng, &a_gspec);
+        }
+    }
+    let a = ta.finish();
+
+    // Table B: walk A's runs in key order, jittering run lengths and
+    // perturbing payloads. A shortened run removes tail occurrences; a
+    // lengthened run appends fresh occurrences (added rows) — both land
+    // inside the run, exercising cross-fragment pairing.
+    let gspec = GenSpec {
+        rows: spec.rows,
+        extra_cols: spec.extra_cols,
+        change_rate: spec.change_rate,
+        seed: spec.seed,
+        ..GenSpec::default()
+    };
+    let mut brng = rng.fork(0xB);
+    let mut tb = TableBuilder::new(schema.clone());
+    let mut a_row = 0usize;
+    for &(k, n) in &runs {
+        let nb = if brng.chance(spec.run_jitter) {
+            let delta = 1 + brng.range_usize(0, 1 + n / 8);
+            if brng.chance(0.5) {
+                n.saturating_sub(delta)
+            } else {
+                n + delta
+            }
+        } else {
+            n
+        };
+        for i in 0..nb {
+            if i < n {
+                let perturb = brng.chance(spec.change_rate);
+                push_copied_row(&mut tb, &a, a_row + i, &mut brng, &gspec, perturb);
+            } else {
+                tb.col(0).push_i64(k);
+                push_random_payload(&mut tb, &schema, &mut brng, &gspec);
+            }
+        }
+        a_row += n;
+    }
+    (a, tb.finish(), longest_run)
+}
+
 /// The paper's four synthetic workload sizes, in rows per side.
 pub const PAPER_WORKLOADS: [(&str, usize); 4] = [
     ("1M", 1_000_000),
@@ -285,5 +412,54 @@ mod tests {
         let narrow = generate_table(&GenSpec { str_len: 8, rows: 500, ..small() });
         let wide = generate_table(&GenSpec { str_len: 64, rows: 500, ..small() });
         assert!(wide.measured_row_bytes() > narrow.measured_row_bytes() + 20.0);
+    }
+
+    fn skew_keys(t: &Table) -> Vec<i64> {
+        (0..t.nrows())
+            .map(|i| match t.column(0).cell(i) {
+                Cell::I64(k) => k,
+                other => panic!("bad key {other:?}"),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn skewed_pair_is_sorted_with_hot_key_mass() {
+        let spec = SkewSpec { rows: 4_000, hot_key_mass: 0.4, seed: 9, ..SkewSpec::default() };
+        let (a, b, longest) = generate_skewed_pair(&spec);
+        assert_eq!(a.nrows(), 4_000);
+        for t in [&a, &b] {
+            let keys = skew_keys(t);
+            assert!(keys.windows(2).all(|w| w[0] <= w[1]), "keys sorted");
+        }
+        // The hot key (0) carries the configured mass on the A side.
+        let hot = skew_keys(&a).iter().filter(|&&k| k == 0).count();
+        assert_eq!(hot, 1_600);
+        assert_eq!(longest, 1_600, "hot run is the longest");
+        // B shares the hot key (jitter may shift its length slightly).
+        let hot_b = skew_keys(&b).iter().filter(|&&k| k == 0).count();
+        assert!(hot_b > 1_000, "hot_b={hot_b}");
+    }
+
+    #[test]
+    fn skewed_pair_single_key_extreme() {
+        // 100% mass: one key spans every row — the workload class the
+        // occurrence-indexed partitioner exists to open.
+        let spec = SkewSpec { rows: 1_000, hot_key_mass: 1.0, seed: 3, ..SkewSpec::default() };
+        let (a, b, longest) = generate_skewed_pair(&spec);
+        assert_eq!(longest, 1_000);
+        assert!(skew_keys(&a).iter().all(|&k| k == 0));
+        assert!(skew_keys(&b).iter().all(|&k| k == 0));
+        assert!(b.nrows() > 0);
+    }
+
+    #[test]
+    fn skewed_pair_deterministic() {
+        let spec = SkewSpec { rows: 2_000, seed: 77, ..SkewSpec::default() };
+        let (a1, b1, l1) = generate_skewed_pair(&spec);
+        let (a2, b2, l2) = generate_skewed_pair(&spec);
+        assert_eq!(a1, a2);
+        assert_eq!(b1, b2);
+        assert_eq!(l1, l2);
     }
 }

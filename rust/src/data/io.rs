@@ -17,11 +17,24 @@
 //! ([`INDEX_CHUNK_BYTES`]) with CSV quote parity carried across chunk
 //! boundaries, and the key column is extracted during that same scan by
 //! parsing only the key field of each record. The only per-file state
-//! that stays resident is the offset index (8 B/row) and the key index
-//! (8 B/row) — reported through `resident_bytes()` and counted against
-//! the memory cap as the job's base RSS — so a file larger than RAM
-//! opens in O(index) memory and `storage_bytes()` (not resident bytes)
-//! is what bounds file-backed jobs at open.
+//! that stays resident is the offset index (8 B/row), the key index
+//! (8 B/row) and the occurrence index (4 B/row) — reported through
+//! `resident_bytes()` and counted against the memory cap as the job's
+//! base RSS — so a file larger than RAM opens in O(index) memory and
+//! `storage_bytes()` (not resident bytes) is what bounds file-backed
+//! jobs at open.
+//!
+//! # Occurrence index
+//!
+//! Alongside each row's key, every keyed source records the row's
+//! **occurrence ordinal** within its run of equal keys ([`TableSource::
+//! occ_at`]: 0 for the first row of a run, 1 for the next, …), computed
+//! in the same single pass that builds the key index. The partitioning
+//! layer cuts duplicate-key runs *anywhere* and bounds the B side of a
+//! mid-run cut at the same occurrence ordinal, so both fragments of a
+//! cut run resume with equal global occurrence bases — which is what
+//! makes per-shard positional duplicate pairing bit-identical to the
+//! solo-shard pairing (see `exec/partition.rs`).
 //!
 //! All decode paths are typed-fallible: `read_range` returns
 //! `Result<Table, SchedError>` and a malformed row, invalid UTF-8, or a
@@ -30,7 +43,7 @@
 
 use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -45,9 +58,12 @@ use crate::data::table::{Table, TableBuilder};
 /// the I/O granularity.
 pub const INDEX_CHUNK_BYTES: usize = 256 * 1024;
 
-/// Pooled `read_range` file handles kept open per source (reused across
-/// batches instead of a fresh `File::open` per read).
-const MAX_POOLED_HANDLES: usize = 8;
+/// Default cap on pooled `read_range` file handles kept open per source
+/// (reused across batches instead of a fresh `File::open` per read).
+/// Backends resize the cap to their live worker count through
+/// [`TableSource::set_read_parallelism`] so k concurrent readers never
+/// serialize on handle churn.
+const DEFAULT_POOLED_HANDLES: usize = 8;
 
 /// Cumulative read-side counters (shared across worker threads).
 ///
@@ -138,6 +154,16 @@ pub trait TableSource: Send + Sync {
     /// Primary-key value at `row` (i64 surrogate/PK; the range
     /// partitioner requires key-sorted sources). None if keyless.
     fn key_at(&self, row: usize) -> Option<i64>;
+    /// Occurrence ordinal of `row` within its run of equal keys
+    /// (0-based: the first row of a duplicate-key run is 0, the next 1,
+    /// …). Always 0 for keyless sources and for unique keys. The
+    /// partitioner's occurrence-bounded cuts rely on this being O(1).
+    fn occ_at(&self, row: usize) -> u32;
+    /// Hint that up to `k` threads will call `read_range` concurrently.
+    /// File-backed sources size their pooled-handle cap from it (the
+    /// worker pool forwards every `set_workers`); in-memory sources
+    /// need no handles, so the default is a no-op.
+    fn set_read_parallelism(&self, _k: usize) {}
     /// Total on-storage bytes (working-set estimation input).
     fn storage_bytes(&self) -> u64;
     /// Bytes *resident in RAM* for the lifetime of the job (counted
@@ -153,13 +179,47 @@ pub trait TableSource: Send + Sync {
 pub struct InMemorySource {
     table: Arc<Table>,
     key_col: Option<usize>,
+    /// Per-row occurrence ordinals within runs of equal keys (None when
+    /// keyless), computed once at construction.
+    occs: Option<Vec<u32>>,
     meter: ReadMeter,
+}
+
+/// One pass over a key column: occurrence ordinal of each row within
+/// its run of equal keys. Non-i64 (null) key cells never extend a run.
+/// Shared with `exec::partition::partition_tables`, which computes the
+/// same ordinals locally over decoded fragments — the two must agree.
+pub(crate) fn key_occurrences(table: &Table, key_col: usize) -> Vec<u32> {
+    let col = table.column(key_col);
+    let mut occs = Vec::with_capacity(table.nrows());
+    let mut prev: Option<i64> = None;
+    let mut run = 0u32;
+    for i in 0..table.nrows() {
+        let k = match col.cell(i) {
+            Cell::I64(v) => Some(v),
+            _ => None,
+        };
+        if k.is_some() && k == prev {
+            run += 1;
+        } else {
+            run = 0;
+        }
+        occs.push(run);
+        prev = k;
+    }
+    occs
 }
 
 impl InMemorySource {
     pub fn new(table: Table) -> Self {
         let key_col = table.schema.key_indices().first().copied();
-        InMemorySource { table: Arc::new(table), key_col, meter: ReadMeter::default() }
+        let occs = key_col.map(|kc| key_occurrences(&table, kc));
+        InMemorySource {
+            table: Arc::new(table),
+            key_col,
+            occs,
+            meter: ReadMeter::default(),
+        }
     }
     pub fn table(&self) -> &Arc<Table> {
         &self.table
@@ -196,11 +256,16 @@ impl TableSource for InMemorySource {
             _ => None,
         }
     }
+    fn occ_at(&self, row: usize) -> u32 {
+        self.occs.as_ref().map_or(0, |o| o[row])
+    }
     fn storage_bytes(&self) -> u64 {
         self.table.heap_bytes() as u64
     }
     fn resident_bytes(&self) -> u64 {
-        self.table.heap_bytes() as u64
+        // Pinned table plus the occurrence index built at construction.
+        (self.table.heap_bytes()
+            + self.occs.as_ref().map_or(0, |o| o.capacity() * 4)) as u64
     }
     fn meter(&self) -> &ReadMeter {
         &self.meter
@@ -339,10 +404,13 @@ fn parse_cell(
 }
 
 /// Streaming row indexer: fed the file chunk by chunk, it builds the
-/// row-offset index and extracts the key column, carrying CSV quote
-/// parity (and the in-progress key field) across chunk boundaries. The
-/// mirror of this state machine is fuzz-tested against a whole-file
-/// reference splitter in `python/tests/test_csv_indexer.py`.
+/// row-offset index and extracts the key column — plus each row's
+/// occurrence ordinal within its run of equal keys (the partitioner's
+/// cross-shard duplicate-alignment input), all in the same pass — while
+/// carrying CSV quote parity (and the in-progress key field) across
+/// chunk boundaries. The mirror of this state machine is fuzz-tested
+/// against a whole-file reference splitter in
+/// `python/tests/test_csv_indexer.py`.
 struct RowIndexer {
     /// Which field of each record is the key (None = keyless schema).
     key_col: Option<usize>,
@@ -368,6 +436,9 @@ struct RowIndexer {
     key_buf: Vec<u8>,
     row_offsets: Vec<u64>,
     keys: Vec<i64>,
+    /// Occurrence ordinal of each row within its run of equal keys
+    /// (parallel to `keys`).
+    occs: Vec<u32>,
 }
 
 impl RowIndexer {
@@ -385,6 +456,7 @@ impl RowIndexer {
             key_buf: Vec::new(),
             row_offsets: Vec::new(),
             keys: Vec::new(),
+            occs: Vec::new(),
         }
     }
 
@@ -445,7 +517,16 @@ impl RowIndexer {
                     .ok()
                     .and_then(|s| s.parse::<i64>().ok())
                     .ok_or_else(|| format!("row {row}: null/bad key"))?;
+                // Occurrence ordinal within the run of equal keys —
+                // computed in the same pass, O(1) per row.
+                let occ = match self.keys.last() {
+                    Some(&prev) if prev == key => {
+                        self.occs.last().copied().unwrap_or(0) + 1
+                    }
+                    _ => 0,
+                };
                 self.keys.push(key);
+                self.occs.push(occ);
             }
         }
         self.field_idx = 0;
@@ -454,8 +535,10 @@ impl RowIndexer {
     }
 
     /// Finish the scan: close a final unterminated record, validate
-    /// quote parity, and return (row_offsets with EOF sentinel, keys).
-    fn finish(mut self) -> Result<(Vec<u64>, Option<Vec<i64>>), String> {
+    /// quote parity, and return (row_offsets with EOF sentinel,
+    /// (keys, occurrence ordinals)).
+    #[allow(clippy::type_complexity)]
+    fn finish(mut self) -> Result<(Vec<u64>, Option<(Vec<i64>, Vec<u32>)>), String> {
         if self.in_quotes {
             return Err("unterminated quoted field at EOF".into());
         }
@@ -469,8 +552,12 @@ impl RowIndexer {
         // push-growth slack.
         self.row_offsets.shrink_to_fit();
         self.keys.shrink_to_fit();
-        let keys =
-            if self.key_col.is_some() { Some(self.keys) } else { None };
+        self.occs.shrink_to_fit();
+        let keys = if self.key_col.is_some() {
+            Some((self.keys, self.occs))
+        } else {
+            None
+        };
         Ok((self.row_offsets, keys))
     }
 }
@@ -491,9 +578,16 @@ pub struct CsvFileSource {
     /// partitioning state — part of the paper's "alignment state for f"
     /// memory term).
     keys: Option<Vec<i64>>,
+    /// Per-row occurrence ordinals within runs of equal keys, built in
+    /// the same open scan (cross-shard duplicate alignment input).
+    occs: Option<Vec<u32>>,
     /// Reusable read handles (checked out per `read_range`, returned
-    /// after; capped at `MAX_POOLED_HANDLES`).
+    /// after; capped at `handle_cap`).
     handles: Mutex<Vec<std::fs::File>>,
+    /// Live cap on pooled handles — resized to the worker count via
+    /// `set_read_parallelism` so k > 8 readers don't serialize on
+    /// handle churn.
+    handle_cap: AtomicUsize,
     meter: ReadMeter,
 }
 
@@ -537,7 +631,11 @@ impl CsvFileSource {
             scanned += n as u64;
             indexer.feed(&buf[..n])?;
         }
-        let (row_offsets, keys) = indexer.finish()?;
+        let (row_offsets, key_index) = indexer.finish()?;
+        let (keys, occs) = match key_index {
+            Some((k, o)) => (Some(k), Some(o)),
+            None => (None, None),
+        };
         let meter = ReadMeter::default();
         // The indexing scan is a real sequential read of the whole
         // file: record it so B̂_read has signal before the first batch.
@@ -548,7 +646,9 @@ impl CsvFileSource {
             schema,
             row_offsets,
             keys,
+            occs,
             handles: Mutex::new(vec![file]),
+            handle_cap: AtomicUsize::new(DEFAULT_POOLED_HANDLES),
             meter,
         })
     }
@@ -564,7 +664,7 @@ impl CsvFileSource {
 
     fn return_handle(&self, f: std::fs::File) {
         let mut pool = self.handles.lock().unwrap();
-        if pool.len() < MAX_POOLED_HANDLES {
+        if pool.len() < self.handle_cap.load(Ordering::Relaxed) {
             pool.push(f);
         }
     }
@@ -664,13 +764,26 @@ impl TableSource for CsvFileSource {
     fn key_at(&self, row: usize) -> Option<i64> {
         self.keys.as_ref().map(|k| k[row])
     }
+    fn occ_at(&self, row: usize) -> u32 {
+        self.occs.as_ref().map_or(0, |o| o[row])
+    }
+    fn set_read_parallelism(&self, k: usize) {
+        let cap = k.max(1);
+        self.handle_cap.store(cap, Ordering::Relaxed);
+        // Shrinks release surplus handles now instead of leaking them
+        // until process exit.
+        let mut pool = self.handles.lock().unwrap();
+        pool.truncate(cap);
+    }
     fn storage_bytes(&self) -> u64 {
         *self.row_offsets.last().unwrap_or(&0)
     }
     fn resident_bytes(&self) -> u64 {
-        // Row-offset index + key index stay resident; data is streamed.
+        // Row-offset + key + occurrence indexes stay resident; data is
+        // streamed.
         (self.row_offsets.capacity() * 8
-            + self.keys.as_ref().map_or(0, |k| k.capacity() * 8)) as u64
+            + self.keys.as_ref().map_or(0, |k| k.capacity() * 8)
+            + self.occs.as_ref().map_or(0, |o| o.capacity() * 4)) as u64
     }
     fn meter(&self) -> &ReadMeter {
         &self.meter
@@ -752,6 +865,7 @@ mod tests {
                     .unwrap();
             assert_eq!(src.row_offsets, big.row_offsets, "chunk={chunk}");
             assert_eq!(src.keys, big.keys, "chunk={chunk}");
+            assert_eq!(src.occs, big.occs, "chunk={chunk}");
             assert_eq!(src.read_range(0, t.nrows()).unwrap(), t, "chunk={chunk}");
         }
         std::fs::remove_file(path).ok();
@@ -945,7 +1059,68 @@ mod tests {
         for i in [0usize, 10, 49] {
             assert_eq!(mem.key_at(i), Some(2 * i as i64));
             assert_eq!(csv.key_at(i), Some(2 * i as i64));
+            // Generator keys are unique: every occurrence ordinal is 0.
+            assert_eq!(mem.occ_at(i), 0);
+            assert_eq!(csv.occ_at(i), 0);
         }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn occurrence_ordinals_agree_across_sources() {
+        use crate::data::schema::{ColumnType, Field, Schema};
+        let schema = Schema::new(vec![
+            Field::key("id", ColumnType::Int64),
+            Field::new("v", ColumnType::Int64),
+        ]);
+        // Sorted duplicate-key runs of lengths 1, 3, 2, 4.
+        let keys = [5i64, 7, 7, 7, 9, 9, 12, 12, 12, 12];
+        let want_occ = [0u32, 0, 1, 2, 0, 1, 0, 1, 2, 3];
+        let mut tb = TableBuilder::new(schema.clone());
+        for (i, &k) in keys.iter().enumerate() {
+            tb.col(0).push_i64(k);
+            tb.col(1).push_i64(i as i64);
+        }
+        let t = tb.finish();
+        let path = tmpdir().join("occs.csv");
+        write_csv(&t, &path).unwrap();
+        let mem = InMemorySource::new(t);
+        for chunk in [1usize, 3, 4096] {
+            let csv =
+                CsvFileSource::open_with_chunk_size(&path, schema.clone(), chunk)
+                    .unwrap();
+            for (i, &want) in want_occ.iter().enumerate() {
+                assert_eq!(mem.occ_at(i), want, "mem row {i}");
+                assert_eq!(csv.occ_at(i), want, "csv row {i} chunk={chunk}");
+            }
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn handle_pool_resizes_with_read_parallelism() {
+        let t = generate_table(&GenSpec { rows: 200, ..GenSpec::default() });
+        let path = tmpdir().join("handles.csv");
+        write_csv(&t, &path).unwrap();
+        let src = CsvFileSource::open(&path, t.schema.clone()).unwrap();
+        // Raise the cap past the default: returning 20 handles must keep
+        // all 20 pooled (no churn for k > 8 workers).
+        src.set_read_parallelism(20);
+        let handles: Vec<std::fs::File> = (0..20)
+            .map(|_| src.checkout_handle().unwrap())
+            .collect();
+        for f in handles {
+            src.return_handle(f);
+        }
+        assert_eq!(src.handles.lock().unwrap().len(), 20);
+        // Shrinking trims the pool immediately.
+        src.set_read_parallelism(2);
+        assert_eq!(src.handles.lock().unwrap().len(), 2);
+        let f = src.checkout_handle().unwrap();
+        src.return_handle(f);
+        assert!(src.handles.lock().unwrap().len() <= 2);
+        // Reads still work after resizing.
+        assert_eq!(src.read_range(0, 5).unwrap(), t.slice(0, 5));
         std::fs::remove_file(path).ok();
     }
 

@@ -12,6 +12,14 @@
 //! outcome. [`process_shard_ref`] keeps the original cell-at-a-time
 //! implementation as the parity oracle (see `rust/tests/hotpath_parity.rs`
 //! and the "Engine hot path" notes in `engine/mod.rs`).
+//!
+//! A shard may be a *fragment of a duplicate-key run*: the partitioner
+//! cuts runs anywhere and bounds both sides at the same occurrence
+//! ordinal, so the alignment's local positional pairing is the global
+//! pairing shifted by the shard's (equal) occurrence bases — per-shard
+//! outcomes therefore merge bit-identically to the solo-shard result
+//! regardless of where runs were cut (see `engine/row_align.rs` and
+//! `exec/partition.rs`).
 
 use std::sync::Arc;
 

@@ -1,6 +1,14 @@
 //! Merge step: concatenate batch outputs in stable shard order and
 //! compute job-level aggregates (paper §II). The merged result is the
 //! determinism anchor: it must be invariant to (b, k) and backend.
+//!
+//! Fragments of one duplicate-key run may arrive as several outcomes
+//! (the partitioner cuts runs anywhere; straggler splits assign halves
+//! fresh shard ids). They still merge into one deterministic report
+//! region: every aggregate here is order-insensitive (sums, maxes,
+//! per-column maps), and `diff_keys` — the only list — is globally
+//! sorted in `finish()`, so equal-key entries from different fragments
+//! coalesce identically no matter how the run was fragmented.
 
 use std::collections::BTreeMap;
 

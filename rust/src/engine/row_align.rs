@@ -249,6 +249,23 @@ fn probe_start(h: u64, mask: usize) -> usize {
 /// Duplicate keys match positionally (i-th A occurrence ↔ i-th B
 /// occurrence), which keeps the outcome multiset deterministic.
 ///
+/// # Cross-shard occurrence contract
+///
+/// The pairing above is over *local* occurrences within the shard. A
+/// shard may begin mid-run: its fragment of a duplicate-key run starts
+/// at a global occurrence base carried in `ShardSpec::{a_occ_base,
+/// b_occ_base}`. The occurrence-bounded partition rule
+/// (`exec/partition.rs`) guarantees those bases are **equal** whenever
+/// the straddling key is present on both sides, so pairing local
+/// occurrence `i` with local occurrence `i` is exactly the global rule
+/// "global occurrence `base + i` pairs with global occurrence
+/// `base + i`" restricted to the shard. That is why this function
+/// needs no base arithmetic and the per-shard outcomes still compose
+/// bit-identically to the solo-shard reference (`align_rows_ref`) for
+/// any fragmentation — the invariant is asserted against the spec in
+/// `exec::worker::execute_shard_with` and fuzzed end-to-end in
+/// `rust/tests/determinism.rs`.
+///
 /// Convenience wrapper over [`align_rows_into`] with throwaway scratch.
 pub fn align_rows(
     a: &Table,

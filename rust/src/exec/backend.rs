@@ -12,6 +12,15 @@ use crate::engine::delta::{JobPlan, ShardMemStats};
 use crate::engine::verdict::BatchOutcome;
 
 /// One schedulable shard: contiguous key-aligned row ranges on each side.
+///
+/// Boundaries may land *inside* a duplicate-key run: each side carries
+/// the **global occurrence base** of its first row (the row's ordinal
+/// within its run of equal keys), so a fragment of a cut run knows that
+/// its local i-th occurrence is global occurrence `base + i`. The
+/// occurrence-bounded cut rule (`exec/partition.rs`) guarantees the two
+/// bases are equal whenever a run straddles the shard start on both
+/// sides, which is what makes per-shard positional duplicate pairing
+/// bit-identical to the solo-shard pairing.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ShardSpec {
     pub shard_id: u64,
@@ -22,6 +31,11 @@ pub struct ShardSpec {
     pub a_len: usize,
     pub b_offset: usize,
     pub b_len: usize,
+    /// Occurrence ordinal of the first A row within its key run (0 when
+    /// the shard starts at a run boundary, is empty, or is keyless).
+    pub a_occ_base: u32,
+    /// Occurrence ordinal of the first B row within its key run.
+    pub b_occ_base: u32,
 }
 
 impl ShardSpec {
@@ -231,6 +245,8 @@ mod tests {
                 a_len: 10,
                 b_offset: 0,
                 b_len: 12,
+                a_occ_base: 0,
+                b_occ_base: 0,
             },
             worker_id: 0,
             submitted_at: 1.0,

@@ -2,18 +2,40 @@
 //! aligned rows per side (paper §II job decomposition).
 //!
 //! Shards are key-range aligned: shard i covers A rows [p, p+b) and the
-//! B rows whose keys fall in the same key span, so every row lands in
-//! exactly one shard regardless of b — that is what makes the merged
-//! outcome invariant to batch size. Keyless jobs shard by position.
+//! B rows whose (key, occurrence) pairs fall in the same span, so every
+//! row lands in exactly one shard regardless of b — that is what makes
+//! the merged outcome invariant to batch size. Keyless jobs shard by
+//! position.
 //!
-//! Boundaries are additionally snapped to the end of a *key run*: keys
-//! may repeat (duplicates align positionally inside a shard), and a
-//! boundary cutting a run of equal A-side keys would strand the later
-//! A occurrences in the next shard while every matching B row binds to
-//! the earlier one — making the report depend on `b`, which violates
-//! the merge-invariance contract in `engine/merge.rs`. Snapping keeps
-//! each key run whole (so a shard can exceed `b` by the tail of one
-//! run — bounded by the longest duplicate-key run in the input).
+//! # Occurrence-indexed duplicate alignment
+//!
+//! Keys may repeat, and duplicates pair *positionally*: the global i-th
+//! A occurrence of a key pairs with the global i-th B occurrence.
+//! Boundaries are allowed to land anywhere — **including inside a
+//! duplicate-key run** — because every cut is *occurrence-bounded*:
+//! when the A-side cut consumes the first `c` occurrences of its
+//! boundary key, the B side is cut at exactly occurrence `c` of that
+//! key too ([`upper_bound_key_occ_in`]). Both fragments of the run then
+//! resume with equal global occurrence bases (recorded in
+//! `ShardSpec::{a_occ_base, b_occ_base}`), so the per-shard positional
+//! pairing of local occurrences `(i, i)` is exactly the global pairing
+//! `(base + i, base + i)` restricted to the shard — bit-identical to
+//! the solo-shard reference for any b (fuzzed end-to-end in
+//! `rust/tests/determinism.rs`).
+//!
+//! A cut that lands at the *end* of a run instead absorbs every
+//! remaining B occurrence of the boundary key (pairs and surplus
+//! "added" rows alike), matching the historical key-range rule.
+//!
+//! This replaces the PR 4 run-*snapping* scheme (which kept runs whole
+//! and bounded shards by `max(b, longest run)`): the A side of a shard
+//! is now bounded by `b` alone, so a hot key's A-side run spanning more
+//! rows than the memory grant no longer forces an accounted OOM — the
+//! skew workload the ROADMAP left open. (The B side of one shard is
+//! bounded by the pairable mass plus the boundary key's surplus: a key
+//! whose *B-only* surplus of added rows exceeds the grant — B-dominant
+//! skew with no A counterpart — still lands in one shard, as it always
+//! has; see the ROADMAP open item on bounded add-range carving.)
 //!
 //! Partitioning is incremental (`next(b)`) because the controller
 //! changes b while the job runs.
@@ -77,31 +99,19 @@ impl<'a> Partitioner<'a> {
             // A exhausted: the rest of B is one trailing added-range.
             (0, (b_n - self.b_pos).min(batch_rows))
         } else {
-            let mut a_len = batch_rows.min(a_n - self.a_pos);
-            if self.a_pos + a_len < a_n {
-                // Snap the cut to the end of the key run: all A rows
-                // sharing the boundary key stay in this shard (their
-                // matching B rows bind here via the upper bound below).
-                let boundary = self
-                    .a
-                    .key_at(self.a_pos + a_len - 1)
-                    .expect("keyed source");
-                a_len = upper_bound_key_in(
-                    self.a,
-                    self.a_pos + a_len,
-                    a_n,
-                    boundary,
-                ) - self.a_pos;
-            }
+            let a_len = batch_rows.min(a_n - self.a_pos);
             let b_hi = if self.a_pos + a_len >= a_n {
                 b_n // last A shard absorbs the B tail
             } else {
-                // First B row whose key exceeds the shard's last A key.
-                let boundary = self
-                    .a
-                    .key_at(self.a_pos + a_len - 1)
-                    .expect("keyed source");
-                upper_bound_key_in(self.b, self.b_pos, b_n, boundary)
+                let last = self.a_pos + a_len - 1;
+                let boundary = self.a.key_at(last).expect("keyed source");
+                // Occurrence-bounded cut: if the run continues past the
+                // cut, B stops at the same occurrence ordinal so both
+                // fragments resume with equal occurrence bases; a
+                // completed run absorbs every remaining B occurrence of
+                // the boundary key.
+                let (occ_cut, _) = occ_cut_at(self.a, last, boundary);
+                upper_bound_key_occ_in(self.b, self.b_pos, b_n, boundary, occ_cut)
             };
             (a_len, b_hi - self.b_pos)
         };
@@ -113,6 +123,8 @@ impl<'a> Partitioner<'a> {
             a_len,
             b_offset: self.b_pos,
             b_len,
+            a_occ_base: if a_len > 0 { self.a.occ_at(self.a_pos) } else { 0 },
+            b_occ_base: if b_len > 0 { self.b.occ_at(self.b_pos) } else { 0 },
         };
         self.a_pos += a_len;
         self.b_pos += b_len;
@@ -122,10 +134,10 @@ impl<'a> Partitioner<'a> {
 }
 
 /// Generic upper bound: first index in [lo, hi) where `le` turns false
-/// (`le(i)` = "row i's key is <= the boundary"; key-sorted rows make it
+/// (`le(i)` = "row i is consumed by the cut"; key-sorted rows make it
 /// monotone). Single binary search shared by every boundary derivation
-/// — the merge-invariance contract depends on all of them snapping key
-/// runs identically.
+/// — the merge-invariance contract depends on all of them cutting
+/// identically.
 pub(crate) fn upper_bound_by(
     lo: usize,
     hi: usize,
@@ -144,23 +156,58 @@ pub(crate) fn upper_bound_by(
     lo
 }
 
-/// First row index in [lo, hi) with key > `key` over a key-sorted
-/// source. Used by the partitioner, the worker's sub-chunker, and the
-/// scheduler's straggler splitter.
-pub(crate) fn upper_bound_key_in(
+/// First row index in [lo, hi) past the cut "(key, occurrence) <
+/// (`key`, `occ_exclusive`)" over a key-sorted source: rows with a
+/// smaller key — or the boundary key at an occurrence ordinal below
+/// `occ_exclusive` — are consumed; `u32::MAX` consumes the whole run.
+/// This is the single occurrence-bounded boundary rule shared by the
+/// partitioner, the worker's sub-chunker, and the scheduler's straggler
+/// splitter (it replaces the run-snapping `upper_bound_key_in`).
+pub(crate) fn upper_bound_key_occ_in(
     src: &dyn TableSource,
     lo: usize,
     hi: usize,
     key: i64,
+    occ_exclusive: u32,
 ) -> usize {
-    upper_bound_by(lo, hi, |i| matches!(src.key_at(i), Some(k) if k <= key))
+    upper_bound_by(lo, hi, |i| match src.key_at(i) {
+        Some(k) => k < key || (k == key && src.occ_at(i) < occ_exclusive),
+        None => false,
+    })
+}
+
+/// Occurrence cut ordinal for an A-side cut whose last consumed row is
+/// `last` with boundary key `key` (requires `last + 1 < src.nrows()` —
+/// the cut is interior). If the boundary key's run continues past the
+/// cut, the B side must stop at the same ordinal (`occ_at(last) + 1`);
+/// a completed run absorbs B's remainder of the key (`u32::MAX`).
+/// Returns `(occ_cut, cut_in_run)`. One definition shared by the
+/// partitioner, the worker's sub-chunker, and the straggler splitter so
+/// the cutters cannot desynchronize.
+pub(crate) fn occ_cut_at(
+    src: &dyn TableSource,
+    last: usize,
+    key: i64,
+) -> (u32, bool) {
+    if src.key_at(last + 1) == Some(key) {
+        (src.occ_at(last) + 1, true)
+    } else {
+        (u32::MAX, false)
+    }
 }
 
 /// Split decoded shard tables into sub-chunks of at most `chunk_rows`
-/// A-side rows (plus the tail of a duplicate-key run straddling a cut —
-/// boundaries are snapped to key-run ends just like `Partitioner`),
-/// key-range aligned (used by the dask-like backend's finer-grained
-/// tasks and by straggler shard splitting).
+/// A-side rows, (key, occurrence)-range aligned: cuts may land inside a
+/// duplicate-key run, with the B boundary bounded at the A cut's
+/// occurrence ordinal exactly like `Partitioner` (used by tests and
+/// tools operating on decoded pairs; the worker's source-index
+/// sub-chunker is `exec::worker::sub_partition`).
+///
+/// Occurrence ordinals are computed *locally* over the given tables.
+/// That is equivalent to the global rule for any fragment produced by
+/// the occurrence-bounded cutters, because such a fragment resumes both
+/// sides of a straddling run at equal occurrence bases — the bases
+/// cancel out of every local comparison.
 pub fn partition_tables(
     a: &Table,
     b: &Table,
@@ -169,11 +216,25 @@ pub fn partition_tables(
     let key_a = a.schema.key_indices().first().copied();
     let key_b = b.schema.key_indices().first().copied();
     let chunk_rows = chunk_rows.max(1);
-    let cell_key = |t: &Table, col: usize, row: usize| -> i64 {
+    // Mirrors `TableSource::key_at`: None for non-i64 (null) key cells,
+    // so null-key semantics match the source-index cutters exactly
+    // (nulls never extend a run and are never consumed by a key cut).
+    let cell_key = |t: &Table, col: usize, row: usize| -> Option<i64> {
         match t.column(col).cell(row) {
-            crate::data::column::Cell::I64(k) => k,
-            _ => i64::MAX,
+            crate::data::column::Cell::I64(k) => Some(k),
+            _ => None,
         }
+    };
+    // Local occurrence ordinals, needed only when both sides are keyed
+    // (the only arm that cuts by occurrence). Shares the sources' sweep
+    // (`data::io::key_occurrences`) so null-key semantics cannot
+    // diverge from the source-index cutters.
+    let (occ_a, occ_b): (Vec<u32>, Vec<u32>) = match (key_a, key_b) {
+        (Some(ka), Some(kb)) => (
+            crate::data::io::key_occurrences(a, ka),
+            crate::data::io::key_occurrences(b, kb),
+        ),
+        _ => (Vec::new(), Vec::new()),
     };
     let mut out = Vec::new();
     let (mut ap, mut bp) = (0usize, 0usize);
@@ -182,20 +243,27 @@ pub fn partition_tables(
             out.push(((ap, 0), (bp, b.nrows() - bp)));
             break;
         }
-        let mut a_len = chunk_rows.min(a.nrows() - ap);
-        if let Some(ka) = key_a {
-            if ap + a_len < a.nrows() {
-                // Snap to the end of the A-side key run.
-                let boundary = cell_key(a, ka, ap + a_len - 1);
-                a_len = upper_bound_by(ap + a_len, a.nrows(), |i| {
-                    cell_key(a, ka, i) <= boundary
-                }) - ap;
-            }
-        }
+        let a_len = chunk_rows.min(a.nrows() - ap);
         let b_hi = match (key_a, key_b) {
             (Some(ka), Some(kb)) if ap + a_len < a.nrows() => {
-                let boundary = cell_key(a, ka, ap + a_len - 1);
-                upper_bound_by(bp, b.nrows(), |i| cell_key(b, kb, i) <= boundary)
+                let last = ap + a_len - 1;
+                let boundary_cell = cell_key(a, ka, last);
+                let boundary = boundary_cell.unwrap_or(i64::MAX);
+                // Mid-run cut: stop B at the same occurrence ordinal;
+                // a completed run absorbs B's remainder of the key.
+                let occ_cut = if boundary_cell.is_some()
+                    && cell_key(a, ka, ap + a_len) == boundary_cell
+                {
+                    occ_a[last] + 1
+                } else {
+                    u32::MAX
+                };
+                upper_bound_by(bp, b.nrows(), |i| match cell_key(b, kb, i) {
+                    Some(k) => {
+                        k < boundary || (k == boundary && occ_b[i] < occ_cut)
+                    }
+                    None => false,
+                })
             }
             _ if ap + a_len < a.nrows() => (bp + a_len).min(b.nrows()),
             _ => b.nrows(),
@@ -245,7 +313,9 @@ mod tests {
 
     #[test]
     fn key_ranges_never_split_a_key_span() {
-        // Every B key must fall in the shard whose A key range covers it.
+        // Unique-key inputs: every B key must fall in the shard whose A
+        // key range covers it (the occurrence rule degenerates to the
+        // plain key-range rule when runs have length 1).
         let (a, b) = sources(3_000, 9);
         let mut p = Partitioner::new(&a, &b);
         while let Some(s) = p.next(311) {
@@ -309,59 +379,116 @@ mod tests {
         }
     }
 
-    #[test]
-    fn duplicate_key_runs_never_split() {
+    /// Build a keyed run table: `(key, n)` per run.
+    fn run_source(runs: &[(i64, usize)]) -> InMemorySource {
         use crate::data::schema::{ColumnType, Field, Schema};
         use crate::data::table::TableBuilder;
-        // A-side keys with runs of 1..6 equal keys; B shares the key
-        // universe. No batch size may cut a run: the row after every
-        // shard must carry a different key than the shard's last row.
         let schema = Schema::new(vec![
             Field::key("id", ColumnType::Int64),
             Field::new("v", ColumnType::Int64),
         ]);
-        let mk = |runs: &[(i64, usize)]| {
-            let mut tb = TableBuilder::new(schema.clone());
-            let mut v = 0i64;
-            for &(key, n) in runs {
-                for _ in 0..n {
-                    tb.col(0).push_i64(key);
-                    tb.col(1).push_i64(v);
-                    v += 1;
-                }
+        let mut tb = TableBuilder::new(schema);
+        let mut v = 0i64;
+        for &(key, n) in runs {
+            for _ in 0..n {
+                tb.col(0).push_i64(key);
+                tb.col(1).push_i64(v);
+                v += 1;
             }
-            tb.finish()
-        };
+        }
+        InMemorySource::new(tb.finish())
+    }
+
+    fn key_counts(
+        s: &dyn TableSource,
+        hi: usize,
+    ) -> std::collections::HashMap<i64, usize> {
+        let mut m = std::collections::HashMap::new();
+        for i in 0..hi {
+            *m.entry(s.key_at(i).unwrap()).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// Occurrence alignment invariant for a cut at (a_hi, b_hi): for
+    /// every key, the number of A occurrences consumed must equal the
+    /// number of B occurrences consumed, capped by the side's total —
+    /// that is exactly "global occurrence o of A and B land in the same
+    /// fragment whenever both exist". `ta`/`tb` are the whole-side key
+    /// counts, computed once by the caller (this runs per boundary).
+    fn assert_occurrence_aligned(
+        a: &dyn TableSource,
+        b: &dyn TableSource,
+        a_hi: usize,
+        b_hi: usize,
+        ta: &std::collections::HashMap<i64, usize>,
+        tb: &std::collections::HashMap<i64, usize>,
+    ) {
+        let (ca, cb) = (key_counts(a, a_hi), key_counts(b, b_hi));
+        for (k, &na) in &ca {
+            let nb = cb.get(k).copied().unwrap_or(0);
+            let tb_k = tb.get(k).copied().unwrap_or(0);
+            // B consumed = min(A consumed, B total) unless A's run is
+            // fully consumed (then B absorbed its surplus too).
+            let a_complete = na == ta[k];
+            if a_complete {
+                assert_eq!(nb, tb_k, "key {k}: completed run must absorb B");
+            } else {
+                assert_eq!(nb, na.min(tb_k), "key {k}: occurrence misaligned");
+            }
+        }
+        for (k, &nb) in &cb {
+            if !ca.contains_key(k) {
+                // B-only keys consumed before the boundary key: fine
+                // (added rows); B rows of *later* keys must not leak.
+                assert_eq!(nb, tb.get(k).copied().unwrap_or(0));
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_key_runs_split_with_aligned_occurrences() {
+        // Runs of 1..6 equal keys on both sides with differing lengths;
+        // every batch size must keep each prefix cut occurrence-aligned
+        // and cover both sides exactly once.
         let runs_a: Vec<(i64, usize)> =
             (0..400).map(|k| (k, 1 + (k as usize * 7) % 6)).collect();
         let runs_b: Vec<(i64, usize)> =
             (0..400).map(|k| (k, 1 + (k as usize * 5) % 6)).collect();
-        let a = InMemorySource::new(mk(&runs_a));
-        let b = InMemorySource::new(mk(&runs_b));
+        let a = run_source(&runs_a);
+        let b = run_source(&runs_b);
+        let ta = key_counts(&a, a.nrows());
+        let tb = key_counts(&b, b.nrows());
         for batch in [1usize, 2, 3, 7, 50, 333] {
             let mut p = Partitioner::new(&a, &b);
             let (mut a_seen, mut b_seen) = (0, 0);
             while let Some(s) = p.next(batch) {
+                assert!(
+                    s.a_len <= batch,
+                    "batch={batch}: shard a_len {} exceeds b",
+                    s.a_len
+                );
+                // Bases recorded from the source occurrence index; equal
+                // whenever the same key straddles both starts.
+                if s.a_len > 0 {
+                    assert_eq!(s.a_occ_base, a.occ_at(s.a_offset));
+                }
+                if s.b_len > 0 {
+                    assert_eq!(s.b_occ_base, b.occ_at(s.b_offset));
+                }
+                if s.a_len > 0
+                    && s.b_len > 0
+                    && a.key_at(s.a_offset) == b.key_at(s.b_offset)
+                {
+                    assert_eq!(
+                        s.a_occ_base, s.b_occ_base,
+                        "batch={batch}: straddling run with unequal bases"
+                    );
+                }
                 a_seen += s.a_len;
                 b_seen += s.b_len;
-                if s.a_len > 0 && s.a_offset + s.a_len < a.nrows() {
-                    let last = a.key_at(s.a_offset + s.a_len - 1).unwrap();
-                    let next = a.key_at(s.a_offset + s.a_len).unwrap();
-                    assert_ne!(
-                        last, next,
-                        "batch={batch}: shard cut key run {last} at row {}",
-                        s.a_offset + s.a_len
-                    );
-                    if s.b_len > 0 {
-                        // Every B row with the boundary key binds here.
-                        let b_last =
-                            b.key_at(s.b_offset + s.b_len - 1).unwrap();
-                        assert!(b_last <= last);
-                    }
-                    if s.b_offset + s.b_len < b.nrows() {
-                        let b_next = b.key_at(s.b_offset + s.b_len).unwrap();
-                        assert!(b_next > last, "B row with shard key leaked");
-                    }
+                if a_seen < a.nrows() {
+                    assert_occurrence_aligned(&a, &b, a_seen, b_seen, &ta, &tb);
                 }
             }
             assert_eq!((a_seen, b_seen), (a.nrows(), b.nrows()));
@@ -369,8 +496,33 @@ mod tests {
     }
 
     #[test]
-    fn partition_tables_snaps_key_runs() {
-        use crate::data::column::Cell;
+    fn single_hot_key_shards_bounded_by_b() {
+        // The extreme-join-skew shape the run-snapping scheme could not
+        // split: one key spans 100% of both sides. Every shard must stay
+        // within b and resume at matching occurrence bases.
+        let a = run_source(&[(7, 250)]);
+        let b = run_source(&[(7, 180)]);
+        for batch in [1usize, 3, 32, 97] {
+            let mut p = Partitioner::new(&a, &b);
+            let (mut a_seen, mut b_seen) = (0usize, 0usize);
+            while let Some(s) = p.next(batch) {
+                assert!(s.a_len <= batch);
+                if s.a_len > 0 {
+                    assert_eq!(s.a_occ_base as usize, s.a_offset);
+                }
+                if s.b_len > 0 {
+                    assert_eq!(s.b_occ_base as usize, s.b_offset);
+                    assert_eq!(s.a_occ_base, s.b_occ_base);
+                }
+                a_seen += s.a_len;
+                b_seen += s.b_len;
+            }
+            assert_eq!((a_seen, b_seen), (a.nrows(), b.nrows()));
+        }
+    }
+
+    #[test]
+    fn partition_tables_cuts_runs_occurrence_aligned() {
         use crate::data::schema::{ColumnType, Field, Schema};
         use crate::data::table::TableBuilder;
         let schema = Schema::new(vec![Field::key("id", ColumnType::Int64)]);
@@ -389,17 +541,21 @@ mod tests {
             let a_total: usize = parts.iter().map(|c| c.0 .1).sum();
             let b_total: usize = parts.iter().map(|c| c.1 .1).sum();
             assert_eq!((a_total, b_total), (a.nrows(), b.nrows()));
-            for ((ao, al), _) in &parts {
-                if *al > 0 && ao + al < a.nrows() {
-                    let last = match a.column(0).cell(ao + al - 1) {
-                        Cell::I64(k) => k,
-                        _ => unreachable!(),
-                    };
-                    let next = match a.column(0).cell(ao + al) {
-                        Cell::I64(k) => k,
-                        _ => unreachable!(),
-                    };
-                    assert_ne!(last, next, "chunk={chunk} cut a key run");
+            for ((_, al), _) in &parts {
+                assert!(*al <= chunk, "chunk={chunk}: fragment exceeds chunk");
+            }
+            // Occurrence alignment at every internal boundary via the
+            // source-level checker.
+            let sa = InMemorySource::new(a.clone());
+            let sb = InMemorySource::new(b.clone());
+            let ta = key_counts(&sa, sa.nrows());
+            let tb = key_counts(&sb, sb.nrows());
+            let (mut ap, mut bp) = (0usize, 0usize);
+            for ((_, al), (_, bl)) in &parts {
+                ap += al;
+                bp += bl;
+                if ap < a.nrows() {
+                    assert_occurrence_aligned(&sa, &sb, ap, bp, &ta, &tb);
                 }
             }
         }

@@ -117,6 +117,10 @@ impl Pool {
             util_last_t: mono_secs(),
             util_last_busy: 0,
         };
+        // File-backed sources size their read-handle pools from the
+        // worker count (k concurrent readers, k handles).
+        pool.shared.ctx.a.set_read_parallelism(initial_workers.max(1));
+        pool.shared.ctx.b.set_read_parallelism(initial_workers.max(1));
         pool.ensure_spawned(initial_workers);
         pool
     }
@@ -182,6 +186,10 @@ impl Pool {
         if self.shared.profile.per_worker_memory {
             self.apply_mem_budget(k);
         }
+        // Keep the sources' pooled read handles sized to the live
+        // worker count so k readers never serialize on handle churn.
+        self.shared.ctx.a.set_read_parallelism(k);
+        self.shared.ctx.b.set_read_parallelism(k);
         self.shared.cv.notify_all();
     }
 
@@ -439,6 +447,8 @@ mod tests {
             a_len: ctx.a.nrows(),
             b_offset: 0,
             b_len: ctx.b.nrows(),
+            a_occ_base: 0,
+            b_occ_base: 0,
         });
         let mut got = Vec::new();
         while got.is_empty() {

@@ -10,7 +10,7 @@ use crate::engine::delta::{process_shard_with, ShardMemStats, ShardScratch};
 use crate::engine::merge::Merger;
 use crate::engine::verdict::BatchOutcome;
 use crate::exec::backend::{BatchError, JobContext, ShardSpec};
-use crate::exec::partition::upper_bound_key_in;
+use crate::exec::partition::{occ_cut_at, upper_bound_key_occ_in};
 
 /// Shared accounting for a memory pool (job-wide for inmem; per-worker
 /// for the dask-like backend). Exceeding the cap is the OOM failure the
@@ -189,6 +189,24 @@ pub fn execute_shard_with(
         };
     }
 
+    // Cross-shard duplicate-alignment contract: the spec's occurrence
+    // bases must match the source index, and a run straddling the shard
+    // start on *both* sides must resume at equal bases — that equality
+    // is what makes the engine's local positional pairing bit-identical
+    // to the solo-shard pairing (see `exec/partition.rs`).
+    #[cfg(debug_assertions)]
+    if spec.a_len > 0 && spec.b_len > 0 {
+        debug_assert_eq!(spec.a_occ_base, ctx.a.occ_at(spec.a_offset));
+        debug_assert_eq!(spec.b_occ_base, ctx.b.occ_at(spec.b_offset));
+        let ka = ctx.a.key_at(spec.a_offset);
+        debug_assert!(
+            ka.is_none()
+                || ka != ctx.b.key_at(spec.b_offset)
+                || spec.a_occ_base == spec.b_occ_base,
+            "straddling key run with unequal occurrence bases: {spec:?}"
+        );
+    }
+
     let result: Result<BatchOutcome, BatchError> = (|| {
         match chunk_rows {
             None => {
@@ -252,7 +270,13 @@ pub fn execute_shard_with(
     }
 }
 
-/// Key-aligned sub-ranges of a shard, consulting source keys.
+/// (Key, occurrence)-aligned sub-ranges of a shard, consulting the
+/// source key/occurrence indexes. Chunk cuts may land inside a
+/// duplicate-key run: the B boundary then stops at the A cut's
+/// occurrence ordinal (same rule as `Partitioner` and the straggler
+/// splitter), so every sub-chunk is bounded by `chunk` A rows — even
+/// when one key's run spans the whole shard — and local positional
+/// pairing inside each sub-chunk equals the global pairing.
 fn sub_partition(
     ctx: &JobContext,
     spec: &ShardSpec,
@@ -284,20 +308,14 @@ fn sub_partition(
     let a_end = spec.a_offset + spec.a_len;
     let b_end = spec.b_offset + spec.b_len;
     while ap < a_end {
-        let mut al = chunk.min(a_end - ap);
-        if ap + al < a_end {
-            // Snap the cut to the end of the key run (duplicate keys
-            // align positionally within one chunk; a cut run would bind
-            // all matching B rows to the earlier chunk).
-            let boundary = ctx.a.key_at(ap + al - 1).unwrap_or(i64::MAX);
-            al = upper_bound_key_in(ctx.a.as_ref(), ap + al, a_end, boundary)
-                - ap;
-        }
+        let al = chunk.min(a_end - ap);
         let b_hi = if ap + al >= a_end {
             b_end
         } else {
-            let boundary = ctx.a.key_at(ap + al - 1).unwrap_or(i64::MAX);
-            upper_bound_key_in(ctx.b.as_ref(), bp, b_end, boundary)
+            let last = ap + al - 1;
+            let boundary = ctx.a.key_at(last).unwrap_or(i64::MAX);
+            let (occ_cut, _) = occ_cut_at(ctx.a.as_ref(), last, boundary);
+            upper_bound_key_occ_in(ctx.b.as_ref(), bp, b_end, boundary, occ_cut)
         };
         out.push(((ap, al), (bp, b_hi - bp)));
         ap += al;
@@ -362,6 +380,8 @@ mod tests {
             a_len: ctx.a.nrows(),
             b_offset: 0,
             b_len: ctx.b.nrows(),
+            a_occ_base: 0,
+            b_occ_base: 0,
         }
     }
 
@@ -392,6 +412,59 @@ mod tests {
         let mut wk = w.diff_keys.clone();
         wk.sort_unstable();
         assert_eq!(wk, ch.diff_keys); // chunked is pre-sorted by merger
+    }
+
+    #[test]
+    fn chunked_single_run_shard_matches_whole() {
+        // A single duplicate-key run spans the whole shard — the shape
+        // run snapping could not sub-chunk at all. The occurrence-
+        // bounded sub-chunker must bound every chunk by `chunk` A rows
+        // (so peak memory drops) and produce the identical outcome.
+        use crate::data::schema::{ColumnType, Field, Schema};
+        use crate::data::table::TableBuilder;
+        let schema = Schema::new(vec![
+            Field::key("id", ColumnType::Int64),
+            Field::new("v", ColumnType::Int64),
+        ]);
+        let mk = |n: usize, bump: i64| {
+            let mut tb = TableBuilder::new(schema.clone());
+            for i in 0..n {
+                tb.col(0).push_i64(7);
+                tb.col(1).push_i64(i as i64 + bump);
+            }
+            tb.finish()
+        };
+        let a = mk(1_200, 0);
+        let b = mk(900, 5); // shorter run; every pair's payload differs
+        let aligned = align_schemas(&a.schema, &b.schema).unwrap();
+        let plan = JobPlan::new(aligned, EngineConfig::default());
+        let c = JobContext::new(
+            Arc::new(InMemorySource::new(a)),
+            Arc::new(InMemorySource::new(b)),
+            plan,
+            Arc::new(NativeExec),
+            u64::MAX,
+        );
+        let cancel = CancelSet::new();
+        let t1 = MemTracker::new(u64::MAX);
+        let spec = whole_shard(&c);
+        let whole = execute_shard(&c, spec, &t1, &cancel, None);
+        let t2 = MemTracker::new(u64::MAX);
+        let chunked = execute_shard(&c, spec, &t2, &cancel, Some(100));
+        let (w, ch) = (whole.result.unwrap(), chunked.result.unwrap());
+        assert_eq!(w.cells, ch.cells);
+        assert_eq!(w.rows, ch.rows);
+        assert_eq!(w.rows.aligned, 900);
+        assert_eq!(w.rows.removed, 300);
+        let mut wk = w.diff_keys.clone();
+        wk.sort_unstable();
+        assert_eq!(wk, ch.diff_keys); // chunked is pre-sorted by merger
+        assert!(
+            t2.peak() < t1.peak() / 2,
+            "sub-chunking must bound peak inside a run: {} vs {}",
+            t2.peak(),
+            t1.peak()
+        );
     }
 
     #[test]

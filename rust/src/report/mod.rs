@@ -163,10 +163,12 @@ pub fn analyze(log: &TelemetryLog) -> String {
         log.latency_quantile(0.95).unwrap_or(0.0)
     ));
     out.push_str(&format!(
-        "events: {} reconfigs, {} speculations, {} splits, {} ooms, gate: {}\n",
+        "events: {} reconfigs, {} speculations, {} splits (+{} in-run), \
+         {} ooms, gate: {}\n",
         log.count_events("reconfig"),
         log.count_events("speculate"),
         log.count_events("split"),
+        log.count_events("split_in_run"),
         log.count_events("oom"),
         log.events
             .iter()

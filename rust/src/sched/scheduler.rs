@@ -53,6 +53,10 @@ pub struct JobStats {
     pub speculations: u64,
     /// Straggling shards split into key-aligned halves.
     pub splits: u64,
+    /// Of `splits`, how many cut *inside* a duplicate-key run (the
+    /// occurrence-indexed path: single-run straggler shards used to be
+    /// unsplittable). Telemetry for observing the new path.
+    pub splits_in_run: u64,
     /// Queue-depth backpressure pauses (the paper's statistic;
     /// memory-grant drain pauses are counted separately and surface in
     /// telemetry as `mem_pause` events).
@@ -119,50 +123,48 @@ impl Coverage {
     }
 }
 
-/// Key-aligned split of a shard into two halves (B boundary re-derived
-/// from the key index; positional when keyless). The midpoint is
-/// snapped to the end of the A-side key run so a duplicate-key run is
-/// never cut. If one run spans the whole shard, the "split" degenerates
-/// to the original shard plus an empty right half — the caller detects
-/// the empty half and falls back to speculation instead of submitting
-/// a no-op task.
+/// Occurrence-aligned split of a shard into two halves: the A side is
+/// bisected at `a_len / 2` — anywhere, *including inside a
+/// duplicate-key run* — and the B boundary is re-derived so a mid-run
+/// cut stops the B side at the same occurrence ordinal. Both halves
+/// then resume with equal occurrence bases (recorded in the specs), so
+/// their local positional pairings compose into exactly the unsplit
+/// pairing. Single-run straggler shards — the shards run snapping made
+/// unsplittable — now bisect like any other. Keyless shards split
+/// positionally at the same offset on both sides (pair-aligned).
+///
+/// Returns the halves plus whether the cut landed inside a key run (the
+/// `splits_in_run` statistic). The detector only emits `Split` for
+/// shards with `a_len >= 2`, so both halves are non-empty on the A side.
 fn split_spec(
     a: &dyn TableSource,
     b: &dyn TableSource,
     spec: ShardSpec,
-) -> (ShardSpec, ShardSpec) {
-    let mut half = (spec.a_len / 2).max(1);
-    let keyed = a.key_at(0).is_some() && b.nrows() > 0 && b.key_at(0).is_some();
-    if keyed && half < spec.a_len {
-        let boundary = a.key_at(spec.a_offset + half - 1).unwrap_or(i64::MAX);
-        half = crate::exec::partition::upper_bound_key_in(
-            a,
-            spec.a_offset + half,
-            spec.a_offset + spec.a_len,
-            boundary,
-        ) - spec.a_offset;
-    }
-    if half >= spec.a_len {
-        // One key run spans the whole shard: nothing to split.
-        let right = ShardSpec {
-            a_offset: spec.a_offset + spec.a_len,
-            a_len: 0,
-            b_offset: spec.b_offset + spec.b_len,
-            b_len: 0,
-            ..spec
-        };
-        return (spec, right);
-    }
-    let b_mid = if keyed {
-        let boundary = a.key_at(spec.a_offset + half - 1).unwrap_or(i64::MAX);
-        crate::exec::partition::upper_bound_key_in(
-            b,
-            spec.b_offset,
-            spec.b_offset + spec.b_len,
-            boundary,
-        )
+) -> (ShardSpec, ShardSpec, bool) {
+    debug_assert!(spec.a_len >= 2, "detector splits only a_len >= 2 shards");
+    let keyed = a.nrows() > 0
+        && a.key_at(0).is_some()
+        && b.nrows() > 0
+        && b.key_at(0).is_some();
+    let half = (spec.a_len / 2).max(1);
+    let cut = spec.a_offset + half;
+    let a_end = spec.a_offset + spec.a_len;
+    let b_end = spec.b_offset + spec.b_len;
+    let (b_mid, in_run) = if !keyed {
+        // Positional: cut B at the same pair-aligned offset.
+        (spec.b_offset + half.min(spec.b_len), false)
+    } else if cut >= a_end {
+        (b_end, false)
     } else {
-        spec.b_offset + (spec.b_len / 2).min(spec.b_len)
+        let boundary = a.key_at(cut - 1).unwrap_or(i64::MAX);
+        let (occ_cut, in_run) =
+            crate::exec::partition::occ_cut_at(a, cut - 1, boundary);
+        (
+            crate::exec::partition::upper_bound_key_occ_in(
+                b, spec.b_offset, b_end, boundary, occ_cut,
+            ),
+            in_run,
+        )
     };
     let left = ShardSpec {
         a_len: half,
@@ -170,13 +172,15 @@ fn split_spec(
         ..spec
     };
     let right = ShardSpec {
-        a_offset: spec.a_offset + half,
+        a_offset: cut,
         a_len: spec.a_len - half,
         b_offset: b_mid,
-        b_len: spec.b_offset + spec.b_len - b_mid,
+        b_len: b_end - b_mid,
+        a_occ_base: if keyed && cut < a_end { a.occ_at(cut) } else { 0 },
+        b_occ_base: if keyed && b_mid < b_end { b.occ_at(b_mid) } else { 0 },
         ..spec
     };
-    (left, right)
+    (left, right, in_run)
 }
 
 /// Everything `drive` needs beyond the backend and sources.
@@ -313,6 +317,7 @@ pub fn drive(
         batches: 0,
         speculations: 0,
         splits: 0,
+        splits_in_run: 0,
         backpressure_pauses: 0,
         final_b: b_cur,
         final_k: k_cur,
@@ -708,29 +713,15 @@ pub fn drive(
                         backend.submit(spec);
                     }
                     Mitigation::Split(spec) => {
-                        let (mut l, mut rgt) = split_spec(a, b, spec);
-                        if rgt.a_len == 0 && rgt.b_len == 0 {
-                            // Unsplittable: one key run spans the whole
-                            // shard. The detector chose Split because
-                            // the shard is large — duplicating the full
-                            // span as a speculation would double its
-                            // decode-buffer demand (exactly the shards
-                            // the run snap let grow past b), risking
-                            // the accounted OOM the envelope exists to
-                            // prevent. Leave the original running
-                            // (detect() already marked it mitigated, so
-                            // this does not re-fire).
-                            inputs.telemetry.event(
-                                "split-skipped",
-                                &format!(
-                                    "shard={} single key run",
-                                    spec.shard_id
-                                ),
-                                now,
-                            );
-                            continue;
-                        }
+                        // Occurrence-indexed boundaries make every
+                        // straggler shard with >= 2 A rows splittable —
+                        // including a shard spanned by one key run, the
+                        // case run snapping had to skip.
+                        let (mut l, mut rgt, in_run) = split_spec(a, b, spec);
                         stats.splits += 1;
+                        if in_run {
+                            stats.splits_in_run += 1;
+                        }
                         l.shard_id = next_split_id;
                         rgt.shard_id = next_split_id + 1;
                         next_split_id += 2;
@@ -738,14 +729,25 @@ pub fn drive(
                         split_parent.insert(rgt.shard_id, spec.shard_id);
                         split_children
                             .insert(spec.shard_id, vec![l.shard_id, rgt.shard_id]);
+                        // Every split emits "split" (so the historical
+                        // event count stays comparable); an in-run cut
+                        // additionally emits the "split_in_run" marker.
                         inputs.telemetry.event(
                             "split",
                             &format!("shard={} -> {}+{}", spec.shard_id, l.a_len, rgt.a_len),
                             now,
                         );
+                        if in_run {
+                            inputs.telemetry.event(
+                                "split_in_run",
+                                &format!("shard={}", spec.shard_id),
+                                now,
+                            );
+                        }
                         if let Some(c) = &inputs.control {
                             c.push_event(JobEvent::Split {
                                 shard_id: spec.shard_id,
+                                in_run,
                             });
                         }
                         inflight_ids.insert(l.shard_id);
@@ -929,6 +931,8 @@ mod tests {
             a_len: len,
             b_offset: 0,
             b_len: len,
+            a_occ_base: 0,
+            b_occ_base: 0,
         };
         assert!(c.try_accept(&s(0, 100)));
         assert!(!c.try_accept(&s(50, 100))); // overlaps
@@ -939,7 +943,7 @@ mod tests {
     }
 
     #[test]
-    fn split_spec_never_cuts_a_key_run() {
+    fn split_spec_bisects_runs_with_matching_occ_bases() {
         use crate::data::schema::{ColumnType, Field, Schema};
         use crate::data::table::TableBuilder;
         let schema = Schema::new(vec![Field::key("id", ColumnType::Int64)]);
@@ -950,7 +954,9 @@ mod tests {
             }
             InMemorySource::new(tb.finish())
         };
-        // The run of 7s straddles the naive midpoint (a_len 6, half 3).
+        // The run of 7s straddles the midpoint (a_len 6, half 3): the
+        // cut lands inside the run, and B follows to the same
+        // occurrence ordinal — occ 1 of key 7 on both sides.
         let a = mk(&[1, 2, 7, 7, 7, 9]);
         let b = mk(&[1, 7, 7, 7, 9, 9]);
         let spec = ShardSpec {
@@ -960,27 +966,37 @@ mod tests {
             a_len: 6,
             b_offset: 0,
             b_len: 6,
+            a_occ_base: 0,
+            b_occ_base: 0,
         };
-        let (l, r) = split_spec(&a, &b, spec);
+        let (l, r, in_run) = split_spec(&a, &b, spec);
+        assert!(in_run, "cut at a row 3 is inside the run of 7s");
         assert_eq!(l.a_len + r.a_len, 6);
         assert_eq!(l.b_len + r.b_len, 6);
-        // Left absorbs the whole run of 7s on both sides.
-        assert_eq!(l.a_len, 5);
-        assert_eq!(l.b_len, 4);
-        // A single-run shard degenerates to (whole, empty).
-        let one_run = mk(&[4, 4, 4]);
+        // Left: A rows [1, 2, 7] and B rows [1, 7] (occ 0 of key 7 on
+        // each side). Right resumes at occ 1 on both sides.
+        assert_eq!((l.a_len, l.b_len), (3, 2));
+        assert_eq!((r.a_occ_base, r.b_occ_base), (1, 1));
+        // A single-run shard — unsplittable under run snapping — now
+        // bisects, with both halves resuming at matching bases.
+        let one_run_a = mk(&[4, 4, 4, 4]);
+        let one_run_b = mk(&[4, 4, 4]);
         let spec = ShardSpec {
             shard_id: 2,
             attempt: 0,
             a_offset: 0,
-            a_len: 3,
+            a_len: 4,
             b_offset: 0,
-            b_len: 2,
+            b_len: 3,
+            a_occ_base: 0,
+            b_occ_base: 0,
         };
-        let (l, r) = split_spec(&one_run, &mk(&[4, 4]), spec);
-        assert_eq!((l.a_len, l.b_len), (3, 2));
-        assert_eq!((r.a_len, r.b_len), (0, 0));
-        assert_eq!(r.a_offset, 3);
+        let (l, r, in_run) = split_spec(&one_run_a, &one_run_b, spec);
+        assert!(in_run);
+        assert_eq!((l.a_len, l.b_len), (2, 2));
+        assert_eq!((r.a_offset, r.a_len), (2, 2));
+        assert_eq!((r.b_offset, r.b_len), (2, 1));
+        assert_eq!((r.a_occ_base, r.b_occ_base), (2, 2));
     }
 
     #[test]
@@ -995,8 +1011,10 @@ mod tests {
             a_len: 400,
             b_offset: 90,
             b_len: 410,
+            a_occ_base: 0,
+            b_occ_base: 0,
         };
-        let (l, r) = split_spec(&sa, &sb, spec);
+        let (l, r, _) = split_spec(&sa, &sb, spec);
         assert_eq!(l.a_len + r.a_len, 400);
         assert_eq!(l.b_len + r.b_len, 410);
         assert_eq!(r.a_offset, l.a_offset + l.a_len);

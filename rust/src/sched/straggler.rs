@@ -14,7 +14,9 @@ pub enum Mitigation {
     Speculate(ShardSpec),
     /// Re-submit the range as two half-shards. The *scheduler* performs
     /// the split because the B-side boundary must be re-derived from the
-    /// key index (a positional halve would mis-align rows).
+    /// key/occurrence indexes (a positional halve would mis-align rows).
+    /// Occurrence-indexed boundaries make every `a_len >= 2` shard
+    /// splittable, including one spanned by a single duplicate-key run.
     Split(ShardSpec),
 }
 
@@ -115,6 +117,8 @@ mod tests {
             a_len,
             b_offset: 200,
             b_len: a_len,
+            a_occ_base: 0,
+            b_occ_base: 0,
         }
     }
 

@@ -114,6 +114,8 @@ mod tests {
                 a_len: 100,
                 b_offset: 0,
                 b_len: 100,
+                a_occ_base: 0,
+                b_occ_base: 0,
             },
             worker_id: 1,
             submitted_at: 0.0,

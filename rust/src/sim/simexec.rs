@@ -401,6 +401,8 @@ mod tests {
             a_len: rows,
             b_offset: id as usize * rows,
             b_len: rows,
+            a_occ_base: 0,
+            b_occ_base: 0,
         }
     }
 

@@ -54,6 +54,9 @@ impl TableSource for VirtualSource {
             None
         }
     }
+    fn occ_at(&self, _row: usize) -> u32 {
+        0 // virtual keys are unique: every run has length 1
+    }
     fn storage_bytes(&self) -> u64 {
         (self.nrows as f64 * self.row_bytes) as u64
     }

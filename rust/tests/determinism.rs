@@ -5,9 +5,15 @@
 use std::sync::Arc;
 
 use smartdiff_sched::config::{BackendChoice, DeltaPath, PolicyKind, SchedulerConfig};
-use smartdiff_sched::data::generator::{generate_pair, GenSpec};
-use smartdiff_sched::data::io::InMemorySource;
-use smartdiff_sched::engine::merge::JobReport;
+use smartdiff_sched::data::generator::{
+    generate_pair, generate_skewed_pair, GenSpec, SkewSpec,
+};
+use smartdiff_sched::data::io::{InMemorySource, TableSource};
+use smartdiff_sched::data::table::Table;
+use smartdiff_sched::engine::comparators::{NativeExec, NumericDeltaExec};
+use smartdiff_sched::engine::delta::{process_shard_ref, JobPlan};
+use smartdiff_sched::engine::merge::{JobReport, Merger};
+use smartdiff_sched::engine::schema_align::align_schemas;
 use smartdiff_sched::prop_assert;
 use smartdiff_sched::sched::scheduler::run_job;
 use smartdiff_sched::util::prop::forall;
@@ -191,6 +197,112 @@ fn duplicate_key_runs_are_batch_size_invariant() {
         assert!(
             first.same_diff(r),
             "diff differs: ({p0:?}, {be0:?}) vs ({p:?}, {be:?})"
+        );
+    }
+}
+
+/// The single-shard oracle: `process_shard_ref` over the whole pair,
+/// merged into a `JobReport` — the reference every sharded schedule
+/// must reproduce bit-identically.
+fn oracle_report(a: &Table, b: &Table, cfg: &SchedulerConfig) -> JobReport {
+    let aligned = align_schemas(&a.schema, &b.schema).unwrap();
+    let plan = JobPlan::new(aligned, cfg.engine.clone());
+    let exec: Arc<dyn NumericDeltaExec> = Arc::new(NativeExec);
+    let (out, _) = process_shard_ref(0, a, b, &plan, &exec).unwrap();
+    let mut m = Merger::new();
+    m.push(out);
+    m.finish()
+}
+
+#[test]
+fn skewed_runs_invariant_to_b_k_backend_and_match_oracle() {
+    // Occurrence-indexed alignment acceptance: a Zipf-hot-key pair whose
+    // hottest run dwarfs small batch sizes must produce the identical
+    // report across b ∈ {run/4, run, 4·run}, worker counts {1, 4}, both
+    // backends — and match the single-shard process_shard_ref oracle.
+    let spec = SkewSpec {
+        rows: 6_000,
+        hot_key_mass: 0.5,
+        seed: 21,
+        ..SkewSpec::default()
+    };
+    let (a, b, longest_run) = generate_skewed_pair(&spec);
+    assert_eq!(longest_run, 3_000, "hot run carries half the rows");
+    let base_cfg = cfg(BackendChoice::InMem, PolicyKind::Adaptive, 50);
+    let oracle = oracle_report(&a, &b, &base_cfg);
+    assert!(
+        oracle.rows.aligned > 0 && oracle.diff_keys.len() > 1,
+        "workload must exercise real diffs: {:?}",
+        oracle.rows
+    );
+    for b_size in [longest_run / 4, longest_run, 4 * longest_run] {
+        for k in [1usize, 4] {
+            for backend in [BackendChoice::InMem, BackendChoice::DaskLike] {
+                let mut c =
+                    cfg(backend, PolicyKind::Fixed { b: b_size, k }, 50);
+                c.caps.cpu_cap = 4;
+                let r = run_job(
+                    &c,
+                    Arc::new(InMemorySource::new(a.clone())),
+                    Arc::new(InMemorySource::new(b.clone())),
+                )
+                .expect("skewed job");
+                assert_eq!(r.stats.ooms, 0, "b={b_size} k={k}");
+                assert!(
+                    oracle.same_diff(&r.report),
+                    "report differs from oracle at b={b_size} k={k} \
+                     backend={backend:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn hot_run_exceeding_batch_headroom_completes_without_oom() {
+    // The workload class PR 4 aborted with a typed accounted OOM: one
+    // key spans 100% of the rows, and decoding that run in one shard
+    // would blow the memory grant's batch headroom. With occurrence-
+    // indexed cuts the run is carved into b-bounded shards, so the job
+    // must complete on both backends with 0 OOMs, peak accounted RSS
+    // under the cap, and the oracle's exact report.
+    let spec = SkewSpec {
+        rows: 20_000,
+        hot_key_mass: 1.0,
+        extra_cols: 3,
+        seed: 5,
+        ..SkewSpec::default()
+    };
+    let (a, b, longest_run) = generate_skewed_pair(&spec);
+    assert_eq!(longest_run, 20_000, "one key spans every A row");
+    // Exact resident base (pinned tables + occurrence indexes), so the
+    // cap leaves a known batch headroom regardless of index overheads.
+    let base = InMemorySource::new(a.clone()).resident_bytes()
+        + InMemorySource::new(b.clone()).resident_bytes();
+    let run_decode = a.heap_bytes() as u64; // decoding the run re-buffers A
+    // Headroom far below the hot run's decode footprint (the old
+    // run-snapped shard size), but enough for b_min-sized batches.
+    let cap = base + run_decode / 4;
+    let base_cfg = cfg(BackendChoice::InMem, PolicyKind::Adaptive, 100);
+    let oracle = oracle_report(&a, &b, &base_cfg);
+    for backend in [BackendChoice::InMem, BackendChoice::DaskLike] {
+        let mut c = cfg(backend, PolicyKind::Adaptive, 100);
+        c.caps.mem_cap_bytes = cap;
+        let r = run_job(
+            &c,
+            Arc::new(InMemorySource::new(a.clone())),
+            Arc::new(InMemorySource::new(b.clone())),
+        )
+        .expect("hot-run job under tight cap");
+        assert_eq!(r.stats.ooms, 0, "backend={backend:?}");
+        assert!(
+            r.stats.peak_rss_bytes <= cap,
+            "backend={backend:?}: peak {} exceeds cap {cap}",
+            r.stats.peak_rss_bytes
+        );
+        assert!(
+            oracle.same_diff(&r.report),
+            "backend={backend:?}: capped report differs from oracle"
         );
     }
 }
