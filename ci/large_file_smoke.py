@@ -11,6 +11,11 @@ a typed OOM. Occurrence-indexed cuts must gate it to dasklike, finish
 with 0 OOMs, keep peak under the cap, and produce a report identical to
 an uncapped in-memory run of the same pair.
 
+Scenario 3 (pipelined prefetch): the scenario-1 pair with the
+double-buffered prefetcher on — grant-charged staged bytes must keep
+peak under the cap with 0 OOMs, the pipeline line must show measured
+ingest/compute overlap, and the report must match the prefetch-off run.
+
 Run from the repo root after `cargo build --release`:
 
     python3 ci/large_file_smoke.py [path-to-binary]
@@ -74,8 +79,11 @@ def run_diff(binary, pa, pb, cfg_path, backend=None):
     return out.stdout
 
 
-def write_cfg(path, mem_cap):
+def write_cfg(path, mem_cap, prefetch=None):
     with open(path, "w") as f:
+        # Root keys (prefetch) must precede the first TOML table.
+        if prefetch is not None:
+            f.write("prefetch = %s\n" % ("true" if prefetch else "false"))
         f.write(
             "[caps]\n"
             'mem_cap = "%s"\n'
@@ -167,11 +175,74 @@ def scenario_hot_key(binary, d):
     )
 
 
+def parse_pipeline(stdout):
+    """The CLI's per-stage pipeline line: read/decode/align/diff/stall
+    seconds, the measured ingest/compute overlap ratio, and the
+    control-loop overhead."""
+    m = re.search(
+        r"pipeline: read=(?P<read>[0-9.]+)s decode=(?P<decode>[0-9.]+)s "
+        r"align=(?P<align>[0-9.]+)s diff=(?P<diff>[0-9.]+)s "
+        r"stall=(?P<stall>[0-9.]+)s overlap=(?P<overlap>[0-9.]+) "
+        r"sched_overhead=(?P<sched>[0-9.]+)s",
+        stdout,
+    )
+    assert m, "pipeline line not found in output"
+    return {
+        k: float(m.group(k))
+        for k in ("read", "decode", "align", "diff", "stall", "overlap", "sched")
+    }
+
+
+def scenario_prefetch(binary, d):
+    """Scenario 3 (pipelined prefetch): the same over-cap file-backed
+    diff with the double-buffered prefetcher on must finish with 0 OOMs
+    and peak accounted RSS — which includes the grant-charged staged
+    bytes — under the cap, show a measured ingest/compute overlap
+    (stall < read+decode, overlap ratio > 0), and produce a report
+    identical to the prefetch-off run."""
+    pa = os.path.join(d, "a.csv")
+    pb = os.path.join(d, "b.csv")
+    if not os.path.exists(pa):
+        write_csv(pa, 0.0)
+        write_csv(pb, 0.25)
+    on_cfg = os.path.join(d, "prefetch_on.toml")
+    write_cfg(on_cfg, "10MiB", prefetch=True)
+    off_cfg = os.path.join(d, "prefetch_off.toml")
+    write_cfg(off_cfg, "10MiB", prefetch=False)
+
+    on = run_diff(binary, pa, pb, on_cfg)
+    peak_mb = assert_capped_stats(on, CAP_BYTES)
+    off = run_diff(binary, pa, pb, off_cfg)
+    assert_capped_stats(off, CAP_BYTES)
+
+    stages = parse_pipeline(on)
+    assert stages["overlap"] > 0.0, (
+        "prefetch-on run shows no ingest/compute overlap: %r" % stages
+    )
+    assert stages["stall"] < stages["read"] + stages["decode"], (
+        "stall time not reduced below serial read+decode: %r" % stages
+    )
+    assert report_diff(on) == report_diff(off), (
+        "prefetch-on report differs from prefetch-off"
+    )
+    print(
+        "prefetch smoke OK: peak %.1f MB under cap with staged bytes "
+        "charged, overlap %.2f, stall %.3fs < io %.3fs, reports identical"
+        % (
+            peak_mb,
+            stages["overlap"],
+            stages["stall"],
+            stages["read"] + stages["decode"],
+        )
+    )
+
+
 def main():
     binary = sys.argv[1] if len(sys.argv) > 1 else "target/release/smartdiff-sched"
     with tempfile.TemporaryDirectory() as d:
         scenario_unique_keys(binary, d)
         scenario_hot_key(binary, d)
+        scenario_prefetch(binary, d)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Regenerate the committed micro_hotpath snapshot (BENCH_micro_hotpath.json
+# at the repo root): per-stage columnar-vs-reference timings, the Zipf
+# skew family, and the file-backed prefetch on/off section (wall clock,
+# overlap ratio, stall/read/decode split).
+#
+# Run from anywhere inside the repo after a release build; commit the
+# refreshed JSON alongside perf-relevant changes so the speedup
+# trajectory is tracked in-tree.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+MICRO_HOTPATH_JSON="$PWD/BENCH_micro_hotpath.json" \
+    cargo bench --bench micro_hotpath
+echo "wrote $PWD/BENCH_micro_hotpath.json"

@@ -286,6 +286,69 @@ fn main() {
         });
     }
 
+    // -- pipelined prefetch: file-backed diff, overlap on vs off --
+    // The double-buffered prefetcher stages the next range's read +
+    // decode while the worker diffs the current one; with `prefetch`
+    // off the same ranges are read synchronously. Reports must be
+    // bit-identical either way — only the wall clock and the
+    // stall/read split may differ.
+    println!("\n== pipelined prefetch: file-backed csv diff, on vs off ==");
+    use smartdiff_sched::config::{BackendChoice, SchedulerConfig};
+    use smartdiff_sched::data::io::{write_csv, CsvFileSource};
+    use smartdiff_sched::sched::scheduler::run_job;
+    let pf_rows = 150_000;
+    let (pfa, pfb, _) =
+        generate_pair(&GenSpec { rows: pf_rows, seed: 17, ..GenSpec::default() });
+    let dir = std::env::temp_dir();
+    let pa_path = dir.join(format!("micro_hotpath_pf_a_{}.csv", std::process::id()));
+    let pb_path = dir.join(format!("micro_hotpath_pf_b_{}.csv", std::process::id()));
+    write_csv(&pfa, &pa_path).expect("write csv A");
+    write_csv(&pfb, &pb_path).expect("write csv B");
+    let mut pf_cfg = SchedulerConfig::default();
+    pf_cfg.backend = BackendChoice::DaskLike; // the file-backed chunked path
+    pf_cfg.caps.mem_cap_bytes = 24 * 1024 * 1024; // small grant => many ranges
+    pf_cfg.caps.cpu_cap = 2;
+    let run_file_diff = |prefetch: bool| {
+        let mut cfg = pf_cfg.clone();
+        cfg.prefetch = prefetch;
+        let a = CsvFileSource::open(&pa_path, pfa.schema.clone()).expect("open A");
+        let b = CsvFileSource::open(&pb_path, pfb.schema.clone()).expect("open B");
+        let t0 = Instant::now();
+        let r = run_job(&cfg, Arc::new(a), Arc::new(b)).expect("file diff");
+        (t0.elapsed().as_secs_f64(), r)
+    };
+    let _ = run_file_diff(false); // warm the page cache once for fairness
+    let (t_pf_off, r_pf_off) = run_file_diff(false);
+    let (t_pf_on, r_pf_on) = run_file_diff(true);
+    assert_eq!(
+        r_pf_on.report.to_json(),
+        r_pf_off.report.to_json(),
+        "prefetch on/off must produce bit-identical reports"
+    );
+    println!(
+        "{:>10} {:>10} {:>9} {:>9} {:>9}",
+        "mode", "wall ms", "read ms", "stall ms", "overlap"
+    );
+    for (mode, t, r) in
+        [("off", t_pf_off, &r_pf_off), ("on", t_pf_on, &r_pf_on)]
+    {
+        let st = &r.stats.stages;
+        println!(
+            "{:>10} {:>10.1} {:>9.1} {:>9.1} {:>9.2}",
+            mode,
+            t * 1e3,
+            (st.read_ns + st.decode_ns) as f64 / 1e6,
+            st.stall_ns as f64 / 1e6,
+            st.overlap_ratio()
+        );
+    }
+    println!(
+        "prefetch speedup: {:.2}x (reports bit-identical)",
+        t_pf_off / t_pf_on
+    );
+    std::fs::remove_file(&pa_path).ok();
+    std::fs::remove_file(&pb_path).ok();
+
     // Machine-readable dump for the bench trajectory / CI artifact.
     let mut stages_json = String::from("[");
     for (i, s) in stages.iter().enumerate() {
@@ -317,12 +380,25 @@ fn main() {
         let _ = write!(skew_json, "{obj}");
     }
     skew_json.push(']');
+    let pf_stages = &r_pf_on.stats.stages;
+    let prefetch_json = ObjWriter::new()
+        .int("rows", pf_rows as i64)
+        .num("off_s", t_pf_off)
+        .num("on_s", t_pf_on)
+        .num("speedup", t_pf_off / t_pf_on)
+        .num("overlap_ratio", pf_stages.overlap_ratio())
+        .int("read_ns", pf_stages.read_ns as i64)
+        .int("decode_ns", pf_stages.decode_ns as i64)
+        .int("stall_ns", pf_stages.stall_ns as i64)
+        .int("sched_overhead_ns", r_pf_on.stats.sched_overhead_ns as i64)
+        .finish();
     let doc = ObjWriter::new()
         .str("bench", "micro_hotpath")
         .int("shard_rows", shard_rows as i64)
         .num("decode_s", t_decode)
         .raw("stages", &stages_json)
         .raw("skew", &skew_json)
+        .raw("prefetch", &prefetch_json)
         .finish();
     let path = std::env::var("MICRO_HOTPATH_JSON")
         .unwrap_or_else(|_| "micro_hotpath.json".into());

@@ -114,6 +114,14 @@ impl JobBuilder {
         self.cfg.engine.artifact_dir = dir.into();
         self
     }
+    /// Double-buffered shard prefetch: overlap the next range's
+    /// read+decode with the current range's Δ compute (default on).
+    /// Staged bytes are charged against the memory grant before the
+    /// read starts, so the Eq. 4 envelope is preserved either way.
+    pub fn prefetch(mut self, on: bool) -> Self {
+        self.cfg.prefetch = on;
+        self
+    }
 
     // --- comparator tolerances ---
 
@@ -225,6 +233,7 @@ mod tests {
             .delta_path(DeltaPath::Native)
             .atol(1e-6)
             .b_min(100)
+            .prefetch(false)
             .telemetry("x.jsonl")
             .seed(9)
             .build()
@@ -233,6 +242,7 @@ mod tests {
         assert_eq!(cfg.backend, BackendChoice::InMem);
         assert_eq!(cfg.engine.atol, 1e-6);
         assert_eq!(cfg.policy.b_min, 100);
+        assert!(!cfg.prefetch);
         assert_eq!(cfg.telemetry_path.as_deref(), Some("x.jsonl"));
         assert_eq!(cfg.seed, 9);
         assert_eq!(job.rows(), 100);

@@ -152,6 +152,10 @@ pub struct JobProgress {
     /// Accounted job RSS right now (base tables + live batch buffers +
     /// idle per-worker scratch reservations).
     pub rss_bytes: u64,
+    /// Bytes resident in prefetch staging slots right now. Already
+    /// charged inside `rss_bytes` (staged reads are grant-charged before
+    /// the bytes land); broken out so overlap is observable.
+    pub staged_bytes: u64,
     /// Peak accounted RSS so far.
     pub peak_rss_bytes: u64,
     /// Applied (b, k) changes so far.

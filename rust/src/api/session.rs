@@ -637,13 +637,19 @@ fn execute_admitted(
     let k0 = (cfg.caps.cpu_cap / 4).max(cfg.policy.k_min);
     let mut backend: Box<dyn Backend> = match choice {
         BackendChoice::InMem => {
-            Box::new(InMemBackend::new(ctx, k0, cfg.caps.cpu_cap))
+            Box::new(InMemBackend::new(ctx, k0, cfg.caps.cpu_cap, cfg.prefetch))
         }
         BackendChoice::DaskLike => {
             // Sub-chunk so one task's decode buffer is ~64 MB at Ŵ.
             let chunk = ((64.0e6 / profile.w_hat.max(1.0)) as usize)
                 .clamp(4_096, 1_000_000);
-            Box::new(DaskLikeBackend::new(ctx, k0, cfg.caps.cpu_cap, chunk))
+            Box::new(DaskLikeBackend::new(
+                ctx,
+                k0,
+                cfg.caps.cpu_cap,
+                chunk,
+                cfg.prefetch,
+            ))
         }
         BackendChoice::Sim | BackendChoice::Auto => unreachable!(),
     };

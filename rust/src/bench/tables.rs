@@ -266,10 +266,14 @@ pub fn table2(m: &Matrix) -> String {
     out
 }
 
-/// Table III: throughput (K rows/s) + reconfigs/job.
+/// Table III: throughput (K rows/s) + reconfigs/job, plus the measured
+/// control-loop overhead per job (the scheduler half of the
+/// overhead/useful-work decomposition — ms of drive-loop time outside
+/// `wait_any`).
 pub fn table3(m: &Matrix) -> String {
     let mut t = Table::new(&[
         "Workload", "Fixed", "Heur.", "Adaptive", "Reconfigs", "OOMs",
+        "Sched ms",
     ]);
     for w in &m.rows {
         let (fm, _) = agg(w.fixed_median(), |s| s.throughput_rows_per_s / 1e3);
@@ -277,6 +281,7 @@ pub fn table3(m: &Matrix) -> String {
         let (am, _) = agg(&w.adaptive, |s| s.throughput_rows_per_s / 1e3);
         let (rc, _) = agg(&w.adaptive, |s| s.reconfigs as f64);
         let ooms: u64 = w.adaptive.iter().map(|s| s.ooms).sum();
+        let (so, _) = agg(&w.adaptive, |s| s.sched_overhead_ns as f64 / 1e6);
         t.row(vec![
             w.name.to_string(),
             format!("{fm:.1}"),
@@ -284,10 +289,12 @@ pub fn table3(m: &Matrix) -> String {
             format!("{am:.1}"),
             format!("{rc:.0}"),
             format!("{ooms}"),
+            format!("{so:.1}"),
         ]);
     }
     let mut out = String::from(
-        "Table III — throughput (K rows/s) and stability (reconfigs/job)\n",
+        "Table III — throughput (K rows/s), stability (reconfigs/job), \
+         control-loop overhead (ms/job)\n",
     );
     out.push_str(&t.render());
     out.push_str("\npaper reference (Fixed / Heur. / Adaptive, reconfigs):\n");

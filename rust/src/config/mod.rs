@@ -187,6 +187,11 @@ pub struct SchedulerConfig {
     pub backend: BackendChoice,
     pub engine: EngineConfig,
     pub seed: u64,
+    /// Double-buffered shard prefetch: stage the next range's read +
+    /// decode while the current one diffs. Staged bytes are charged to
+    /// the memory grant before the read starts, so the Eq. 4 envelope
+    /// still holds. Off = fully synchronous per-range execution.
+    pub prefetch: bool,
     /// Telemetry output (JSON lines); None = disabled.
     pub telemetry_path: Option<String>,
     /// Pre-flight sample: min(1e6 rows, 1% of job) — paper §III.
@@ -203,6 +208,7 @@ impl Default for SchedulerConfig {
             backend: BackendChoice::Auto,
             engine: EngineConfig::default(),
             seed: 0,
+            prefetch: true,
             telemetry_path: None,
             preflight_max_rows: 1_000_000,
             preflight_fraction: 0.01,
@@ -317,6 +323,11 @@ fn apply_key(
     let p = &mut cfg.policy;
     match key {
         "seed" => cfg.seed = i(val)? as u64,
+        "prefetch" => {
+            cfg.prefetch = val
+                .as_bool()
+                .ok_or_else(|| SchedError::invalid(key, "expected bool"))?
+        }
         "telemetry" => {
             cfg.telemetry_path = Some(
                 val.as_str()
@@ -417,6 +428,7 @@ mod tests {
         assert_eq!(c.policy.rho_smooth, 0.2);
         assert_eq!(c.caps.mem_cap_bytes, 64 * bytes::GB);
         assert_eq!(c.caps.cpu_cap, 32);
+        assert!(c.prefetch, "prefetch defaults on");
         c.validate().unwrap();
     }
 
@@ -426,6 +438,7 @@ mod tests {
             r#"
             seed = 9
             backend = "dask"
+            prefetch = false
             [caps]
             mem_cap = "32GB"
             cpu_cap = 16
@@ -440,6 +453,7 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.seed, 9);
         assert_eq!(cfg.backend, BackendChoice::DaskLike);
+        assert!(!cfg.prefetch);
         assert_eq!(cfg.caps.mem_cap_bytes, 32 * bytes::GB);
         assert_eq!(cfg.caps.cpu_cap, 16);
         assert_eq!(cfg.policy.eta, 0.8);

@@ -457,8 +457,28 @@ pub fn process_shard_with(
     exec: &Arc<dyn NumericDeltaExec>,
     scratch: &mut ShardScratch,
 ) -> Result<(BatchOutcome, ShardMemStats), String> {
+    let (outcome, mem, _align_ns, _diff_ns) =
+        process_shard_timed(shard_id, a_tbl, b_tbl, plan, exec, scratch)?;
+    Ok((outcome, mem))
+}
+
+/// [`process_shard_with`] plus the align/diff wall-time split (ns) for
+/// stage-level telemetry: the first element times `align_rows_into`,
+/// the second everything after it (numeric batch + native passes +
+/// outcome assembly).
+pub fn process_shard_timed(
+    shard_id: u64,
+    a_tbl: &Table,
+    b_tbl: &Table,
+    plan: &JobPlan,
+    exec: &Arc<dyn NumericDeltaExec>,
+    scratch: &mut ShardScratch,
+) -> Result<(BatchOutcome, ShardMemStats, u64, u64), String> {
     let ShardScratch { align, alignment, batch, diff, row_diff } = scratch;
+    let t_align = std::time::Instant::now();
     align_rows_into(a_tbl, b_tbl, &plan.aligned, align, alignment)?;
+    let align_ns = t_align.elapsed().as_nanos() as u64;
+    let t_diff = std::time::Instant::now();
     let al: &Alignment = alignment;
     let nrows = al.nrows();
     let ncols = plan.aligned.pairs.len();
@@ -565,7 +585,7 @@ pub fn process_shard_with(
         align_bytes: al.align_state_bytes,
         scratch_bytes,
     };
-    Ok((outcome, mem))
+    Ok((outcome, mem, align_ns, t_diff.elapsed().as_nanos() as u64))
 }
 
 /// Cell-at-a-time reference Δ (the pre-columnar implementation): per-row

@@ -122,6 +122,44 @@ impl std::error::Error for BatchError {
     }
 }
 
+/// Per-shard pipeline-stage wall times (ns) for the paper's overlap
+/// telemetry: how long the shard spent transferring bytes, decoding
+/// them, aligning rows, and diffing — plus `stall_ns`, the time the
+/// *worker* was blocked waiting for input (with prefetch off this is
+/// the whole read+decode; with prefetch on it is only the residual wait
+/// on the staged slot, so `stall < read + decode` is the signature of
+/// real overlap).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StageNanos {
+    pub read_ns: u64,
+    pub decode_ns: u64,
+    pub align_ns: u64,
+    pub diff_ns: u64,
+    pub stall_ns: u64,
+}
+
+impl StageNanos {
+    /// Accumulate another shard's (or chunk's) stage times.
+    pub fn add(&mut self, other: &StageNanos) {
+        self.read_ns += other.read_ns;
+        self.decode_ns += other.decode_ns;
+        self.align_ns += other.align_ns;
+        self.diff_ns += other.diff_ns;
+        self.stall_ns += other.stall_ns;
+    }
+
+    /// Fraction of read+decode time hidden behind compute, in [0, 1]:
+    /// `1 − stall/(read+decode)`. 0 when nothing was prefetched (the
+    /// worker stalled for every transferred byte) or nothing was read.
+    pub fn overlap_ratio(&self) -> f64 {
+        let io = self.read_ns + self.decode_ns;
+        if io == 0 {
+            return 0.0;
+        }
+        (1.0 - self.stall_ns as f64 / io as f64).clamp(0.0, 1.0)
+    }
+}
+
 /// Completion record for one batch (the paper's per-batch telemetry:
 /// timestamps, RSS, CPU, I/O, queue depth at completion).
 #[derive(Debug, Clone)]
@@ -138,6 +176,9 @@ pub struct BatchReport {
     pub worker_rss_peak: u64,
     /// Bytes read for this batch.
     pub io_bytes: u64,
+    /// Pipeline-stage wall times for this batch (all zero for backends
+    /// that don't instrument stages, e.g. the simulator).
+    pub stages: StageNanos,
 }
 
 impl BatchReport {
@@ -229,6 +270,18 @@ pub trait Backend {
     fn utilization_sample(&mut self, cpu_cap: usize) -> f64;
     /// Cooperatively cancel a shard attempt (straggler speculation).
     fn cancel(&mut self, shard_id: u64);
+    /// Bytes currently held in staged (prefetched, not yet consumed)
+    /// buffers. Already included in `current_rss` — exposed separately
+    /// for telemetry/progress, never added on top.
+    fn staged_bytes(&self) -> u64 {
+        0
+    }
+    /// Whether this backend runs the double-buffered prefetch pipeline
+    /// (the scheduler prunes batch sizes against 2·b resident shards
+    /// per worker when it does).
+    fn prefetch_active(&self) -> bool {
+        false
+    }
 }
 
 #[cfg(test)]
@@ -256,11 +309,37 @@ mod tests {
             mem: ShardMemStats::default(),
             worker_rss_peak: 0,
             io_bytes: 0,
+            stages: StageNanos::default(),
         };
         assert_eq!(r.latency(), 2.0);
         assert_eq!(r.exec_time(), 1.5);
         assert!(!r.is_oom());
         assert_eq!(r.shard.rows(), 12);
+    }
+
+    #[test]
+    fn stage_overlap_ratio() {
+        // No prefetch: the worker stalls for the full read+decode.
+        let serial = StageNanos {
+            read_ns: 600,
+            decode_ns: 400,
+            align_ns: 100,
+            diff_ns: 900,
+            stall_ns: 1_000,
+        };
+        assert_eq!(serial.overlap_ratio(), 0.0);
+        // Perfect prefetch: zero stall.
+        let hidden = StageNanos { stall_ns: 0, ..serial };
+        assert_eq!(hidden.overlap_ratio(), 1.0);
+        // Partial: 25% of the I/O time still stalled the worker.
+        let partial = StageNanos { stall_ns: 250, ..serial };
+        assert!((partial.overlap_ratio() - 0.75).abs() < 1e-12);
+        // Degenerate: nothing read.
+        assert_eq!(StageNanos::default().overlap_ratio(), 0.0);
+        let mut sum = serial;
+        sum.add(&hidden);
+        assert_eq!(sum.read_ns, 1_200);
+        assert_eq!(sum.stall_ns, 1_000);
     }
 
     #[test]

@@ -47,6 +47,7 @@ impl DaskLikeBackend {
         initial_workers: usize,
         max_workers: usize,
         chunk_rows: usize,
+        prefetch: bool,
     ) -> Self {
         DaskLikeBackend {
             pool: Pool::new(
@@ -54,6 +55,7 @@ impl DaskLikeBackend {
                 PoolProfile {
                     chunk_rows: Some(chunk_rows.max(1)),
                     per_worker_memory: true,
+                    prefetch,
                 },
                 initial_workers,
                 max_workers,
@@ -125,5 +127,11 @@ impl Backend for DaskLikeBackend {
     }
     fn cancel(&mut self, shard_id: u64) {
         self.pool.cancel(shard_id);
+    }
+    fn staged_bytes(&self) -> u64 {
+        self.pool.staged_bytes()
+    }
+    fn prefetch_active(&self) -> bool {
+        self.pool.prefetch_active()
     }
 }

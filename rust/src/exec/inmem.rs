@@ -20,11 +20,20 @@ pub struct InMemBackend {
 }
 
 impl InMemBackend {
-    pub fn new(ctx: Arc<JobContext>, initial_workers: usize, max_workers: usize) -> Self {
+    pub fn new(
+        ctx: Arc<JobContext>,
+        initial_workers: usize,
+        max_workers: usize,
+        prefetch: bool,
+    ) -> Self {
         InMemBackend {
             pool: Pool::new(
                 ctx,
-                PoolProfile { chunk_rows: None, per_worker_memory: false },
+                PoolProfile {
+                    chunk_rows: None,
+                    per_worker_memory: false,
+                    prefetch,
+                },
                 initial_workers,
                 max_workers,
             ),
@@ -74,5 +83,11 @@ impl Backend for InMemBackend {
     }
     fn cancel(&mut self, shard_id: u64) {
         self.pool.cancel(shard_id);
+    }
+    fn staged_bytes(&self) -> u64 {
+        self.pool.staged_bytes()
+    }
+    fn prefetch_active(&self) -> bool {
+        self.pool.prefetch_active()
     }
 }

@@ -13,9 +13,12 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+use crate::data::io::ReadScratch;
 use crate::exec::backend::{BatchReport, JobContext, ShardSpec};
 use crate::engine::delta::ShardScratch;
-use crate::exec::worker::{execute_shard_with, CancelSet, MemTracker};
+use crate::exec::worker::{
+    execute_shard_with, first_range, CancelSet, MemTracker, Prefetcher,
+};
 use crate::util::mono_secs;
 
 /// Backend-specific execution profile.
@@ -26,6 +29,10 @@ pub struct PoolProfile {
     pub chunk_rows: Option<usize>,
     /// Shared tracker (inmem) or per-worker arenas (dask-like).
     pub per_worker_memory: bool,
+    /// Double-buffered prefetch: each worker gets a companion thread
+    /// staging the next range while the current one computes. Staged
+    /// bytes are charged to the worker's ledger before the read starts.
+    pub prefetch: bool,
 }
 
 struct Queued {
@@ -60,6 +67,11 @@ struct Shared {
     /// workers are idle (and during decode+Δ, which the batch ledger
     /// only accounts post-hoc).
     idle_scratch: Vec<AtomicU64>,
+    /// Bytes currently resident in prefetch staging slots across all
+    /// workers. Telemetry-only gauge: staged bytes are charged to the
+    /// regular batch ledgers (shared tracker / per-worker arenas), so
+    /// adding this into `current_rss()` would double-count.
+    staged_gauge: Arc<AtomicU64>,
     cancel: Arc<CancelSet>,
     report_tx: Mutex<Sender<BatchReport>>,
 }
@@ -105,6 +117,7 @@ impl Pool {
             shared_tracker,
             worker_trackers,
             idle_scratch: (0..max_workers).map(|_| AtomicU64::new(0)).collect(),
+            staged_gauge: Arc::new(AtomicU64::new(0)),
             cancel: CancelSet::new(),
             report_tx: Mutex::new(tx),
         });
@@ -241,6 +254,15 @@ impl Pool {
     pub fn cancel(&self, shard_id: u64) {
         self.shared.cancel.cancel(shard_id);
     }
+    /// Bytes currently held in prefetch staging slots (already charged
+    /// to the batch ledgers; exposed for telemetry, not accounting).
+    pub fn staged_bytes(&self) -> u64 {
+        self.shared.staged_gauge.load(Ordering::Relaxed)
+    }
+    /// Whether this pool runs the double-buffered prefetch pipeline.
+    pub fn prefetch_active(&self) -> bool {
+        self.shared.profile.prefetch
+    }
 
     /// Job-level accounted RSS: base tables + live batch buffers + idle
     /// per-worker scratch reservations (warmed `ShardScratch` that stays
@@ -286,6 +308,10 @@ fn worker_loop(id: usize, shared: Arc<Shared>) {
     // worker executes: after the first few shards its buffers reach
     // steady-state capacity and shard execution stops allocating.
     let mut scratch = ShardScratch::default();
+    let mut read_scratch = ReadScratch::default();
+    // Companion prefetch thread (when the profile enables it), spawned
+    // lazily on the first task so it binds to this worker's ledger.
+    let mut prefetcher: Option<Prefetcher> = None;
     loop {
         // Retire if we are above the target worker count and idle.
         let task = {
@@ -309,50 +335,95 @@ fn worker_loop(id: usize, shared: Arc<Shared>) {
         };
         let Some(task) = task else { continue };
         shared.queue_len.fetch_sub(1, Ordering::Relaxed);
+        let mut task = task;
 
-        let started_at = mono_secs();
-        let t0 = Instant::now();
-        let tracker = if shared.profile.per_worker_memory {
-            &shared.worker_trackers[id]
-        } else {
-            &shared.shared_tracker
-        };
-        // The reservation stays in place WHILE the batch executes: the
-        // warmed scratch is resident throughout, and the batch ledger
-        // only accounts it post-hoc (after the Δ returns). Keeping the
-        // reservation avoids under-reporting during decode+Δ; the brief
-        // overlap with the post-hoc transient guard at batch tail
-        // over-counts conservatively.
-        let res = execute_shard_with(
-            &shared.ctx,
-            task.spec,
-            tracker,
-            &shared.cancel,
-            shared.profile.chunk_rows,
-            &mut scratch,
-        );
-        shared.idle_scratch[id]
-            .store(scratch.heap_bytes() as u64, Ordering::Relaxed);
-        shared
-            .busy_ns
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        let finished_at = mono_secs();
+        // Inner loop: execute the claimed task, and (with prefetch on)
+        // claim the next task BEFORE computing so its first range can be
+        // staged while this one diffs — the cross-shard half of the
+        // double buffer. Inflight was counted at submit, so a claimed
+        // next task keeps the pool visibly busy until its report lands.
+        loop {
+            let started_at = mono_secs();
+            let t0 = Instant::now();
+            let tracker = if shared.profile.per_worker_memory {
+                &shared.worker_trackers[id]
+            } else {
+                &shared.shared_tracker
+            };
+            if shared.profile.prefetch && prefetcher.is_none() {
+                prefetcher = Some(Prefetcher::spawn(
+                    Arc::clone(&shared.ctx),
+                    Arc::clone(tracker),
+                    Arc::clone(&shared.staged_gauge),
+                ));
+            }
+            let next_task = if shared.profile.prefetch {
+                let claimed = {
+                    let mut queue = shared.queue.lock().unwrap();
+                    if shared.shutdown.load(Ordering::Relaxed) == 0
+                        && id < shared.target_workers.load(Ordering::Relaxed)
+                    {
+                        queue.pop_front()
+                    } else {
+                        None
+                    }
+                };
+                if claimed.is_some() {
+                    shared.queue_len.fetch_sub(1, Ordering::Relaxed);
+                }
+                claimed
+            } else {
+                None
+            };
+            let next_hint = next_task.as_ref().map(|t| {
+                first_range(&shared.ctx, &t.spec, shared.profile.chunk_rows)
+            });
+            // The scratch reservation stays in place WHILE the batch
+            // executes: the warmed scratch is resident throughout, and
+            // the batch ledger only accounts it post-hoc (after the Δ
+            // returns). Keeping the reservation avoids under-reporting
+            // during decode+Δ; the brief overlap with the post-hoc
+            // transient guard at batch tail over-counts conservatively.
+            let res = execute_shard_with(
+                &shared.ctx,
+                task.spec,
+                tracker,
+                &shared.cancel,
+                shared.profile.chunk_rows,
+                &mut scratch,
+                &mut read_scratch,
+                prefetcher.as_ref(),
+                next_hint,
+            );
+            shared.idle_scratch[id]
+                .store(scratch.heap_bytes() as u64, Ordering::Relaxed);
+            shared
+                .busy_ns
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            let finished_at = mono_secs();
 
-        let report = BatchReport {
-            shard: task.spec,
-            worker_id: id,
-            submitted_at: task.submitted_at,
-            started_at,
-            finished_at,
-            result: res.result,
-            mem: res.mem,
-            worker_rss_peak: res.mem.peak() as u64,
-            io_bytes: res.io_bytes,
-        };
-        // Send BEFORE decrementing inflight: the scheduler treats
-        // "inflight == 0" as "every report is visible in the channel".
-        let _ = shared.report_tx.lock().unwrap().send(report);
-        shared.inflight.fetch_sub(1, Ordering::Relaxed);
+            let report = BatchReport {
+                shard: task.spec,
+                worker_id: id,
+                submitted_at: task.submitted_at,
+                started_at,
+                finished_at,
+                result: res.result,
+                mem: res.mem,
+                worker_rss_peak: res.mem.peak() as u64,
+                io_bytes: res.io_bytes,
+                stages: res.stages,
+            };
+            // Send BEFORE decrementing inflight: the scheduler treats
+            // "inflight == 0" as "every report is visible in the channel".
+            let _ = shared.report_tx.lock().unwrap().send(report);
+            shared.inflight.fetch_sub(1, Ordering::Relaxed);
+
+            match next_task {
+                Some(t) => task = t,
+                None => break,
+            }
+        }
     }
 }
 
@@ -386,7 +457,11 @@ mod tests {
         let ctx = mk_ctx(2_000);
         let mut pool = Pool::new(
             Arc::clone(&ctx),
-            PoolProfile { chunk_rows: None, per_worker_memory: false },
+            PoolProfile {
+                chunk_rows: None,
+                per_worker_memory: false,
+                prefetch: true,
+            },
             2,
             4,
         );
@@ -430,7 +505,11 @@ mod tests {
         let ctx = mk_ctx(2_000);
         let mut pool = Pool::new(
             Arc::clone(&ctx),
-            PoolProfile { chunk_rows: None, per_worker_memory: false },
+            PoolProfile {
+                chunk_rows: None,
+                per_worker_memory: false,
+                prefetch: false,
+            },
             1,
             2,
         );
@@ -462,7 +541,11 @@ mod tests {
         let ctx = mk_ctx(500);
         let mut pool = Pool::new(
             Arc::clone(&ctx),
-            PoolProfile { chunk_rows: Some(100), per_worker_memory: true },
+            PoolProfile {
+                chunk_rows: Some(100),
+                per_worker_memory: true,
+                prefetch: true,
+            },
             1,
             4,
         );

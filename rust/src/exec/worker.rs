@@ -1,15 +1,34 @@
 //! Worker-side shard execution shared by the real backends: metered
 //! decode → row-align → Δ → outcome, with accounting-based memory
-//! control and cooperative cancellation.
+//! control, cooperative cancellation, and an optional double-buffered
+//! prefetch pipeline.
+//!
+//! # Prefetch pipeline
+//!
+//! Each pool worker may own a [`Prefetcher`]: a companion thread with a
+//! depth-1 staged slot. While the worker aligns/diffs range *j*, the
+//! companion reads and decodes range *j+1* into the slot; the worker's
+//! `stall_ns` then shrinks from the full read+decode time to the
+//! residual wait on the slot. Staged bytes are charged to the worker's
+//! [`MemTracker`] **before** the read starts (an estimate from
+//! [`TableSource::decoded_bytes_hint`], trued up via
+//! [`MemGuard::adjust`] once the tables land), so accounted RSS — and
+//! therefore the Eq. 4 envelope and the elastic-grant shrink path —
+//! always covers in-flight prefetch. Staging is strictly opportunistic:
+//! any failure (charge rejected, read error, slot superseded) falls
+//! back to the synchronous read path, so prefetch can never introduce
+//! an error the serial execution wouldn't produce.
 
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
-use crate::engine::delta::{process_shard_with, ShardMemStats, ShardScratch};
+use crate::data::io::ReadScratch;
+use crate::data::table::Table;
+use crate::engine::delta::{process_shard_timed, ShardMemStats, ShardScratch};
 use crate::engine::merge::Merger;
 use crate::engine::verdict::BatchOutcome;
-use crate::exec::backend::{BatchError, JobContext, ShardSpec};
+use crate::exec::backend::{BatchError, JobContext, ShardSpec, StageNanos};
 use crate::exec::partition::{occ_cut_at, upper_bound_key_occ_in};
 
 /// Shared accounting for a memory pool (job-wide for inmem; per-worker
@@ -65,6 +84,35 @@ pub struct MemGuard {
     bytes: u64,
 }
 
+impl MemGuard {
+    /// Re-size the accounted charge in place (the prefetcher charges an
+    /// estimate before reading, then trues it up to the decoded size).
+    /// A grow is checked against the cap exactly like `alloc` — on
+    /// Err(Oom) the original charge stays in force; a shrink always
+    /// succeeds.
+    pub fn adjust(&mut self, new_bytes: u64) -> Result<(), BatchError> {
+        if new_bytes > self.bytes {
+            let grow = new_bytes - self.bytes;
+            let prev = self.tracker.current.fetch_add(grow, Ordering::Relaxed);
+            let now = prev + grow;
+            if now > self.tracker.cap.load(Ordering::Relaxed) {
+                self.tracker.current.fetch_sub(grow, Ordering::Relaxed);
+                return Err(BatchError::Oom {
+                    needed_bytes: now,
+                    cap_bytes: self.tracker.cap.load(Ordering::Relaxed),
+                });
+            }
+            self.tracker.peak.fetch_max(now, Ordering::Relaxed);
+        } else {
+            self.tracker
+                .current
+                .fetch_sub(self.bytes - new_bytes, Ordering::Relaxed);
+        }
+        self.bytes = new_bytes;
+        Ok(())
+    }
+}
+
 impl Drop for MemGuard {
     fn drop(&mut self) {
         self.tracker.current.fetch_sub(self.bytes, Ordering::Relaxed);
@@ -92,50 +140,383 @@ impl CancelSet {
     }
 }
 
+/// One key-aligned range pair — the unit the prefetch pipeline stages
+/// (a whole shard for the inmem backend, a sub-chunk for dasklike).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RangeSpec {
+    pub a_off: usize,
+    pub a_len: usize,
+    pub b_off: usize,
+    pub b_len: usize,
+}
+
+/// Telemetry hold on the pool-level staged-bytes gauge: adds on
+/// construction, subtracts on drop, so the gauge tracks exactly the
+/// bytes sitting in Ready slots.
+struct GaugeHold {
+    gauge: Arc<AtomicU64>,
+    bytes: u64,
+}
+
+impl GaugeHold {
+    fn new(gauge: Arc<AtomicU64>, bytes: u64) -> Self {
+        gauge.fetch_add(bytes, Ordering::Relaxed);
+        GaugeHold { gauge, bytes }
+    }
+}
+
+impl Drop for GaugeHold {
+    fn drop(&mut self) {
+        self.gauge.fetch_sub(self.bytes, Ordering::Relaxed);
+    }
+}
+
+/// A decoded range pair staged by the prefetcher. Holds the tracker
+/// charge (`guard`) for its decode buffers until consumed or dropped.
+struct StagedRange {
+    range: RangeSpec,
+    a_tbl: Table,
+    b_tbl: Table,
+    guard: MemGuard,
+    /// Decoded heap bytes (the batch's `io_bytes` metric).
+    io_bytes: u64,
+    read_ns: u64,
+    decode_ns: u64,
+    _hold: GaugeHold,
+}
+
+/// Depth-1 staged-slot state machine shared between a worker and its
+/// companion prefetch thread.
+enum SlotState {
+    Idle,
+    /// Worker asked for a range; companion hasn't picked it up yet.
+    Requested(RangeSpec),
+    /// Companion is reading/decoding this range right now.
+    Loading(RangeSpec),
+    /// Staged and charged; waiting to be consumed.
+    Ready(Box<StagedRange>),
+    /// Staging failed (charge rejected or read error): the worker must
+    /// fall back to the synchronous path, which reproduces the error
+    /// typed — or succeeds, if the failure was a transient charge race.
+    Failed(RangeSpec),
+    Shutdown,
+}
+
+struct SlotSync {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+/// Per-worker double-buffer prefetcher: one companion thread, one
+/// staged slot. See the module docs for the accounting rules.
+pub struct Prefetcher {
+    slot: Arc<SlotSync>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    /// Spawn the companion thread. `tracker` must be the same ledger the
+    /// owning worker executes against (staged bytes count toward the
+    /// same cap); `staged_gauge` is the pool-level telemetry gauge.
+    pub fn spawn(
+        ctx: Arc<JobContext>,
+        tracker: Arc<MemTracker>,
+        staged_gauge: Arc<AtomicU64>,
+    ) -> Prefetcher {
+        let slot = Arc::new(SlotSync {
+            state: Mutex::new(SlotState::Idle),
+            cv: Condvar::new(),
+        });
+        let thread_slot = Arc::clone(&slot);
+        let handle = std::thread::Builder::new()
+            .name("sdiff-prefetch".into())
+            .spawn(move || prefetch_loop(ctx, tracker, thread_slot, staged_gauge))
+            .ok();
+        if handle.is_none() {
+            // No companion thread: park the slot in Shutdown so
+            // request/consume/drain all no-op instead of waiting on a
+            // state transition that will never come.
+            *slot.state.lock().unwrap() = SlotState::Shutdown;
+        }
+        Prefetcher { slot, handle }
+    }
+
+    /// Ask the companion to stage `range`. Supersedes any stale slot
+    /// content; a no-op if `range` is already staged or in flight.
+    pub fn request(&self, range: RangeSpec) {
+        {
+            let mut st = self.slot.state.lock().unwrap();
+            match &*st {
+                SlotState::Shutdown => return,
+                SlotState::Ready(s) if s.range == range => return,
+                SlotState::Requested(r) | SlotState::Loading(r)
+                    if *r == range =>
+                {
+                    return
+                }
+                // Overwriting Loading(other) is safe: the companion
+                // re-checks the state after its read and drops a result
+                // the slot no longer wants.
+                _ => *st = SlotState::Requested(range),
+            }
+        }
+        self.slot.cv.notify_all();
+    }
+
+    /// Take `range` out of the slot, waiting out an in-flight load of
+    /// it. Returns the staged pair (None on miss/failure — caller reads
+    /// synchronously) and the nanoseconds this call blocked (the
+    /// worker's residual `stall_ns` for a prefetched range).
+    fn consume(&self, range: &RangeSpec) -> (Option<Box<StagedRange>>, u64) {
+        let t0 = std::time::Instant::now();
+        let mut st = self.slot.state.lock().unwrap();
+        loop {
+            match &*st {
+                SlotState::Requested(r) | SlotState::Loading(r)
+                    if r == range =>
+                {
+                    st = self.slot.cv.wait(st).unwrap();
+                }
+                SlotState::Ready(s) if s.range == *range => {
+                    let SlotState::Ready(s) =
+                        std::mem::replace(&mut *st, SlotState::Idle)
+                    else {
+                        unreachable!()
+                    };
+                    drop(st);
+                    self.slot.cv.notify_all();
+                    return (Some(s), t0.elapsed().as_nanos() as u64);
+                }
+                SlotState::Shutdown => {
+                    return (None, t0.elapsed().as_nanos() as u64);
+                }
+                // Stale content (wrong range staged/failed/in flight) or
+                // an idle slot: clear and miss. A load of another range
+                // still running will see the state change back to Idle
+                // after its read and drop its result (and charge).
+                _ => {
+                    *st = SlotState::Idle;
+                    drop(st);
+                    self.slot.cv.notify_all();
+                    return (None, t0.elapsed().as_nanos() as u64);
+                }
+            }
+        }
+    }
+
+    /// Empty the slot, waiting out any in-flight load, and release its
+    /// charge. After this returns the prefetcher holds zero accounted
+    /// bytes (the grant-shrink / OOM-retry path).
+    pub fn drain(&self) {
+        let mut st = self.slot.state.lock().unwrap();
+        loop {
+            match &*st {
+                SlotState::Loading(_) => {
+                    st = self.slot.cv.wait(st).unwrap();
+                }
+                SlotState::Shutdown => return,
+                _ => {
+                    *st = SlotState::Idle;
+                    drop(st);
+                    self.slot.cv.notify_all();
+                    return;
+                }
+            }
+        }
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        {
+            let mut st = self.slot.state.lock().unwrap();
+            *st = SlotState::Shutdown;
+        }
+        self.slot.cv.notify_all();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Companion-thread body: wait for a request, stage it, publish.
+fn prefetch_loop(
+    ctx: Arc<JobContext>,
+    tracker: Arc<MemTracker>,
+    slot: Arc<SlotSync>,
+    gauge: Arc<AtomicU64>,
+) {
+    let mut scratch = ReadScratch::default();
+    loop {
+        let range = {
+            let mut st = slot.state.lock().unwrap();
+            loop {
+                match &*st {
+                    SlotState::Shutdown => return,
+                    SlotState::Requested(r) => {
+                        let r = *r;
+                        *st = SlotState::Loading(r);
+                        break r;
+                    }
+                    _ => st = slot.cv.wait(st).unwrap(),
+                }
+            }
+        };
+        let staged = stage(&ctx, &tracker, range, &mut scratch, &gauge);
+        {
+            let mut st = slot.state.lock().unwrap();
+            match &*st {
+                SlotState::Shutdown => return,
+                // Only publish if the slot still wants this range; a
+                // supersede/drain while we read means the result (and
+                // its charge) is dropped right here.
+                SlotState::Loading(r) if *r == range => {
+                    *st = match staged {
+                        Some(s) => SlotState::Ready(s),
+                        None => SlotState::Failed(range),
+                    };
+                }
+                _ => {}
+            }
+        }
+        slot.cv.notify_all();
+    }
+}
+
+/// Read+decode one range with charge-before-read accounting. None on
+/// any failure — staging is opportunistic; the worker's synchronous
+/// path is the authority on errors.
+fn stage(
+    ctx: &JobContext,
+    tracker: &Arc<MemTracker>,
+    range: RangeSpec,
+    scratch: &mut ReadScratch,
+    gauge: &Arc<AtomicU64>,
+) -> Option<Box<StagedRange>> {
+    // Charge the estimate BEFORE the bytes land: a grant shrink or a
+    // busy ledger rejects the prefetch here, before any I/O.
+    let est = ctx.a.decoded_bytes_hint(range.a_off, range.a_len)
+        + ctx.b.decoded_bytes_hint(range.b_off, range.b_len);
+    let mut guard = tracker.alloc(est.max(1)).ok()?;
+    let a_tbl = ctx.a.read_range_with(range.a_off, range.a_len, scratch).ok()?;
+    let (mut read_ns, mut decode_ns) = (scratch.read_ns, scratch.decode_ns);
+    let b_tbl = ctx.b.read_range_with(range.b_off, range.b_len, scratch).ok()?;
+    read_ns += scratch.read_ns;
+    decode_ns += scratch.decode_ns;
+    // True the charge up to the decoded size (the estimate only had to
+    // be the right order of magnitude).
+    let actual = (a_tbl.heap_bytes() + b_tbl.heap_bytes()) as u64;
+    guard.adjust(actual.max(1)).ok()?;
+    Some(Box::new(StagedRange {
+        range,
+        a_tbl,
+        b_tbl,
+        guard,
+        io_bytes: actual,
+        read_ns,
+        decode_ns,
+        _hold: GaugeHold::new(Arc::clone(gauge), actual),
+    }))
+}
+
 /// Result of executing one shard on a worker.
 pub struct ShardExecResult {
     pub result: Result<BatchOutcome, BatchError>,
     pub mem: ShardMemStats,
     pub peak_bytes: u64,
     pub io_bytes: u64,
+    /// Summed pipeline-stage times over the shard's ranges.
+    pub stages: StageNanos,
 }
 
 /// Execute one key-aligned range pair with full accounting, reusing the
-/// caller's per-worker Δ scratch.
+/// caller's per-worker Δ scratch. When `prefetch` is set, the staged
+/// slot is consulted for this range, and `next` (if any) is requested
+/// into the slot before compute starts — that request-then-compute
+/// ordering is the pipeline overlap.
 #[allow(clippy::too_many_arguments)]
 fn execute_range(
     ctx: &JobContext,
     shard_id: u64,
-    a_off: usize,
-    a_len: usize,
-    b_off: usize,
-    b_len: usize,
+    range: RangeSpec,
     tracker: &Arc<MemTracker>,
     scratch: &mut ShardScratch,
-) -> Result<(BatchOutcome, ShardMemStats, u64), BatchError> {
-    // Decode (T_read + parse): buffers are accounted as soon as they
-    // exist; an estimate-first reservation would hide the real number.
-    // Read failures (malformed rows, short reads, transient I/O) are
-    // typed batch failures — the scheduler retries once, then fails the
-    // job with the cause chain — never worker panics.
-    let a_tbl = ctx.a.read_range(a_off, a_len).map_err(|e| {
-        BatchError::failed_with(
-            format!("read A rows {a_off}..{}", a_off + a_len),
-            e,
-        )
-    })?;
-    let b_tbl = ctx.b.read_range(b_off, b_len).map_err(|e| {
-        BatchError::failed_with(
-            format!("read B rows {b_off}..{}", b_off + b_len),
-            e,
-        )
-    })?;
-    let decode_bytes = (a_tbl.heap_bytes() + b_tbl.heap_bytes()) as u64;
-    let _decode_guard = tracker.alloc(decode_bytes)?;
+    read_scratch: &mut ReadScratch,
+    prefetch: Option<&Prefetcher>,
+    next: Option<RangeSpec>,
+) -> Result<(BatchOutcome, ShardMemStats, u64, StageNanos), BatchError> {
+    let RangeSpec { a_off, a_len, b_off, b_len } = range;
+    let mut stages = StageNanos::default();
+    let staged = prefetch.and_then(|p| {
+        let (s, wait_ns) = p.consume(&range);
+        // Residual wait on the in-flight load (0 for a slot that was
+        // already Ready, the full load time when compute finished first).
+        stages.stall_ns += wait_ns;
+        s
+    });
+    let (a_tbl, b_tbl, _decode_guard, decode_bytes) = match staged {
+        Some(s) => {
+            let StagedRange {
+                a_tbl,
+                b_tbl,
+                guard,
+                io_bytes,
+                read_ns,
+                decode_ns,
+                ..
+            } = *s;
+            stages.read_ns += read_ns;
+            stages.decode_ns += decode_ns;
+            (a_tbl, b_tbl, guard, io_bytes)
+        }
+        None => {
+            // Synchronous path (prefetch off, miss, or staging failed):
+            // the worker stalls for the whole read+decode. Buffers are
+            // accounted as soon as they exist; an estimate-first
+            // reservation would hide the real number. Read failures
+            // (malformed rows, short reads, transient I/O) are typed
+            // batch failures — the scheduler retries once, then fails
+            // the job with the cause chain — never worker panics.
+            let a_tbl =
+                ctx.a.read_range_with(a_off, a_len, read_scratch).map_err(
+                    |e| {
+                        BatchError::failed_with(
+                            format!("read A rows {a_off}..{}", a_off + a_len),
+                            e,
+                        )
+                    },
+                )?;
+            stages.read_ns += read_scratch.read_ns;
+            stages.decode_ns += read_scratch.decode_ns;
+            let b_tbl =
+                ctx.b.read_range_with(b_off, b_len, read_scratch).map_err(
+                    |e| {
+                        BatchError::failed_with(
+                            format!("read B rows {b_off}..{}", b_off + b_len),
+                            e,
+                        )
+                    },
+                )?;
+            stages.read_ns += read_scratch.read_ns;
+            stages.decode_ns += read_scratch.decode_ns;
+            stages.stall_ns += stages.read_ns + stages.decode_ns;
+            let decode_bytes = (a_tbl.heap_bytes() + b_tbl.heap_bytes()) as u64;
+            let guard = tracker.alloc(decode_bytes)?;
+            (a_tbl, b_tbl, guard, decode_bytes)
+        }
+    };
+    // Input for this range is in hand and the slot is free: kick off the
+    // next range's load so it overlaps the align+diff below.
+    if let (Some(p), Some(n)) = (prefetch, next) {
+        p.request(n);
+    }
 
-    let (outcome, mem) =
-        process_shard_with(shard_id, &a_tbl, &b_tbl, &ctx.plan, &ctx.exec, scratch)
-            .map_err(BatchError::failed)?;
+    let (outcome, mem, align_ns, diff_ns) = process_shard_timed(
+        shard_id, &a_tbl, &b_tbl, &ctx.plan, &ctx.exec, scratch,
+    )
+    .map_err(BatchError::failed)?;
+    stages.align_ns += align_ns;
+    stages.diff_ns += diff_ns;
     // Alignment state + Δ scratch live in the reusable per-worker
     // scratch; account them post-hoc against the peak for the window
     // where they coexist with the decode buffers. Between shards the
@@ -145,7 +526,7 @@ fn execute_range(
     // `engine::delta::ShardScratch`.
     let transient = (mem.align_bytes + mem.scratch_bytes) as u64;
     let _transient_guard = tracker.alloc(transient)?;
-    Ok((outcome, mem, decode_bytes))
+    Ok((outcome, mem, decode_bytes, stages))
 }
 
 /// Execute a shard. `chunk_rows` — if set, the shard is internally
@@ -161,13 +542,34 @@ pub fn execute_shard(
     chunk_rows: Option<usize>,
 ) -> ShardExecResult {
     let mut scratch = ShardScratch::default();
-    execute_shard_with(ctx, spec, tracker, cancel, chunk_rows, &mut scratch)
+    let mut read_scratch = ReadScratch::default();
+    execute_shard_with(
+        ctx,
+        spec,
+        tracker,
+        cancel,
+        chunk_rows,
+        &mut scratch,
+        &mut read_scratch,
+        None,
+        None,
+    )
 }
 
-/// Execute a shard reusing a per-worker Δ scratch. Worker threads keep
-/// one `ShardScratch` alive across shards (see `pool::worker_loop`) so
-/// steady-state execution performs no scratch allocation; `execute_shard`
-/// is the throwaway-scratch convenience wrapper.
+/// Execute a shard reusing per-worker Δ and read scratch. Worker
+/// threads keep one `ShardScratch`/`ReadScratch` alive across shards
+/// (see `pool::worker_loop`) so steady-state execution performs no
+/// scratch allocation; `execute_shard` is the throwaway-scratch
+/// convenience wrapper.
+///
+/// With `prefetch` set, ranges pipeline through the staged slot: range
+/// j+1 loads while range j computes, and `next_hint` (the first range
+/// of the worker's next claimed task) extends the overlap across shard
+/// boundaries. An accounted OOM with an active prefetcher is retried
+/// once after draining the slot — the staged charge may be exactly what
+/// pushed the ledger over, and the serial path must remain the
+/// authority on whether a shard truly fits.
+#[allow(clippy::too_many_arguments)]
 pub fn execute_shard_with(
     ctx: &JobContext,
     spec: ShardSpec,
@@ -175,10 +577,14 @@ pub fn execute_shard_with(
     cancel: &Arc<CancelSet>,
     chunk_rows: Option<usize>,
     scratch: &mut ShardScratch,
+    read_scratch: &mut ReadScratch,
+    prefetch: Option<&Prefetcher>,
+    next_hint: Option<RangeSpec>,
 ) -> ShardExecResult {
     let peak_before = tracker.peak();
     let mut io_bytes = 0u64;
     let mut mem_total = ShardMemStats::default();
+    let mut stages_total = StageNanos::default();
 
     if cancel.is_cancelled(spec.shard_id) {
         return ShardExecResult {
@@ -186,6 +592,7 @@ pub fn execute_shard_with(
             mem: mem_total,
             peak_bytes: 0,
             io_bytes: 0,
+            stages: stages_total,
         };
     }
 
@@ -207,66 +614,106 @@ pub fn execute_shard_with(
         );
     }
 
+    // Unified range list: one range for the whole shard (inmem), or the
+    // (key, occurrence)-aligned sub-chunks (dasklike). Sub-chunk
+    // boundaries need the key spans: consult the source's key index
+    // (cheap) rather than decoding the whole shard at once — that is
+    // the point of chunking.
+    let chunked = chunk_rows.is_some();
+    let ranges: Vec<RangeSpec> = match chunk_rows {
+        None => vec![RangeSpec {
+            a_off: spec.a_offset,
+            a_len: spec.a_len,
+            b_off: spec.b_offset,
+            b_len: spec.b_len,
+        }],
+        Some(chunk) => sub_partition(ctx, &spec, chunk)
+            .into_iter()
+            .map(|((a_off, a_len), (b_off, b_len))| RangeSpec {
+                a_off,
+                a_len,
+                b_off,
+                b_len,
+            })
+            .collect(),
+    };
+
     let result: Result<BatchOutcome, BatchError> = (|| {
-        match chunk_rows {
-            None => {
-                let (outcome, mem, io) = execute_range(
-                    ctx,
-                    spec.shard_id,
-                    spec.a_offset,
-                    spec.a_len,
-                    spec.b_offset,
-                    spec.b_len,
-                    tracker,
-                    scratch,
-                )?;
-                mem_total = mem;
-                io_bytes = io;
-                Ok(outcome)
+        let mut merger = Merger::new();
+        let n = ranges.len();
+        for (j, r) in ranges.iter().enumerate() {
+            if j > 0 && cancel.is_cancelled(spec.shard_id) {
+                return Err(BatchError::Cancelled);
             }
-            Some(chunk) => {
-                // Sub-chunk boundaries need the key spans: consult the
-                // source's key index (cheap) rather than decoding the
-                // whole shard at once — that is the point of chunking.
-                let sub = sub_partition(ctx, &spec, chunk);
-                let mut merger = Merger::new();
-                for (i, ((ao, al), (bo, bl))) in sub.iter().enumerate() {
-                    if cancel.is_cancelled(spec.shard_id) {
-                        return Err(BatchError::Cancelled);
-                    }
-                    let (outcome, mem, io) = execute_range(
+            // While range j computes, range j+1 loads; on the last
+            // range the hint extends the pipeline into the next task.
+            let next = if j + 1 < n { Some(ranges[j + 1]) } else { next_hint };
+            let attempt = execute_range(
+                ctx,
+                spec.shard_id,
+                *r,
+                tracker,
+                scratch,
+                read_scratch,
+                prefetch,
+                next,
+            );
+            let (outcome, mem, io, st) = match attempt {
+                Err(BatchError::Oom { .. }) if prefetch.is_some() => {
+                    // The staged slot may hold the very bytes that
+                    // pushed this range over the cap: drain it and
+                    // retry once, fully synchronously, so prefetch
+                    // never manufactures an OOM the serial path
+                    // wouldn't hit.
+                    prefetch.unwrap().drain();
+                    execute_range(
                         ctx,
                         spec.shard_id,
-                        *ao,
-                        *al,
-                        *bo,
-                        *bl,
+                        *r,
                         tracker,
                         scratch,
-                    )?;
-                    io_bytes += io;
-                    // Peak is the max over chunks, not the sum — buffers
-                    // are freed between chunks.
-                    mem_total.decode_bytes = mem_total.decode_bytes.max(mem.decode_bytes);
-                    mem_total.align_bytes = mem_total.align_bytes.max(mem.align_bytes);
-                    mem_total.scratch_bytes =
-                        mem_total.scratch_bytes.max(mem.scratch_bytes);
-                    let _ = i;
-                    merger.push(outcome);
+                        read_scratch,
+                        None,
+                        None,
+                    )?
                 }
-                let report = merger.finish();
-                // Collapse the merged sub-chunks back into a single
-                // BatchOutcome for this shard.
-                Ok(collapse(spec.shard_id, report))
+                other => other?,
+            };
+            io_bytes += io;
+            stages_total.add(&st);
+            // Peak is the max over chunks, not the sum — buffers are
+            // freed between chunks.
+            mem_total.decode_bytes = mem_total.decode_bytes.max(mem.decode_bytes);
+            mem_total.align_bytes = mem_total.align_bytes.max(mem.align_bytes);
+            mem_total.scratch_bytes =
+                mem_total.scratch_bytes.max(mem.scratch_bytes);
+            if !chunked {
+                // Single whole-shard range: the outcome passes through
+                // unmerged (diff-key order preserved bit-identically).
+                return Ok(outcome);
             }
+            merger.push(outcome);
         }
+        // Collapse the merged sub-chunks back into a single
+        // BatchOutcome for this shard.
+        Ok(collapse(spec.shard_id, merger.finish()))
     })();
+
+    if result.is_err() {
+        // Never leave staged bytes behind a failed/cancelled shard: the
+        // pool's invariant is that a worker with no claimed next task
+        // holds zero staged bytes after its report.
+        if let Some(p) = prefetch {
+            p.drain();
+        }
+    }
 
     ShardExecResult {
         result,
         mem: mem_total,
         peak_bytes: tracker.peak().saturating_sub(peak_before),
         io_bytes,
+        stages: stages_total,
     }
 }
 
@@ -325,6 +772,57 @@ fn sub_partition(
         out.push(((a_end, 0), (bp, b_end - bp)));
     }
     out
+}
+
+/// The first range `execute_shard_with` will request for `spec` — used
+/// by the pool's claim-ahead path to stage the next shard's opening
+/// read while the current shard computes. Mirrors `sub_partition`'s
+/// first cut without materializing the whole cut list; a drifted hint
+/// is never consumed (the worker falls back to the synchronous read),
+/// so a mismatch costs overlap, not correctness.
+pub fn first_range(
+    ctx: &JobContext,
+    spec: &ShardSpec,
+    chunk_rows: Option<usize>,
+) -> RangeSpec {
+    let whole = RangeSpec {
+        a_off: spec.a_offset,
+        a_len: spec.a_len,
+        b_off: spec.b_offset,
+        b_len: spec.b_len,
+    };
+    let Some(chunk) = chunk_rows else { return whole };
+    if spec.a_len == 0 || spec.b_len == 0 || ctx.a.key_at(0).is_none() {
+        if spec.a_len == 0 && spec.b_len == 0 {
+            return whole; // sub_partition yields no ranges; hint is inert
+        }
+        let al = chunk.min(spec.a_len);
+        let bl = if al >= spec.a_len { spec.b_len } else { chunk.min(spec.b_len) };
+        return RangeSpec {
+            a_off: spec.a_offset,
+            a_len: al,
+            b_off: spec.b_offset,
+            b_len: bl,
+        };
+    }
+    let a_end = spec.a_offset + spec.a_len;
+    let b_end = spec.b_offset + spec.b_len;
+    let (ap, bp) = (spec.a_offset, spec.b_offset);
+    let al = chunk.min(a_end - ap);
+    let b_hi = if ap + al >= a_end {
+        b_end
+    } else {
+        let last = ap + al - 1;
+        let boundary = ctx.a.key_at(last).unwrap_or(i64::MAX);
+        let (occ_cut, _) = occ_cut_at(ctx.a.as_ref(), last, boundary);
+        upper_bound_key_occ_in(ctx.b.as_ref(), bp, b_end, boundary, occ_cut)
+    };
+    RangeSpec {
+        a_off: ap,
+        a_len: al,
+        b_off: bp,
+        b_len: b_hi - bp,
+    }
 }
 
 /// Collapse a merged multi-chunk report back into one BatchOutcome.
@@ -513,5 +1011,171 @@ mod tests {
         let r = execute_shard(&c, whole_shard(&c), &tracker, &cancel, None);
         assert!(r.io_bytes > 0);
         assert!(r.peak_bytes > 0);
+        // The serial path books the full read+decode as worker stall.
+        assert_eq!(
+            r.stages.stall_ns,
+            r.stages.read_ns + r.stages.decode_ns
+        );
+        assert_eq!(r.stages.overlap_ratio(), 0.0);
+        assert!(r.stages.diff_ns > 0);
+    }
+
+    #[test]
+    fn memguard_adjust_grow_and_shrink() {
+        let t = MemTracker::new(100);
+        let mut g = t.alloc(10).unwrap();
+        g.adjust(80).unwrap();
+        assert_eq!(t.current(), 80);
+        // Failed grow leaves the original charge in force.
+        assert!(g.adjust(150).is_err());
+        assert_eq!(t.current(), 80);
+        g.adjust(5).unwrap();
+        assert_eq!(t.current(), 5);
+        drop(g);
+        assert_eq!(t.current(), 0);
+        assert_eq!(t.peak(), 80);
+    }
+
+    #[test]
+    fn prefetched_shard_matches_serial() {
+        let c = ctx(3_000, 21, u64::MAX);
+        let tracker = MemTracker::new(u64::MAX);
+        let cancel = CancelSet::new();
+        let spec = whole_shard(&c);
+        let serial = execute_shard(&c, spec, &tracker, &cancel, None);
+
+        let gauge = Arc::new(AtomicU64::new(0));
+        let pf = Prefetcher::spawn(
+            Arc::clone(&c),
+            Arc::clone(&tracker),
+            Arc::clone(&gauge),
+        );
+        // Stage the shard's whole range ahead of time, then execute
+        // with the prefetcher: bit-identical outcome, same io_bytes.
+        pf.request(RangeSpec {
+            a_off: 0,
+            a_len: c.a.nrows(),
+            b_off: 0,
+            b_len: c.b.nrows(),
+        });
+        let mut scratch = ShardScratch::default();
+        let mut rs = ReadScratch::default();
+        let pre = execute_shard_with(
+            &c,
+            spec,
+            &tracker,
+            &cancel,
+            None,
+            &mut scratch,
+            &mut rs,
+            Some(&pf),
+            None,
+        );
+        assert_eq!(serial.result.unwrap(), pre.result.unwrap());
+        assert_eq!(serial.io_bytes, pre.io_bytes);
+        assert!(pre.stages.read_ns + pre.stages.decode_ns > 0);
+        drop(pf);
+        assert_eq!(gauge.load(Ordering::Relaxed), 0, "gauge drained");
+        assert_eq!(tracker.current(), 0, "all charges released");
+    }
+
+    #[test]
+    fn chunked_prefetch_matches_serial() {
+        let c = ctx(3_000, 21, u64::MAX);
+        let cancel = CancelSet::new();
+        let spec = whole_shard(&c);
+        let t1 = MemTracker::new(u64::MAX);
+        let serial = execute_shard(&c, spec, &t1, &cancel, Some(257));
+        let t2 = MemTracker::new(u64::MAX);
+        let gauge = Arc::new(AtomicU64::new(0));
+        let pf =
+            Prefetcher::spawn(Arc::clone(&c), Arc::clone(&t2), Arc::clone(&gauge));
+        let mut scratch = ShardScratch::default();
+        let mut rs = ReadScratch::default();
+        let pre = execute_shard_with(
+            &c,
+            spec,
+            &t2,
+            &cancel,
+            Some(257),
+            &mut scratch,
+            &mut rs,
+            Some(&pf),
+            None,
+        );
+        assert_eq!(serial.result.unwrap(), pre.result.unwrap());
+        assert_eq!(serial.io_bytes, pre.io_bytes);
+        drop(pf);
+        assert_eq!(t2.current(), 0);
+        assert_eq!(gauge.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn drain_releases_staged_charge() {
+        let c = ctx(2_000, 9, u64::MAX);
+        let tracker = MemTracker::new(u64::MAX);
+        let gauge = Arc::new(AtomicU64::new(0));
+        let pf = Prefetcher::spawn(
+            Arc::clone(&c),
+            Arc::clone(&tracker),
+            Arc::clone(&gauge),
+        );
+        pf.request(RangeSpec { a_off: 0, a_len: 1_000, b_off: 0, b_len: 1_000 });
+        // Wait for the companion to stage (bounded spin).
+        for _ in 0..2_000 {
+            if gauge.load(Ordering::Relaxed) > 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert!(gauge.load(Ordering::Relaxed) > 0, "range staged");
+        assert!(tracker.current() > 0, "staged bytes charged to tracker");
+        pf.drain();
+        assert_eq!(gauge.load(Ordering::Relaxed), 0, "drain empties gauge");
+        assert_eq!(tracker.current(), 0, "drain releases the charge");
+    }
+
+    #[test]
+    fn oom_caused_by_staged_slot_is_retried_after_drain() {
+        // Cap fits ONE shard's buffers but not shard + staged slot: with
+        // the slot pre-loaded for a stale range, execution must drain
+        // and succeed rather than OOM.
+        let c = ctx(2_000, 6, u64::MAX);
+        let cancel = CancelSet::new();
+        // Find the serial peak first, then set the cap just above it.
+        let probe = MemTracker::new(u64::MAX);
+        let serial = execute_shard(&c, whole_shard(&c), &probe, &cancel, None);
+        let serial_out = serial.result.unwrap();
+        let cap = probe.peak() + probe.peak() / 4;
+        let tracker = MemTracker::new(cap);
+        let gauge = Arc::new(AtomicU64::new(0));
+        let pf = Prefetcher::spawn(
+            Arc::clone(&c),
+            Arc::clone(&tracker),
+            Arc::clone(&gauge),
+        );
+        // Stage a big stale range the shard will never consume.
+        pf.request(RangeSpec { a_off: 0, a_len: 1_500, b_off: 0, b_len: 1_500 });
+        for _ in 0..2_000 {
+            if gauge.load(Ordering::Relaxed) > 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let mut scratch = ShardScratch::default();
+        let mut rs = ReadScratch::default();
+        let r = execute_shard_with(
+            &c,
+            whole_shard(&c),
+            &tracker,
+            &cancel,
+            None,
+            &mut scratch,
+            &mut rs,
+            Some(&pf),
+            None,
+        );
+        assert_eq!(r.result.unwrap(), serial_out, "retry after drain");
+        assert!(tracker.peak() <= cap, "never exceeded the cap");
     }
 }

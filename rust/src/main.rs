@@ -103,6 +103,18 @@ fn print_result(r: &smartdiff_sched::sched::scheduler::JobResult) {
         s.reconfigs,
         s.ooms
     );
+    let st = &s.stages;
+    println!(
+        "pipeline: read={:.3}s decode={:.3}s align={:.3}s diff={:.3}s \
+         stall={:.3}s overlap={:.2} sched_overhead={:.3}s",
+        st.read_ns as f64 / 1e9,
+        st.decode_ns as f64 / 1e9,
+        st.align_ns as f64 / 1e9,
+        st.diff_ns as f64 / 1e9,
+        st.stall_ns as f64 / 1e9,
+        st.overlap_ratio(),
+        s.sched_overhead_ns as f64 / 1e9
+    );
     println!("report: {}", r.report.to_json());
 }
 

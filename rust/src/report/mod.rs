@@ -24,6 +24,15 @@ pub struct BatchRec {
     pub b: i64,
     pub k: i64,
     pub queue: i64,
+    /// Per-stage pipeline nanoseconds (0 for logs predating the
+    /// pipelined-execution fields — they parse as absent).
+    pub read_ns: i64,
+    pub decode_ns: i64,
+    pub align_ns: i64,
+    pub diff_ns: i64,
+    pub stall_ns: i64,
+    /// Control-loop overhead attributed to this batch's round (ns).
+    pub sched_ns: i64,
     pub ok: bool,
 }
 
@@ -62,6 +71,12 @@ impl TelemetryLog {
                         b: n("b").unwrap_or(0),
                         k: n("k").unwrap_or(0),
                         queue: n("queue").unwrap_or(0),
+                        read_ns: n("read_ns").unwrap_or(0),
+                        decode_ns: n("decode_ns").unwrap_or(0),
+                        align_ns: n("align_ns").unwrap_or(0),
+                        diff_ns: n("diff_ns").unwrap_or(0),
+                        stall_ns: n("stall_ns").unwrap_or(0),
+                        sched_ns: n("sched_ns").unwrap_or(0),
                         ok: v.get("ok").and_then(|x| x.as_bool()).unwrap_or(false),
                     });
                 }
@@ -118,6 +133,40 @@ impl TelemetryLog {
 
     pub fn count_events(&self, kind: &str) -> usize {
         self.events.iter().filter(|(k, _, _)| k == kind).count()
+    }
+
+    /// Summed pipeline-stage nanoseconds over accepted batches:
+    /// `(read, decode, align, diff, stall)`. All zero for logs written
+    /// before stage-level telemetry existed.
+    pub fn stage_totals(&self) -> (i64, i64, i64, i64, i64) {
+        let mut t = (0i64, 0i64, 0i64, 0i64, 0i64);
+        for b in self.batches.iter().filter(|b| b.ok) {
+            t.0 += b.read_ns;
+            t.1 += b.decode_ns;
+            t.2 += b.align_ns;
+            t.3 += b.diff_ns;
+            t.4 += b.stall_ns;
+        }
+        t
+    }
+
+    /// Measured ingest/compute overlap: `1 - stall / (read + decode)`,
+    /// clamped to [0, 1]. 0.0 when no I/O time was recorded (fully
+    /// in-memory job, or a pre-pipeline log).
+    pub fn overlap_ratio(&self) -> f64 {
+        let (read, decode, _, _, stall) = self.stage_totals();
+        let io = (read + decode) as f64;
+        if io <= 0.0 {
+            return 0.0;
+        }
+        (1.0 - stall as f64 / io).clamp(0.0, 1.0)
+    }
+
+    /// Total control-loop (scheduler) overhead across all batch rounds,
+    /// in seconds — the "overhead" half of the overhead/useful-work
+    /// decomposition.
+    pub fn sched_overhead_s(&self) -> f64 {
+        self.batches.iter().map(|b| b.sched_ns).sum::<i64>() as f64 / 1e9
     }
 }
 
@@ -176,6 +225,30 @@ pub fn analyze(log: &TelemetryLog) -> String {
             .map(|(_, d, _)| d.as_str())
             .unwrap_or("-")
     ));
+    let (read, decode, align, diff, stall) = log.stage_totals();
+    if read + decode + align + diff + stall > 0 {
+        out.push_str(&format!(
+            "pipeline: read={:.3}s decode={:.3}s align={:.3}s diff={:.3}s \
+             stall={:.3}s overlap={:.2}\n",
+            read as f64 / 1e9,
+            decode as f64 / 1e9,
+            align as f64 / 1e9,
+            diff as f64 / 1e9,
+            stall as f64 / 1e9,
+            log.overlap_ratio()
+        ));
+    }
+    let sched_s = log.sched_overhead_s();
+    if sched_s > 0.0 {
+        let useful: f64 = ok.iter().map(|b| b.finished - b.submitted).sum();
+        out.push_str(&format!(
+            "sched_overhead: {:.4}s control-loop vs {:.3}s batch time \
+             ({:.2}% of makespan)\n",
+            sched_s,
+            useful,
+            if log.makespan() > 0.0 { 100.0 * sched_s / log.makespan() } else { 0.0 }
+        ));
+    }
     if !ok.is_empty() {
         let lat: Vec<f64> = ok.iter().map(|b| b.latency).collect();
         let rss: Vec<f64> = ok.iter().map(|b| b.rss_peak).collect();
@@ -259,6 +332,42 @@ mod tests {
         // Downsampling long series.
         let long: Vec<f64> = (0..1000).map(|i| i as f64).collect();
         assert_eq!(sparkline(&long, 60).chars().count(), 60);
+    }
+
+    #[test]
+    fn pre_pipeline_logs_parse_with_zero_stage_fields() {
+        // Logs written before stage-level telemetry have no *_ns keys.
+        let log = TelemetryLog::parse_str(&demo_log()).unwrap();
+        assert_eq!(log.stage_totals(), (0, 0, 0, 0, 0));
+        assert_eq!(log.overlap_ratio(), 0.0);
+        assert_eq!(log.sched_overhead_s(), 0.0);
+        // And analyze() omits the pipeline/overhead lines entirely.
+        let report = analyze(&log);
+        assert!(!report.contains("pipeline:"));
+        assert!(!report.contains("sched_overhead:"));
+    }
+
+    #[test]
+    fn analyze_renders_pipeline_decomposition() {
+        let mut lines = Vec::new();
+        for i in 0..4 {
+            lines.push(format!(
+                r#"{{"ev":"batch","shard":{i},"submitted":{},"finished":{},"latency":1.0,"rows":500,"rss_peak":1000,"b":100,"k":2,"queue":0,"read_ns":400000000,"decode_ns":100000000,"align_ns":50000000,"diff_ns":300000000,"stall_ns":125000000,"sched_ns":2000000,"ok":true}}"#,
+                i as f64,
+                i as f64 + 1.0
+            ));
+        }
+        let log = TelemetryLog::parse_str(&lines.join("\n")).unwrap();
+        let (read, decode, _, _, stall) = log.stage_totals();
+        assert_eq!(read, 1_600_000_000);
+        assert_eq!(decode, 400_000_000);
+        assert_eq!(stall, 500_000_000);
+        // overlap = 1 - 0.5s / 2.0s = 0.75
+        assert!((log.overlap_ratio() - 0.75).abs() < 1e-9);
+        assert!((log.sched_overhead_s() - 0.008).abs() < 1e-12);
+        let report = analyze(&log);
+        assert!(report.contains("overlap=0.75"), "{report}");
+        assert!(report.contains("sched_overhead: 0.0080s"), "{report}");
     }
 
     #[test]

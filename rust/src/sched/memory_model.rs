@@ -29,6 +29,12 @@ pub struct MemoryModel {
     pub w_hat: f64,
     /// Baseline job RSS (source tables, runtime) counted against the cap.
     pub base_bytes: f64,
+    /// Concurrently-resident shard buffers per worker. 1.0 for serial
+    /// execution; 2.0 when the double-buffered prefetcher is active (the
+    /// staged next shard is charged alongside the one being diffed), so
+    /// Eq. 3–4 and the controller's pruned action space account for
+    /// 2·b-worth of resident rows per worker.
+    resident_shards: f64,
     correction: Ewma,
     residuals: ResidualWindow,
     z_alpha: f64,
@@ -50,6 +56,7 @@ impl MemoryModel {
             beta2: 16.0,
             w_hat,
             base_bytes,
+            resident_shards: 1.0,
             correction: Ewma::new(rho),
             residuals: ResidualWindow::new(delta_m_window),
             z_alpha,
@@ -61,9 +68,18 @@ impl MemoryModel {
         self.predict_batch_raw(b) * self.correction.get_or(1.0)
     }
 
-    /// Eq. 3: predicted job peak with k concurrent workers.
+    /// Eq. 3: predicted job peak with k concurrent workers, scaled by
+    /// the number of concurrently-resident shard buffers per worker
+    /// (2 when prefetch overlap is active).
     pub fn predict(&self, b: usize, k: usize) -> f64 {
-        self.base_bytes + k as f64 * self.predict_batch(b)
+        self.base_bytes
+            + self.resident_shards * k as f64 * self.predict_batch(b)
+    }
+
+    /// Set the resident-shards-per-worker factor (≥ 1; 2.0 while the
+    /// double-buffered prefetcher is active).
+    pub fn set_resident_shards(&mut self, n: f64) {
+        self.resident_shards = n.max(1.0);
     }
 
     /// δ_M: half-width of the prediction interval, scaled to k workers.
@@ -106,7 +122,9 @@ impl MemoryModel {
         } else {
             (1.0, hw * k as f64)
         };
-        let per_worker = ((budget - extra) / (scale * k as f64)).max(0.0);
+        let per_worker = ((budget - extra)
+            / (scale * self.resident_shards * k as f64))
+            .max(0.0);
         let corr = self.correction.get_or(1.0);
         let per_row = (self.beta1 * self.w_hat + self.beta2) * corr;
         let b = ((per_worker - self.beta0 * corr) / per_row).floor();
@@ -210,6 +228,23 @@ mod tests {
     fn no_budget_means_zero() {
         let m = MemoryModel::new(200.0, 1.0e12, 0.2, 20, 1.96);
         assert_eq!(m.safe_b_max(4, 0.9, 1_000_000_000), 0);
+    }
+
+    #[test]
+    fn resident_shards_scales_envelope() {
+        let mut m = model();
+        let base = m.predict(50_000, 4) - m.base_bytes;
+        let b1 = m.safe_b_max(4, 0.9, 64_000_000_000);
+        m.set_resident_shards(2.0);
+        let doubled = m.predict(50_000, 4) - m.base_bytes;
+        assert!((doubled / base - 2.0).abs() < 1e-9, "batch term doubles");
+        let b2 = m.safe_b_max(4, 0.9, 64_000_000_000);
+        assert!(b2 < b1, "pruned action space shrinks: {b2} !< {b1}");
+        // Roughly halves (β₀ offset keeps it from exactly half).
+        assert!((b2 as f64) < 0.6 * b1 as f64, "b2={b2} b1={b1}");
+        // Values below 1 are clamped back to serial semantics.
+        m.set_resident_shards(0.0);
+        assert_eq!(m.safe_b_max(4, 0.9, 64_000_000_000), b1);
     }
 
     #[test]

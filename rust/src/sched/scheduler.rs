@@ -69,6 +69,18 @@ pub struct JobStats {
     pub gate: Option<GateDecision>,
     /// Fraction of candidate actions kept by the envelope (§VIII).
     pub actions_kept: f64,
+    /// Per-stage time decomposition summed over accepted batches
+    /// (read / decode / align / diff / stall). With prefetch active,
+    /// `stall_ns < read_ns + decode_ns` is the signature of successful
+    /// ingest/compute overlap; `stages.overlap_ratio()` quantifies it.
+    pub stages: crate::exec::backend::StageNanos,
+    /// Control-loop time spent in `drive` outside of blocking waits —
+    /// the scheduler-overhead half of the overhead/useful-work
+    /// decomposition (after the Dask overhead studies).
+    pub sched_overhead_ns: u64,
+    /// Summed worker execution time over accepted batches (the useful
+    /// half of the decomposition).
+    pub useful_work_ns: u64,
 }
 
 /// What a finished job returns: the merged diff plus scheduler stats.
@@ -239,6 +251,15 @@ pub fn drive(
         pol.z_alpha,
     );
     let mut cost_model = CostModel::new(inputs.consts, &inputs.profile, pol.rho_smooth);
+    // With the double-buffered prefetcher active each worker keeps up to
+    // two shards' buffers resident (the one diffing + the staged next),
+    // so Eq. 3–4 and the pruned action space must budget for 2·b rows
+    // per worker.
+    mem_model.set_resident_shards(if backend.prefetch_active() {
+        2.0
+    } else {
+        1.0
+    });
 
     // --- policy init ---
     let mut env = PolicyEnv {
@@ -323,6 +344,9 @@ pub fn drive(
         final_k: k_cur,
         gate: inputs.gate,
         actions_kept: 1.0,
+        stages: crate::exec::backend::StageNanos::default(),
+        sched_overhead_ns: 0,
+        useful_work_ns: 0,
     };
     let mut completed: u64 = 0;
     let mut t_first_submit: Option<f64> = None;
@@ -337,6 +361,11 @@ pub fn drive(
     // Shard ids submitted and not yet reported — the cancellation
     // broadcast set.
     let mut inflight_ids: std::collections::HashSet<u64> = Default::default();
+    // Scheduler-overhead decomposition: wall time spent in this control
+    // loop, minus time blocked waiting for workers. `last_round` is what
+    // telemetry attributes to the batches of the following round.
+    let mut sched_ns_total: u64 = 0;
+    let mut last_round_sched_ns: u64 = 0;
 
     if let Some(c) = &inputs.control {
         let backend_name = backend.name().to_string();
@@ -363,6 +392,8 @@ pub fn drive(
     }
 
     loop {
+        let iter_t0 = std::time::Instant::now();
+        let mut wait_ns: u64 = 0;
         // --- session bridge: cancellation + CPU-share re-partitioning ---
         if let Some(c) = &inputs.control {
             if !cancelled && c.cancel_requested() {
@@ -523,7 +554,10 @@ pub fn drive(
             }
             leftovers
         } else {
-            backend.wait_any()
+            let w0 = std::time::Instant::now();
+            let got = backend.wait_any();
+            wait_ns = w0.elapsed().as_nanos() as u64;
+            got
         };
         let now = backend.now();
         stats.peak_rss_bytes = stats.peak_rss_bytes.max(backend.current_rss());
@@ -561,7 +595,16 @@ pub fn drive(
                     all_latencies.push((r.latency(), rows as f64));
                     mem_model.observe(rows, r.worker_rss_peak as f64);
                     cost_model.observe(rows, k_cur, 0.0, r.exec_time());
-                    inputs.telemetry.batch(r, b_cur, k_cur, backend.queue_depth());
+                    stats.stages.add(&r.stages);
+                    stats.useful_work_ns +=
+                        (r.exec_time().max(0.0) * 1e9) as u64;
+                    inputs.telemetry.batch(
+                        r,
+                        b_cur,
+                        k_cur,
+                        backend.queue_depth(),
+                        last_round_sched_ns,
+                    );
                 }
                 Err(BatchError::Cancelled) => {}
                 Err(BatchError::Oom { needed_bytes, cap_bytes }) => {
@@ -599,12 +642,14 @@ pub fn drive(
         if !reports.is_empty() {
             if let Some(c) = &inputs.control {
                 let rss_now = backend.current_rss();
+                let staged_now = backend.staged_bytes();
                 c.update_progress(|p| {
                     p.rows_done = rows_done;
                     p.batches = stats.batches;
                     p.current_b = b_cur;
                     p.current_k = k_cur;
                     p.rss_bytes = rss_now;
+                    p.staged_bytes = staged_now;
                     p.peak_rss_bytes = stats.peak_rss_bytes;
                     p.reconfigs = stats.reconfigs;
                 });
@@ -759,6 +804,10 @@ pub fn drive(
             }
         }
 
+        last_round_sched_ns =
+            (iter_t0.elapsed().as_nanos() as u64).saturating_sub(wait_ns);
+        sched_ns_total += last_round_sched_ns;
+
         if aborted && backend.inflight() == 0 {
             break;
         }
@@ -790,6 +839,7 @@ pub fn drive(
         1.0
     };
     stats.peak_rss_bytes = stats.peak_rss_bytes.max(base_rss as u64);
+    stats.sched_overhead_ns = sched_ns_total;
 
     inputs.telemetry.summary(&report.to_json());
     inputs.telemetry.flush();

@@ -41,8 +41,19 @@ impl Telemetry {
         }
     }
 
-    /// One accepted batch completion.
-    pub fn batch(&mut self, r: &BatchReport, b: usize, k: usize, queue: usize) {
+    /// One accepted batch completion. `sched_ns` is the control-loop
+    /// overhead attributed to this batch's scheduling round (the
+    /// overhead half of the overhead/useful-work decomposition); the
+    /// per-stage nanoseconds expose the read/decode/align/diff/stall
+    /// pipeline split, where `stall < read + decode` signals overlap.
+    pub fn batch(
+        &mut self,
+        r: &BatchReport,
+        b: usize,
+        k: usize,
+        queue: usize,
+        sched_ns: u64,
+    ) {
         if self.out.is_none() {
             return;
         }
@@ -61,6 +72,12 @@ impl Telemetry {
             .int("b", b as i64)
             .int("k", k as i64)
             .int("queue", queue as i64)
+            .int("read_ns", r.stages.read_ns as i64)
+            .int("decode_ns", r.stages.decode_ns as i64)
+            .int("align_ns", r.stages.align_ns as i64)
+            .int("diff_ns", r.stages.diff_ns as i64)
+            .int("stall_ns", r.stages.stall_ns as i64)
+            .int("sched_ns", sched_ns as i64)
             .bool("ok", r.result.is_ok())
             .finish();
         self.emit(line);
@@ -125,13 +142,14 @@ mod tests {
             mem: ShardMemStats::default(),
             worker_rss_peak: 1024,
             io_bytes: 2048,
+            stages: crate::exec::backend::StageNanos::default(),
         }
     }
 
     #[test]
     fn disabled_sink_writes_nothing() {
         let mut t = Telemetry::disabled();
-        t.batch(&report(), 100, 2, 0);
+        t.batch(&report(), 100, 2, 0, 0);
         t.event("gate", "inmem", 0.0);
         assert_eq!(t.lines_written(), 0);
     }
@@ -143,7 +161,7 @@ mod tests {
             std::process::id()
         ));
         let mut t = Telemetry::to_file(path.to_str().unwrap()).unwrap();
-        t.batch(&report(), 100, 2, 5);
+        t.batch(&report(), 100, 2, 5, 1_234);
         t.event("gate", "inmem ws=1.2GB", 0.1);
         t.summary(r#"{"p95":1.5}"#);
         t.flush();

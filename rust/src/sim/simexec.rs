@@ -240,6 +240,7 @@ impl SimBackend {
                     },
                     worker_rss_peak: r.rss,
                     io_bytes: r.io_bytes,
+                    stages: crate::exec::backend::StageNanos::default(),
                 });
             } else {
                 i += 1;
@@ -372,6 +373,7 @@ impl Backend for SimBackend {
                 mem: ShardMemStats::default(),
                 worker_rss_peak: 0,
                 io_bytes: 0,
+                stages: crate::exec::backend::StageNanos::default(),
             });
         }
     }

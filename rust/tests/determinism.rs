@@ -4,11 +4,18 @@
 
 use std::sync::Arc;
 
-use smartdiff_sched::config::{BackendChoice, DeltaPath, PolicyKind, SchedulerConfig};
+use smartdiff_sched::api::error::SchedError;
+use smartdiff_sched::api::{DiffSession, JobBuilder};
+use smartdiff_sched::config::{
+    BackendChoice, Caps, DeltaPath, PolicyKind, SchedulerConfig,
+};
 use smartdiff_sched::data::generator::{
     generate_pair, generate_skewed_pair, GenSpec, SkewSpec,
 };
-use smartdiff_sched::data::io::{InMemorySource, TableSource};
+use smartdiff_sched::data::io::{
+    write_csv, CsvFileSource, InMemorySource, ReadMeter, TableSource,
+};
+use smartdiff_sched::data::schema::Schema;
 use smartdiff_sched::data::table::Table;
 use smartdiff_sched::engine::comparators::{NativeExec, NumericDeltaExec};
 use smartdiff_sched::engine::delta::{process_shard_ref, JobPlan};
@@ -305,6 +312,158 @@ fn hot_run_exceeding_batch_headroom_completes_without_oom() {
             "backend={backend:?}: capped report differs from oracle"
         );
     }
+}
+
+#[test]
+fn prefetch_on_off_reports_bit_identical() {
+    // The double-buffered prefetcher overlaps the next range's
+    // read+decode with the current Δ — an execution-order change only.
+    // Reports must be *bit-identical* (same JSON serialization, not
+    // just same_diff) with prefetch on vs off, across both backends and
+    // k ∈ {1, 4}, on the file-backed source that actually exercises
+    // the staged read path.
+    let spec = GenSpec {
+        rows: 9_000,
+        extra_cols: 4,
+        change_rate: 0.08,
+        add_rate: 0.02,
+        remove_rate: 0.02,
+        seed: 33,
+        ..GenSpec::default()
+    };
+    let (a, b, _) = generate_pair(&spec);
+    let dir = std::env::temp_dir();
+    let pa = dir.join(format!("sdiff_det_pf_a_{}.csv", std::process::id()));
+    let pb = dir.join(format!("sdiff_det_pf_b_{}.csv", std::process::id()));
+    write_csv(&a, &pa).unwrap();
+    write_csv(&b, &pb).unwrap();
+    let run = |backend: BackendChoice, k: usize, prefetch: bool| {
+        let mut c = cfg(backend, PolicyKind::Fixed { b: 700, k }, 100);
+        c.caps.cpu_cap = 4;
+        c.prefetch = prefetch;
+        let sa = CsvFileSource::open(&pa, a.schema.clone()).unwrap();
+        let sb = CsvFileSource::open(&pb, b.schema.clone()).unwrap();
+        run_job(&c, Arc::new(sa), Arc::new(sb)).expect("csv job").report
+    };
+    let reference = run(BackendChoice::InMem, 1, false);
+    for backend in [BackendChoice::InMem, BackendChoice::DaskLike] {
+        for k in [1usize, 4] {
+            let off = run(backend, k, false);
+            let on = run(backend, k, true);
+            assert_eq!(
+                on.to_json(),
+                off.to_json(),
+                "prefetch changed the report at backend={backend:?} k={k}"
+            );
+            assert!(
+                reference.same_diff(&on),
+                "diff differs from reference at backend={backend:?} k={k}"
+            );
+        }
+    }
+    std::fs::remove_file(&pa).ok();
+    std::fs::remove_file(&pb).ok();
+}
+
+/// `TableSource` wrapper that sleeps in every range read, keeping reads
+/// in flight (with a staged prefetch slot resident) long enough for the
+/// test thread to shrink the session budget mid-job.
+struct SlowSource {
+    inner: InMemorySource,
+    delay: std::time::Duration,
+}
+
+impl TableSource for SlowSource {
+    fn schema(&self) -> &Schema {
+        self.inner.schema()
+    }
+    fn nrows(&self) -> usize {
+        self.inner.nrows()
+    }
+    fn read_range(
+        &self,
+        offset: usize,
+        len: usize,
+    ) -> Result<smartdiff_sched::data::table::Table, SchedError> {
+        std::thread::sleep(self.delay);
+        self.inner.read_range(offset, len)
+    }
+    fn key_at(&self, row: usize) -> Option<i64> {
+        self.inner.key_at(row)
+    }
+    fn occ_at(&self, row: usize) -> u32 {
+        self.inner.occ_at(row)
+    }
+    fn storage_bytes(&self) -> u64 {
+        self.inner.storage_bytes()
+    }
+    fn resident_bytes(&self) -> u64 {
+        self.inner.resident_bytes()
+    }
+    fn meter(&self) -> &ReadMeter {
+        self.inner.meter()
+    }
+}
+
+#[test]
+fn grant_shrink_mid_flight_drains_staged_slot_and_stays_under_cap() {
+    // Staged prefetch bytes are charged to the memory grant before the
+    // read lands, and a mid-flight `set_mem_budget` shrink must drain
+    // the staged slot rather than overshoot: the job completes with 0
+    // accounted OOMs, peak accounted RSS (which includes staged bytes)
+    // never exceeds the original grant, the staged gauge is back to
+    // zero at completion, and the report is the prefetch-off reference.
+    let spec = GenSpec {
+        rows: 8_000,
+        extra_cols: 3,
+        change_rate: 0.05,
+        seed: 44,
+        ..GenSpec::default()
+    };
+    let (a, b, _) = generate_pair(&spec);
+    let reference = run_job(
+        &cfg(BackendChoice::InMem, PolicyKind::Adaptive, 100),
+        Arc::new(InMemorySource::new(a.clone())),
+        Arc::new(InMemorySource::new(b.clone())),
+    )
+    .expect("reference job")
+    .report;
+
+    let base = InMemorySource::new(a.clone()).resident_bytes()
+        + InMemorySource::new(b.clone()).resident_bytes();
+    let heap = a.heap_bytes() as u64;
+    let initial = base + heap; // generous admission-time grant
+    let shrunk = base + heap / 5; // tight but >> b_min batch buffers
+
+    let session = DiffSession::new(Caps { mem_cap_bytes: initial, cpu_cap: 2 });
+    let delay = std::time::Duration::from_millis(2);
+    let job = JobBuilder::new(
+        Arc::new(SlowSource { inner: InMemorySource::new(a.clone()), delay }),
+        Arc::new(SlowSource { inner: InMemorySource::new(b.clone()), delay }),
+    )
+    .delta_path(DeltaPath::Native)
+    .backend(BackendChoice::InMem)
+    .b_min(100)
+    .prefetch(true)
+    .build()
+    .unwrap();
+    let mut h = session.submit(job).unwrap();
+    // Let batches (and a staged slot) get in flight, then shrink.
+    std::thread::sleep(std::time::Duration::from_millis(15));
+    session.set_mem_budget(shrunk);
+    let r = h.join().expect("job survives mid-flight grant shrink");
+    assert_eq!(r.stats.ooms, 0, "shrink must drain, not OOM");
+    assert!(
+        r.stats.peak_rss_bytes <= initial,
+        "peak accounted RSS {} (incl. staged bytes) exceeds the grant {initial}",
+        r.stats.peak_rss_bytes
+    );
+    let p = h.progress();
+    assert_eq!(p.staged_bytes, 0, "staged slot not drained at completion");
+    assert!(
+        reference.same_diff(&r.report),
+        "report differs after mid-flight grant shrink"
+    );
 }
 
 #[test]
