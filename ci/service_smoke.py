@@ -1,0 +1,176 @@
+#!/usr/bin/env python3
+"""Service smoke: drive the diff daemon over a real TCP socket.
+
+Starts `smartdiff-sched daemon` on an ephemeral port, then — speaking
+the line-delimited JSON protocol directly from python, no rust client —
+
+  1. submits two synthetic jobs from two separate connections with
+     subscribe on, and streams their typed events (`admitted`, `done`,
+     ...) down to each terminal `result` frame;
+  2. hits `status` and `health` from a third connection mid-flight and
+     checks the snapshot shape (budget, grants, per-job progress);
+  3. sends a malformed frame and asserts a typed error frame comes back
+     on a connection that then keeps working;
+  4. sends the `shutdown` verb and asserts the daemon drains cleanly:
+     exit code 0 and every submitted job answered.
+
+Run from the repo root after `cargo build --release`:
+
+    python3 ci/service_smoke.py [path-to-binary]
+"""
+import json
+import re
+import socket
+import subprocess
+import sys
+import time
+
+PROTOCOL_VERSION = 1
+
+
+class Client:
+    """One protocol connection: send request frames, read server frames."""
+
+    def __init__(self, addr):
+        self.sock = socket.create_connection(addr, timeout=300)
+        self.rfile = self.sock.makefile("rb")
+        self.next_id = 1
+
+    def send_raw(self, payload):
+        self.sock.sendall(payload)
+
+    def read_frame(self):
+        line = self.rfile.readline()
+        assert line, "daemon closed the connection unexpectedly"
+        frame = json.loads(line)
+        assert frame["v"] == PROTOCOL_VERSION, frame
+        return frame
+
+    def request(self, verb, **fields):
+        rid = self.next_id
+        self.next_id += 1
+        frame = {"v": PROTOCOL_VERSION, "id": rid, "verb": verb}
+        frame.update(fields)
+        self.send_raw((json.dumps(frame) + "\n").encode())
+        # Events may interleave before the response; collect them.
+        events = []
+        while True:
+            got = self.read_frame()
+            if got.get("re") == rid:
+                return got, events
+            events.append(got)
+
+    def ok(self, verb, **fields):
+        resp, events = self.request(verb, **fields)
+        assert resp.get("ok"), "%s failed: %r" % (verb, resp)
+        return resp["body"], events
+
+    def close(self):
+        self.rfile.close()
+        self.sock.close()
+
+
+def stream_until_result(client, job, pre=()):
+    """Collect event kinds for `job` until its terminal result frame."""
+    kinds = []
+    frames = list(pre)
+
+    def feed(frame):
+        if frame.get("ev") == "job" and frame.get("job") == job:
+            kinds.append(frame["kind"])
+        elif frame.get("ev") == "result" and frame.get("job") == job:
+            return frame
+        return None
+
+    for f in frames:
+        r = feed(f)
+        if r:
+            return kinds, r
+    while True:
+        r = feed(client.read_frame())
+        if r:
+            return kinds, r
+
+
+def main():
+    binary = sys.argv[1] if len(sys.argv) > 1 else "target/release/smartdiff-sched"
+    daemon = subprocess.Popen(
+        [binary, "daemon", "--addr", "127.0.0.1:0", "--max-connections", "8"],
+        stdout=subprocess.PIPE,
+        stderr=subprocess.STDOUT,
+        text=True,
+    )
+    try:
+        # The daemon prints its resolved ephemeral address on startup.
+        banner = daemon.stdout.readline()
+        m = re.search(r"listening on (\S+):(\d+)", banner)
+        assert m, "no listen banner: %r" % banner
+        addr = (m.group(1), int(m.group(2)))
+        print("daemon up at %s:%d" % addr)
+
+        c1, c2, c3 = Client(addr), Client(addr), Client(addr)
+
+        # Two jobs from two separate connections, events subscribed.
+        body1, _ = c1.ok("submit", rows=40_000, seed=11, subscribe=True)
+        job1 = body1["job"]
+        body2, _ = c2.ok("submit", rows=20_000, seed=13, subscribe=True)
+        job2 = body2["job"]
+        assert job1 != job2
+        print("submitted jobs %d and %d" % (job1, job2))
+
+        # Mid-flight health + status from a third connection.
+        health, _ = c3.ok("health")
+        assert health["healthy"] is True
+        status, _ = c3.ok("status")
+        assert status["jobs_submitted"] >= 2, status
+        assert status["mem_budget_bytes"] > 0, status
+        assert isinstance(status["jobs"], list) and len(status["jobs"]) >= 2
+        for j in status["jobs"]:
+            assert j["state"] in (
+                "pending", "gated", "running", "done", "failed", "cancelled",
+            ), j
+            assert "staged_bytes" in j["progress"], j
+        print("status snapshot OK (%d jobs tracked)" % len(status["jobs"]))
+
+        # Malformed frame: typed error, connection survives.
+        c3.send_raw(b"this is not json\n")
+        err = c3.read_frame()
+        assert err.get("ok") is False and err["error"]["kind"] == "parse", err
+        health, _ = c3.ok("health")
+        assert health["healthy"] is True
+        print("malformed frame answered with typed error; connection alive")
+
+        # Stream both jobs to completion.
+        kinds1, result1 = stream_until_result(c1, job1)
+        kinds2, result2 = stream_until_result(c2, job2)
+        for job, kinds, result in ((job1, kinds1, result1), (job2, kinds2, result2)):
+            assert result["ok"], "job %d failed: %r" % (job, result)
+            assert "admitted" in kinds, "job %d events: %r" % (job, kinds)
+            assert kinds[-1] == "done", "job %d events: %r" % (job, kinds)
+            report = result["report"]
+            assert "rows_a" in report and "rows_b" in report, report
+            assert "cells" in report and "rows" in report, report
+            assert result["stats"]["ooms"] == 0, result["stats"]
+        print("both jobs streamed admitted→…→done and returned reports")
+
+        # Drain: shutdown verb → daemon exits 0 with every job answered.
+        c3.ok("shutdown")
+        rc = daemon.wait(timeout=120)
+        tail = daemon.stdout.read()
+        print(tail, end="")
+        assert rc == 0, "daemon exited %d" % rc
+        m = re.search(r"drained — (\d+) connections served, (\d+)/(\d+) jobs", tail)
+        assert m, "no drain summary: %r" % tail
+        assert m.group(2) == m.group(3), "drain left jobs un-answered: %r" % tail
+        for c in (c1, c2, c3):
+            c.close()
+        print("service smoke OK: clean drain, %s/%s jobs answered"
+              % (m.group(2), m.group(3)))
+    finally:
+        if daemon.poll() is None:
+            daemon.kill()
+            daemon.wait()
+
+
+if __name__ == "__main__":
+    main()

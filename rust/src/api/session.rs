@@ -41,7 +41,7 @@
 //! `run_job` survives as a thin one-job shim over `DiffSession`.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::api::builder::JobSpec;
@@ -59,6 +59,17 @@ use crate::sched::scheduler::{drive, DriveInputs, JobResult};
 use crate::sched::telemetry::Telemetry;
 use crate::sched::working_set::{gate_backend, WorkingSetModel};
 
+/// Event fan-out registry behind every `JobControl`: the full event
+/// history (so a subscriber arriving after admission still replays
+/// `Gated`/`Admitted`) plus the live channels of current subscribers.
+/// One lock guards both, so replay-then-register is atomic and no
+/// subscriber can miss or double-see an event.
+#[derive(Default)]
+struct Watchers {
+    history: Vec<JobEvent>,
+    senders: Vec<mpsc::Sender<JobEvent>>,
+}
+
 /// Shared mutable per-job state: the bridge between a `JobHandle` (the
 /// caller's side) and the scheduler loop running the job (the session's
 /// side). All methods are lock-cheap and safe to call at any time.
@@ -74,6 +85,7 @@ pub struct JobControl {
     state: AtomicU8,
     progress: Mutex<JobProgress>,
     events: Mutex<Vec<JobEvent>>,
+    watchers: Mutex<Watchers>,
 }
 
 impl JobControl {
@@ -86,6 +98,7 @@ impl JobControl {
             state: AtomicU8::new(0),
             progress: Mutex::new(JobProgress::default()),
             events: Mutex::new(Vec::new()),
+            watchers: Mutex::new(Watchers::default()),
         })
     }
 
@@ -151,11 +164,35 @@ impl JobControl {
     }
 
     pub(crate) fn push_event(&self, ev: JobEvent) {
+        {
+            let mut w = self.watchers.lock().unwrap();
+            // Dead subscribers (receiver dropped) are pruned on the spot.
+            w.senders.retain(|tx| tx.send(ev.clone()).is_ok());
+            w.history.push(ev.clone());
+        }
         self.events.lock().unwrap().push(ev);
     }
-    /// Drain all recorded events (destructive; order preserved).
+    /// Drain all recorded events (destructive; order preserved). The
+    /// non-destructive fan-out view is [`JobControl::subscribe`].
     pub fn drain_events(&self) -> Vec<JobEvent> {
         std::mem::take(&mut *self.events.lock().unwrap())
+    }
+    /// Subscribe to this job's event stream. The receiver first replays
+    /// every event recorded so far (in order), then delivers each new
+    /// event as the scheduler pushes it. Subscriptions are independent
+    /// of each other and of the destructive [`JobControl::drain_events`]
+    /// queue, so any number of observers (e.g. wire-protocol clients)
+    /// can watch one job. The channel closes when the job's `Done`
+    /// event has been delivered and the control is dropped.
+    pub fn subscribe(&self) -> mpsc::Receiver<JobEvent> {
+        let (tx, rx) = mpsc::channel();
+        let mut w = self.watchers.lock().unwrap();
+        for ev in &w.history {
+            // A send to our own just-created receiver cannot fail.
+            let _ = tx.send(ev.clone());
+        }
+        w.senders.push(tx);
+        rx
     }
 }
 
@@ -421,6 +458,21 @@ impl JobHandle {
     /// reconfigs, backpressure, mitigations, completion).
     pub fn events(&self) -> Vec<JobEvent> {
         self.control.drain_events()
+    }
+    /// Subscribe to the job's live event stream: replays all events so
+    /// far, then streams new ones. Unlike [`JobHandle::events`] this is
+    /// non-destructive and supports any number of concurrent observers
+    /// — the fan-out the network service uses to stream `JobEvent`s to
+    /// every connected client. See [`JobControl::subscribe`].
+    pub fn subscribe(&self) -> mpsc::Receiver<JobEvent> {
+        self.control.subscribe()
+    }
+    /// The shared per-job control block (progress/state/cancel/events),
+    /// usable independently of the handle's lifetime — e.g. a job
+    /// registry that joins handles on one thread while status snapshots
+    /// are served from another.
+    pub fn control(&self) -> Arc<JobControl> {
+        Arc::clone(&self.control)
     }
     /// Request cooperative cancellation; `join()` then returns
     /// `Err(SchedError::Cancelled)` unless the job already finished.
@@ -766,6 +818,30 @@ mod tests {
             _ => None,
         });
         assert_eq!(granted, Some(small_caps().mem_cap_bytes));
+    }
+
+    #[test]
+    fn subscribe_replays_history_and_streams_live() {
+        let session = DiffSession::new(small_caps());
+        // Subscribing before completion sees live events; subscribing
+        // after completion replays the full history. Both views coexist
+        // with each other and with the destructive drain.
+        let mut h = session.submit(job(1_000, 15)).unwrap();
+        let live = h.subscribe();
+        h.join().unwrap();
+        let live_kinds: Vec<&str> = live.try_iter().map(|e| e.kind()).collect();
+        assert!(live_kinds.contains(&"admitted"), "{live_kinds:?}");
+        assert_eq!(live_kinds.last(), Some(&"done"));
+
+        let replay = h.subscribe();
+        let replay_kinds: Vec<&str> =
+            replay.try_iter().map(|e| e.kind()).collect();
+        assert_eq!(replay_kinds, live_kinds);
+
+        // The legacy destructive queue still holds everything.
+        let drained = h.events();
+        assert_eq!(drained.len(), live_kinds.len());
+        assert!(h.events().is_empty(), "drain is destructive");
     }
 
     #[test]

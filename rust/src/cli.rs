@@ -54,6 +54,15 @@ impl Args {
             })
             .transpose()
     }
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, String> {
+        self.get(name)
+            .map(|v| {
+                v.replace('_', "")
+                    .parse()
+                    .map_err(|_| format!("--{name}: expected integer, got {v:?}"))
+            })
+            .transpose()
+    }
     pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
         self.get(name)
             .map(|v| {
@@ -113,5 +122,7 @@ mod tests {
         assert!(a.get_usize("rows").is_err());
         let a = Args::parse(&argv("x --eta 0.9"), &[]).unwrap();
         assert_eq!(a.get_f64("eta").unwrap(), Some(0.9));
+        let a = Args::parse(&argv("x --seed 42"), &[]).unwrap();
+        assert_eq!(a.get_u64("seed").unwrap(), Some(42));
     }
 }

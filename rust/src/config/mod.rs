@@ -178,6 +178,68 @@ impl Default for EngineConfig {
     }
 }
 
+/// What a draining daemon does with jobs still running at shutdown
+/// (`[service] drain = "await" | "cancel"`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrainPolicy {
+    /// Stop accepting, let running jobs finish, answer every client,
+    /// then exit.
+    Await,
+    /// Stop accepting, cancel running jobs cooperatively, answer every
+    /// client (cancelled jobs report the typed `Cancelled` error), then
+    /// exit.
+    Cancel,
+}
+
+impl DrainPolicy {
+    /// Parse a `[service] drain` value; errors name `service.drain`.
+    pub fn parse(s: &str) -> Result<Self, SchedError> {
+        match s.to_ascii_lowercase().as_str() {
+            "await" | "wait" => Ok(DrainPolicy::Await),
+            "cancel" => Ok(DrainPolicy::Cancel),
+            other => Err(SchedError::invalid(
+                "service.drain",
+                format!("unknown drain policy {other:?} (await|cancel)"),
+            )),
+        }
+    }
+    /// Stable lowercase name ("await" / "cancel").
+    pub fn name(&self) -> &'static str {
+        match self {
+            DrainPolicy::Await => "await",
+            DrainPolicy::Cancel => "cancel",
+        }
+    }
+}
+
+/// `[service]` section: knobs for the network-facing daemon
+/// (`smartdiff-sched daemon`). Ignored by every other subcommand.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceConfig {
+    /// TCP bind address (`host:port`); port 0 binds an ephemeral port
+    /// (the daemon prints the resolved address on startup).
+    pub bind_addr: String,
+    /// Maximum simultaneously connected clients. Connections past the
+    /// limit are answered with one typed error frame and closed.
+    pub max_connections: usize,
+    /// Shutdown behaviour for still-running jobs.
+    pub drain: DrainPolicy,
+    /// Close a connection after this many seconds without a complete
+    /// request frame, unless it has live subscriptions. 0 = never.
+    pub idle_timeout_secs: u64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            bind_addr: "127.0.0.1:7711".into(),
+            max_connections: 64,
+            drain: DrainPolicy::Await,
+            idle_timeout_secs: 300,
+        }
+    }
+}
+
 /// Top-level scheduler configuration.
 #[derive(Debug, Clone)]
 pub struct SchedulerConfig {
@@ -197,6 +259,9 @@ pub struct SchedulerConfig {
     /// Pre-flight sample: min(1e6 rows, 1% of job) — paper §III.
     pub preflight_max_rows: usize,
     pub preflight_fraction: f64,
+    /// Network daemon knobs (`[service]`); only the `daemon` subcommand
+    /// reads them.
+    pub service: ServiceConfig,
 }
 
 impl Default for SchedulerConfig {
@@ -212,6 +277,7 @@ impl Default for SchedulerConfig {
             telemetry_path: None,
             preflight_max_rows: 1_000_000,
             preflight_fraction: 0.01,
+            service: ServiceConfig::default(),
         }
     }
 }
@@ -284,6 +350,21 @@ impl SchedulerConfig {
             return Err(SchedError::invalid(
                 "policy.k_min",
                 format!("{} must be in [1, cpu_cap={}]", p.k_min, self.caps.cpu_cap),
+            ));
+        }
+        if self.service.max_connections == 0 {
+            return Err(SchedError::invalid(
+                "service.max_connections",
+                "must be positive",
+            ));
+        }
+        if self.service.bind_addr.parse::<std::net::SocketAddr>().is_err() {
+            return Err(SchedError::invalid(
+                "service.bind_addr",
+                format!(
+                    "{:?} is not a host:port socket address",
+                    self.service.bind_addr
+                ),
             ));
         }
         Ok(())
@@ -389,6 +470,22 @@ fn apply_key(
                 .ok_or_else(|| SchedError::invalid(key, "expected string"))?
                 .into()
         }
+        "service.bind_addr" => {
+            cfg.service.bind_addr = val
+                .as_str()
+                .ok_or_else(|| SchedError::invalid(key, "expected string"))?
+                .into()
+        }
+        "service.max_connections" => cfg.service.max_connections = i(val)?,
+        "service.idle_timeout_secs" => {
+            cfg.service.idle_timeout_secs = i(val)? as u64
+        }
+        "service.drain" => {
+            cfg.service.drain = DrainPolicy::parse(
+                val.as_str()
+                    .ok_or_else(|| SchedError::invalid(key, "expected string"))?,
+            )?
+        }
         "engine.delta_path" => {
             cfg.engine.delta_path = match val
                 .as_str()
@@ -486,6 +583,45 @@ mod tests {
         let mut c = SchedulerConfig::default();
         c.policy.k_min = 99;
         assert_eq!(c.validate().unwrap_err().field(), Some("policy.k_min"));
+    }
+
+    #[test]
+    fn service_section_loads_and_validates() {
+        let cfg = SchedulerConfig::from_toml_str(
+            r#"
+            [service]
+            bind_addr = "0.0.0.0:9100"
+            max_connections = 8
+            drain = "cancel"
+            idle_timeout_secs = 30
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.service.bind_addr, "0.0.0.0:9100");
+        assert_eq!(cfg.service.max_connections, 8);
+        assert_eq!(cfg.service.drain, DrainPolicy::Cancel);
+        assert_eq!(cfg.service.idle_timeout_secs, 30);
+
+        let d = SchedulerConfig::default();
+        assert_eq!(d.service.drain, DrainPolicy::Await);
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn service_errors_name_the_field() {
+        let err =
+            SchedulerConfig::from_toml_str("[service]\nmax_connections = 0")
+                .unwrap_err();
+        assert_eq!(err.field(), Some("service.max_connections"));
+        let err =
+            SchedulerConfig::from_toml_str("[service]\nbind_addr = \"nope\"")
+                .unwrap_err();
+        assert_eq!(err.field(), Some("service.bind_addr"));
+        let err = SchedulerConfig::from_toml_str("[service]\ndrain = \"maybe\"")
+            .unwrap_err();
+        assert_eq!(err.field(), Some("service.drain"));
+        assert!(DrainPolicy::parse("await").is_ok());
+        assert_eq!(DrainPolicy::Cancel.name(), "cancel");
     }
 
     #[test]

@@ -128,6 +128,61 @@ impl Schema {
     pub fn est_row_bytes(&self) -> usize {
         self.fields.iter().map(|f| f.ty.value_bytes() + 1).sum()
     }
+
+    /// Parse a `name[:key]:type,...` spec (the `--schema` CLI / wire
+    /// format) into a schema. Types: `int64`, `float64`, `utf8`,
+    /// `bool`, `date`, `timestamp`, `decimal(SCALE)`.
+    pub fn parse_spec(spec: &str) -> Result<Self, crate::api::error::SchedError> {
+        use crate::api::error::SchedError;
+        let mut fields = Vec::new();
+        for part in spec.split(',') {
+            let bits: Vec<&str> = part.split(':').collect();
+            let (name, key, ty_name) = match bits.as_slice() {
+                [n, t] => (*n, false, *t),
+                [n, "key", t] => (*n, true, *t),
+                _ => {
+                    return Err(SchedError::parse(
+                        "schema",
+                        format!("bad schema field {part:?}"),
+                    ))
+                }
+            };
+            let ty = match ty_name {
+                "int64" => ColumnType::Int64,
+                "float64" => ColumnType::Float64,
+                "utf8" => ColumnType::Utf8,
+                "bool" => ColumnType::Bool,
+                "date" => ColumnType::Date,
+                "timestamp" => ColumnType::Timestamp,
+                other => {
+                    if let Some(scale) = other
+                        .strip_prefix("decimal(")
+                        .and_then(|s| s.strip_suffix(')'))
+                    {
+                        ColumnType::Decimal {
+                            scale: scale.parse().map_err(|_| {
+                                SchedError::parse(
+                                    "schema",
+                                    format!("bad decimal scale {other:?}"),
+                                )
+                            })?,
+                        }
+                    } else {
+                        return Err(SchedError::parse(
+                            "schema",
+                            format!("unknown type {other:?}"),
+                        ));
+                    }
+                }
+            };
+            fields.push(if key {
+                Field::key(name, ty)
+            } else {
+                Field::new(name, ty)
+            });
+        }
+        Ok(Schema::new(fields))
+    }
 }
 
 #[cfg(test)]

@@ -84,6 +84,7 @@ pub mod exec;
 pub mod runtime;
 pub mod metrics;
 pub mod sched;
+pub mod service;
 pub mod baselines;
 pub mod sim;
 pub mod bench;

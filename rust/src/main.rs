@@ -4,27 +4,44 @@
 //!   diff       — diff two CSV files (--schema describes the columns;
 //!                `key` marks row-alignment key components)
 //!   run        — synthetic workload through the full pipeline
-//!   serve      — multi-job DiffSession demo: N concurrent jobs admitted
-//!                against one shared CPU/memory budget, with live
-//!                progress + typed event streaming
+//!                (Ctrl-C cancels cooperatively, exit code 130)
+//!   daemon     — long-lived network diff service: accepts jobs over a
+//!                line-delimited JSON protocol, streams typed events,
+//!                drains gracefully on SIGINT or the shutdown verb
+//!   submit     — submit a job to a running daemon and stream its
+//!                events + result over the wire
+//!   status     — health + full status snapshot from a running daemon
+//!   demo-serve — in-process multi-job DiffSession demo (N concurrent
+//!                jobs under one shared budget; `serve` is a deprecated
+//!                alias)
 //!   profile    — pre-flight profile + gate decision only
 //!   reproduce  — regenerate the paper's Tables I–III on the sim testbed
 //!   ablate     — run one §VII/§VIII ablation (guard|kappa|hysteresis|rho|safety)
 //!   calibrate  — engine microbenchmarks (cost-model constants)
 
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
+use std::time::Duration;
 
 use smartdiff_sched::api::{DiffSession, JobBuilder};
 use smartdiff_sched::bench::tables;
 use smartdiff_sched::cli::Args;
-use smartdiff_sched::config::{BackendChoice, DeltaPath, PolicyKind, SchedulerConfig};
+use smartdiff_sched::config::{
+    BackendChoice, DeltaPath, DrainPolicy, PolicyKind, SchedulerConfig,
+};
 use smartdiff_sched::data::generator::{generate_pair, GenSpec};
 use smartdiff_sched::data::io::{CsvFileSource, InMemorySource};
-use smartdiff_sched::data::schema::{ColumnType, Field, Schema};
+use smartdiff_sched::data::schema::Schema;
 use smartdiff_sched::engine::microbench;
 use smartdiff_sched::sched::preflight::preflight;
 use smartdiff_sched::sched::scheduler::run_job;
 use smartdiff_sched::sched::working_set::{gate_backend, WorkingSetModel};
+use smartdiff_sched::service::client::ServiceClient;
+use smartdiff_sched::service::protocol::{ServerFrame, WireJobSpec};
+use smartdiff_sched::service::server::Daemon;
+use smartdiff_sched::service::signal;
+
+const DEFAULT_ADDR: &str = "127.0.0.1:7711";
 
 const USAGE: &str = "\
 smartdiff-sched — adaptive execution scheduler for SmartDiff
@@ -35,7 +52,14 @@ USAGE:
                        [--telemetry out.jsonl] [--pjrt]
   smartdiff-sched run [--rows N] [--seed S] [--policy adaptive|heuristic|fixed]
                       [--b N --k N] [--backend ...] [--config cfg.toml] [--pjrt]
-  smartdiff-sched serve [--jobs N] [--rows N] [--seed S] [--config cfg.toml]
+  smartdiff-sched daemon [--addr HOST:PORT] [--config cfg.toml]
+                         [--max-connections N] [--idle-timeout SECS]
+                         [--drain await|cancel] [--telemetry out.jsonl]
+  smartdiff-sched submit [--addr HOST:PORT] [--rows N] [--seed S]
+                         [--csv-a a.csv --csv-b b.csv --schema ...]
+                         [--backend auto|inmem|dask] [--b-min N] [--detach]
+  smartdiff-sched status [--addr HOST:PORT]
+  smartdiff-sched demo-serve [--jobs N] [--rows N] [--seed S] [--config cfg.toml]
   smartdiff-sched profile [--rows N] [--config cfg.toml]
   smartdiff-sched reproduce [--quick] [--trials N]
   smartdiff-sched ablate <guard|kappa|hysteresis|rho|safety> [--quick]
@@ -119,10 +143,11 @@ fn print_result(r: &smartdiff_sched::sched::scheduler::JobResult) {
 }
 
 fn dispatch(argv: &[String]) -> Result<(), String> {
-    let args = Args::parse(argv, &["quick", "pjrt"])?;
+    let args = Args::parse(argv, &["quick", "pjrt", "detach"])?;
     let known = [
         "config", "backend", "telemetry", "policy", "b", "k", "rows",
-        "seed", "trials", "schema", "jobs",
+        "seed", "trials", "schema", "jobs", "addr", "max-connections",
+        "idle-timeout", "drain", "csv-a", "csv-b", "b-min",
     ];
     args.expect_known(&known)?;
     match args.subcommand.as_deref() {
@@ -132,7 +157,7 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
             }
             let cfg = load_cfg(&args)?;
             let schema = match args.get("schema") {
-                Some(spec) => parse_schema(spec)?,
+                Some(spec) => Schema::parse_spec(spec)?,
                 None => {
                     return Err(
                         "--schema is required for csv diff \
@@ -156,26 +181,67 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
         Some("run") => {
             let cfg = load_cfg(&args)?;
             let rows = args.get_usize("rows")?.unwrap_or(100_000);
-            let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
+            let seed = args.get_u64("seed")?.unwrap_or(42);
             let (a, b, truth) =
                 generate_pair(&GenSpec { rows, seed, ..GenSpec::default() });
             println!(
                 "generated pair: {rows} rows (truth: {} changed, {} added, {} removed)",
                 truth.changed_rows, truth.added, truth.removed
             );
-            let r = run_job(
-                &cfg,
+            // Run through a session handle (not run_job) so Ctrl-C can
+            // cancel cooperatively instead of killing mid-write.
+            signal::install_sigint();
+            let session = DiffSession::new(cfg.caps);
+            let spec = JobBuilder::from_config(
+                cfg,
                 Arc::new(InMemorySource::new(a)),
                 Arc::new(InMemorySource::new(b)),
-            )?;
-            print_result(&r);
-            Ok(())
+            )
+            .build()?;
+            let mut handle = session.submit(spec)?;
+            let mut cancelled = false;
+            while !handle.is_finished() {
+                if signal::interrupted() && !cancelled {
+                    eprintln!(
+                        "interrupt: cancelling job {} cooperatively",
+                        handle.id()
+                    );
+                    handle.control().request_cancel();
+                    cancelled = true;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            match handle.join() {
+                Ok(r) => {
+                    print_result(&r);
+                    Ok(())
+                }
+                Err(e) if cancelled => {
+                    eprintln!("run: cancelled cleanly after Ctrl-C ({e})");
+                    std::process::exit(signal::SIGINT_EXIT_CODE);
+                }
+                Err(e) => Err(e.into()),
+            }
         }
-        Some("serve") => {
+        Some("daemon") => cmd_daemon(&args),
+        Some("submit") => cmd_submit(&args),
+        Some("status") => cmd_status(&args),
+        Some("demo-serve") => {
             let cfg = load_cfg(&args)?;
             let jobs = args.get_usize("jobs")?.unwrap_or(4).max(1);
             let rows = args.get_usize("rows")?.unwrap_or(50_000);
-            let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
+            let seed = args.get_u64("seed")?.unwrap_or(42);
+            serve(&cfg, jobs, rows, seed)
+        }
+        Some("serve") => {
+            eprintln!(
+                "note: `serve` is deprecated — use `demo-serve` for the \
+                 in-process demo or `daemon` for the network service"
+            );
+            let cfg = load_cfg(&args)?;
+            let jobs = args.get_usize("jobs")?.unwrap_or(4).max(1);
+            let rows = args.get_usize("rows")?.unwrap_or(50_000);
+            let seed = args.get_u64("seed")?.unwrap_or(42);
             serve(&cfg, jobs, rows, seed)
         }
         Some("profile") => {
@@ -349,43 +415,105 @@ fn serve(
     Ok(())
 }
 
-/// Parse "name[:key]:type,..." schema specs for csv diff.
-fn parse_schema(spec: &str) -> Result<Schema, String> {
-    let mut fields = Vec::new();
-    for part in spec.split(',') {
-        let bits: Vec<&str> = part.split(':').collect();
-        let (name, key, ty_name) = match bits.as_slice() {
-            [n, t] => (*n, false, *t),
-            [n, "key", t] => (*n, true, *t),
-            _ => return Err(format!("bad schema field {part:?}")),
-        };
-        let ty = match ty_name {
-            "int64" => ColumnType::Int64,
-            "float64" => ColumnType::Float64,
-            "utf8" => ColumnType::Utf8,
-            "bool" => ColumnType::Bool,
-            "date" => ColumnType::Date,
-            "timestamp" => ColumnType::Timestamp,
-            other => {
-                if let Some(scale) = other
-                    .strip_prefix("decimal(")
-                    .and_then(|s| s.strip_suffix(')'))
-                {
-                    ColumnType::Decimal {
-                        scale: scale
-                            .parse()
-                            .map_err(|_| format!("bad decimal scale {other:?}"))?,
-                    }
-                } else {
-                    return Err(format!("unknown type {other:?}"));
-                }
-            }
-        };
-        fields.push(if key {
-            Field::key(name, ty)
-        } else {
-            Field::new(name, ty)
-        });
+/// `daemon`: bind the service, serve until SIGINT or a `shutdown` verb,
+/// drain, and report the lifetime counters.
+fn cmd_daemon(args: &Args) -> Result<(), String> {
+    let mut cfg = load_cfg(args)?;
+    if let Some(addr) = args.get("addr") {
+        cfg.service.bind_addr = addr.to_string();
     }
-    Ok(Schema::new(fields))
+    if let Some(n) = args.get_usize("max-connections")? {
+        cfg.service.max_connections = n;
+    }
+    if let Some(t) = args.get_u64("idle-timeout")? {
+        cfg.service.idle_timeout_secs = t;
+    }
+    if let Some(d) = args.get("drain") {
+        cfg.service.drain = DrainPolicy::parse(d)?;
+    }
+    let drain = cfg.service.drain;
+    let daemon = Daemon::bind(cfg)?;
+    println!(
+        "daemon: listening on {} (drain={})",
+        daemon.local_addr(),
+        drain.name()
+    );
+    signal::install_sigint();
+    let flag = daemon.shutdown_flag();
+    let watcher = std::thread::spawn(move || {
+        while !signal::interrupted() && !flag.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        flag.store(true, Ordering::SeqCst);
+    });
+    let summary = daemon.run()?;
+    let _ = watcher.join();
+    println!(
+        "daemon: drained — {} connections served, {}/{} jobs answered",
+        summary.connections_served, summary.jobs_completed, summary.jobs_submitted
+    );
+    if signal::interrupted() {
+        std::process::exit(signal::SIGINT_EXIT_CODE);
+    }
+    Ok(())
+}
+
+/// `submit`: send one job to a running daemon; unless `--detach`,
+/// stream its events live and print the wire-fetched report.
+fn cmd_submit(args: &Args) -> Result<(), String> {
+    let addr = args.get("addr").unwrap_or(DEFAULT_ADDR);
+    let spec = WireJobSpec {
+        rows: args.get_usize("rows")?,
+        seed: args.get_u64("seed")?.unwrap_or(0),
+        csv_a: args.get("csv-a").map(str::to_string),
+        csv_b: args.get("csv-b").map(str::to_string),
+        schema: args.get("schema").map(str::to_string),
+        backend: args.get("backend").map(str::to_string),
+        b_min: args.get_usize("b-min")?,
+        prefetch: None,
+    };
+    let detach = args.flag("detach");
+    let mut client = ServiceClient::connect(addr)?;
+    let job = client.submit(spec, !detach)?;
+    println!("job {job}: submitted to {addr}");
+    if detach {
+        return Ok(());
+    }
+    loop {
+        match client.next_event()? {
+            Some(ServerFrame::Event { job: j, event }) if j == job => {
+                println!("job {j}: {event}");
+            }
+            Some(ServerFrame::Result { job: j, ok, report, stats, error })
+                if j == job =>
+            {
+                if ok {
+                    if let Some(s) = stats {
+                        println!("stats: {}", s.to_string());
+                    }
+                    if let Some(r) = report {
+                        println!("report: {}", r.to_string());
+                    }
+                    println!("submit OK: job {j} completed");
+                    return Ok(());
+                }
+                return Err(match error {
+                    Some(e) => format!("job {j} failed: {e}"),
+                    None => format!("job {j} failed"),
+                });
+            }
+            _ => {}
+        }
+    }
+}
+
+/// `status`: health probe + full status snapshot from a running daemon.
+fn cmd_status(args: &Args) -> Result<(), String> {
+    let addr = args.get("addr").unwrap_or(DEFAULT_ADDR);
+    let mut client = ServiceClient::connect(addr)?;
+    let health = client.health()?;
+    println!("health: {}", health.to_string());
+    let status = client.status()?;
+    println!("status: {}", status.to_string());
+    Ok(())
 }

@@ -108,6 +108,20 @@ impl Telemetry {
         self.emit(line);
     }
 
+    /// Daemon drain summary (raw JSON payload of control-plane
+    /// counters). The daemon writes this to its own `.service` sink —
+    /// job sinks truncate-on-open the shared telemetry path.
+    pub fn service(&mut self, json_payload: &str) {
+        if self.out.is_none() {
+            return;
+        }
+        let line = ObjWriter::new()
+            .str("ev", "service")
+            .raw("daemon", json_payload)
+            .finish();
+        self.emit(line);
+    }
+
     /// Flush buffered records to the underlying file.
     pub fn flush(&mut self) {
         if let Some(out) = &mut self.out {

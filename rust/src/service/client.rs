@@ -1,0 +1,203 @@
+//! Blocking client for the diff daemon's wire protocol.
+//!
+//! One [`ServiceClient`] owns one TCP connection. Requests are
+//! correlated by id; event and result frames that arrive while a
+//! response is awaited are buffered and replayed in order by
+//! [`ServiceClient::next_event`], so interleaved streams never drop
+//! frames. Used by the `submit`/`status` CLI subcommands and the
+//! end-to-end tests; the smoke job talks the same protocol from python.
+#![warn(missing_docs)]
+
+use std::collections::VecDeque;
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::api::error::SchedError;
+use crate::api::events::JobEvent;
+use crate::service::protocol::{
+    decode_server_frame, encode_request, FrameReader, ReadOutcome, Request,
+    RequestFrame, ServerFrame, WireError, WireJobSpec,
+};
+use crate::util::json::Json;
+
+/// How long a single request waits for its response before giving up.
+const RESPONSE_DEADLINE: Duration = Duration::from_secs(30);
+
+/// A subscribed job's full wire-side outcome.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    /// Every streamed event, in emission order (history replay included).
+    pub events: Vec<JobEvent>,
+    /// Whether the job succeeded.
+    pub ok: bool,
+    /// Diff report (present iff `ok`), bit-identical to the in-process
+    /// `JobReport::to_json` output.
+    pub report: Option<Json>,
+    /// Scheduler stats object (present iff `ok`).
+    pub stats: Option<Json>,
+    /// Typed error (present iff `!ok`).
+    pub error: Option<WireError>,
+}
+
+/// A blocking connection to a running daemon.
+pub struct ServiceClient {
+    stream: TcpStream,
+    frames: FrameReader<TcpStream>,
+    next_id: u64,
+    pending: VecDeque<ServerFrame>,
+}
+
+impl ServiceClient {
+    /// Connect to `addr` (e.g. `127.0.0.1:7711`).
+    pub fn connect(addr: &str) -> Result<ServiceClient, SchedError> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| SchedError::io(addr, format!("connect: {e}")))?;
+        stream
+            .set_read_timeout(Some(Duration::from_millis(200)))
+            .map_err(|e| SchedError::io(addr, format!("timeout: {e}")))?;
+        let read_half = stream
+            .try_clone()
+            .map_err(|e| SchedError::io(addr, format!("clone: {e}")))?;
+        Ok(ServiceClient {
+            stream,
+            frames: FrameReader::new(read_half),
+            next_id: 1,
+            pending: VecDeque::new(),
+        })
+    }
+
+    /// Submit a job; returns the wire job id. With `subscribe` the
+    /// daemon streams the job's events + result to this connection
+    /// (collect them with [`ServiceClient::wait_result`]).
+    pub fn submit(
+        &mut self,
+        spec: WireJobSpec,
+        subscribe: bool,
+    ) -> Result<u64, SchedError> {
+        let body = self.request(Request::Submit { spec, subscribe })?;
+        body.get("job")
+            .and_then(|j| j.as_i64())
+            .map(|j| j as u64)
+            .ok_or_else(|| SchedError::runtime("submit response missing job id"))
+    }
+
+    /// Request cooperative cancellation of `job`.
+    pub fn cancel(&mut self, job: u64) -> Result<(), SchedError> {
+        self.request(Request::Cancel { job }).map(|_| ())
+    }
+
+    /// Fetch the daemon's full status snapshot.
+    pub fn status(&mut self) -> Result<Json, SchedError> {
+        self.request(Request::Status)
+    }
+
+    /// Cheap liveness probe.
+    pub fn health(&mut self) -> Result<Json, SchedError> {
+        self.request(Request::Health)
+    }
+
+    /// Subscribe to an existing job's event stream (history replayed
+    /// first) and terminal result.
+    pub fn subscribe(&mut self, job: u64) -> Result<(), SchedError> {
+        self.request(Request::Subscribe { job }).map(|_| ())
+    }
+
+    /// Ask the daemon to drain and exit.
+    pub fn shutdown_server(&mut self) -> Result<(), SchedError> {
+        self.request(Request::Shutdown).map(|_| ())
+    }
+
+    /// Pop the next streamed frame (event or result) if one is buffered
+    /// or arrives within one read tick; `None` means nothing yet.
+    pub fn next_event(&mut self) -> Result<Option<ServerFrame>, SchedError> {
+        if let Some(f) = self.pending.pop_front() {
+            return Ok(Some(f));
+        }
+        match self.read_one()? {
+            Some(ServerFrame::Err { error, .. }) => Err(error.to_sched()),
+            other => Ok(other),
+        }
+    }
+
+    /// Drain `job`'s stream until its terminal result frame, returning
+    /// the ordered events plus the outcome.
+    pub fn wait_result(
+        &mut self,
+        job: u64,
+        timeout: Duration,
+    ) -> Result<JobOutcome, SchedError> {
+        let deadline = Instant::now() + timeout;
+        let mut events = Vec::new();
+        loop {
+            let frame = match self.next_event()? {
+                Some(f) => f,
+                None => {
+                    if Instant::now() >= deadline {
+                        return Err(SchedError::runtime(format!(
+                            "timed out waiting for job {job} result"
+                        )));
+                    }
+                    continue;
+                }
+            };
+            match frame {
+                ServerFrame::Event { job: j, event } if j == job => {
+                    events.push(event);
+                }
+                ServerFrame::Result { job: j, ok, report, stats, error }
+                    if j == job =>
+                {
+                    return Ok(JobOutcome { events, ok, report, stats, error });
+                }
+                other => self.pending.push_back(other),
+            }
+        }
+    }
+
+    /// Send one request and wait for its correlated response body.
+    fn request(&mut self, req: Request) -> Result<Json, SchedError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let line = encode_request(&RequestFrame { id, req });
+        self.stream
+            .write_all(line.as_bytes())
+            .and_then(|_| self.stream.write_all(b"\n"))
+            .map_err(|e| SchedError::runtime(format!("send: {e}")))?;
+        let deadline = Instant::now() + RESPONSE_DEADLINE;
+        loop {
+            match self.read_one()? {
+                Some(ServerFrame::Ok { re, body }) if re == id => {
+                    return Ok(body);
+                }
+                // re == 0 covers connection-level rejections (busy,
+                // malformed-frame answers) that cannot echo our id.
+                Some(ServerFrame::Err { re, error }) if re == id || re == 0 => {
+                    return Err(error.to_sched());
+                }
+                Some(other) => self.pending.push_back(other),
+                None => {
+                    if Instant::now() >= deadline {
+                        return Err(SchedError::runtime(
+                            "timed out waiting for daemon response",
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Read one frame off the socket; `None` on a quiet read tick.
+    fn read_one(&mut self) -> Result<Option<ServerFrame>, SchedError> {
+        match self.frames.read_frame() {
+            Ok(ReadOutcome::Frame(line)) => decode_server_frame(&line)
+                .map(Some)
+                .map_err(|e| SchedError::parse("server frame", e.to_string())),
+            Ok(ReadOutcome::Timeout) => Ok(None),
+            Ok(ReadOutcome::Eof) => {
+                Err(SchedError::runtime("daemon closed the connection"))
+            }
+            Err(e) => Err(SchedError::parse("server frame", e.to_string())),
+        }
+    }
+}

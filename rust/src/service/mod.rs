@@ -1,0 +1,19 @@
+//! Network-facing diff service: a long-lived daemon exposing one
+//! [`DiffSession`](crate::api::DiffSession) over TCP.
+//!
+//! The crate stays zero-dependency: transport is `std::net`, framing is
+//! line-delimited JSON built on [`crate::util::json`], and SIGINT
+//! handling declares libc's `signal(2)` directly. Submodules:
+//!
+//! * [`protocol`] — versioned frame grammar, codecs, [`protocol::FrameReader`].
+//! * [`server`] — the daemon: accept loop, per-connection threads, job
+//!   registry, event forwarding, drain-on-shutdown.
+//! * [`client`] — blocking client used by the `submit`/`status`
+//!   subcommands and the end-to-end tests.
+//! * [`signal`] — std-only Ctrl-C flag shared by `daemon` and long `run`s.
+#![warn(missing_docs)]
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+pub mod signal;

@@ -1,0 +1,788 @@
+//! Wire protocol for the diff service: line-delimited JSON frames.
+//!
+//! One frame per `\n`-terminated line, each a single JSON object with a
+//! `v` version field. Three frame families:
+//!
+//! * **Requests** (client → server): `{"v":1,"id":N,"verb":"…",…}`.
+//!   `id` is a client-chosen correlation id echoed back in the
+//!   response. Verbs: `submit`, `cancel`, `status`, `health`,
+//!   `subscribe`, `shutdown`.
+//! * **Responses** (server → client): `{"v":1,"re":N,"ok":true,…}` on
+//!   success or `{"v":1,"re":N,"ok":false,"error":{…}}` with a typed
+//!   [`WireError`]. `re` echoes the request's `id`.
+//! * **Events** (server → client, unsolicited): job lifecycle frames
+//!   `{"v":1,"ev":"job","job":J,"kind":"…","data":{…}}` mirroring
+//!   [`JobEvent`] one-to-one, and one terminal
+//!   `{"v":1,"ev":"result","job":J,"ok":…,…}` per subscribed job
+//!   carrying the full diff report JSON.
+//!
+//! Frames longer than [`MAX_FRAME_BYTES`], invalid UTF-8, truncated
+//! JSON, wrong versions, and structurally-unknown shapes all decode to
+//! a typed [`ProtocolError`] — the server answers them with an error
+//! frame instead of dropping the connection. Encoding uses the crate's
+//! self-contained JSON writer ([`crate::util::json`]); the crate stays
+//! zero-dependency.
+#![warn(missing_docs)]
+
+use std::fmt;
+use std::io::Read;
+
+use crate::api::error::SchedError;
+use crate::api::events::JobEvent;
+use crate::util::json::{self, Json, ObjWriter};
+
+/// Protocol version spoken by this build. Frames carrying any other
+/// version are rejected with [`ProtocolError::Version`].
+pub const PROTOCOL_VERSION: i64 = 1;
+
+/// Hard per-frame size cap. A line that grows past this is discarded
+/// through its terminating newline and reported as
+/// [`ProtocolError::Oversized`]; the connection survives.
+pub const MAX_FRAME_BYTES: usize = 1 << 20;
+
+// ---------------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------------
+
+/// Typed decode failure. Every variant maps to an error frame the
+/// server sends back (`WireError::from_protocol`), so a misbehaving
+/// client learns *why* its frame was rejected.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ProtocolError {
+    /// The line exceeded [`MAX_FRAME_BYTES`] before its newline.
+    Oversized {
+        /// Bytes seen before the frame was abandoned.
+        len: usize,
+    },
+    /// The frame bytes are not valid UTF-8.
+    Utf8,
+    /// The frame is not parseable JSON (includes truncated documents).
+    Parse {
+        /// Parser diagnostic.
+        message: String,
+    },
+    /// Parsed JSON, but the `v` field is missing or not
+    /// [`PROTOCOL_VERSION`].
+    Version {
+        /// The version the frame carried, if any.
+        got: Option<i64>,
+    },
+    /// Valid versioned JSON that is not a known frame shape (missing
+    /// `id`/`verb`/`re`/`ev`, unknown verb, wrong field types…).
+    Malformed {
+        /// What was wrong.
+        message: String,
+    },
+}
+
+impl ProtocolError {
+    /// Stable lowercase tag (doubles as the wire error `kind`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ProtocolError::Oversized { .. } => "oversized",
+            ProtocolError::Utf8 => "utf8",
+            ProtocolError::Parse { .. } => "parse",
+            ProtocolError::Version { .. } => "version",
+            ProtocolError::Malformed { .. } => "malformed",
+        }
+    }
+}
+
+impl fmt::Display for ProtocolError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProtocolError::Oversized { len } => {
+                write!(f, "frame exceeds {MAX_FRAME_BYTES} bytes (got {len})")
+            }
+            ProtocolError::Utf8 => write!(f, "frame is not valid utf-8"),
+            ProtocolError::Parse { message } => {
+                write!(f, "frame is not valid json: {message}")
+            }
+            ProtocolError::Version { got: Some(v) } => {
+                write!(f, "unsupported protocol version {v} (want {PROTOCOL_VERSION})")
+            }
+            ProtocolError::Version { got: None } => {
+                write!(f, "missing protocol version field \"v\"")
+            }
+            ProtocolError::Malformed { message } => {
+                write!(f, "malformed frame: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ProtocolError {}
+
+/// A typed error carried inside an error response frame:
+/// `{"kind":…,"message":…,"field":…}`. `kind` is either a
+/// [`SchedError`] variant tag (`invalid_config`, `parse`,
+/// `schema_align`, `runtime`, `io`, `shard_failed`, `cancelled`,
+/// `unsupported`), a [`ProtocolError`] tag (`oversized`, `utf8`,
+/// `parse`, `version`, `malformed`), or a service condition
+/// (`unknown_job`, `draining`, `busy`, `idle_timeout`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError {
+    /// Stable lowercase error class (see type docs).
+    pub kind: String,
+    /// Human-readable message.
+    pub message: String,
+    /// Config field path, present iff `kind == "invalid_config"`.
+    pub field: Option<String>,
+}
+
+impl WireError {
+    /// An error with the given class and message.
+    pub fn new(kind: impl Into<String>, message: impl Into<String>) -> Self {
+        WireError { kind: kind.into(), message: message.into(), field: None }
+    }
+
+    /// Encode a [`SchedError`] for the wire, preserving the variant tag
+    /// and (for `InvalidConfig`) the offending field path.
+    pub fn from_sched(e: &SchedError) -> Self {
+        let kind = match e {
+            SchedError::InvalidConfig { .. } => "invalid_config",
+            SchedError::Parse { .. } => "parse",
+            SchedError::SchemaAlign { .. } => "schema_align",
+            SchedError::Runtime { .. } => "runtime",
+            SchedError::Io { .. } => "io",
+            SchedError::ShardFailed { .. } => "shard_failed",
+            SchedError::Cancelled => "cancelled",
+            SchedError::Unsupported { .. } => "unsupported",
+        };
+        WireError {
+            kind: kind.into(),
+            message: e.to_string(),
+            field: e.field().map(str::to_string),
+        }
+    }
+
+    /// Encode a [`ProtocolError`] for the wire.
+    pub fn from_protocol(e: &ProtocolError) -> Self {
+        WireError { kind: e.kind().into(), message: e.to_string(), field: None }
+    }
+
+    /// Best-effort reconstruction of a [`SchedError`] on the client
+    /// side. `invalid_config` and `cancelled` round-trip exactly;
+    /// everything else lands in the variant matching its tag with the
+    /// transported message (source chains do not cross the wire).
+    pub fn to_sched(&self) -> SchedError {
+        match self.kind.as_str() {
+            "invalid_config" => SchedError::invalid(
+                self.field.clone().unwrap_or_default(),
+                self.message.clone(),
+            ),
+            "cancelled" => SchedError::Cancelled,
+            "parse" => SchedError::parse("<wire>", self.message.clone()),
+            "schema_align" => SchedError::schema(self.message.clone()),
+            "io" => SchedError::io("<wire>", self.message.clone()),
+            "unsupported" => SchedError::unsupported(self.message.clone()),
+            _ => SchedError::runtime(format!("{}: {}", self.kind, self.message)),
+        }
+    }
+
+    fn to_json_str(&self) -> String {
+        let mut w = ObjWriter::new()
+            .str("kind", &self.kind)
+            .str("message", &self.message);
+        if let Some(f) = &self.field {
+            w = w.str("field", f);
+        }
+        w.finish()
+    }
+
+    fn from_json(v: &Json) -> Result<Self, ProtocolError> {
+        Ok(WireError {
+            kind: req_str(v, "kind")?.to_string(),
+            message: req_str(v, "message")?.to_string(),
+            field: v.get("field").and_then(|f| f.as_str()).map(str::to_string),
+        })
+    }
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.field {
+            Some(field) => {
+                write!(f, "{}: {} ({})", self.kind, self.message, field)
+            }
+            None => write!(f, "{}: {}", self.kind, self.message),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------------
+
+/// Job description carried by a `submit` frame. Exactly one source must
+/// be given: synthetic (`rows` + `seed`, the generator workload the
+/// `run` subcommand uses) or CSV (`csv_a` + `csv_b` + `schema`, paths
+/// resolved on the *daemon's* filesystem). The remaining fields
+/// override the daemon's base [`crate::config::SchedulerConfig`] per
+/// job.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct WireJobSpec {
+    /// Synthetic workload: row count.
+    pub rows: Option<usize>,
+    /// Synthetic workload seed (default 0).
+    pub seed: u64,
+    /// CSV workload: A-side path on the daemon's filesystem.
+    pub csv_a: Option<String>,
+    /// CSV workload: B-side path on the daemon's filesystem.
+    pub csv_b: Option<String>,
+    /// CSV column spec, `name[:key]:type,…` (see `Schema::parse_spec`).
+    pub schema: Option<String>,
+    /// Backend override (`auto`/`inmem`/`dask`).
+    pub backend: Option<String>,
+    /// Controller lower batch bound override.
+    pub b_min: Option<usize>,
+    /// Prefetch override.
+    pub prefetch: Option<bool>,
+}
+
+/// A decoded request verb with its arguments.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Submit a job; `subscribe` additionally streams its events and
+    /// terminal result to this connection.
+    Submit {
+        /// What to diff and how.
+        spec: WireJobSpec,
+        /// Stream events + result to the submitting connection.
+        subscribe: bool,
+    },
+    /// Cooperatively cancel a job by wire id.
+    Cancel {
+        /// Wire job id (as returned by `submit`).
+        job: u64,
+    },
+    /// Full daemon snapshot: session budget/grants, per-job progress,
+    /// accept/dispatch overhead counters.
+    Status,
+    /// Cheap liveness probe.
+    Health,
+    /// Stream an existing job's events (history replayed first) and its
+    /// terminal result to this connection.
+    Subscribe {
+        /// Wire job id.
+        job: u64,
+    },
+    /// Ask the daemon to drain and exit (same path as SIGINT).
+    Shutdown,
+}
+
+/// A request frame: correlation id + verb.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestFrame {
+    /// Client-chosen id, echoed as `re` in the response.
+    pub id: u64,
+    /// The verb and its arguments.
+    pub req: Request,
+}
+
+/// Encode a request frame as one JSON line (no trailing newline).
+pub fn encode_request(frame: &RequestFrame) -> String {
+    let w = ObjWriter::new()
+        .int("v", PROTOCOL_VERSION)
+        .int("id", frame.id as i64);
+    match &frame.req {
+        Request::Submit { spec, subscribe } => {
+            let mut w = w.str("verb", "submit").bool("subscribe", *subscribe);
+            if let Some(rows) = spec.rows {
+                w = w.int("rows", rows as i64).int("seed", spec.seed as i64);
+            }
+            if let Some(a) = &spec.csv_a {
+                w = w.str("csv_a", a);
+            }
+            if let Some(b) = &spec.csv_b {
+                w = w.str("csv_b", b);
+            }
+            if let Some(s) = &spec.schema {
+                w = w.str("schema", s);
+            }
+            if let Some(b) = &spec.backend {
+                w = w.str("backend", b);
+            }
+            if let Some(m) = spec.b_min {
+                w = w.int("b_min", m as i64);
+            }
+            if let Some(p) = spec.prefetch {
+                w = w.bool("prefetch", p);
+            }
+            w.finish()
+        }
+        Request::Cancel { job } => {
+            w.str("verb", "cancel").int("job", *job as i64).finish()
+        }
+        Request::Status => w.str("verb", "status").finish(),
+        Request::Health => w.str("verb", "health").finish(),
+        Request::Subscribe { job } => {
+            w.str("verb", "subscribe").int("job", *job as i64).finish()
+        }
+        Request::Shutdown => w.str("verb", "shutdown").finish(),
+    }
+}
+
+/// Decode one request line. All failure modes are typed
+/// ([`ProtocolError`]); the caller answers them with an error frame.
+pub fn decode_request(line: &str) -> Result<RequestFrame, ProtocolError> {
+    let v = parse_versioned(line)?;
+    let id = req_u64(&v, "id")?;
+    let verb = req_str(&v, "verb")?;
+    let req = match verb {
+        "submit" => {
+            let spec = WireJobSpec {
+                rows: opt_usize(&v, "rows")?,
+                seed: opt_u64(&v, "seed")?.unwrap_or(0),
+                csv_a: opt_string(&v, "csv_a")?,
+                csv_b: opt_string(&v, "csv_b")?,
+                schema: opt_string(&v, "schema")?,
+                backend: opt_string(&v, "backend")?,
+                b_min: opt_usize(&v, "b_min")?,
+                prefetch: opt_bool(&v, "prefetch")?,
+            };
+            let subscribe = opt_bool(&v, "subscribe")?.unwrap_or(false);
+            Request::Submit { spec, subscribe }
+        }
+        "cancel" => Request::Cancel { job: req_u64(&v, "job")? },
+        "status" => Request::Status,
+        "health" => Request::Health,
+        "subscribe" => Request::Subscribe { job: req_u64(&v, "job")? },
+        "shutdown" => Request::Shutdown,
+        other => {
+            return Err(ProtocolError::Malformed {
+                message: format!("unknown verb {other:?}"),
+            })
+        }
+    };
+    Ok(RequestFrame { id, req })
+}
+
+// ---------------------------------------------------------------------------
+// Server frames (responses + events)
+// ---------------------------------------------------------------------------
+
+/// A decoded server → client frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServerFrame {
+    /// Success response to request `re`; `body` is the verb-specific
+    /// payload object.
+    Ok {
+        /// Echoed request id.
+        re: u64,
+        /// Verb-specific payload.
+        body: Json,
+    },
+    /// Error response to request `re` (`re == 0` when the request id
+    /// could not be recovered from a malformed frame).
+    Err {
+        /// Echoed request id, or 0.
+        re: u64,
+        /// The typed error.
+        error: WireError,
+    },
+    /// One streamed [`JobEvent`].
+    Event {
+        /// Wire job id the event belongs to.
+        job: u64,
+        /// The decoded event.
+        event: JobEvent,
+    },
+    /// Terminal frame for a subscribed job: success carries the diff
+    /// report JSON (bit-identical to `JobReport::to_json`) and a stats
+    /// object; failure carries the typed error.
+    Result {
+        /// Wire job id.
+        job: u64,
+        /// Whether the job succeeded.
+        ok: bool,
+        /// Diff report (present iff `ok`).
+        report: Option<Json>,
+        /// Scheduler stats (present iff `ok`).
+        stats: Option<Json>,
+        /// Error (present iff `!ok`).
+        error: Option<WireError>,
+    },
+}
+
+/// Encode a success response (no trailing newline). `body_json` must be
+/// a serialized JSON object — it is embedded raw, so report payloads
+/// round-trip byte-identically.
+pub fn encode_ok(re: u64, body_json: &str) -> String {
+    ObjWriter::new()
+        .int("v", PROTOCOL_VERSION)
+        .int("re", re as i64)
+        .bool("ok", true)
+        .raw("body", body_json)
+        .finish()
+}
+
+/// Encode an error response (no trailing newline).
+pub fn encode_err(re: u64, error: &WireError) -> String {
+    ObjWriter::new()
+        .int("v", PROTOCOL_VERSION)
+        .int("re", re as i64)
+        .bool("ok", false)
+        .raw("error", &error.to_json_str())
+        .finish()
+}
+
+/// Encode one job event frame (no trailing newline).
+pub fn encode_event(job: u64, ev: &JobEvent) -> String {
+    ObjWriter::new()
+        .int("v", PROTOCOL_VERSION)
+        .str("ev", "job")
+        .int("job", job as i64)
+        .str("kind", ev.kind())
+        .raw("data", &event_data_json(ev))
+        .finish()
+}
+
+/// Encode a job's terminal result frame (no trailing newline).
+/// `report_json`/`stats_json` are embedded raw (see [`encode_ok`]).
+pub fn encode_result(
+    job: u64,
+    outcome: &Result<(String, String), SchedError>,
+) -> String {
+    let w = ObjWriter::new()
+        .int("v", PROTOCOL_VERSION)
+        .str("ev", "result")
+        .int("job", job as i64);
+    match outcome {
+        Ok((report_json, stats_json)) => w
+            .bool("ok", true)
+            .raw("report", report_json)
+            .raw("stats", stats_json)
+            .finish(),
+        Err(e) => w
+            .bool("ok", false)
+            .raw("error", &WireError::from_sched(e).to_json_str())
+            .finish(),
+    }
+}
+
+/// Decode one server → client line into a typed [`ServerFrame`].
+pub fn decode_server_frame(line: &str) -> Result<ServerFrame, ProtocolError> {
+    let v = parse_versioned(line)?;
+    if let Some(ev) = v.get("ev").and_then(|e| e.as_str()) {
+        let job = req_u64(&v, "job")?;
+        return match ev {
+            "job" => {
+                let kind = req_str(&v, "kind")?;
+                let data = v.get("data").cloned().unwrap_or(Json::Null);
+                let event = decode_job_event(kind, &data)?;
+                Ok(ServerFrame::Event { job, event })
+            }
+            "result" => {
+                let ok = v
+                    .get("ok")
+                    .and_then(|b| b.as_bool())
+                    .ok_or_else(|| malformed("result frame missing ok"))?;
+                if ok {
+                    Ok(ServerFrame::Result {
+                        job,
+                        ok,
+                        report: v.get("report").cloned(),
+                        stats: v.get("stats").cloned(),
+                        error: None,
+                    })
+                } else {
+                    let error = v
+                        .get("error")
+                        .ok_or_else(|| malformed("failed result missing error"))
+                        .and_then(WireError::from_json)?;
+                    Ok(ServerFrame::Result {
+                        job,
+                        ok,
+                        report: None,
+                        stats: None,
+                        error: Some(error),
+                    })
+                }
+            }
+            other => Err(malformed(&format!("unknown event class {other:?}"))),
+        };
+    }
+    let re = req_u64(&v, "re")?;
+    let ok = v
+        .get("ok")
+        .and_then(|b| b.as_bool())
+        .ok_or_else(|| malformed("response missing ok"))?;
+    if ok {
+        let body = v.get("body").cloned().unwrap_or(Json::Null);
+        Ok(ServerFrame::Ok { re, body })
+    } else {
+        let error = v
+            .get("error")
+            .ok_or_else(|| malformed("error response missing error"))
+            .and_then(WireError::from_json)?;
+        Ok(ServerFrame::Err { re, error })
+    }
+}
+
+/// Serialize a [`JobEvent`]'s payload fields (everything `kind()` does
+/// not carry) as a JSON object.
+fn event_data_json(ev: &JobEvent) -> String {
+    match ev {
+        JobEvent::Gated { ws_bytes, available_bytes } => ObjWriter::new()
+            .int("ws_bytes", *ws_bytes as i64)
+            .int("available_bytes", *available_bytes as i64)
+            .finish(),
+        JobEvent::Admitted { ws_bytes, granted_bytes, concurrent } => {
+            ObjWriter::new()
+                .int("ws_bytes", *ws_bytes as i64)
+                .int("granted_bytes", *granted_bytes as i64)
+                .int("concurrent", *concurrent as i64)
+                .finish()
+        }
+        JobEvent::MemGrant { from_bytes, to_bytes } => ObjWriter::new()
+            .int("from_bytes", *from_bytes as i64)
+            .int("to_bytes", *to_bytes as i64)
+            .finish(),
+        JobEvent::Reconfig { b_from, b_to, k_from, k_to, reason } => {
+            ObjWriter::new()
+                .int("b_from", *b_from as i64)
+                .int("b_to", *b_to as i64)
+                .int("k_from", *k_from as i64)
+                .int("k_to", *k_to as i64)
+                .str("reason", reason)
+                .finish()
+        }
+        JobEvent::Backpressure { queue_depth } => ObjWriter::new()
+            .int("queue_depth", *queue_depth as i64)
+            .finish(),
+        JobEvent::Speculation { shard_id } => {
+            ObjWriter::new().int("shard_id", *shard_id as i64).finish()
+        }
+        JobEvent::Split { shard_id, in_run } => ObjWriter::new()
+            .int("shard_id", *shard_id as i64)
+            .bool("in_run", *in_run)
+            .finish(),
+        JobEvent::Done { ok } => ObjWriter::new().bool("ok", *ok).finish(),
+    }
+}
+
+/// Reconstruct a [`JobEvent`] from its wire `kind` tag + data object.
+/// Inverse of [`encode_event`]; the round-trip is exact.
+pub fn decode_job_event(kind: &str, data: &Json) -> Result<JobEvent, ProtocolError> {
+    let u = |key: &str| req_u64(data, key);
+    let us = |key: &str| req_u64(data, key).map(|x| x as usize);
+    match kind {
+        "gated" => Ok(JobEvent::Gated {
+            ws_bytes: u("ws_bytes")?,
+            available_bytes: u("available_bytes")?,
+        }),
+        "admitted" => Ok(JobEvent::Admitted {
+            ws_bytes: u("ws_bytes")?,
+            granted_bytes: u("granted_bytes")?,
+            concurrent: us("concurrent")?,
+        }),
+        "mem_grant" => Ok(JobEvent::MemGrant {
+            from_bytes: u("from_bytes")?,
+            to_bytes: u("to_bytes")?,
+        }),
+        "reconfig" => Ok(JobEvent::Reconfig {
+            b_from: us("b_from")?,
+            b_to: us("b_to")?,
+            k_from: us("k_from")?,
+            k_to: us("k_to")?,
+            reason: req_str(data, "reason")?.to_string(),
+        }),
+        "backpressure" => {
+            Ok(JobEvent::Backpressure { queue_depth: us("queue_depth")? })
+        }
+        "speculation" => Ok(JobEvent::Speculation { shard_id: u("shard_id")? }),
+        "split" => Ok(JobEvent::Split {
+            shard_id: u("shard_id")?,
+            in_run: data
+                .get("in_run")
+                .and_then(|b| b.as_bool())
+                .ok_or_else(|| malformed("split missing in_run"))?,
+        }),
+        "done" => Ok(JobEvent::Done {
+            ok: data
+                .get("ok")
+                .and_then(|b| b.as_bool())
+                .ok_or_else(|| malformed("done missing ok"))?,
+        }),
+        other => Err(malformed(&format!("unknown event kind {other:?}"))),
+    }
+}
+
+/// Best-effort extraction of the request id from a line that failed to
+/// decode, so the error frame can still correlate (`0` if unrecoverable).
+pub fn salvage_request_id(line: &str) -> u64 {
+    json::parse(line)
+        .ok()
+        .and_then(|v| v.get("id").and_then(|x| x.as_i64()))
+        .and_then(|x| u64::try_from(x).ok())
+        .unwrap_or(0)
+}
+
+// ---------------------------------------------------------------------------
+// JSON field helpers
+// ---------------------------------------------------------------------------
+
+fn malformed(message: &str) -> ProtocolError {
+    ProtocolError::Malformed { message: message.into() }
+}
+
+fn parse_versioned(line: &str) -> Result<Json, ProtocolError> {
+    if line.len() > MAX_FRAME_BYTES {
+        return Err(ProtocolError::Oversized { len: line.len() });
+    }
+    let v = json::parse(line)
+        .map_err(|message| ProtocolError::Parse { message })?;
+    if !matches!(v, Json::Obj(_)) {
+        return Err(malformed("frame is not a json object"));
+    }
+    match v.get("v").and_then(|x| x.as_i64()) {
+        Some(PROTOCOL_VERSION) => Ok(v),
+        got => Err(ProtocolError::Version { got }),
+    }
+}
+
+fn req_u64(v: &Json, key: &str) -> Result<u64, ProtocolError> {
+    v.get(key)
+        .and_then(|x| x.as_i64())
+        .and_then(|x| u64::try_from(x).ok())
+        .ok_or_else(|| malformed(&format!("missing/invalid field {key:?}")))
+}
+
+fn req_str<'a>(v: &'a Json, key: &str) -> Result<&'a str, ProtocolError> {
+    v.get(key)
+        .and_then(|x| x.as_str())
+        .ok_or_else(|| malformed(&format!("missing/invalid field {key:?}")))
+}
+
+fn opt_u64(v: &Json, key: &str) -> Result<Option<u64>, ProtocolError> {
+    match v.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(_) => req_u64(v, key).map(Some),
+    }
+}
+
+fn opt_usize(v: &Json, key: &str) -> Result<Option<usize>, ProtocolError> {
+    Ok(opt_u64(v, key)?.map(|x| x as usize))
+}
+
+fn opt_string(v: &Json, key: &str) -> Result<Option<String>, ProtocolError> {
+    match v.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(x) => x
+            .as_str()
+            .map(|s| Some(s.to_string()))
+            .ok_or_else(|| malformed(&format!("field {key:?} must be a string"))),
+    }
+}
+
+fn opt_bool(v: &Json, key: &str) -> Result<Option<bool>, ProtocolError> {
+    match v.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(x) => x
+            .as_bool()
+            .map(Some)
+            .ok_or_else(|| malformed(&format!("field {key:?} must be a bool"))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frame reader
+// ---------------------------------------------------------------------------
+
+/// Outcome of one [`FrameReader::read_frame`] call.
+#[derive(Debug, PartialEq, Eq)]
+pub enum ReadOutcome {
+    /// One complete line (newline stripped, UTF-8 validated).
+    Frame(String),
+    /// The peer closed the stream cleanly (no buffered partial frame).
+    Eof,
+    /// No complete frame arrived before the reader's timeout (the
+    /// socket's read timeout, when set). The connection is still alive.
+    Timeout,
+}
+
+/// Incremental newline-delimited frame reader over any [`Read`].
+///
+/// Enforces [`MAX_FRAME_BYTES`] with resynchronization: an oversized
+/// line is reported once as [`ProtocolError::Oversized`] and its
+/// remaining bytes are discarded through the terminating newline, after
+/// which reading resumes normally — one hostile frame cannot take the
+/// connection down. Invalid UTF-8 and truncated trailing frames are
+/// typed errors too; the stream stays consumable after each.
+pub struct FrameReader<R: Read> {
+    inner: R,
+    buf: Vec<u8>,
+    /// Inside an oversized line, discarding until its newline.
+    discarding: bool,
+}
+
+impl<R: Read> FrameReader<R> {
+    /// Wrap a byte stream.
+    pub fn new(inner: R) -> Self {
+        FrameReader { inner, buf: Vec::new(), discarding: false }
+    }
+
+    /// Read until one complete frame, EOF, or timeout. `Err` values are
+    /// per-frame (the next call continues with the following frame).
+    pub fn read_frame(&mut self) -> Result<ReadOutcome, ProtocolError> {
+        loop {
+            // Resync: drop bytes of an oversized line through its '\n'.
+            if self.discarding {
+                match self.buf.iter().position(|&b| b == b'\n') {
+                    Some(i) => {
+                        self.buf.drain(..=i);
+                        self.discarding = false;
+                    }
+                    None => self.buf.clear(),
+                }
+            }
+            if !self.discarding {
+                if let Some(i) = self.buf.iter().position(|&b| b == b'\n') {
+                    let mut line: Vec<u8> = self.buf.drain(..=i).collect();
+                    line.pop(); // '\n'
+                    if line.last() == Some(&b'\r') {
+                        line.pop();
+                    }
+                    if line.is_empty() {
+                        continue; // blank keep-alive line
+                    }
+                    if line.len() > MAX_FRAME_BYTES {
+                        return Err(ProtocolError::Oversized { len: line.len() });
+                    }
+                    return match String::from_utf8(line) {
+                        Ok(s) => Ok(ReadOutcome::Frame(s)),
+                        Err(_) => Err(ProtocolError::Utf8),
+                    };
+                }
+                if self.buf.len() > MAX_FRAME_BYTES {
+                    let len = self.buf.len();
+                    self.buf.clear();
+                    self.discarding = true;
+                    return Err(ProtocolError::Oversized { len });
+                }
+            }
+            let mut chunk = [0u8; 8192];
+            match self.inner.read(&mut chunk) {
+                Ok(0) => {
+                    if self.buf.is_empty() || self.discarding {
+                        return Ok(ReadOutcome::Eof);
+                    }
+                    self.buf.clear();
+                    return Err(ProtocolError::Parse {
+                        message: "truncated frame at end of stream".into(),
+                    });
+                }
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e) => match e.kind() {
+                    std::io::ErrorKind::WouldBlock
+                    | std::io::ErrorKind::TimedOut => {
+                        return Ok(ReadOutcome::Timeout)
+                    }
+                    std::io::ErrorKind::Interrupted => continue,
+                    _ => return Ok(ReadOutcome::Eof),
+                },
+            }
+        }
+    }
+}

@@ -1,0 +1,716 @@
+//! The diff daemon: a TCP accept loop exposing one [`DiffSession`] to
+//! remote clients over the line-delimited JSON protocol.
+//!
+//! Thread anatomy (all plain `std::thread`, zero dependencies):
+//!
+//! * **accept loop** (the thread calling [`Daemon::run`]) — nonblocking
+//!   accept + capacity check. Its per-iteration work time is accounted
+//!   in `accept_ns` with idle sleeps excluded, the same
+//!   overhead-vs-wait split the scheduler loop uses for `sched_ns`
+//!   (arXiv 2010.11105: the control plane itself must be measured).
+//! * **per connection**: a *reader* thread (frame decode + verb
+//!   dispatch; its handling time accrues to `dispatch_ns`) and a
+//!   *writer* thread draining an mpsc channel of encoded frames, so
+//!   responses, streamed events, and terminal results from many threads
+//!   serialize onto the socket without interleaving.
+//! * **per job**: a *monitor* thread that joins the [`JobHandle`] and
+//!   records the terminal result frame in the registry, and one
+//!   *forwarder* thread per subscription streaming every
+//!   [`JobEvent`](crate::api::JobEvent) (history replayed first, so a
+//!   subscriber arriving after admission still sees `Gated`/`Admitted`)
+//!   followed by the result frame.
+//!
+//! Lifecycle: malformed frames are answered with typed error frames
+//! (never a dropped connection); idle connections without active
+//! subscriptions are closed after `service.idle_timeout_secs`; shutdown
+//! (SIGINT or the `shutdown` verb) drains — stop accepting, refuse new
+//! submits with a `draining` error, cancel or await running jobs per
+//! `service.drain`, and join every monitor/forwarder so no submitted
+//! job goes un-answered.
+#![warn(missing_docs)]
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::api::{DiffSession, JobBuilder, JobControl, JobSpec};
+use crate::api::error::SchedError;
+use crate::api::events::JobState;
+use crate::config::{BackendChoice, DrainPolicy, SchedulerConfig};
+use crate::data::generator::{generate_pair, GenSpec};
+use crate::data::io::{CsvFileSource, InMemorySource, TableSource};
+use crate::data::schema::Schema;
+use crate::sched::scheduler::JobStats;
+use crate::sched::telemetry::Telemetry;
+use crate::service::protocol::{
+    decode_request, encode_err, encode_event, encode_ok, encode_result,
+    salvage_request_id, FrameReader, ReadOutcome, Request, RequestFrame,
+    WireError, WireJobSpec,
+};
+use crate::util::json::ObjWriter;
+
+/// Accept-loop poll interval while no connection is pending (excluded
+/// from `accept_ns`, mirroring the scheduler loop's wait exclusion).
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+/// Reader-side socket timeout: the tick at which idle/shutdown checks run.
+const READ_TICK: Duration = Duration::from_millis(200);
+
+/// Lifetime counters a drained daemon reports.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DaemonSummary {
+    /// Connections accepted over the daemon's lifetime.
+    pub connections_served: u64,
+    /// Jobs submitted over the wire.
+    pub jobs_submitted: u64,
+    /// Jobs answered with a terminal result frame (equals
+    /// `jobs_submitted` after a clean drain).
+    pub jobs_completed: u64,
+    /// Accept-loop work time, idle sleeps excluded (nanoseconds).
+    pub accept_ns: u64,
+    /// Summed request-handling time across all connections (nanoseconds).
+    pub dispatch_ns: u64,
+}
+
+/// One wire-visible job in the registry.
+struct JobEntry {
+    control: Arc<JobControl>,
+    /// Encoded terminal `result` frame, set by the job's monitor thread.
+    result_frame: Option<String>,
+}
+
+/// State shared by the accept loop and every per-connection/per-job thread.
+struct Shared {
+    cfg: SchedulerConfig,
+    session: DiffSession,
+    /// Set by SIGINT, the `shutdown` verb, or [`Daemon::shutdown_flag`]
+    /// holders; the accept loop exits on the next poll.
+    shutdown: Arc<AtomicBool>,
+    /// Refuse new submits (set at the start of the drain, and by the
+    /// `shutdown` verb so in-flight connections see it immediately).
+    draining: AtomicBool,
+    /// Drain has finished with jobs; readers should close their
+    /// connections on the next tick.
+    closing: AtomicBool,
+    jobs: Mutex<BTreeMap<u64, JobEntry>>,
+    /// Signals `result_frame` publications to waiting forwarders.
+    result_cv: Condvar,
+    conn_count: AtomicUsize,
+    connections_served: AtomicU64,
+    jobs_submitted: AtomicU64,
+    jobs_completed: AtomicU64,
+    accept_ns: AtomicU64,
+    dispatch_ns: AtomicU64,
+    monitors: Mutex<Vec<JoinHandle<()>>>,
+    forwarders: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// A bound, not-yet-running daemon. [`Daemon::bind`] validates the
+/// config and claims the socket; [`Daemon::run`] blocks serving it
+/// until the shutdown flag is raised, then drains.
+pub struct Daemon {
+    listener: TcpListener,
+    local_addr: SocketAddr,
+    shared: Arc<Shared>,
+}
+
+impl Daemon {
+    /// Validate `cfg`, bind `cfg.service.bind_addr`, and build the
+    /// session owning `cfg.caps`. Port 0 binds an ephemeral port —
+    /// check [`Daemon::local_addr`] (how the tests avoid collisions).
+    pub fn bind(cfg: SchedulerConfig) -> Result<Daemon, SchedError> {
+        cfg.validate()?;
+        let listener = TcpListener::bind(&cfg.service.bind_addr)
+            .map_err(|e| {
+                SchedError::io(cfg.service.bind_addr.clone(), format!("bind: {e}"))
+            })?;
+        listener.set_nonblocking(true).map_err(|e| {
+            SchedError::io(cfg.service.bind_addr.clone(), format!("nonblock: {e}"))
+        })?;
+        let local_addr = listener.local_addr().map_err(|e| {
+            SchedError::io(cfg.service.bind_addr.clone(), format!("addr: {e}"))
+        })?;
+        let session = DiffSession::new(cfg.caps);
+        Ok(Daemon {
+            listener,
+            local_addr,
+            shared: Arc::new(Shared {
+                cfg,
+                session,
+                shutdown: Arc::new(AtomicBool::new(false)),
+                draining: AtomicBool::new(false),
+                closing: AtomicBool::new(false),
+                jobs: Mutex::new(BTreeMap::new()),
+                result_cv: Condvar::new(),
+                conn_count: AtomicUsize::new(0),
+                connections_served: AtomicU64::new(0),
+                jobs_submitted: AtomicU64::new(0),
+                jobs_completed: AtomicU64::new(0),
+                accept_ns: AtomicU64::new(0),
+                dispatch_ns: AtomicU64::new(0),
+                monitors: Mutex::new(Vec::new()),
+                forwarders: Mutex::new(Vec::new()),
+            }),
+        })
+    }
+
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Shared shutdown flag: store `true` (e.g. from a SIGINT watcher)
+    /// and [`Daemon::run`] begins its drain on the next accept poll.
+    pub fn shutdown_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.shared.shutdown)
+    }
+
+    /// Serve until the shutdown flag is raised, then drain and return
+    /// the lifetime counters. A clean drain answers every submitted job
+    /// (`jobs_completed == jobs_submitted`).
+    pub fn run(self) -> Result<DaemonSummary, SchedError> {
+        let mut conns: Vec<(JoinHandle<()>, JoinHandle<()>)> = Vec::new();
+        loop {
+            if self.shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let t0 = Instant::now();
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    self.admit_connection(stream, &mut conns);
+                    self.accrue_accept(t0);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    self.accrue_accept(t0);
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(_) => {
+                    self.accrue_accept(t0);
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+            }
+        }
+
+        // --- drain ---
+        let shared = &self.shared;
+        shared.draining.store(true, Ordering::SeqCst);
+        // Two passes: a submit that raced the draining flag may add a
+        // monitor/forwarder after the first join sweep; the second pass
+        // (after the readers are gone and no submit can race) catches it.
+        for _pass in 0..2 {
+            if shared.cfg.service.drain == DrainPolicy::Cancel {
+                let jobs = shared.jobs.lock().unwrap();
+                for entry in jobs.values() {
+                    if entry.result_frame.is_none() {
+                        entry.control.request_cancel();
+                    }
+                }
+            }
+            join_all(&shared.monitors);
+            join_all(&shared.forwarders);
+            shared.closing.store(true, Ordering::SeqCst);
+        }
+        for (reader, writer) in conns {
+            let _ = reader.join();
+            let _ = writer.join();
+        }
+        join_all(&shared.monitors);
+        join_all(&shared.forwarders);
+
+        let summary = DaemonSummary {
+            connections_served: shared.connections_served.load(Ordering::Relaxed),
+            jobs_submitted: shared.jobs_submitted.load(Ordering::Relaxed),
+            jobs_completed: shared.jobs_completed.load(Ordering::Relaxed),
+            accept_ns: shared.accept_ns.load(Ordering::Relaxed),
+            dispatch_ns: shared.dispatch_ns.load(Ordering::Relaxed),
+        };
+        // Control-plane telemetry: one `service` record beside the job
+        // telemetry (own file — job sinks truncate-on-open the shared
+        // path, so the daemon must not reopen it).
+        if let Some(p) = &shared.cfg.telemetry_path {
+            if let Ok(mut t) = Telemetry::to_file(&format!("{p}.service")) {
+                t.service(
+                    &ObjWriter::new()
+                        .int("connections", summary.connections_served as i64)
+                        .int("jobs_submitted", summary.jobs_submitted as i64)
+                        .int("jobs_completed", summary.jobs_completed as i64)
+                        .int("accept_ns", summary.accept_ns as i64)
+                        .int("dispatch_ns", summary.dispatch_ns as i64)
+                        .finish(),
+                );
+                t.flush();
+            }
+        }
+        Ok(summary)
+    }
+
+    fn accrue_accept(&self, t0: Instant) {
+        self.shared
+            .accept_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Capacity-check an accepted socket; over the limit it is answered
+    /// with a typed `busy` frame and closed instead of silently dropped.
+    fn admit_connection(
+        &self,
+        stream: TcpStream,
+        conns: &mut Vec<(JoinHandle<()>, JoinHandle<()>)>,
+    ) {
+        let shared = &self.shared;
+        if shared.conn_count.load(Ordering::SeqCst)
+            >= shared.cfg.service.max_connections
+        {
+            let mut s = stream;
+            let frame = encode_err(
+                0,
+                &WireError::new("busy", "connection limit reached, retry later"),
+            );
+            let _ = s.write_all(frame.as_bytes());
+            let _ = s.write_all(b"\n");
+            let _ = s.shutdown(Shutdown::Both);
+            return;
+        }
+        if let Ok(pair) = spawn_connection(Arc::clone(shared), stream) {
+            conns.push(pair);
+        }
+    }
+}
+
+/// Join and drop every handle currently in `slot` (more may be pushed
+/// concurrently; callers sweep again once pushers are quiesced).
+fn join_all(slot: &Mutex<Vec<JoinHandle<()>>>) {
+    loop {
+        let handle = slot.lock().unwrap().pop();
+        match handle {
+            Some(h) => {
+                let _ = h.join();
+            }
+            None => break,
+        }
+    }
+}
+
+/// Start the reader/writer thread pair for one accepted connection.
+fn spawn_connection(
+    shared: Arc<Shared>,
+    stream: TcpStream,
+) -> std::io::Result<(JoinHandle<()>, JoinHandle<()>)> {
+    stream.set_read_timeout(Some(READ_TICK))?;
+    let write_half = stream.try_clone()?;
+    shared.conn_count.fetch_add(1, Ordering::SeqCst);
+    shared.connections_served.fetch_add(1, Ordering::Relaxed);
+
+    // Writer: single consumer of this connection's outgoing frames, so
+    // concurrent producers (reader responses, forwarder events) never
+    // interleave bytes on the socket.
+    let (out_tx, out_rx) = mpsc::channel::<String>();
+    let writer = std::thread::spawn(move || {
+        let mut w = std::io::BufWriter::new(write_half);
+        for frame in out_rx {
+            if w.write_all(frame.as_bytes()).is_err()
+                || w.write_all(b"\n").is_err()
+                || w.flush().is_err()
+            {
+                break;
+            }
+        }
+        if let Ok(s) = w.into_inner() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+    });
+
+    let reader = std::thread::spawn(move || {
+        reader_loop(&shared, stream, out_tx);
+        shared.conn_count.fetch_sub(1, Ordering::SeqCst);
+    });
+    Ok((reader, writer))
+}
+
+/// Per-connection frame loop: decode, dispatch, answer. Protocol errors
+/// are answered with typed error frames and the loop continues — one
+/// hostile frame never takes the connection down.
+fn reader_loop(shared: &Arc<Shared>, stream: TcpStream, out: mpsc::Sender<String>) {
+    let idle_limit = Duration::from_secs(shared.cfg.service.idle_timeout_secs);
+    let active_subs = Arc::new(AtomicUsize::new(0));
+    let mut frames = FrameReader::new(stream);
+    let mut last_activity = Instant::now();
+    loop {
+        match frames.read_frame() {
+            Ok(ReadOutcome::Frame(line)) => {
+                last_activity = Instant::now();
+                let t0 = Instant::now();
+                handle_frame(shared, &line, &out, &active_subs);
+                shared
+                    .dispatch_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+            Ok(ReadOutcome::Timeout) => {
+                if shared.closing.load(Ordering::SeqCst) {
+                    break;
+                }
+                if shared.cfg.service.idle_timeout_secs > 0
+                    && active_subs.load(Ordering::SeqCst) == 0
+                    && last_activity.elapsed() >= idle_limit
+                {
+                    let _ = out.send(encode_err(
+                        0,
+                        &WireError::new("idle_timeout", "closing idle connection"),
+                    ));
+                    break;
+                }
+            }
+            Ok(ReadOutcome::Eof) => break,
+            Err(pe) => {
+                last_activity = Instant::now();
+                let _ = out.send(encode_err(0, &WireError::from_protocol(&pe)));
+            }
+        }
+    }
+}
+
+fn unknown_job(job: u64) -> WireError {
+    WireError::new("unknown_job", format!("no job {job} in this daemon"))
+}
+
+/// Decode and dispatch one request frame.
+fn handle_frame(
+    shared: &Arc<Shared>,
+    line: &str,
+    out: &mpsc::Sender<String>,
+    active_subs: &Arc<AtomicUsize>,
+) {
+    let RequestFrame { id, req } = match decode_request(line) {
+        Ok(f) => f,
+        Err(pe) => {
+            let _ = out.send(encode_err(
+                salvage_request_id(line),
+                &WireError::from_protocol(&pe),
+            ));
+            return;
+        }
+    };
+    match req {
+        Request::Submit { spec, subscribe } => {
+            if shared.draining.load(Ordering::SeqCst) {
+                let _ = out.send(encode_err(
+                    id,
+                    &WireError::new(
+                        "draining",
+                        "daemon is draining and not accepting jobs",
+                    ),
+                ));
+                return;
+            }
+            match submit_job(shared, &spec) {
+                Ok(job) => {
+                    // Response before the forwarder spawns, so the
+                    // submit ack always precedes the job's event frames.
+                    let _ = out.send(encode_ok(
+                        id,
+                        &ObjWriter::new().int("job", job as i64).finish(),
+                    ));
+                    if subscribe {
+                        spawn_forwarder(shared, job, out.clone(), active_subs);
+                    }
+                }
+                Err(e) => {
+                    let _ = out.send(encode_err(id, &WireError::from_sched(&e)));
+                }
+            }
+        }
+        Request::Cancel { job } => {
+            let control = shared
+                .jobs
+                .lock()
+                .unwrap()
+                .get(&job)
+                .map(|e| Arc::clone(&e.control));
+            match control {
+                Some(c) => {
+                    c.request_cancel();
+                    let _ = out.send(encode_ok(
+                        id,
+                        &ObjWriter::new()
+                            .int("job", job as i64)
+                            .bool("cancel_requested", true)
+                            .finish(),
+                    ));
+                }
+                None => {
+                    let _ = out.send(encode_err(id, &unknown_job(job)));
+                }
+            }
+        }
+        Request::Status => {
+            let _ = out.send(encode_ok(id, &status_json(shared)));
+        }
+        Request::Health => {
+            let body = ObjWriter::new()
+                .bool("healthy", true)
+                .bool("draining", shared.draining.load(Ordering::SeqCst))
+                .int("active_jobs", shared.session.active_jobs() as i64)
+                .finish();
+            let _ = out.send(encode_ok(id, &body));
+        }
+        Request::Subscribe { job } => {
+            let known = shared.jobs.lock().unwrap().contains_key(&job);
+            if known {
+                let _ = out.send(encode_ok(
+                    id,
+                    &ObjWriter::new()
+                        .int("job", job as i64)
+                        .bool("subscribed", true)
+                        .finish(),
+                ));
+                spawn_forwarder(shared, job, out.clone(), active_subs);
+            } else {
+                let _ = out.send(encode_err(id, &unknown_job(job)));
+            }
+        }
+        Request::Shutdown => {
+            let _ = out.send(encode_ok(
+                id,
+                &ObjWriter::new().bool("draining", true).finish(),
+            ));
+            shared.draining.store(true, Ordering::SeqCst);
+            shared.shutdown.store(true, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Build sources + per-job config overrides from a wire spec, submit to
+/// the session, register the job, and start its monitor thread.
+fn submit_job(shared: &Arc<Shared>, w: &WireJobSpec) -> Result<u64, SchedError> {
+    let spec = build_job_spec(&shared.cfg, w)?;
+    let mut handle = shared.session.submit(spec)?;
+    let job = handle.id();
+    shared.jobs.lock().unwrap().insert(
+        job,
+        JobEntry { control: handle.control(), result_frame: None },
+    );
+    shared.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+
+    let shared_cl = Arc::clone(shared);
+    let monitor = std::thread::spawn(move || {
+        let outcome = handle
+            .join()
+            .map(|r| (r.report.to_json(), stats_json(&r.stats)));
+        let frame = encode_result(job, &outcome);
+        {
+            let mut jobs = shared_cl.jobs.lock().unwrap();
+            if let Some(entry) = jobs.get_mut(&job) {
+                entry.result_frame = Some(frame);
+            }
+        }
+        shared_cl.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        shared_cl.result_cv.notify_all();
+    });
+    shared.monitors.lock().unwrap().push(monitor);
+    Ok(job)
+}
+
+/// Translate a wire job spec into a validated [`JobSpec`]. Exactly one
+/// source: synthetic (`rows`) or CSV paths on the daemon's filesystem.
+fn build_job_spec(
+    base: &SchedulerConfig,
+    w: &WireJobSpec,
+) -> Result<JobSpec, SchedError> {
+    let mut cfg = base.clone();
+    if let Some(b) = &w.backend {
+        cfg.backend = BackendChoice::parse(b)?;
+    }
+    if let Some(b_min) = w.b_min {
+        cfg.policy.b_min = b_min;
+    }
+    if let Some(p) = w.prefetch {
+        cfg.prefetch = p;
+    }
+    cfg.seed = w.seed;
+    let (a, b): (Arc<dyn TableSource>, Arc<dyn TableSource>) =
+        match (w.rows, &w.csv_a, &w.csv_b) {
+            (Some(rows), None, None) => {
+                let (ta, tb, _) = generate_pair(&GenSpec {
+                    rows,
+                    seed: w.seed,
+                    ..GenSpec::default()
+                });
+                (
+                    Arc::new(InMemorySource::new(ta)),
+                    Arc::new(InMemorySource::new(tb)),
+                )
+            }
+            (None, Some(pa), Some(pb)) => {
+                let spec = w.schema.as_deref().ok_or_else(|| {
+                    SchedError::invalid("schema", "csv jobs need a schema spec")
+                })?;
+                let schema = Schema::parse_spec(spec)?;
+                (
+                    Arc::new(CsvFileSource::open(Path::new(pa), schema.clone())?),
+                    Arc::new(CsvFileSource::open(Path::new(pb), schema)?),
+                )
+            }
+            _ => {
+                return Err(SchedError::invalid(
+                    "submit",
+                    "exactly one job source: rows (synthetic) or csv_a+csv_b",
+                ))
+            }
+        };
+    JobBuilder::from_config(cfg, a, b).build()
+}
+
+/// Stream one job's events (history replay + live) and then its
+/// terminal result frame to one connection.
+fn spawn_forwarder(
+    shared: &Arc<Shared>,
+    job: u64,
+    out: mpsc::Sender<String>,
+    active_subs: &Arc<AtomicUsize>,
+) {
+    let control = match shared.jobs.lock().unwrap().get(&job) {
+        Some(e) => Arc::clone(&e.control),
+        None => return,
+    };
+    active_subs.fetch_add(1, Ordering::SeqCst);
+    let subs = Arc::clone(active_subs);
+    let shared_cl = Arc::clone(shared);
+    let handle = std::thread::spawn(move || {
+        let rx = control.subscribe();
+        let mut saw_done = false;
+        while let Ok(ev) = rx.recv() {
+            let done = ev.kind() == "done";
+            if out.send(encode_event(job, &ev)).is_err() {
+                // Client gone; writer is down. Nothing left to stream.
+                subs.fetch_sub(1, Ordering::SeqCst);
+                return;
+            }
+            if done {
+                saw_done = true;
+                break;
+            }
+        }
+        if saw_done {
+            // The Done event precedes the monitor's join returning; wait
+            // for the result frame to be recorded, then deliver it.
+            let mut jobs = shared_cl.jobs.lock().unwrap();
+            loop {
+                if let Some(frame) =
+                    jobs.get(&job).and_then(|e| e.result_frame.clone())
+                {
+                    let _ = out.send(frame);
+                    break;
+                }
+                let (guard, _) = shared_cl
+                    .result_cv
+                    .wait_timeout(jobs, Duration::from_millis(200))
+                    .unwrap();
+                jobs = guard;
+            }
+        }
+        subs.fetch_sub(1, Ordering::SeqCst);
+    });
+    shared.forwarders.lock().unwrap().push(handle);
+}
+
+fn state_name(s: JobState) -> &'static str {
+    match s {
+        JobState::Pending => "pending",
+        JobState::Gated => "gated",
+        JobState::Running => "running",
+        JobState::Done => "done",
+        JobState::Failed => "failed",
+        JobState::Cancelled => "cancelled",
+    }
+}
+
+/// Serialize the wire subset of [`JobStats`] for result frames.
+fn stats_json(s: &JobStats) -> String {
+    ObjWriter::new()
+        .str("backend", &s.backend)
+        .str("policy", &s.policy)
+        .num("makespan_secs", s.makespan_secs)
+        .num("p50_latency", s.p50_latency)
+        .num("p95_latency", s.p95_latency)
+        .int("peak_rss_bytes", s.peak_rss_bytes as i64)
+        .num("throughput_rows_per_s", s.throughput_rows_per_s)
+        .int("reconfigs", s.reconfigs as i64)
+        .int("ooms", s.ooms as i64)
+        .int("batches", s.batches as i64)
+        .int("sched_overhead_ns", s.sched_overhead_ns as i64)
+        .finish()
+}
+
+/// The `status` snapshot: session budget/grants, per-job state +
+/// progress (incl. `staged_bytes`), and control-plane overhead counters.
+fn status_json(shared: &Shared) -> String {
+    let mut grants = String::from("[");
+    for (i, (job, bytes)) in shared.session.mem_grants().iter().enumerate() {
+        if i > 0 {
+            grants.push(',');
+        }
+        grants.push_str(
+            &ObjWriter::new()
+                .int("job", *job as i64)
+                .int("grant_bytes", *bytes as i64)
+                .finish(),
+        );
+    }
+    grants.push(']');
+
+    let mut jobs_json = String::from("[");
+    {
+        let jobs = shared.jobs.lock().unwrap();
+        for (i, (id, entry)) in jobs.iter().enumerate() {
+            if i > 0 {
+                jobs_json.push(',');
+            }
+            let p = entry.control.progress();
+            let progress = ObjWriter::new()
+                .int("rows_total", p.rows_total as i64)
+                .int("rows_done", p.rows_done as i64)
+                .int("batches", p.batches as i64)
+                .int("current_b", p.current_b as i64)
+                .int("current_k", p.current_k as i64)
+                .int("rss_bytes", p.rss_bytes as i64)
+                .int("staged_bytes", p.staged_bytes as i64)
+                .int("peak_rss_bytes", p.peak_rss_bytes as i64)
+                .int("reconfigs", p.reconfigs as i64)
+                .str("backend", &p.backend)
+                .finish();
+            jobs_json.push_str(
+                &ObjWriter::new()
+                    .int("job", *id as i64)
+                    .str("state", state_name(entry.control.state()))
+                    .bool("answered", entry.result_frame.is_some())
+                    .raw("progress", &progress)
+                    .finish(),
+            );
+        }
+    }
+    jobs_json.push(']');
+
+    ObjWriter::new()
+        .bool("draining", shared.draining.load(Ordering::SeqCst))
+        .int("connections", shared.conn_count.load(Ordering::SeqCst) as i64)
+        .int(
+            "jobs_submitted",
+            shared.jobs_submitted.load(Ordering::Relaxed) as i64,
+        )
+        .int(
+            "jobs_completed",
+            shared.jobs_completed.load(Ordering::Relaxed) as i64,
+        )
+        .int("active_jobs", shared.session.active_jobs() as i64)
+        .int("mem_budget_bytes", shared.session.mem_budget() as i64)
+        .int("committed_bytes", shared.session.committed_bytes() as i64)
+        .raw("mem_grants", &grants)
+        .int("accept_ns", shared.accept_ns.load(Ordering::Relaxed) as i64)
+        .int("dispatch_ns", shared.dispatch_ns.load(Ordering::Relaxed) as i64)
+        .raw("jobs", &jobs_json)
+        .finish()
+}

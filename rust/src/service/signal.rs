@@ -1,0 +1,78 @@
+//! Std-only SIGINT hook: a process-wide flag the drive/accept loops poll.
+//!
+//! The crate is zero-dependency, so instead of a signal-handling crate
+//! this declares libc's `signal(2)` directly — `std` already links
+//! libc on unix, no new dependency is introduced. The handler only
+//! stores to an `AtomicBool` (async-signal-safe); everything else
+//! (session cancel, daemon drain, exit code 130) happens on normal
+//! threads that poll [`interrupted`].
+//!
+//! On non-unix targets installation is a no-op and [`interrupted`]
+//! never fires; Ctrl-C then terminates the process the default way.
+#![warn(missing_docs)]
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Set by the SIGINT handler; never cleared except by [`reset`].
+static INTERRUPTED: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+mod imp {
+    use super::{AtomicBool, Ordering, INTERRUPTED};
+
+    const SIGINT: i32 = 2;
+
+    extern "C" {
+        // Returns the previous disposition, which may be SIG_DFL (0) or
+        // SIG_IGN (1) — typed usize, not a fn pointer, on purpose.
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    extern "C" fn on_sigint(_signum: i32) {
+        INTERRUPTED.store(true, Ordering::SeqCst);
+    }
+
+    pub(super) fn install() {
+        static ONCE: AtomicBool = AtomicBool::new(false);
+        if !ONCE.swap(true, Ordering::SeqCst) {
+            let _ = unsafe { signal(SIGINT, on_sigint) };
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod imp {
+    pub(super) fn install() {}
+}
+
+/// Install the SIGINT handler (idempotent). Call once at the top of a
+/// long-running subcommand; afterwards [`interrupted`] turns true when
+/// the user hits Ctrl-C.
+pub fn install_sigint() {
+    imp::install();
+}
+
+/// Whether SIGINT has fired since [`install_sigint`] (or [`reset`]).
+pub fn interrupted() -> bool {
+    INTERRUPTED.load(Ordering::SeqCst)
+}
+
+/// Clear the flag (test support).
+pub fn reset() {
+    INTERRUPTED.store(false, Ordering::SeqCst);
+}
+
+/// Conventional shell exit code for "terminated by SIGINT" (128 + 2).
+pub const SIGINT_EXIT_CODE: i32 = 130;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_starts_clear_and_resets() {
+        install_sigint();
+        reset();
+        assert!(!interrupted());
+    }
+}

@@ -1,0 +1,500 @@
+//! Integration tests for the network diff service: codec round-trip
+//! fuzz (random frames; invalid UTF-8 / truncated / oversized inputs
+//! rejected with typed errors), frame-reader resynchronization, and
+//! end-to-end daemon runs over real sockets — two clients whose
+//! over-budget jobs serialize with `Gated`→`Admitted` streamed as wire
+//! events and reports bit-identical to solo `run_job` runs, status
+//! snapshots, malformed-frame survival, and drain-on-shutdown under
+//! both `await` and `cancel` policies.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use smartdiff_sched::api::JobEvent;
+use smartdiff_sched::config::{Caps, DeltaPath, DrainPolicy, SchedulerConfig};
+use smartdiff_sched::data::generator::{generate_pair, GenSpec};
+use smartdiff_sched::data::io::InMemorySource;
+use smartdiff_sched::sched::scheduler::run_job;
+use smartdiff_sched::service::client::ServiceClient;
+use smartdiff_sched::service::protocol::{
+    decode_request, decode_server_frame, encode_request, FrameReader,
+    ProtocolError, ReadOutcome, Request, RequestFrame, ServerFrame,
+    WireJobSpec, MAX_FRAME_BYTES,
+};
+use smartdiff_sched::service::server::{Daemon, DaemonSummary};
+use smartdiff_sched::util::json::{self, Json};
+use smartdiff_sched::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Codec round-trip fuzz
+// ---------------------------------------------------------------------------
+
+fn random_request(rng: &mut Rng) -> Request {
+    match rng.next_u64() % 6 {
+        0 => {
+            // Synthetic-or-CSV spec; seed only travels with rows.
+            let synthetic = rng.next_u64() % 2 == 0;
+            let spec = if synthetic {
+                WireJobSpec {
+                    rows: Some((rng.next_u64() % 1_000_000) as usize),
+                    seed: rng.next_u64() & 0xFFFF_FFFF,
+                    backend: match rng.next_u64() % 3 {
+                        0 => None,
+                        1 => Some("inmem".into()),
+                        _ => Some("dask".into()),
+                    },
+                    b_min: if rng.next_u64() % 2 == 0 {
+                        Some((rng.next_u64() % 10_000) as usize + 1)
+                    } else {
+                        None
+                    },
+                    prefetch: match rng.next_u64() % 3 {
+                        0 => None,
+                        1 => Some(false),
+                        _ => Some(true),
+                    },
+                    ..WireJobSpec::default()
+                }
+            } else {
+                WireJobSpec {
+                    csv_a: Some(format!("/tmp/a-{}.csv", rng.next_u64() % 100)),
+                    csv_b: Some(format!("/tmp/b \"q\"\n{}.csv", rng.next_u64() % 100)),
+                    schema: Some("id:key:int64,amount:float64".into()),
+                    ..WireJobSpec::default()
+                }
+            };
+            Request::Submit { spec, subscribe: rng.next_u64() % 2 == 0 }
+        }
+        1 => Request::Cancel { job: rng.next_u64() % 1_000 },
+        2 => Request::Status,
+        3 => Request::Health,
+        4 => Request::Subscribe { job: rng.next_u64() % 1_000 },
+        _ => Request::Shutdown,
+    }
+}
+
+#[test]
+fn request_codec_round_trips_random_frames() {
+    let mut rng = Rng::new(0xD1FF);
+    for i in 0..500u64 {
+        let frame = RequestFrame { id: i + 1, req: random_request(&mut rng) };
+        let line = encode_request(&frame);
+        let back = decode_request(&line)
+            .unwrap_or_else(|e| panic!("frame {i} failed: {e} ({line})"));
+        assert_eq!(back, frame, "round-trip diverged for {line}");
+    }
+}
+
+#[test]
+fn event_codec_round_trips_every_variant() {
+    let events = [
+        JobEvent::Gated { ws_bytes: 123, available_bytes: 45 },
+        JobEvent::Admitted { ws_bytes: 9, granted_bytes: 8, concurrent: 3 },
+        JobEvent::MemGrant { from_bytes: 1_000_000, to_bytes: 500_000 },
+        JobEvent::Reconfig {
+            b_from: 2_000,
+            b_to: 1_000,
+            k_from: 4,
+            k_to: 2,
+            reason: "mem-grant".into(),
+        },
+        JobEvent::Backpressure { queue_depth: 17 },
+        JobEvent::Speculation { shard_id: 7 },
+        JobEvent::Split { shard_id: 3, in_run: true },
+        JobEvent::Done { ok: false },
+    ];
+    for (i, ev) in events.iter().enumerate() {
+        let line =
+            smartdiff_sched::service::protocol::encode_event(i as u64, ev);
+        match decode_server_frame(&line).unwrap() {
+            ServerFrame::Event { job, event } => {
+                assert_eq!(job, i as u64);
+                assert_eq!(&event, ev, "event round-trip diverged: {line}");
+            }
+            other => panic!("expected event frame, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn malformed_frames_rejected_with_typed_errors() {
+    let cases: [(&str, &str); 6] = [
+        ("not json at all", "parse"),
+        ("{\"id\":1,\"verb\":\"health\"}", "version"),
+        ("{\"v\":99,\"id\":1,\"verb\":\"health\"}", "version"),
+        ("{\"v\":1,\"verb\":\"health\"}", "malformed"),
+        ("{\"v\":1,\"id\":1,\"verb\":\"frobnicate\"}", "malformed"),
+        ("{\"v\":1,\"id\":1,\"verb\":\"cancel\"}", "malformed"),
+    ];
+    for (line, kind) in cases {
+        let err = decode_request(line)
+            .expect_err(&format!("{line:?} should not decode"));
+        assert_eq!(err.kind(), kind, "wrong error class for {line:?}: {err}");
+    }
+}
+
+#[test]
+fn frame_reader_rejects_utf8_truncation_and_oversize_then_resyncs() {
+    // Invalid UTF-8: typed error, following frame still readable.
+    let bytes = b"\xff\xfe bad\nok-frame\n".to_vec();
+    let mut r = FrameReader::new(std::io::Cursor::new(bytes));
+    assert!(matches!(r.read_frame(), Err(ProtocolError::Utf8)));
+    assert_eq!(
+        r.read_frame().unwrap(),
+        ReadOutcome::Frame("ok-frame".into())
+    );
+    assert_eq!(r.read_frame().unwrap(), ReadOutcome::Eof);
+
+    // Oversized line: reported once, then the reader resynchronizes on
+    // the next newline and keeps going.
+    let mut bytes = vec![b'x'; MAX_FRAME_BYTES + 10];
+    bytes.push(b'\n');
+    bytes.extend_from_slice(b"after\n");
+    let mut r = FrameReader::new(std::io::Cursor::new(bytes));
+    assert!(matches!(r.read_frame(), Err(ProtocolError::Oversized { .. })));
+    assert_eq!(r.read_frame().unwrap(), ReadOutcome::Frame("after".into()));
+
+    // Truncated final frame (no newline before EOF): typed error, then
+    // clean EOF.
+    let mut r =
+        FrameReader::new(std::io::Cursor::new(b"{\"v\":1".to_vec()));
+    assert!(matches!(r.read_frame(), Err(ProtocolError::Parse { .. })));
+    assert_eq!(r.read_frame().unwrap(), ReadOutcome::Eof);
+
+    // Blank keep-alive lines and \r\n endings are tolerated.
+    let mut r = FrameReader::new(std::io::Cursor::new(
+        b"\n\r\nping\r\n".to_vec(),
+    ));
+    assert_eq!(r.read_frame().unwrap(), ReadOutcome::Frame("ping".into()));
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end daemon tests (real sockets)
+// ---------------------------------------------------------------------------
+
+fn service_cfg(caps: Caps) -> SchedulerConfig {
+    let mut cfg = SchedulerConfig::default();
+    cfg.caps = caps;
+    cfg.policy.b_min = 200;
+    cfg.policy.b_step_min = 50;
+    cfg.engine.delta_path = DeltaPath::Native;
+    cfg.service.bind_addr = "127.0.0.1:0".into(); // ephemeral port
+    cfg.service.idle_timeout_secs = 0;
+    cfg
+}
+
+fn start_daemon(
+    cfg: SchedulerConfig,
+) -> (SocketAddr, JoinHandle<DaemonSummary>) {
+    let daemon = Daemon::bind(cfg).unwrap();
+    let addr = daemon.local_addr();
+    let handle = std::thread::spawn(move || daemon.run().unwrap());
+    (addr, handle)
+}
+
+/// Solo in-process run of the daemon's synthetic workload for the given
+/// wire spec, for bit-identity comparison.
+fn solo_report_json(cfg: &SchedulerConfig, rows: usize, seed: u64) -> String {
+    let mut cfg = cfg.clone();
+    cfg.seed = seed; // the daemon folds the wire seed into the job config
+    let (a, b, _) =
+        generate_pair(&GenSpec { rows, seed, ..GenSpec::default() });
+    run_job(
+        &cfg,
+        Arc::new(InMemorySource::new(a)),
+        Arc::new(InMemorySource::new(b)),
+    )
+    .unwrap()
+    .report
+    .to_json()
+}
+
+/// Parse a report and drop the schedule-dependent `batches` count; the
+/// remaining document (verdicts, row/column aggregates, diff keys) must
+/// be bit-identical between wire and solo runs.
+fn diff_payload(report_json: &str) -> Json {
+    match json::parse(report_json).unwrap() {
+        Json::Obj(mut m) => {
+            m.remove("batches");
+            Json::Obj(m)
+        }
+        other => other,
+    }
+}
+
+/// Tentpole acceptance: two clients on separate connections submit
+/// over-budget jobs; the daemon serializes them (second job streams
+/// `Gated` then `Admitted` over the wire), both complete with zero
+/// OOMs, and the wire-fetched reports match solo in-process runs.
+#[test]
+fn two_clients_over_budget_gated_then_admitted_bit_identical() {
+    // Same envelope as the session-API test: under a 256 MB cap any two
+    // jobs over-commit (Eq. 1 floors estimates at β ≈ 150 MB).
+    let caps = Caps { mem_cap_bytes: 256_000_000, cpu_cap: 1 };
+    let cfg = service_cfg(caps);
+    let (addr, daemon) = start_daemon(cfg.clone());
+    let addr_s = addr.to_string();
+
+    let mut c1 = ServiceClient::connect(&addr_s).unwrap();
+    let mut c2 = ServiceClient::connect(&addr_s).unwrap();
+    let mut c3 = ServiceClient::connect(&addr_s).unwrap();
+
+    // Job 1 is big enough to still be running when job 2 arrives.
+    let j1 = c1
+        .submit(
+            WireJobSpec {
+                rows: Some(120_000),
+                seed: 21,
+                ..WireJobSpec::default()
+            },
+            true,
+        )
+        .unwrap();
+    // Wait (over the wire) until job 1 is running.
+    let t0 = Instant::now();
+    loop {
+        let status = c3.status().unwrap();
+        let running = status
+            .get("jobs")
+            .and_then(|j| j.as_arr())
+            .map(|jobs| {
+                jobs.iter().any(|j| {
+                    j.get("state").and_then(|s| s.as_str()) == Some("running")
+                })
+            })
+            .unwrap_or(false);
+        if running {
+            break;
+        }
+        assert!(t0.elapsed().as_secs() < 30, "job 1 never started");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let j2 = c2
+        .submit(
+            WireJobSpec {
+                rows: Some(5_000),
+                seed: 23,
+                ..WireJobSpec::default()
+            },
+            true,
+        )
+        .unwrap();
+    assert_ne!(j1, j2);
+
+    // Health + status answered mid-flight from a third connection.
+    let health = c3.health().unwrap();
+    assert_eq!(health.get("healthy").and_then(|b| b.as_bool()), Some(true));
+    let status = c3.status().unwrap();
+    assert!(
+        status.get("jobs_submitted").and_then(|x| x.as_i64()).unwrap() >= 2
+    );
+    assert_eq!(
+        status.get("mem_budget_bytes").and_then(|x| x.as_i64()),
+        Some(caps.mem_cap_bytes as i64)
+    );
+
+    let o2 = c2.wait_result(j2, Duration::from_secs(300)).unwrap();
+    let o1 = c1.wait_result(j1, Duration::from_secs(300)).unwrap();
+    assert!(o1.ok, "job 1 failed: {:?}", o1.error);
+    assert!(o2.ok, "job 2 failed: {:?}", o2.error);
+
+    // Job 2's stream must show the admission gate: Gated strictly
+    // before Admitted.
+    let kinds: Vec<&str> = o2.events.iter().map(|e| e.kind()).collect();
+    let gated = kinds.iter().position(|k| *k == "gated");
+    let admitted = kinds.iter().position(|k| *k == "admitted");
+    assert!(
+        gated.is_some() && admitted.is_some() && gated < admitted,
+        "job 2 missing gated→admitted on the wire: {kinds:?}"
+    );
+    assert_eq!(kinds.last(), Some(&"done"));
+    // Job 1 was admitted without gating and streamed its grant events.
+    assert!(o1.events.iter().any(|e| e.kind() == "admitted"));
+
+    // Zero OOMs on both, via wire stats.
+    for o in [&o1, &o2] {
+        let ooms = o
+            .stats
+            .as_ref()
+            .and_then(|s| s.get("ooms"))
+            .and_then(|x| x.as_i64());
+        assert_eq!(ooms, Some(0));
+    }
+
+    // Bit-identical (modulo batch count) to solo in-process runs.
+    let s1 = solo_report_json(&cfg, 120_000, 21);
+    let s2 = solo_report_json(&cfg, 5_000, 23);
+    assert_eq!(
+        diff_payload(&o1.report.as_ref().unwrap().to_string()),
+        diff_payload(&s1),
+        "job 1 wire report diverged from solo run"
+    );
+    assert_eq!(
+        diff_payload(&o2.report.as_ref().unwrap().to_string()),
+        diff_payload(&s2),
+        "job 2 wire report diverged from solo run"
+    );
+
+    // Clean drain: shutdown verb, every submitted job answered.
+    c3.shutdown_server().unwrap();
+    let summary = daemon.join().unwrap();
+    assert_eq!(summary.jobs_submitted, 2);
+    assert_eq!(summary.jobs_completed, 2);
+    assert!(summary.connections_served >= 3);
+}
+
+/// A malformed frame is answered with a typed error frame and the
+/// connection stays usable — a valid request succeeds right after, on
+/// the same socket.
+#[test]
+fn malformed_frame_answered_connection_survives() {
+    let caps = Caps { mem_cap_bytes: 1_000_000_000, cpu_cap: 1 };
+    let (addr, daemon) = start_daemon(service_cfg(caps));
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut lines = BufReader::new(stream.try_clone().unwrap());
+    let read_line = |lines: &mut BufReader<TcpStream>| -> Json {
+        let mut line = String::new();
+        lines.read_line(&mut line).unwrap();
+        json::parse(line.trim_end()).unwrap()
+    };
+
+    // Garbage → typed parse error with re=0 (id unrecoverable).
+    stream.write_all(b"this is not a frame\n").unwrap();
+    let err = read_line(&mut lines);
+    assert_eq!(err.get("ok").and_then(|b| b.as_bool()), Some(false));
+    assert_eq!(err.get("re").and_then(|x| x.as_i64()), Some(0));
+    assert_eq!(
+        err.get("error").and_then(|e| e.get("kind")).and_then(|k| k.as_str()),
+        Some("parse")
+    );
+
+    // Malformed-but-json → id salvaged into re.
+    stream.write_all(b"{\"v\":1,\"id\":7,\"verb\":\"nope\"}\n").unwrap();
+    let err = read_line(&mut lines);
+    assert_eq!(err.get("re").and_then(|x| x.as_i64()), Some(7));
+    assert_eq!(
+        err.get("error").and_then(|e| e.get("kind")).and_then(|k| k.as_str()),
+        Some("malformed")
+    );
+
+    // Same socket still serves valid requests.
+    stream
+        .write_all(b"{\"v\":1,\"id\":8,\"verb\":\"health\"}\n")
+        .unwrap();
+    let ok = read_line(&mut lines);
+    assert_eq!(ok.get("ok").and_then(|b| b.as_bool()), Some(true));
+    assert_eq!(ok.get("re").and_then(|x| x.as_i64()), Some(8));
+
+    // Unknown job ids get typed errors, not dropped connections.
+    stream
+        .write_all(b"{\"v\":1,\"id\":9,\"verb\":\"cancel\",\"job\":404}\n")
+        .unwrap();
+    let err = read_line(&mut lines);
+    assert_eq!(
+        err.get("error").and_then(|e| e.get("kind")).and_then(|k| k.as_str()),
+        Some("unknown_job")
+    );
+
+    let mut c = ServiceClient::connect(&addr.to_string()).unwrap();
+    c.shutdown_server().unwrap();
+    daemon.join().unwrap();
+}
+
+/// Drain policy `await`: a shutdown issued while a job is running lets
+/// it finish and still answers the subscribed client.
+#[test]
+fn drain_await_answers_running_job() {
+    let caps = Caps { mem_cap_bytes: 1_000_000_000, cpu_cap: 1 };
+    let (addr, daemon) = start_daemon(service_cfg(caps));
+    let mut c = ServiceClient::connect(&addr.to_string()).unwrap();
+
+    let job = c
+        .submit(
+            WireJobSpec { rows: Some(30_000), seed: 5, ..WireJobSpec::default() },
+            true,
+        )
+        .unwrap();
+    c.shutdown_server().unwrap();
+
+    // New submits are refused while draining…
+    let refused = c.submit(
+        WireJobSpec { rows: Some(100), seed: 6, ..WireJobSpec::default() },
+        false,
+    );
+    assert!(refused.is_err(), "draining daemon accepted a submit");
+
+    // …but the running job completes and is answered.
+    let o = c.wait_result(job, Duration::from_secs(300)).unwrap();
+    assert!(o.ok, "awaited job failed: {:?}", o.error);
+    let summary = daemon.join().unwrap();
+    assert_eq!(summary.jobs_completed, summary.jobs_submitted);
+}
+
+/// Drain policy `cancel`: shutdown cancels the running job
+/// cooperatively; the client still gets a terminal frame (typed
+/// `cancelled` error or, if the job outran the request, a report).
+#[test]
+fn drain_cancel_answers_running_job() {
+    let caps = Caps { mem_cap_bytes: 1_000_000_000, cpu_cap: 1 };
+    let mut cfg = service_cfg(caps);
+    cfg.service.drain = DrainPolicy::Cancel;
+    let (addr, daemon) = start_daemon(cfg);
+    let mut c = ServiceClient::connect(&addr.to_string()).unwrap();
+
+    let job = c
+        .submit(
+            WireJobSpec {
+                rows: Some(200_000),
+                seed: 31,
+                ..WireJobSpec::default()
+            },
+            true,
+        )
+        .unwrap();
+    c.shutdown_server().unwrap();
+
+    let o = c.wait_result(job, Duration::from_secs(300)).unwrap();
+    if o.ok {
+        assert!(o.report.is_some()); // outran the cancel on a fast box
+    } else {
+        assert_eq!(
+            o.error.as_ref().map(|e| e.kind.as_str()),
+            Some("cancelled"),
+            "expected typed cancelled error: {:?}",
+            o.error
+        );
+    }
+    let summary = daemon.join().unwrap();
+    assert_eq!(
+        summary.jobs_completed, summary.jobs_submitted,
+        "drain left a job un-answered"
+    );
+}
+
+/// Submitting with neither `rows` nor CSV paths is a typed
+/// `invalid_config` error over the wire, not a dropped connection.
+#[test]
+fn invalid_submit_is_typed_error() {
+    let caps = Caps { mem_cap_bytes: 1_000_000_000, cpu_cap: 1 };
+    let (addr, daemon) = start_daemon(service_cfg(caps));
+    let mut c = ServiceClient::connect(&addr.to_string()).unwrap();
+
+    let err = c.submit(WireJobSpec::default(), false).unwrap_err();
+    let msg = err.to_string();
+    assert!(
+        msg.contains("exactly one job source"),
+        "unexpected error: {msg}"
+    );
+    // The connection survives the rejection.
+    let health = c.health().unwrap();
+    assert_eq!(health.get("healthy").and_then(|b| b.as_bool()), Some(true));
+
+    c.shutdown_server().unwrap();
+    let summary = daemon.join().unwrap();
+    assert_eq!(summary.jobs_submitted, 0);
+}
