@@ -16,6 +16,12 @@ double-buffered prefetcher on — grant-charged staged bytes must keep
 peak under the cap with 0 OOMs, the pipeline line must show measured
 ingest/compute overlap, and the report must match the prefetch-off run.
 
+Scenario 4 (B-dominant surplus): a CSV pair where a single key's ADDED
+rows — present only on the B side — exceed the cap on their own. The
+add-range carver must split the pure-surplus run into batch-sized
+a_len=0 shards: gate to dasklike, finish with 0 OOMs, keep peak under
+the cap, and report identically to an uncapped in-memory run.
+
 Run from the repo root after `cargo build --release`:
 
     python3 ci/large_file_smoke.py [path-to-binary]
@@ -175,6 +181,61 @@ def scenario_hot_key(binary, d):
     )
 
 
+SURPLUS_BASE = 5_000
+SURPLUS_ROWS = 9_500
+
+
+def write_surplus_csv(path, side_b):
+    """B-dominant skew: both sides share one key-2 run of 5,000 ~100 B
+    rows (B changes 100 payloads), and B alone appends a key-7 run of
+    9,500 *added* rows with ~2 KB payloads — a single key's added rows
+    alone exceed the cap. The diff-key total (~9,600) stays under the
+    per-shard sample cap so reports compare verbatim."""
+    with open(path, "w") as f:
+        f.write("id,v,s\n")
+        for i in range(SURPLUS_BASE):
+            bump = 0.5 if side_b and i % 50 == 0 else 0.0
+            f.write("2,%f,%s\n" % (i + bump, "x%078d" % i))
+        if side_b:
+            for i in range(SURPLUS_ROWS):
+                f.write("7,%f,%s\n" % (float(i), "y%01980d" % i))
+
+
+def scenario_b_surplus(binary, d):
+    """Scenario 4 (B-dominant surplus): the shape completed-run and
+    last-shard absorption used to run-snap into one oversized shard —
+    one key whose B-only added rows dwarf the memory cap. Add-range
+    carving must bound every shard by the batch size instead."""
+    pa = os.path.join(d, "surplus_a.csv")
+    pb = os.path.join(d, "surplus_b.csv")
+    write_surplus_csv(pa, side_b=False)
+    write_surplus_csv(pb, side_b=True)
+    added_bytes = os.path.getsize(pb) - os.path.getsize(pa)
+    assert added_bytes > CAP_BYTES, (
+        "added-run bytes (%d B) must exceed the cap (%d B)"
+        % (added_bytes, CAP_BYTES)
+    )
+
+    capped_cfg = os.path.join(d, "surplus_capped.toml")
+    write_cfg(capped_cfg, "10MiB")
+    capped = run_diff(binary, pa, pb, capped_cfg)
+    peak_mb = assert_capped_stats(capped, CAP_BYTES)
+
+    uncapped_cfg = os.path.join(d, "surplus_uncapped.toml")
+    write_cfg(uncapped_cfg, "8GiB")
+    uncapped = run_diff(binary, pa, pb, uncapped_cfg, backend="inmem")
+    assert "backend=inmem" in uncapped, "uncapped run must stay in-memory"
+
+    assert report_diff(capped) == report_diff(uncapped), (
+        "capped dasklike report differs from the uncapped in-memory run"
+    )
+    print(
+        "b-surplus smoke OK: added run %d B > cap %d B, peak %.1f MB, "
+        "0 OOMs, report identical to uncapped run"
+        % (added_bytes, CAP_BYTES, peak_mb)
+    )
+
+
 def parse_pipeline(stdout):
     """The CLI's per-stage pipeline line: read/decode/align/diff/stall
     seconds, the measured ingest/compute overlap ratio, and the
@@ -243,6 +304,7 @@ def main():
         scenario_unique_keys(binary, d)
         scenario_hot_key(binary, d)
         scenario_prefetch(binary, d)
+        scenario_b_surplus(binary, d)
 
 
 if __name__ == "__main__":

@@ -46,16 +46,23 @@ pub fn paper_cfg() -> SchedulerConfig {
 /// Skew scenario family (Zipf-hot-key duplicate runs): the bench
 /// trajectory's join-skew axis, from mild skew to the adversarial
 /// one-key-spans-everything shape the occurrence-indexed partitioner
-/// opened. Shared by the `micro_hotpath` bench (stage timings + JSON
-/// dump) so skew numbers are captured per PR alongside the hot-path
-/// stages; `hot_key_mass` is the top key's share of all rows.
+/// opened — plus the B-dominant shape (one key's B-only surplus of
+/// added rows dwarfing |A|) that add-range carving opened. Shared by
+/// the `micro_hotpath` bench (stage timings + JSON dump) so skew
+/// numbers are captured per PR alongside the hot-path stages;
+/// `hot_key_mass` is the top key's share of all rows, `b_surplus_mass`
+/// the pure-surplus B rows as a fraction of |A|.
 pub fn skew_family() -> Vec<(&'static str, crate::data::generator::SkewSpec)> {
     use crate::data::generator::SkewSpec;
     let base = SkewSpec { rows: 30_000, seed: 7, ..SkewSpec::default() };
     vec![
         ("skew_mild", SkewSpec { hot_key_mass: 0.1, ..base.clone() }),
         ("skew_hot", SkewSpec { hot_key_mass: 0.5, ..base.clone() }),
-        ("skew_one_key", SkewSpec { hot_key_mass: 1.0, ..base }),
+        ("skew_one_key", SkewSpec { hot_key_mass: 1.0, ..base.clone() }),
+        (
+            "skew_b_surplus",
+            SkewSpec { hot_key_mass: 0.2, b_surplus_mass: 1.0, ..base },
+        ),
     ]
 }
 

@@ -240,6 +240,13 @@ pub struct SkewSpec {
     /// Per-run length jitter on the B side (adds/removes occurrences,
     /// producing added/removed rows *inside* runs).
     pub run_jitter: f64,
+    /// B-dominant skew knob: mass of *pure surplus* added rows —
+    /// `(rows × b_surplus_mass)` B rows on a single key with **no A
+    /// counterpart** — appended after A's key range. `0.0` (the
+    /// default) is a bitwise no-op on the generated pair; a large value
+    /// makes one key's B-only added run dwarf `|A|`, the add-range
+    /// carving workload (see `exec/partition.rs`).
+    pub b_surplus_mass: f64,
     pub seed: u64,
 }
 
@@ -253,6 +260,7 @@ impl Default for SkewSpec {
             extra_cols: 3,
             change_rate: 0.05,
             run_jitter: 0.2,
+            b_surplus_mass: 0.0,
             seed: 42,
         }
     }
@@ -341,7 +349,31 @@ pub fn generate_skewed_pair(spec: &SkewSpec) -> (Table, Table, usize) {
         }
         a_row += n;
     }
+    // B-dominant surplus: one key *past* A's entire key range carrying
+    // `rows × b_surplus_mass` pure added rows (keeps B key-sorted). The
+    // guard keeps the default a bitwise no-op — no RNG draw happens
+    // unless the knob is set, so seeded pairs pinned by earlier tests
+    // are unchanged.
+    if spec.b_surplus_mass > 0.0 {
+        let surplus = (spec.rows as f64 * spec.b_surplus_mass) as usize;
+        let surplus_key = runs.last().map(|&(k, _)| k + 1).unwrap_or(0);
+        for _ in 0..surplus {
+            tb.col(0).push_i64(surplus_key);
+            push_random_payload(&mut tb, &schema, &mut brng, &gspec);
+        }
+    }
     (a, tb.finish(), longest_run)
+}
+
+/// Row count of the pure-surplus run `generate_skewed_pair` appends for
+/// a given spec (0 when the knob is unset) — the quantity B-dominant
+/// scenarios compare against the batch size and the memory grant.
+pub fn skew_surplus_rows(spec: &SkewSpec) -> usize {
+    if spec.b_surplus_mass > 0.0 {
+        (spec.rows as f64 * spec.b_surplus_mass) as usize
+    } else {
+        0
+    }
 }
 
 /// The paper's four synthetic workload sizes, in rows per side.
@@ -461,5 +493,28 @@ mod tests {
         assert_eq!(a1, a2);
         assert_eq!(b1, b2);
         assert_eq!(l1, l2);
+    }
+
+    #[test]
+    fn skewed_pair_b_surplus_appends_pure_added_run() {
+        let base = SkewSpec { rows: 2_000, seed: 77, ..SkewSpec::default() };
+        let with = SkewSpec { b_surplus_mass: 1.5, ..base.clone() };
+        let (a0, b0, _) = generate_skewed_pair(&base);
+        let (a1, b1, _) = generate_skewed_pair(&with);
+        // The knob never touches A, and B is the no-surplus B plus an
+        // appended run — the shared prefix is bitwise unchanged (the
+        // surplus path draws from the RNG only after the run walk).
+        assert_eq!(a0, a1);
+        assert_eq!(skew_surplus_rows(&with), 3_000);
+        assert_eq!(b1.nrows(), b0.nrows() + 3_000);
+        let k0 = skew_keys(&b0);
+        let k1 = skew_keys(&b1);
+        assert_eq!(&k1[..k0.len()], &k0[..], "shared prefix changed");
+        // The surplus run is one key past A's whole key range: pure
+        // added rows with no A counterpart, still key-sorted.
+        let a_max = *skew_keys(&a1).iter().max().unwrap();
+        let surplus_keys = &k1[k0.len()..];
+        assert!(surplus_keys.iter().all(|&k| k == a_max + 1));
+        assert!(k1.windows(2).all(|w| w[0] <= w[1]), "B stays sorted");
     }
 }

@@ -219,8 +219,12 @@ pub trait TableSource: Send + Sync {
     fn storage_bytes(&self) -> u64;
     /// Bytes *resident in RAM* for the lifetime of the job (counted
     /// against the memory cap as the base RSS). In-memory sources pin
-    /// their whole table; file sources only pin their row-offset and
-    /// key indexes.
+    /// their whole table plus the occurrence index; file sources pin
+    /// their row-offset (8 B/row) and key (8 B/row) indexes plus the
+    /// occurrence index. The occurrence index is 4 B/row on every keyed
+    /// source — it must stay accounted, because the partitioner's
+    /// carve/cut decisions (`occ_at` binary searches) depend on it
+    /// being resident for the whole job.
     fn resident_bytes(&self) -> u64;
     /// Read metering for B̂_read estimation.
     fn meter(&self) -> &ReadMeter;
@@ -1230,6 +1234,58 @@ mod tests {
                 assert_eq!(csv.occ_at(i), want, "csv row {i} chunk={chunk}");
             }
         }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn in_memory_resident_bytes_pins_occurrence_index_charge() {
+        use crate::data::schema::{ColumnType, Field, Schema};
+        // Keyed: the pinned table plus exactly 4 B/row of occurrence
+        // index. Regression guard for the accounting the partitioner's
+        // carve/cut decisions depend on.
+        let t = generate_table(&GenSpec { rows: 257, ..GenSpec::default() });
+        let heap = t.heap_bytes() as u64;
+        let n = t.nrows() as u64;
+        let mem = InMemorySource::new(t);
+        assert_eq!(mem.resident_bytes(), heap + 4 * n);
+
+        // Keyless: no key column, no occurrence index, no extra charge.
+        let schema = Schema::new(vec![Field::new("v", ColumnType::Int64)]);
+        let mut tb = TableBuilder::new(schema);
+        for i in 0..100 {
+            tb.col(0).push_i64(i);
+        }
+        let t = tb.finish();
+        let heap = t.heap_bytes() as u64;
+        let mem = InMemorySource::new(t);
+        assert_eq!(mem.resident_bytes(), heap);
+    }
+
+    #[test]
+    fn csv_resident_bytes_pins_index_charges() {
+        use crate::data::schema::{ColumnType, Field, Schema};
+        // Keyed: 8 B/row offsets (+ the EOF sentinel), 8 B/row keys,
+        // 4 B/row occurrence index — nothing else stays resident.
+        let t = generate_table(&GenSpec { rows: 193, ..GenSpec::default() });
+        let n = t.nrows() as u64;
+        let path = tmpdir().join("resident_keyed.csv");
+        write_csv(&t, &path).unwrap();
+        let src = CsvFileSource::open(&path, t.schema.clone()).unwrap();
+        assert_eq!(src.resident_bytes(), (n + 1) * 8 + n * 8 + n * 4);
+        std::fs::remove_file(path).ok();
+
+        // Keyless: only the row-offset index.
+        let schema = Schema::new(vec![Field::new("v", ColumnType::Int64)]);
+        let mut tb = TableBuilder::new(schema.clone());
+        for i in 0..64 {
+            tb.col(0).push_i64(i);
+        }
+        let t = tb.finish();
+        let n = t.nrows() as u64;
+        let path = tmpdir().join("resident_keyless.csv");
+        write_csv(&t, &path).unwrap();
+        let src = CsvFileSource::open(&path, schema).unwrap();
+        assert_eq!(src.resident_bytes(), (n + 1) * 8);
         std::fs::remove_file(path).ok();
     }
 

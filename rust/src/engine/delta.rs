@@ -474,6 +474,57 @@ pub fn process_shard_timed(
     exec: &Arc<dyn NumericDeltaExec>,
     scratch: &mut ShardScratch,
 ) -> Result<(BatchOutcome, ShardMemStats, u64, u64), String> {
+    // Carved add-range shard (`a_len = 0`, see `exec/partition.rs`):
+    // every B row is pure Added, so skip the join build and the numeric
+    // batch entirely and emit the outcome directly. Bit-identical to
+    // the general path on the same inputs — Added verdicts for every
+    // cell, zero per-column change/delta, added keys in B-row order —
+    // while touching no alignment or kernel scratch at all.
+    if a_tbl.nrows() == 0 && b_tbl.nrows() > 0 {
+        let t_diff = std::time::Instant::now();
+        let nb = b_tbl.nrows() as u64;
+        let ncols = plan.aligned.pairs.len();
+        let mut cells = VerdictCounts::default();
+        cells.record(Verdict::Added, nb * ncols as u64);
+        let columns: Vec<ColumnOutcome> = plan
+            .aligned
+            .pairs
+            .iter()
+            .map(|p| ColumnOutcome { name: p.name.clone(), changed: 0, max_abs_delta: 0.0 })
+            .collect();
+        let mut diff_keys = Vec::new();
+        let mut truncated = false;
+        for br in 0..b_tbl.nrows() as u32 {
+            if diff_keys.len() < KEY_SAMPLE_CAP {
+                diff_keys.push(row_key(plan, b_tbl, false, br));
+            } else {
+                truncated = true;
+                break;
+            }
+        }
+        let outcome = BatchOutcome {
+            shard_id,
+            rows_a: 0,
+            rows_b: nb,
+            cells,
+            rows: RowCounts {
+                aligned: 0,
+                added: nb,
+                removed: 0,
+                changed_rows: 0,
+            },
+            columns,
+            diff_keys,
+            diff_keys_truncated: truncated,
+        };
+        let mem = ShardMemStats {
+            decode_bytes: b_tbl.heap_bytes(),
+            align_bytes: 0,
+            scratch_bytes: 0,
+        };
+        return Ok((outcome, mem, 0, t_diff.elapsed().as_nanos() as u64));
+    }
+
     let ShardScratch { align, alignment, batch, diff, row_diff } = scratch;
     let t_align = std::time::Instant::now();
     align_rows_into(a_tbl, b_tbl, &plan.aligned, align, alignment)?;

@@ -23,19 +23,45 @@
 //! the solo-shard reference for any b (fuzzed end-to-end in
 //! `rust/tests/determinism.rs`).
 //!
-//! A cut that lands at the *end* of a run instead absorbs every
-//! remaining B occurrence of the boundary key (pairs and surplus
-//! "added" rows alike), matching the historical key-range rule.
+//! A cut that lands at the *end* of a run absorbs the remaining B
+//! occurrences of the boundary key (pairs and surplus "added" rows
+//! alike, matching the historical key-range rule) — **unless** the
+//! surplus exceeds one batch, in which case it is *carved* instead.
+//!
+//! # Add-range carving (B-dominant skew)
+//!
+//! A B range is *pure surplus* when none of its rows can pair with an A
+//! row: its keys' A runs are fully consumed and each row's occurrence
+//! ordinal is ≥ the key's total A occurrence count
+//! ([`run_occ_total`], the surplus-detection sibling of
+//! [`upper_bound_key_occ_in`]). Surplus never absorbs more than one
+//! batch into a pairing shard; anything larger is emitted as
+//! batch-sized `a_len = 0` shards (three arms, in priority order):
+//!
+//! 1. **A exhausted**: the B tail drains in `min(b_rest, batch)` carved
+//!    shards.
+//! 2. **Carve prefix**: when more than one batch of B rows at the
+//!    cursor has keys strictly below the next A key, one batch is
+//!    carved off the front (small interleaved added-runs still ride
+//!    along inside the next pairing shard, keeping shard counts stable
+//!    on ordinary workloads).
+//! 3. **Boundary clamp**: a completed-run / last-shard arm absorbs the
+//!    boundary key's (or tail's) surplus only while it fits in one
+//!    batch; a larger surplus is left for arms 1–2 to carve batch-wise.
+//!
+//! A pairing shard whose B side still exceeds `a_len + 2·batch` (an
+//! interior B-only run between two A keys) halves `a_len` until the
+//! surplus sits at a shard start where arm 2 picks it up. Net bound:
+//! **every** shard satisfies `a_len <= batch` and
+//! `b_len <= a_len + 2·batch` — the working set is bounded by `b` alone
+//! on *both* sides, at any skew (fuzzed in
+//! `rust/tests/partition_fuzz.rs`).
 //!
 //! This replaces the PR 4 run-*snapping* scheme (which kept runs whole
-//! and bounded shards by `max(b, longest run)`): the A side of a shard
-//! is now bounded by `b` alone, so a hot key's A-side run spanning more
-//! rows than the memory grant no longer forces an accounted OOM — the
-//! skew workload the ROADMAP left open. (The B side of one shard is
-//! bounded by the pairable mass plus the boundary key's surplus: a key
-//! whose *B-only* surplus of added rows exceeds the grant — B-dominant
-//! skew with no A counterpart — still lands in one shard, as it always
-//! has; see the ROADMAP open item on bounded add-range carving.)
+//! and bounded shards by `max(b, longest run)`): a hot key's run
+//! spanning more rows than the memory grant no longer forces an
+//! accounted OOM on either side — including the B-dominant shape where
+//! a key's *B-only* surplus of added rows exceeds the grant.
 //!
 //! Partitioning is incremental (`next(b)`) because the controller
 //! changes b while the job runs.
@@ -52,6 +78,7 @@ pub struct Partitioner<'a> {
     a_pos: usize,
     b_pos: usize,
     next_id: u64,
+    carved: u64,
 }
 
 impl<'a> Partitioner<'a> {
@@ -60,7 +87,7 @@ impl<'a> Partitioner<'a> {
             && b.nrows() > 0
             && a.key_at(0).is_some()
             && b.key_at(0).is_some();
-        Partitioner { a, b, keyed, a_pos: 0, b_pos: 0, next_id: 0 }
+        Partitioner { a, b, keyed, a_pos: 0, b_pos: 0, next_id: 0, carved: 0 }
     }
 
     pub fn done(&self) -> bool {
@@ -75,6 +102,12 @@ impl<'a> Partitioner<'a> {
 
     pub fn shards_emitted(&self) -> u64 {
         self.next_id
+    }
+
+    /// Carved add-range shards emitted so far (keyed `a_len = 0` shards
+    /// of pure B surplus — see the module docs).
+    pub fn carved_shards(&self) -> u64 {
+        self.carved
     }
 
     /// Carve the next shard of (at most) `batch_rows` A-side rows.
@@ -96,24 +129,36 @@ impl<'a> Partitioner<'a> {
             };
             (a_len, b_len)
         } else if self.a_pos >= a_n {
-            // A exhausted: the rest of B is one trailing added-range.
+            // Carve arm 1 — A exhausted: the B tail is pure surplus
+            // (every pairable occurrence was consumed by earlier cuts);
+            // drain it in batch-sized added-range shards.
+            self.carved += 1;
             (0, (b_n - self.b_pos).min(batch_rows))
+        } else if self.surplus_prefix_exceeds(batch_rows) {
+            // Carve arm 2 — more than one batch of B rows below the
+            // next A key: all pure surplus (their A runs, if any, are
+            // fully consumed — the cursor's alignment invariant), so
+            // carve one batch off the front.
+            self.carved += 1;
+            (0, batch_rows)
         } else {
-            let a_len = batch_rows.min(a_n - self.a_pos);
-            let b_hi = if self.a_pos + a_len >= a_n {
-                b_n // last A shard absorbs the B tail
-            } else {
-                let last = self.a_pos + a_len - 1;
-                let boundary = self.a.key_at(last).expect("keyed source");
-                // Occurrence-bounded cut: if the run continues past the
-                // cut, B stops at the same occurrence ordinal so both
-                // fragments resume with equal occurrence bases; a
-                // completed run absorbs every remaining B occurrence of
-                // the boundary key.
-                let (occ_cut, _) = occ_cut_at(self.a, last, boundary);
-                upper_bound_key_occ_in(self.b, self.b_pos, b_n, boundary, occ_cut)
-            };
-            (a_len, b_hi - self.b_pos)
+            // Pairing shard. Shrink a_len while the B side exceeds
+            // a_len + 2·batch: the overflow can only be an interior
+            // B-only surplus run, and halving pushes the cut before it
+            // so arm 2 carves it at the next call. Terminates because
+            // at a_len = 1 the B side is provably within the bound
+            // (prefix surplus <= batch since arm 2 did not fire,
+            // pairable mass <= a_len, boundary surplus clamped at one
+            // batch below).
+            let mut a_len = batch_rows.min(a_n - self.a_pos);
+            loop {
+                let b_hi = self.pairing_b_hi(a_len, batch_rows);
+                if b_hi - self.b_pos > a_len + 2 * batch_rows && a_len > 1 {
+                    a_len /= 2;
+                    continue;
+                }
+                break (a_len, b_hi - self.b_pos);
+            }
         };
 
         let spec = ShardSpec {
@@ -130,6 +175,62 @@ impl<'a> Partitioner<'a> {
         self.b_pos += b_len;
         self.next_id += 1;
         Some(spec)
+    }
+
+    /// Carve-arm-2 predicate: does more than one batch of B rows at the
+    /// cursor carry keys strictly below the next A key? Such rows are
+    /// pure surplus: every A run below the cursor key is fully consumed
+    /// and its pairable B occurrences were absorbed by earlier cuts.
+    fn surplus_prefix_exceeds(&self, batch_rows: usize) -> bool {
+        let Some(ka) = self.a.key_at(self.a_pos) else {
+            return false; // null-key A row: no key cut to carve against
+        };
+        let lt_hi =
+            upper_bound_key_occ_in(self.b, self.b_pos, self.b.nrows(), ka, 0);
+        lt_hi - self.b_pos > batch_rows
+    }
+
+    /// B-side boundary for a pairing shard of `a_len` A rows: the
+    /// occurrence-bounded cut of the PR 5 rule, with the completed-run /
+    /// last-shard absorption clamped at one batch of surplus (carve
+    /// arm 3 of the module docs).
+    fn pairing_b_hi(&self, a_len: usize, batch_rows: usize) -> usize {
+        let a_n = self.a.nrows();
+        let b_n = self.b.nrows();
+        if self.a_pos + a_len >= a_n {
+            // Last A shard: absorb the B tail while the surplus beyond
+            // the boundary key's pairable bound fits in one batch;
+            // otherwise stop at the bound and let arms 1–2 carve the
+            // rest.
+            let Some(boundary) = self.a.key_at(a_n - 1) else {
+                return b_n;
+            };
+            let total = run_occ_total(self.a, a_n - 1, boundary);
+            let pair_hi = upper_bound_key_occ_in(
+                self.b, self.b_pos, b_n, boundary, total,
+            );
+            if b_n - pair_hi > batch_rows { pair_hi } else { b_n }
+        } else {
+            let last = self.a_pos + a_len - 1;
+            let boundary = self.a.key_at(last).expect("keyed source");
+            // Occurrence-bounded cut: if the run continues past the
+            // cut, B stops at the same occurrence ordinal so both
+            // fragments resume with equal occurrence bases.
+            let (occ_cut, in_run) = occ_cut_at(self.a, last, boundary);
+            let b_hi = upper_bound_key_occ_in(
+                self.b, self.b_pos, b_n, boundary, occ_cut,
+            );
+            if in_run {
+                return b_hi; // mid-run cut absorbs no surplus
+            }
+            // Completed run: absorb the boundary key's B surplus only
+            // while it fits in one batch.
+            let total = run_occ_total(self.a, last, boundary);
+            let pair_hi = upper_bound_key_occ_in(
+                self.b, self.b_pos, b_hi, boundary, total,
+            );
+            if b_hi - pair_hi > batch_rows { pair_hi } else { b_hi }
+        }
     }
 }
 
@@ -174,6 +275,24 @@ pub(crate) fn upper_bound_key_occ_in(
         Some(k) => k < key || (k == key && src.occ_at(i) < occ_exclusive),
         None => false,
     })
+}
+
+/// Total occurrence count of `key` in `src`, given `run_row` is any row
+/// inside the key's run: binary-search the run's end and read the last
+/// ordinal off the occurrence index. This is the surplus-detection
+/// sibling of [`upper_bound_key_occ_in`]: a B row of `key` with
+/// `occ_at >= run_occ_total` is pure surplus (an added row with no A
+/// counterpart), which is what add-range carving keys off.
+pub(crate) fn run_occ_total(
+    src: &dyn TableSource,
+    run_row: usize,
+    key: i64,
+) -> u32 {
+    debug_assert_eq!(src.key_at(run_row), Some(key), "run_row outside run");
+    let end = upper_bound_by(run_row + 1, src.nrows(), |i| {
+        src.key_at(i) == Some(key)
+    });
+    src.occ_at(end - 1) + 1
 }
 
 /// Occurrence cut ordinal for an A-side cut whose last consumed row is
@@ -236,37 +355,107 @@ pub fn partition_tables(
         ),
         _ => (Vec::new(), Vec::new()),
     };
+    // Local cut of "(key, occ) < (boundary, occ_cut)" — the decoded-
+    // table twin of `upper_bound_key_occ_in`.
+    let b_cut = |kb: usize, bp: usize, hi: usize, boundary: i64, occ_cut: u32| {
+        upper_bound_by(bp, hi, |i| match cell_key(b, kb, i) {
+            Some(k) => k < boundary || (k == boundary && occ_b[i] < occ_cut),
+            None => false,
+        })
+    };
+    // Local twin of `run_occ_total`: total occurrences of the key whose
+    // run contains `run_row`.
+    let a_total = |ka: usize, run_row: usize| -> u32 {
+        let key = cell_key(a, ka, run_row);
+        let end = upper_bound_by(run_row + 1, a.nrows(), |i| {
+            cell_key(a, ka, i) == key
+        });
+        occ_a[end - 1] + 1
+    };
     let mut out = Vec::new();
     let (mut ap, mut bp) = (0usize, 0usize);
     while ap < a.nrows() || bp < b.nrows() {
         if ap >= a.nrows() {
-            out.push(((ap, 0), (bp, b.nrows() - bp)));
-            break;
+            // Carve arm 1: drain the pure-surplus B tail in
+            // chunk-bounded added-range fragments.
+            let bl = chunk_rows.min(b.nrows() - bp);
+            out.push(((ap, 0), (bp, bl)));
+            bp += bl;
+            continue;
         }
-        let a_len = chunk_rows.min(a.nrows() - ap);
-        let b_hi = match (key_a, key_b) {
-            (Some(ka), Some(kb)) if ap + a_len < a.nrows() => {
-                let last = ap + a_len - 1;
-                let boundary_cell = cell_key(a, ka, last);
-                let boundary = boundary_cell.unwrap_or(i64::MAX);
-                // Mid-run cut: stop B at the same occurrence ordinal;
-                // a completed run absorbs B's remainder of the key.
-                let occ_cut = if boundary_cell.is_some()
-                    && cell_key(a, ka, ap + a_len) == boundary_cell
-                {
-                    occ_a[last] + 1
-                } else {
-                    u32::MAX
-                };
-                upper_bound_by(bp, b.nrows(), |i| match cell_key(b, kb, i) {
-                    Some(k) => {
-                        k < boundary || (k == boundary && occ_b[i] < occ_cut)
-                    }
-                    None => false,
-                })
+        if let (Some(ka), Some(kb)) = (key_a, key_b) {
+            // Carve arm 2: more than one chunk of B rows below the next
+            // A key is pure surplus — carve one chunk off the front.
+            if let Some(next_key) = cell_key(a, ka, ap) {
+                let lt_hi = b_cut(kb, bp, b.nrows(), next_key, 0);
+                if lt_hi - bp > chunk_rows {
+                    out.push(((ap, 0), (bp, chunk_rows)));
+                    bp += chunk_rows;
+                    continue;
+                }
             }
-            _ if ap + a_len < a.nrows() => (bp + a_len).min(b.nrows()),
-            _ => b.nrows(),
+        }
+        let mut a_len = chunk_rows.min(a.nrows() - ap);
+        let b_hi = loop {
+            let b_hi = match (key_a, key_b) {
+                (Some(ka), Some(kb)) if ap + a_len < a.nrows() => {
+                    let last = ap + a_len - 1;
+                    let boundary_cell = cell_key(a, ka, last);
+                    let boundary = boundary_cell.unwrap_or(i64::MAX);
+                    // Mid-run cut: stop B at the same occurrence
+                    // ordinal; a completed run absorbs B's remainder of
+                    // the key — clamped at one chunk of surplus (carve
+                    // arm 3), mirroring `Partitioner::pairing_b_hi`.
+                    if boundary_cell.is_some()
+                        && cell_key(a, ka, ap + a_len) == boundary_cell
+                    {
+                        b_cut(kb, bp, b.nrows(), boundary, occ_a[last] + 1)
+                    } else {
+                        let b_hi = b_cut(kb, bp, b.nrows(), boundary, u32::MAX);
+                        if boundary_cell.is_none() {
+                            b_hi
+                        } else {
+                            let pair_hi =
+                                b_cut(kb, bp, b_hi, boundary, a_total(ka, last));
+                            if b_hi - pair_hi > chunk_rows { pair_hi } else { b_hi }
+                        }
+                    }
+                }
+                (Some(ka), Some(kb)) => {
+                    // Last A chunk: absorb the tail while its surplus
+                    // beyond the boundary's pairable bound fits in one
+                    // chunk; otherwise arms 1–2 carve the rest.
+                    match cell_key(a, ka, a.nrows() - 1) {
+                        Some(boundary) => {
+                            let pair_hi = b_cut(
+                                kb,
+                                bp,
+                                b.nrows(),
+                                boundary,
+                                a_total(ka, a.nrows() - 1),
+                            );
+                            if b.nrows() - pair_hi > chunk_rows {
+                                pair_hi
+                            } else {
+                                b.nrows()
+                            }
+                        }
+                        None => b.nrows(),
+                    }
+                }
+                _ if ap + a_len < a.nrows() => (bp + a_len).min(b.nrows()),
+                _ => b.nrows(),
+            };
+            // Interior-surplus shrink, mirroring `Partitioner::next`.
+            if key_a.is_some()
+                && key_b.is_some()
+                && b_hi - bp > a_len + 2 * chunk_rows
+                && a_len > 1
+            {
+                a_len /= 2;
+                continue;
+            }
+            break b_hi;
         };
         out.push(((ap, a_len), (bp, b_hi - bp)));
         ap += a_len;
@@ -428,20 +617,29 @@ mod tests {
         for (k, &na) in &ca {
             let nb = cb.get(k).copied().unwrap_or(0);
             let tb_k = tb.get(k).copied().unwrap_or(0);
-            // B consumed = min(A consumed, B total) unless A's run is
-            // fully consumed (then B absorbed its surplus too).
             let a_complete = na == ta[k];
             if a_complete {
-                assert_eq!(nb, tb_k, "key {k}: completed run must absorb B");
+                // Completed run: every pairable occurrence is consumed;
+                // the key's pure surplus may still be mid-drain (carved
+                // batch-wise) at the consumption frontier.
+                assert!(
+                    nb >= na.min(tb_k) && nb <= tb_k,
+                    "key {k}: completed run left pairable B rows behind \
+                     (consumed {nb} of {tb_k}, pairable {})",
+                    na.min(tb_k)
+                );
             } else {
+                // Mid-run cut: B stops at exactly the A cut's ordinal —
+                // carving never interrupts a pairable run.
                 assert_eq!(nb, na.min(tb_k), "key {k}: occurrence misaligned");
             }
         }
         for (k, &nb) in &cb {
             if !ca.contains_key(k) {
-                // B-only keys consumed before the boundary key: fine
-                // (added rows); B rows of *later* keys must not leak.
-                assert_eq!(nb, tb.get(k).copied().unwrap_or(0));
+                // B-only keys (pure surplus): consumed in key order,
+                // possibly partially — carving drains them in
+                // batch-sized added-range shards.
+                assert!(nb <= tb.get(k).copied().unwrap_or(0));
             }
         }
     }
@@ -557,6 +755,127 @@ mod tests {
                 if ap < a.nrows() {
                     assert_occurrence_aligned(&sa, &sb, ap, bp, &ta, &tb);
                 }
+            }
+        }
+    }
+
+    /// Drive a partitioner to completion asserting the carving bounds
+    /// on every shard: `a_len <= batch`, `b_len <= a_len + 2·batch`,
+    /// carved shards are pure surplus, and both sides are covered
+    /// exactly once. Returns the number of carved shards.
+    fn assert_carving_bounds(
+        a: &dyn TableSource,
+        b: &dyn TableSource,
+        batch: usize,
+    ) -> u64 {
+        let ta = key_counts(a, a.nrows());
+        let mut p = Partitioner::new(a, b);
+        let (mut a_seen, mut b_seen) = (0usize, 0usize);
+        while let Some(s) = p.next(batch) {
+            assert!(s.a_len <= batch, "a_len {} > batch {batch}", s.a_len);
+            assert!(
+                s.b_len <= s.a_len + 2 * batch,
+                "b_len {} > a_len {} + 2·batch {batch}",
+                s.b_len,
+                s.a_len
+            );
+            if s.a_len == 0 {
+                // Carved added-range: batch-bounded and pure surplus —
+                // every row's occurrence ordinal is at or past its
+                // key's total A occurrence count.
+                assert!(s.b_len <= batch, "carved b_len {} > batch", s.b_len);
+                for i in s.b_offset..s.b_offset + s.b_len {
+                    let k = b.key_at(i).unwrap();
+                    let a_total = ta.get(&k).copied().unwrap_or(0);
+                    assert!(
+                        b.occ_at(i) as usize >= a_total,
+                        "carved row {i} (key {k}, occ {}) is pairable",
+                        b.occ_at(i)
+                    );
+                }
+            }
+            assert_eq!(s.a_offset, a_seen);
+            assert_eq!(s.b_offset, b_seen);
+            a_seen += s.a_len;
+            b_seen += s.b_len;
+        }
+        assert_eq!((a_seen, b_seen), (a.nrows(), b.nrows()));
+        p.carved_shards()
+    }
+
+    #[test]
+    fn trailing_b_surplus_carved_into_batch_sized_shards() {
+        // One B-only key with a 500-row surplus run after a small
+        // pairable prefix: the last-shard arm must not absorb it.
+        let a = run_source(&[(3, 10)]);
+        let b = run_source(&[(3, 10), (9, 500)]);
+        let carved = assert_carving_bounds(&a, &b, 32);
+        assert!(carved >= 500 / 32, "expected batch-wise carve, got {carved}");
+    }
+
+    #[test]
+    fn interior_b_surplus_carved_between_pairable_keys() {
+        // A 400-row B-only run between two pairable keys: the shrink
+        // loop pushes the cut before it and the carve-prefix arm drains
+        // it batch-wise.
+        let a = run_source(&[(1, 20), (5, 20)]);
+        let b = run_source(&[(1, 20), (3, 400), (5, 20)]);
+        for batch in [4usize, 16, 64] {
+            let carved = assert_carving_bounds(&a, &b, batch);
+            assert!(carved > 0, "batch={batch}: interior surplus not carved");
+        }
+    }
+
+    #[test]
+    fn boundary_key_surplus_carved_not_absorbed() {
+        // The B-dominant hot key: 4 pairable A occurrences vs 300 B
+        // rows. The completed-run arm historically absorbed all 296
+        // surplus rows into one shard; the clamp defers them to carved
+        // shards.
+        let a = run_source(&[(7, 4)]);
+        let b = run_source(&[(7, 300)]);
+        let carved = assert_carving_bounds(&a, &b, 8);
+        assert!(carved >= 290 / 8, "surplus not carved batch-wise: {carved}");
+    }
+
+    #[test]
+    fn small_surplus_still_absorbed_without_carving() {
+        // Surplus at or below one batch rides along in the pairing
+        // shard (the historical rule), keeping shard counts stable on
+        // ordinary workloads.
+        let a = run_source(&[(1, 5), (2, 5), (3, 5)]);
+        let b = run_source(&[(1, 5), (2, 9), (3, 5)]);
+        let carved = assert_carving_bounds(&a, &b, 10);
+        assert_eq!(carved, 0, "sub-batch surplus must not carve");
+    }
+
+    #[test]
+    fn partition_tables_carves_b_surplus_bounded() {
+        use crate::data::schema::{ColumnType, Field, Schema};
+        use crate::data::table::TableBuilder;
+        let schema = Schema::new(vec![Field::key("id", ColumnType::Int64)]);
+        let mk = |runs: &[(i64, usize)]| {
+            let mut tb = TableBuilder::new(schema.clone());
+            for &(k, n) in runs {
+                for _ in 0..n {
+                    tb.col(0).push_i64(k);
+                }
+            }
+            tb.finish()
+        };
+        let a = mk(&[(1, 6), (8, 2)]);
+        let b = mk(&[(1, 6), (4, 120), (8, 60)]);
+        for chunk in [3usize, 8, 31] {
+            let parts = partition_tables(&a, &b, chunk);
+            let a_total: usize = parts.iter().map(|c| c.0 .1).sum();
+            let b_total: usize = parts.iter().map(|c| c.1 .1).sum();
+            assert_eq!((a_total, b_total), (a.nrows(), b.nrows()));
+            for ((_, al), (_, bl)) in &parts {
+                assert!(*al <= chunk);
+                assert!(
+                    *bl <= *al + 2 * chunk,
+                    "chunk={chunk}: b fragment {bl} exceeds {al} + 2·chunk"
+                );
             }
         }
     }

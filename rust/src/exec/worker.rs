@@ -29,7 +29,7 @@ use crate::engine::delta::{process_shard_timed, ShardMemStats, ShardScratch};
 use crate::engine::merge::Merger;
 use crate::engine::verdict::BatchOutcome;
 use crate::exec::backend::{BatchError, JobContext, ShardSpec, StageNanos};
-use crate::exec::partition::{occ_cut_at, upper_bound_key_occ_in};
+use crate::exec::partition::{occ_cut_at, run_occ_total, upper_bound_key_occ_in};
 
 /// Shared accounting for a memory pool (job-wide for inmem; per-worker
 /// for the dask-like backend). Exceeding the cap is the OOM failure the
@@ -613,6 +613,13 @@ pub fn execute_shard_with(
             "straddling key run with unequal occurrence bases: {spec:?}"
         );
     }
+    // Carved added-range shard (`a_len = 0`): its rows never pair, but
+    // the B base must still track the source index so any further
+    // splitting resumes consistently.
+    #[cfg(debug_assertions)]
+    if spec.a_len == 0 && spec.b_len > 0 {
+        debug_assert_eq!(spec.b_occ_base, ctx.b.occ_at(spec.b_offset));
+    }
 
     // Unified range list: one range for the whole shard (inmem), or the
     // (key, occurrence)-aligned sub-chunks (dasklike). Sub-chunk
@@ -736,7 +743,13 @@ fn sub_partition(
         let (mut ap, mut bp) = (0usize, 0usize);
         while ap < spec.a_len || bp < spec.b_len {
             let al = chunk.min(spec.a_len - ap);
-            let bl = if ap + al >= spec.a_len {
+            let bl = if spec.a_len == 0 {
+                // Carved added-range (or keyless empty-A) shard: every
+                // row is pure Added, so positional chunking is safe —
+                // and required, or a split/shrunk carved shard would
+                // decode its whole B side at once.
+                chunk.min(spec.b_len - bp)
+            } else if ap + al >= spec.a_len {
                 spec.b_len - bp
             } else {
                 chunk.min(spec.b_len - bp)
@@ -757,7 +770,7 @@ fn sub_partition(
     while ap < a_end {
         let al = chunk.min(a_end - ap);
         let b_hi = if ap + al >= a_end {
-            b_end
+            last_chunk_b_hi(ctx, a_end, bp, b_end, chunk)
         } else {
             let last = ap + al - 1;
             let boundary = ctx.a.key_at(last).unwrap_or(i64::MAX);
@@ -768,10 +781,42 @@ fn sub_partition(
         ap += al;
         bp = b_hi;
     }
-    if bp < b_end {
-        out.push(((a_end, 0), (bp, b_end - bp)));
+    // Trailing B rows past the last A cut (a carved shard's surplus or
+    // a split remainder): drain them in chunk-bounded added-ranges so
+    // the working set stays bounded by `chunk` even here.
+    while bp < b_end {
+        let bl = chunk.min(b_end - bp);
+        out.push(((a_end, 0), (bp, bl)));
+        bp += bl;
     }
     out
+}
+
+/// B bound for a shard's *final* A chunk: absorb the trailing B rows
+/// past the boundary key's pairing bound (pure surplus — the shard only
+/// holds them because an absorbing partitioner arm included them) when
+/// they fit in one chunk, else stop at the pairing bound so the caller
+/// drains them in chunk-bounded added-ranges. Mirrors the partitioner's
+/// completed-run / last-shard clamp, keeping every sub-chunk's working
+/// set bounded by `chunk` even inside an absorbed-surplus shard.
+fn last_chunk_b_hi(
+    ctx: &JobContext,
+    a_end: usize,
+    bp: usize,
+    b_end: usize,
+    chunk: usize,
+) -> usize {
+    let Some(boundary) = ctx.a.key_at(a_end - 1) else {
+        return b_end;
+    };
+    let total = run_occ_total(ctx.a.as_ref(), a_end - 1, boundary);
+    let pair_hi =
+        upper_bound_key_occ_in(ctx.b.as_ref(), bp, b_end, boundary, total);
+    if b_end - pair_hi > chunk {
+        pair_hi
+    } else {
+        b_end
+    }
 }
 
 /// The first range `execute_shard_with` will request for `spec` — used
@@ -797,7 +842,13 @@ pub fn first_range(
             return whole; // sub_partition yields no ranges; hint is inert
         }
         let al = chunk.min(spec.a_len);
-        let bl = if al >= spec.a_len { spec.b_len } else { chunk.min(spec.b_len) };
+        let bl = if spec.a_len == 0 {
+            chunk.min(spec.b_len) // carved added-range: chunk-bounded
+        } else if al >= spec.a_len {
+            spec.b_len
+        } else {
+            chunk.min(spec.b_len)
+        };
         return RangeSpec {
             a_off: spec.a_offset,
             a_len: al,
@@ -810,7 +861,7 @@ pub fn first_range(
     let (ap, bp) = (spec.a_offset, spec.b_offset);
     let al = chunk.min(a_end - ap);
     let b_hi = if ap + al >= a_end {
-        b_end
+        last_chunk_b_hi(ctx, a_end, bp, b_end, chunk)
     } else {
         let last = ap + al - 1;
         let boundary = ctx.a.key_at(last).unwrap_or(i64::MAX);

@@ -57,6 +57,11 @@ pub struct JobStats {
     /// occurrence-indexed path: single-run straggler shards used to be
     /// unsplittable). Telemetry for observing the new path.
     pub splits_in_run: u64,
+    /// Carved add-range shards emitted by the partitioner (`a_len = 0`
+    /// shards of pure B surplus — B-dominant skew). Non-zero means the
+    /// completed-run / last-shard arms deferred an over-batch surplus
+    /// to batch-bounded added-range shards.
+    pub carved_shards: u64,
     /// Queue-depth backpressure pauses (the paper's statistic;
     /// memory-grant drain pauses are counted separately and surface in
     /// telemetry as `mem_pause` events).
@@ -146,18 +151,37 @@ impl Coverage {
 /// positionally at the same offset on both sides (pair-aligned).
 ///
 /// Returns the halves plus whether the cut landed inside a key run (the
-/// `splits_in_run` statistic). The detector only emits `Split` for
-/// shards with `a_len >= 2`, so both halves are non-empty on the A side.
+/// `splits_in_run` statistic). The detector emits `Split` for shards
+/// with `a_len >= 2` — and for carved add-range shards (`a_len = 0`,
+/// `b_len >= 2`), which bisect on the B side instead: every carved row
+/// is pure Added, so any positional B cut is safe, and the right half
+/// resumes at its source occurrence base.
 fn split_spec(
     a: &dyn TableSource,
     b: &dyn TableSource,
     spec: ShardSpec,
 ) -> (ShardSpec, ShardSpec, bool) {
-    debug_assert!(spec.a_len >= 2, "detector splits only a_len >= 2 shards");
     let keyed = a.nrows() > 0
         && a.key_at(0).is_some()
         && b.nrows() > 0
         && b.key_at(0).is_some();
+    if spec.a_len == 0 {
+        debug_assert!(spec.b_len >= 2, "detector splits only b_len >= 2 carves");
+        let half = (spec.b_len / 2).max(1);
+        let b_mid = spec.b_offset + half;
+        let in_run = keyed && b.key_at(b_mid - 1).is_some()
+            && b.key_at(b_mid - 1) == b.key_at(b_mid);
+        let left = ShardSpec { b_len: half, ..spec };
+        let right = ShardSpec {
+            b_offset: b_mid,
+            b_len: spec.b_len - half,
+            a_occ_base: 0,
+            b_occ_base: if keyed { b.occ_at(b_mid) } else { 0 },
+            ..spec
+        };
+        return (left, right, in_run);
+    }
+    debug_assert!(spec.a_len >= 2, "detector splits only a_len >= 2 shards");
     let half = (spec.a_len / 2).max(1);
     let cut = spec.a_offset + half;
     let a_end = spec.a_offset + spec.a_len;
@@ -339,6 +363,7 @@ pub fn drive(
         speculations: 0,
         splits: 0,
         splits_in_run: 0,
+        carved_shards: 0,
         backpressure_pauses: 0,
         final_b: b_cur,
         final_k: k_cur,
@@ -536,6 +561,17 @@ pub fn drive(
             if let Some(spec) = part.next(b_cur) {
                 let now = backend.now();
                 t_first_submit.get_or_insert(now);
+                // Carved add-range shard (B-dominant surplus): surface
+                // it in stats + telemetry so reports show when the
+                // carving path fired.
+                if part.carved_shards() > stats.carved_shards {
+                    stats.carved_shards = part.carved_shards();
+                    inputs.telemetry.event(
+                        "carve",
+                        &format!("shard={} b_rows={}", spec.shard_id, spec.b_len),
+                        now,
+                    );
+                }
                 stragglers.on_submit(spec, now);
                 inflight_ids.insert(spec.shard_id);
                 backend.submit(spec);

@@ -17,6 +17,9 @@ pub enum Mitigation {
     /// key/occurrence indexes (a positional halve would mis-align rows).
     /// Occurrence-indexed boundaries make every `a_len >= 2` shard
     /// splittable, including one spanned by a single duplicate-key run.
+    /// Carved add-range shards (`a_len = 0`, pure B surplus) split too,
+    /// bisecting on the B side — any positional cut of an all-Added
+    /// range is safe.
     Split(ShardSpec),
 }
 
@@ -86,7 +89,15 @@ impl StragglerTracker {
             if now - t.submitted_at > factor * p50 {
                 t.mitigated = true;
                 let spec = t.spec;
-                if spec.a_len >= 2 * b_min && spec.a_len >= 2 {
+                // Large shards split; small ones speculate. Carved
+                // add-range shards (a_len == 0) measure size on the B
+                // side, the only side they have.
+                let splittable = if spec.a_len > 0 {
+                    spec.a_len >= 2 * b_min && spec.a_len >= 2
+                } else {
+                    spec.b_len >= 2 * b_min && spec.b_len >= 2
+                };
+                if splittable {
                     self.splits += 1;
                     out.push(Mitigation::Split(ShardSpec {
                         attempt: spec.attempt + 1,

@@ -640,6 +640,7 @@ fn stats_json(s: &JobStats) -> String {
         .num("throughput_rows_per_s", s.throughput_rows_per_s)
         .int("reconfigs", s.reconfigs as i64)
         .int("ooms", s.ooms as i64)
+        .int("carved_shards", s.carved_shards as i64)
         .int("batches", s.batches as i64)
         .int("sched_overhead_ns", s.sched_overhead_ns as i64)
         .finish()

@@ -10,7 +10,7 @@ use smartdiff_sched::config::{
     BackendChoice, Caps, DeltaPath, PolicyKind, SchedulerConfig,
 };
 use smartdiff_sched::data::generator::{
-    generate_pair, generate_skewed_pair, GenSpec, SkewSpec,
+    generate_pair, generate_skewed_pair, skew_surplus_rows, GenSpec, SkewSpec,
 };
 use smartdiff_sched::data::io::{
     write_csv, CsvFileSource, InMemorySource, ReadMeter, TableSource,
@@ -306,6 +306,137 @@ fn hot_run_exceeding_batch_headroom_completes_without_oom() {
             r.stats.peak_rss_bytes <= cap,
             "backend={backend:?}: peak {} exceeds cap {cap}",
             r.stats.peak_rss_bytes
+        );
+        assert!(
+            oracle.same_diff(&r.report),
+            "backend={backend:?}: capped report differs from oracle"
+        );
+    }
+}
+
+#[test]
+fn b_dominant_surplus_invariant_and_matches_oracle() {
+    // Add-range carving acceptance (ISSUE 8): a B-dominant pair whose
+    // pure-surplus added run dwarfs small batch sizes must produce the
+    // identical report across b ∈ {surplus/4, surplus, 4·surplus},
+    // worker counts {1, 4}, both backends, prefetch on/off — and match
+    // the single-shard process_shard_ref oracle. Sized so the total
+    // diff-key count stays under the per-shard sample cap: any report
+    // divergence is then a real carving bug, not truncation skew.
+    let spec = SkewSpec {
+        rows: 3_000,
+        hot_key_mass: 0.3,
+        b_surplus_mass: 1.0,
+        seed: 31,
+        ..SkewSpec::default()
+    };
+    let surplus = skew_surplus_rows(&spec);
+    assert_eq!(surplus, 3_000, "one pure-surplus B row per base row");
+    let (a, b, _) = generate_skewed_pair(&spec);
+    let base_cfg = cfg(BackendChoice::InMem, PolicyKind::Adaptive, 50);
+    let oracle = oracle_report(&a, &b, &base_cfg);
+    assert!(
+        oracle.rows.added as usize >= surplus,
+        "surplus run must surface as added rows: {:?}",
+        oracle.rows
+    );
+    assert!(
+        !oracle.diff_keys_truncated,
+        "workload must stay under the diff-key sample cap"
+    );
+    for b_size in [surplus / 4, surplus, 4 * surplus] {
+        for k in [1usize, 4] {
+            for backend in [BackendChoice::InMem, BackendChoice::DaskLike] {
+                let mut jsons = Vec::new();
+                for prefetch in [false, true] {
+                    let mut c =
+                        cfg(backend, PolicyKind::Fixed { b: b_size, k }, 50);
+                    c.caps.cpu_cap = 4;
+                    c.prefetch = prefetch;
+                    let r = run_job(
+                        &c,
+                        Arc::new(InMemorySource::new(a.clone())),
+                        Arc::new(InMemorySource::new(b.clone())),
+                    )
+                    .expect("b-dominant job");
+                    assert_eq!(r.stats.ooms, 0, "b={b_size} k={k}");
+                    if b_size < surplus {
+                        // The surplus run exceeds the batch size, so the
+                        // partitioner must have carved add-range shards
+                        // (absorption would blow the b-bound).
+                        assert!(
+                            r.stats.carved_shards > 0,
+                            "no carved shards at b={b_size} < surplus \
+                             {surplus} (backend={backend:?} k={k})"
+                        );
+                    }
+                    assert!(
+                        oracle.same_diff(&r.report),
+                        "report differs from oracle at b={b_size} k={k} \
+                         backend={backend:?} prefetch={prefetch}"
+                    );
+                    jsons.push(r.report.to_json());
+                }
+                // Prefetch is an execution-order change only: the full
+                // serialized report is bit-identical within the cell.
+                assert_eq!(
+                    jsons[0], jsons[1],
+                    "prefetch changed the report at b={b_size} k={k} \
+                     backend={backend:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn b_surplus_exceeding_grant_completes_without_oom() {
+    // B-dominant analogue of the hot-run OOM test above: one key's
+    // *added* rows dwarf the memory grant's batch headroom. Before
+    // add-range carving the completed-run/last-shard arms absorbed the
+    // surplus into a single shard whose B-side decode blew the grant;
+    // carving bounds every shard's working set by b alone, so the job
+    // must complete on both backends with 0 OOMs, peak accounted RSS
+    // under the cap, and the oracle's exact report.
+    let spec = SkewSpec {
+        rows: 4_000,
+        hot_key_mass: 0.2,
+        b_surplus_mass: 1.5,
+        seed: 13,
+        ..SkewSpec::default()
+    };
+    let surplus = skew_surplus_rows(&spec);
+    assert_eq!(surplus, 6_000, "surplus run dwarfs the 4k-row A side");
+    let (a, b, _) = generate_skewed_pair(&spec);
+    let base = InMemorySource::new(a.clone()).resident_bytes()
+        + InMemorySource::new(b.clone()).resident_bytes();
+    // Headroom far below the surplus run's decode footprint (the run is
+    // ~60% of B's heap), but enough for b_min-sized batches.
+    let cap = base + b.heap_bytes() as u64 / 4;
+    let base_cfg = cfg(BackendChoice::InMem, PolicyKind::Adaptive, 100);
+    let oracle = oracle_report(&a, &b, &base_cfg);
+    assert!(
+        !oracle.diff_keys_truncated,
+        "workload must stay under the diff-key sample cap"
+    );
+    for backend in [BackendChoice::InMem, BackendChoice::DaskLike] {
+        let mut c = cfg(backend, PolicyKind::Adaptive, 100);
+        c.caps.mem_cap_bytes = cap;
+        let r = run_job(
+            &c,
+            Arc::new(InMemorySource::new(a.clone())),
+            Arc::new(InMemorySource::new(b.clone())),
+        )
+        .expect("b-surplus job under tight cap");
+        assert_eq!(r.stats.ooms, 0, "backend={backend:?}");
+        assert!(
+            r.stats.peak_rss_bytes <= cap,
+            "backend={backend:?}: peak {} exceeds cap {cap}",
+            r.stats.peak_rss_bytes
+        );
+        assert!(
+            r.stats.carved_shards > 0,
+            "backend={backend:?}: tight grant must force carved shards"
         );
         assert!(
             oracle.same_diff(&r.report),

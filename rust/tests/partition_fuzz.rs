@@ -1,0 +1,274 @@
+//! Property/fuzz harness over the partitioner's cut rules (ISSUE 8):
+//! random occurrence-indexed table pairs × random per-call batch sizes
+//! must satisfy, on **every** emitted shard,
+//!
+//!   * `a_len <= batch` (the PR 5 A-side bound),
+//!   * `b_len <= a_len + 2·batch` (the add-range-carving B-side bound),
+//!   * carved shards (`a_len = 0`) are batch-bounded **pure surplus**:
+//!     every row's occurrence ordinal is at or past its key's total A
+//!     occurrence count,
+//!   * occurrence bases resume exactly at the source index, with equal
+//!     bases whenever one key run straddles both shard starts,
+//!   * the shard union covers both tables contiguously with no overlap,
+//!
+//! and at every internal boundary the pairable mass stays occurrence-
+//! aligned (a completed A run never leaves pairable B rows behind; a
+//! mid-run cut stops B at exactly the A cut's ordinal). Failures replay
+//! via `PROP_SEED` (see `util::prop`).
+
+use std::collections::HashMap;
+
+use smartdiff_sched::data::io::{InMemorySource, TableSource};
+use smartdiff_sched::data::schema::{ColumnType, Field, Schema};
+use smartdiff_sched::data::table::{Table, TableBuilder};
+use smartdiff_sched::exec::partition::{partition_tables, Partitioner};
+use smartdiff_sched::prop_assert;
+use smartdiff_sched::util::prop::forall;
+use smartdiff_sched::util::rng::Rng;
+
+/// Build a keyed run table from `(key, run_len)` pairs (keys ascending).
+fn run_table(runs: &[(i64, usize)]) -> Table {
+    let schema = Schema::new(vec![
+        Field::key("id", ColumnType::Int64),
+        Field::new("v", ColumnType::Int64),
+    ]);
+    let mut tb = TableBuilder::new(schema);
+    let mut v = 0i64;
+    for &(key, n) in runs {
+        for _ in 0..n {
+            tb.col(0).push_i64(key);
+            tb.col(1).push_i64(v);
+            v += 1;
+        }
+    }
+    tb.finish()
+}
+
+/// Random paired run lists sharing an ascending key space: keys may be
+/// A-only (pure removed), B-only (pure surplus), or shared with
+/// differing run lengths; an occasional B run is inflated far past any
+/// batch size — the B-dominant skew the carving arms exist for.
+fn random_run_pair(rng: &mut Rng) -> (Vec<(i64, usize)>, Vec<(i64, usize)>) {
+    let nkeys = rng.range_usize(1, 28);
+    let mut runs_a = Vec::new();
+    let mut runs_b = Vec::new();
+    for k in 0..nkeys as i64 {
+        let in_a = rng.chance(0.75);
+        let in_b = rng.chance(0.75);
+        if in_a {
+            runs_a.push((k, rng.range_usize(1, 11)));
+        }
+        if in_b {
+            let mut n = rng.range_usize(1, 11);
+            if rng.chance(0.10) {
+                n += rng.range_usize(40, 260); // B-dominant surplus run
+            }
+            runs_b.push((k, n));
+        }
+    }
+    (runs_a, runs_b)
+}
+
+fn total_counts(runs: &[(i64, usize)]) -> HashMap<i64, usize> {
+    runs.iter().copied().collect()
+}
+
+#[test]
+fn partitioner_cut_invariants_under_random_skew() {
+    forall("partitioner cut invariants", 320, |rng| {
+        let (runs_a, runs_b) = random_run_pair(rng);
+        if runs_a.is_empty() || runs_b.is_empty() {
+            return Ok(()); // keyless fallback is out of scope here
+        }
+        let a = InMemorySource::new(run_table(&runs_a));
+        let b = InMemorySource::new(run_table(&runs_b));
+        let ta = total_counts(&runs_a);
+        let tb = total_counts(&runs_b);
+        let bmax = rng.range_usize(2, 48);
+
+        let mut p = Partitioner::new(&a, &b);
+        let (mut a_seen, mut b_seen) = (0usize, 0usize);
+        // Incrementally maintained per-key consumed counts, so each
+        // boundary check only revisits the keys the new shard touched.
+        let mut ca: HashMap<i64, usize> = HashMap::new();
+        let mut cb: HashMap<i64, usize> = HashMap::new();
+        loop {
+            let batch = rng.range_usize(1, bmax + 1);
+            let Some(s) = p.next(batch) else { break };
+
+            // Contiguity / no overlap: each shard resumes exactly where
+            // the previous one stopped.
+            prop_assert!(
+                s.a_offset == a_seen && s.b_offset == b_seen,
+                "shard {} not contiguous: a {} (want {}), b {} (want {})",
+                s.shard_id,
+                s.a_offset,
+                a_seen,
+                s.b_offset,
+                b_seen
+            );
+
+            // Size bounds.
+            prop_assert!(
+                s.a_len <= batch,
+                "shard {}: a_len {} > batch {batch}",
+                s.shard_id,
+                s.a_len
+            );
+            prop_assert!(
+                s.b_len <= s.a_len + 2 * batch,
+                "shard {}: b_len {} > a_len {} + 2·batch {batch}",
+                s.shard_id,
+                s.b_len,
+                s.a_len
+            );
+
+            // Occurrence bases resume exactly at the source index.
+            if s.a_len > 0 {
+                prop_assert!(
+                    s.a_occ_base == a.occ_at(s.a_offset),
+                    "shard {}: a_occ_base {} != occ_at {}",
+                    s.shard_id,
+                    s.a_occ_base,
+                    a.occ_at(s.a_offset)
+                );
+            }
+            if s.b_len > 0 {
+                prop_assert!(
+                    s.b_occ_base == b.occ_at(s.b_offset),
+                    "shard {}: b_occ_base {} != occ_at {}",
+                    s.shard_id,
+                    s.b_occ_base,
+                    b.occ_at(s.b_offset)
+                );
+            }
+            if s.a_len > 0
+                && s.b_len > 0
+                && a.key_at(s.a_offset) == b.key_at(s.b_offset)
+            {
+                prop_assert!(
+                    s.a_occ_base == s.b_occ_base,
+                    "shard {}: straddling run with unequal bases",
+                    s.shard_id
+                );
+            }
+
+            // Carved shards: batch-bounded pure surplus.
+            if s.a_len == 0 {
+                prop_assert!(
+                    s.b_len <= batch,
+                    "carved shard {}: b_len {} > batch {batch}",
+                    s.shard_id,
+                    s.b_len
+                );
+                for i in s.b_offset..s.b_offset + s.b_len {
+                    let k = b.key_at(i).unwrap();
+                    let a_total = ta.get(&k).copied().unwrap_or(0);
+                    prop_assert!(
+                        b.occ_at(i) as usize >= a_total,
+                        "carved shard {}: row {i} (key {k}, occ {}) \
+                         is pairable against {a_total} A rows",
+                        s.shard_id,
+                        b.occ_at(i)
+                    );
+                }
+            }
+
+            // Update consumed counts, then check alignment for exactly
+            // the keys this shard touched.
+            let mut touched = Vec::new();
+            for i in s.a_offset..s.a_offset + s.a_len {
+                let k = a.key_at(i).unwrap();
+                *ca.entry(k).or_insert(0) += 1;
+                touched.push(k);
+            }
+            for i in s.b_offset..s.b_offset + s.b_len {
+                let k = b.key_at(i).unwrap();
+                *cb.entry(k).or_insert(0) += 1;
+                touched.push(k);
+            }
+            a_seen += s.a_len;
+            b_seen += s.b_len;
+            let at_end = a_seen == a.nrows() && b_seen == b.nrows();
+            touched.dedup();
+            for k in touched {
+                let na = ca.get(&k).copied().unwrap_or(0);
+                let nb = cb.get(&k).copied().unwrap_or(0);
+                let ta_k = ta.get(&k).copied().unwrap_or(0);
+                let tb_k = tb.get(&k).copied().unwrap_or(0);
+                if na == ta_k {
+                    // Completed (or absent) A run: all pairable B rows
+                    // consumed; surplus may be mid-drain. The key at
+                    // the very consumption frontier may itself still be
+                    // mid-pair, so only require the pairable floor once
+                    // the A side has really finished the key.
+                    prop_assert!(
+                        nb <= tb_k,
+                        "key {k}: consumed {nb} of {tb_k} B rows"
+                    );
+                    if at_end {
+                        prop_assert!(
+                            nb == tb_k,
+                            "key {k}: B rows left behind at job end \
+                             ({nb} of {tb_k})"
+                        );
+                    }
+                } else {
+                    // Mid-run cut: B stops at exactly the A ordinal.
+                    prop_assert!(
+                        nb == na.min(tb_k),
+                        "key {k}: mid-run misalignment \
+                         (A consumed {na}, B consumed {nb} of {tb_k})"
+                    );
+                }
+            }
+        }
+        prop_assert!(
+            a_seen == a.nrows() && b_seen == b.nrows(),
+            "union does not cover: a {}/{} b {}/{}",
+            a_seen,
+            a.nrows(),
+            b_seen,
+            b.nrows()
+        );
+        prop_assert!(p.done(), "partitioner not done after covering");
+        Ok(())
+    });
+}
+
+#[test]
+fn partition_tables_fuzz_bounds_and_coverage() {
+    forall("partition_tables bounds", 150, |rng| {
+        let (runs_a, runs_b) = random_run_pair(rng);
+        if runs_a.is_empty() || runs_b.is_empty() {
+            return Ok(());
+        }
+        let a = run_table(&runs_a);
+        let b = run_table(&runs_b);
+        let chunk = rng.range_usize(1, 33);
+        let parts = partition_tables(&a, &b, chunk);
+        let (mut ap, mut bp) = (0usize, 0usize);
+        for ((ao, al), (bo, bl)) in &parts {
+            prop_assert!(
+                *ao == ap && *bo == bp,
+                "fragment not contiguous at a={ap} b={bp}"
+            );
+            prop_assert!(*al <= chunk, "fragment a_len {al} > chunk {chunk}");
+            prop_assert!(
+                *bl <= *al + 2 * chunk,
+                "fragment b_len {bl} > a_len {al} + 2·chunk {chunk}"
+            );
+            ap += al;
+            bp += bl;
+        }
+        prop_assert!(
+            ap == a.nrows() && bp == b.nrows(),
+            "fragments do not cover: a {}/{} b {}/{}",
+            ap,
+            a.nrows(),
+            bp,
+            b.nrows()
+        );
+        Ok(())
+    });
+}
