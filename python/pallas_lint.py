@@ -1,0 +1,617 @@
+#!/usr/bin/env python3
+"""Line-for-line python mirror of tools/pallas-lint (the in-tree Rust
+static-analysis suite). Same config files, same rules, same output
+format, same exit code — usable as a pre-commit hook or in environments
+without a Rust toolchain, and kept honest by
+python/tests/test_pallas_lint.py which runs both over the shared
+fixtures.
+
+Usage:  python3 python/pallas_lint.py [--config-dir DIR] PATH [PATH...]
+
+Rule families (see ARCHITECTURE.md "Static analysis & concurrency
+audit"):
+
+  unsafe-safety    every `unsafe` carries a `// SAFETY:` comment within
+                   the 5 preceding lines.
+  atomic-ordering  every non-Relaxed atomic `Ordering::` use carries an
+                   `// ordering:` rationale within the 6 preceding
+                   lines; `Ordering::SeqCst` is additionally forbidden
+                   outside the lint.toml [seqcst] allowlist.
+  unwrap           `.unwrap()` / `.expect(..)` are banned in non-test
+                   library code unless annotated
+                   `// lint: allow(unwrap) <reason>` (same line or the
+                   2 lines above).
+  lock-order       every `.lock()` receiver must be registered in
+                   locks.toml; lexically nested acquisitions must be
+                   rank-increasing.
+  telemetry-event  literal event kinds at `.event("…")`,
+                   `count_events("…")` and `.str("ev", "…")` sites must
+                   be listed in events.toml.
+"""
+
+import os
+import sys
+
+IDENT = set("abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789_")
+
+SAFETY_WINDOW = 5
+ORDERING_WINDOW = 6
+ALLOW_WINDOW = 2
+
+STRONG_ORDERINGS = ("Acquire", "Release", "AcqRel", "SeqCst")
+
+
+# --------------------------------------------------------------------
+# toml subset parser (sections, [[array-of-tables]], str/int/str-array
+# values, full-line and trailing comments) — mirrors the Rust tool's
+# zero-dependency parser, NOT a general TOML implementation.
+# --------------------------------------------------------------------
+
+
+def parse_toml(text):
+    root = {}
+    target = root
+    for raw in text.splitlines():
+        line = _strip_comment(raw).strip()
+        if not line:
+            continue
+        if line.startswith("[["):
+            name = line[2:-2].strip()
+            root.setdefault(name, [])
+            target = {}
+            root[name].append(target)
+        elif line.startswith("["):
+            name = line[1:-1].strip()
+            target = root.setdefault(name, {})
+        else:
+            key, _, val = line.partition("=")
+            target[key.strip()] = _parse_value(val.strip())
+    return root
+
+
+def _strip_comment(line):
+    in_str = False
+    for i, c in enumerate(line):
+        if c == '"':
+            in_str = not in_str
+        elif c == "#" and not in_str:
+            return line[:i]
+    return line
+
+
+def _parse_value(val):
+    if val.startswith("["):
+        inner = val.strip()[1:-1]
+        items = []
+        for part in inner.split(","):
+            part = part.strip()
+            if part:
+                items.append(_parse_value(part))
+        return items
+    if val.startswith('"'):
+        return val[1:-1]
+    return int(val)
+
+
+def load_multiline_toml(path):
+    """Join multi-line arrays before parsing (events.toml formats its
+    list one-entry-per-line)."""
+    with open(path, encoding="utf-8") as f:
+        raw = f.read()
+    joined = []
+    buf = None
+    for line in raw.splitlines():
+        stripped = _strip_comment(line)
+        if buf is not None:
+            buf += " " + stripped.strip()
+            if "]" in stripped:
+                joined.append(buf)
+                buf = None
+            continue
+        if "= [" in stripped and "]" not in stripped:
+            buf = stripped.strip()
+            continue
+        joined.append(line)
+    return parse_toml("\n".join(joined))
+
+
+# --------------------------------------------------------------------
+# source scanner: blank strings/comments in place (same length, so
+# offsets match the source), collect per-line comments + string table
+# --------------------------------------------------------------------
+
+
+class Scan(object):
+    def __init__(self, code, comments, strings, line_of):
+        self.code = code          # source w/ string+comment bodies blanked
+        self.comments = comments  # line -> [comment text]
+        self.strings = strings    # offset of opening quote -> literal text
+        self.line_of = line_of    # offset -> 1-based line
+        self._lines = None
+
+    def code_lines(self):
+        if self._lines is None:
+            self._lines = self.code.split("\n")
+        return self._lines
+
+    def comment_only(self, line):
+        if line not in self.comments:
+            return False
+        lines = self.code_lines()
+        return line - 1 < len(lines) and not lines[line - 1].strip()
+
+
+def scan_source(src):
+    n = len(src)
+    out = list(src)
+    comments = {}
+    strings = {}
+    line_of = [1] * (n + 1)
+    ln = 1
+    for i, c in enumerate(src):
+        line_of[i] = ln
+        if c == "\n":
+            ln += 1
+    line_of[n] = ln
+
+    def note_comment(start, end):
+        comments.setdefault(line_of[start], []).append(src[start:end])
+
+    i = 0
+    while i < n:
+        c = src[i]
+        if c == "/" and i + 1 < n and src[i + 1] == "/":
+            j = i
+            while j < n and src[j] != "\n":
+                j += 1
+            note_comment(i, j)
+            for k in range(i, j):
+                out[k] = " "
+            i = j
+        elif c == "/" and i + 1 < n and src[i + 1] == "*":
+            depth = 1
+            j = i + 2
+            while j < n and depth > 0:
+                if src[j] == "/" and j + 1 < n and src[j + 1] == "*":
+                    depth += 1
+                    j += 2
+                elif src[j] == "*" and j + 1 < n and src[j + 1] == "/":
+                    depth -= 1
+                    j += 2
+                else:
+                    j += 1
+            note_comment(i, j)
+            for k in range(i, j):
+                if out[k] != "\n":
+                    out[k] = " "
+            i = j
+        elif c == '"':
+            j = _string_end(src, i + 1)
+            strings[i] = src[i + 1 : j - 1]
+            for k in range(i + 1, j - 1):
+                if out[k] != "\n":
+                    out[k] = " "
+            i = j
+        elif c == "r" and _raw_string_here(src, i):
+            hashes = 0
+            j = i + 1
+            while j < n and src[j] == "#":
+                hashes += 1
+                j += 1
+            close = '"' + "#" * hashes
+            end = src.find(close, j + 1)
+            end = n if end < 0 else end + len(close)
+            strings[j] = src[j + 1 : end - 1 - hashes]
+            for k in range(j + 1, end - 1 - hashes):
+                if out[k] != "\n":
+                    out[k] = " "
+            i = end
+        elif c == "'":
+            j = _char_literal_end(src, i)
+            if j > 0:
+                for k in range(i + 1, j - 1):
+                    out[k] = " "
+                i = j
+            else:
+                i += 1  # lifetime
+        else:
+            i += 1
+    return Scan("".join(out), comments, strings, line_of)
+
+
+def _raw_string_here(src, i):
+    if i > 0 and src[i - 1] in IDENT:
+        return False
+    j = i + 1
+    while j < len(src) and src[j] == "#":
+        j += 1
+    return j < len(src) and src[j] == '"'
+
+
+def _string_end(src, i):
+    n = len(src)
+    while i < n:
+        if src[i] == "\\":
+            i += 2
+        elif src[i] == '"':
+            return i + 1
+        else:
+            i += 1
+    return n
+
+
+def _char_literal_end(src, i):
+    """End offset past a char literal starting at src[i] == "'", or 0
+    if this quote is a lifetime."""
+    n = len(src)
+    if i + 1 >= n:
+        return 0
+    if src[i + 1] == "\\":
+        j = i + 2
+        if j < n and src[j] == "u":
+            j = src.find("'", j)
+            return 0 if j < 0 else j + 1
+        return j + 2 if j + 1 < n and src[j + 1] == "'" else 0
+    if i + 2 < n and src[i + 2] == "'" and src[i + 1] != "'":
+        return i + 3
+    return 0
+
+
+def word_at(code, i, word):
+    end = i + len(word)
+    if code[i:end] != word:
+        return False
+    if i > 0 and code[i - 1] in IDENT:
+        return False
+    return end >= len(code) or code[end] not in IDENT
+
+
+def find_word(code, word):
+    hits = []
+    start = 0
+    while True:
+        i = code.find(word, start)
+        if i < 0:
+            return hits
+        if word_at(code, i, word):
+            hits.append(i)
+        start = i + 1
+
+
+def skip_ws(code, i):
+    while i < len(code) and code[i] in " \t\n\r":
+        i += 1
+    return i
+
+
+def method_call_sites(code, name):
+    """Offsets of `.name(` (whitespace tolerated around the segments)."""
+    hits = []
+    for i in find_word(code, name):
+        j = i - 1
+        while j >= 0 and code[j] in " \t\n\r":
+            j -= 1
+        if j < 0 or code[j] != ".":
+            continue
+        k = skip_ws(code, i + len(name))
+        if k < len(code) and code[k] == "(":
+            hits.append((i, k))
+    return hits
+
+
+def receiver_ident(code, dot):
+    """Identifier immediately left of the `.` at offset `dot`."""
+    j = dot - 1
+    while j >= 0 and code[j] in " \t\n\r":
+        j -= 1
+    end = j + 1
+    while j >= 0 and code[j] in IDENT:
+        j -= 1
+    return code[j + 1 : end]
+
+
+def test_regions(code):
+    """[start, end) offset ranges of `#[cfg(test)]`-gated items."""
+    regions = []
+    start = 0
+    while True:
+        i = code.find("#[cfg(test)]", start)
+        if i < 0:
+            return regions
+        j = code.find("{", i)
+        if j < 0:
+            return regions
+        depth = 0
+        k = j
+        while k < len(code):
+            if code[k] == "{":
+                depth += 1
+            elif code[k] == "}":
+                depth -= 1
+                if depth == 0:
+                    break
+            k += 1
+        regions.append((i, k + 1))
+        start = k + 1
+
+
+def in_regions(regions, i):
+    return any(a <= i < b for a, b in regions)
+
+
+def _search_lo(scan, line, window):
+    """First line to search for an annotation anchored at `line`.
+
+    The window bounds the distance from the token to the *bottom* of
+    the comment block; the block itself may be longer, so the search
+    extends upward through the contiguous run of comment-only lines
+    whose bottom falls inside the window.
+    """
+    lo = max(1, line - window)
+    for l in range(lo, line + 1):
+        if scan.comment_only(l):
+            top = l
+            while top > 1 and scan.comment_only(top - 1):
+                top -= 1
+            return min(lo, top)
+    return lo
+
+
+def comment_in_window(scan, line, window, needle):
+    for l in range(_search_lo(scan, line, window), line + 1):
+        for text in scan.comments.get(l, ()):
+            body = text.lstrip("/!* \t")
+            if body.startswith(needle):
+                return True
+    return False
+
+
+def allow_annotation(scan, line, what):
+    marker = "lint: allow(" + what + ")"
+    for l in range(_search_lo(scan, line, ALLOW_WINDOW), line + 1):
+        for text in scan.comments.get(l, ()):
+            body = text.lstrip("/!* \t")
+            if body.startswith(marker) and body[len(marker) :].strip():
+                return True
+    return False
+
+
+# --------------------------------------------------------------------
+# rules
+# --------------------------------------------------------------------
+
+
+class Config(object):
+    def __init__(self, config_dir):
+        lint = load_multiline_toml(os.path.join(config_dir, "lint.toml"))
+        locks = load_multiline_toml(os.path.join(config_dir, "locks.toml"))
+        events = load_multiline_toml(os.path.join(config_dir, "events.toml"))
+        self.seqcst_allow = lint.get("seqcst", {}).get("allow", [])
+        self.unwrap_allow = lint.get("unwrap", {}).get("allow", [])
+        self.locks = locks.get("lock", [])
+        self.events = set(events.get("events", []))
+
+
+def path_allowed(path, suffixes):
+    norm = path.replace("\\", "/")
+    return any(norm.endswith(s) for s in suffixes)
+
+
+def check_file(path, src, cfg):
+    scan = scan_source(src)
+    code = scan.code
+    regions = test_regions(code)
+    out = []
+
+    def violation(offset, rule, msg):
+        out.append((path, scan.line_of[offset], rule, msg))
+
+    # unsafe-safety -------------------------------------------------
+    for i in find_word(code, "unsafe"):
+        line = scan.line_of[i]
+        if not comment_in_window(scan, line, SAFETY_WINDOW, "SAFETY:"):
+            violation(i, "unsafe-safety", "`unsafe` without a `// SAFETY:` comment")
+
+    # atomic-ordering -----------------------------------------------
+    for i in find_word(code, "Ordering"):
+        j = i + len("Ordering")
+        if code[j : j + 2] != "::":
+            continue
+        k = j + 2
+        end = k
+        while end < len(code) and code[end] in IDENT:
+            end += 1
+        variant = code[k:end]
+        if variant not in STRONG_ORDERINGS:
+            continue
+        line = scan.line_of[i]
+        if variant == "SeqCst" and not path_allowed(path, cfg.seqcst_allow):
+            violation(
+                i,
+                "atomic-ordering",
+                "`Ordering::SeqCst` outside the lint.toml [seqcst] allowlist",
+            )
+        if not comment_in_window(scan, line, ORDERING_WINDOW, "ordering:"):
+            violation(
+                i,
+                "atomic-ordering",
+                "`Ordering::" + variant + "` without an `// ordering:` rationale",
+            )
+
+    # unwrap ---------------------------------------------------------
+    if not path_allowed(path, cfg.unwrap_allow):
+        for name in ("unwrap", "expect"):
+            for i, _ in method_call_sites(code, name):
+                if in_regions(regions, i):
+                    continue
+                if allow_annotation(scan, scan.line_of[i], "unwrap"):
+                    continue
+                violation(
+                    i,
+                    "unwrap",
+                    "`." + name + "(...)` in library code without "
+                    "`// lint: allow(unwrap) <reason>`",
+                )
+
+    # lock-order -----------------------------------------------------
+    sites = {}
+    for i, _ in method_call_sites(code, "lock"):
+        if in_regions(regions, i):
+            continue
+        sites[i] = receiver_ident(code, _dot_before(code, i))
+    held = []  # (name, rank, depth, is_let)
+    depth = 0
+    for i, c in enumerate(code):
+        if c == "{":
+            depth += 1
+        elif c == "}":
+            depth -= 1
+            held[:] = [h for h in held if h[2] <= depth]
+        elif c == ";":
+            held[:] = [h for h in held if h[3] or h[2] != depth]
+        if i in sites:
+            recv = sites[i]
+            entry = _lock_entry(cfg.locks, path, recv)
+            if entry is None:
+                violation(
+                    i,
+                    "lock-order",
+                    "`." + "lock()` receiver `" + recv + "` is not in locks.toml",
+                )
+                continue
+            name, rank = entry["name"], entry["rank"]
+            for hname, hrank, _, _ in held:
+                if rank < hrank:
+                    violation(
+                        i,
+                        "lock-order",
+                        "acquires `"
+                        + name
+                        + "` (rank "
+                        + str(rank)
+                        + ") while holding `"
+                        + hname
+                        + "` (rank "
+                        + str(hrank)
+                        + ")",
+                    )
+            held.append((name, rank, depth, _is_let_bound(code, i)))
+
+    # telemetry-event ------------------------------------------------
+    def check_event_literal(offset):
+        lit = scan.strings.get(offset)
+        if lit is not None and lit not in cfg.events:
+            violation(
+                offset,
+                "telemetry-event",
+                'event kind "' + lit + '" is not in events.toml',
+            )
+
+    for i, paren in method_call_sites(code, "event"):
+        j = skip_ws(code, paren + 1)
+        if j < len(code) and code[j] == '"':
+            check_event_literal(j)
+    for i in find_word(code, "count_events"):
+        j = skip_ws(code, i + len("count_events"))
+        if j < len(code) and code[j] == "(":
+            j = skip_ws(code, j + 1)
+            if j < len(code) and code[j] == '"':
+                check_event_literal(j)
+    for i, paren in method_call_sites(code, "str"):
+        j = skip_ws(code, paren + 1)
+        if scan.strings.get(j) != "ev":
+            continue
+        j = skip_ws(code, j + 2 + len("ev"))
+        if j < len(code) and code[j] == ",":
+            j = skip_ws(code, j + 1)
+            if j < len(code) and code[j] == '"':
+                check_event_literal(j)
+
+    return out
+
+
+def _dot_before(code, i):
+    j = i - 1
+    while j >= 0 and code[j] in " \t\n\r":
+        j -= 1
+    return j
+
+
+def _lock_entry(locks, path, recv):
+    norm = path.replace("\\", "/")
+    for entry in locks:
+        if entry["field"] == recv and entry.get("file", "") in norm:
+            return entry
+    return None
+
+
+def _is_let_bound(code, i):
+    j = i
+    while j > 0 and code[j] not in ";{}":
+        j -= 1
+    return "let" in [w for w in _words(code[j:i])]
+
+
+def _words(s):
+    out = []
+    cur = []
+    for c in s:
+        if c in IDENT:
+            cur.append(c)
+        elif cur:
+            out.append("".join(cur))
+            cur = []
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+# --------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------
+
+
+def rust_files(paths):
+    files = []
+    for p in paths:
+        if os.path.isfile(p):
+            files.append(p)
+            continue
+        for dirpath, _dirnames, filenames in os.walk(p):
+            for f in filenames:
+                if f.endswith(".rs"):
+                    files.append(os.path.join(dirpath, f))
+    return sorted(files)
+
+
+def main(argv):
+    config_dir = os.path.join(os.path.dirname(__file__), "..", "tools", "pallas-lint")
+    args = []
+    i = 1
+    while i < len(argv):
+        if argv[i] == "--config-dir":
+            config_dir = argv[i + 1]
+            i += 2
+        else:
+            args.append(argv[i])
+            i += 1
+    if not args:
+        sys.stderr.write("usage: pallas_lint.py [--config-dir DIR] PATH...\n")
+        return 2
+    cfg = Config(config_dir)
+    violations = []
+    for path in rust_files(args):
+        with open(path, encoding="utf-8") as f:
+            src = f.read()
+        violations.extend(check_file(path, src, cfg))
+    violations.sort(key=lambda v: (v[0], v[1]))
+    for path, line, rule, msg in violations:
+        print("%s:%d: [%s] %s" % (path, line, rule, msg))
+    if violations:
+        print("pallas-lint: %d violation(s)" % len(violations))
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

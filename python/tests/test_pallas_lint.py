@@ -1,0 +1,101 @@
+"""Golden tests for the pallas-lint mirror over the shared fixtures.
+
+`python/pallas_lint.py` is a line-for-line mirror of the Rust crate at
+`tools/pallas-lint` (keep the two in sync): same config files, same
+rule messages, same exit codes. Per repo convention the container has
+no Rust toolchain, so this suite is what actually exercises the lint
+logic at test time; `tools/pallas-lint/tests/golden.rs` asserts the
+identical outcomes for the Rust side in CI. Both run over the fixture
+set under `tools/pallas-lint/fixtures/`.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import pallas_lint  # noqa: E402
+
+REPO = os.path.normpath(os.path.join(os.path.dirname(__file__), "..", ".."))
+LINT_DIR = os.path.join(REPO, "tools", "pallas-lint")
+FIXTURES = os.path.join(LINT_DIR, "fixtures")
+
+CLEAN = [
+    "safety.rs",
+    "ordering.rs",
+    "allowed_seqcst.rs",
+    "unwrap_ok.rs",
+    "locks_ok.rs",
+    "events_ok.rs",
+]
+
+# fixture -> (expected rule, expected message fragment)
+FAILING = {
+    "missing_safety.rs": ("unsafe-safety", "SAFETY"),
+    "seqcst_everywhere.rs": ("atomic-ordering", "allowlist"),
+    "unjustified_ordering.rs": ("atomic-ordering", "rationale"),
+    "bare_unwrap.rs": ("unwrap", "lint: allow(unwrap)"),
+    "lock_inversion.rs": ("lock-order", "while holding"),
+    "unregistered_lock.rs": ("lock-order", "not in locks.toml"),
+    "unknown_event.rs": ("telemetry-event", "not in events.toml"),
+}
+
+
+def lint_one(cfg, path):
+    with open(path, encoding="utf-8") as f:
+        return pallas_lint.check_file(path, f.read(), cfg)
+
+
+def fixture_cfg():
+    return pallas_lint.Config(os.path.join(FIXTURES, "config"))
+
+
+def test_clean_fixtures_are_clean():
+    cfg = fixture_cfg()
+    for name in CLEAN:
+        v = lint_one(cfg, os.path.join(FIXTURES, "clean", name))
+        assert v == [], "%s: unexpected violations: %r" % (name, v)
+
+
+def test_failing_fixtures_trip_their_rule():
+    cfg = fixture_cfg()
+    for name, (rule, fragment) in FAILING.items():
+        v = lint_one(cfg, os.path.join(FIXTURES, "failing", name))
+        assert v, "%s: expected violations, got none" % name
+        assert all(x[2] == rule for x in v), \
+            "%s: expected only [%s], got %r" % (name, rule, v)
+        assert any(fragment in x[3] for x in v), \
+            "%s: no message contains %r: %r" % (name, fragment, v)
+
+
+def test_lock_inversion_message_names_both_ranks():
+    cfg = fixture_cfg()
+    v = lint_one(cfg, os.path.join(FIXTURES, "failing", "lock_inversion.rs"))
+    assert len(v) == 1
+    assert v[0][3] == \
+        "acquires `alpha` (rank 10) while holding `beta` (rank 20)"
+
+
+def test_main_tree_is_clean_under_real_config():
+    cfg = pallas_lint.Config(LINT_DIR)
+    violations = []
+    for path in pallas_lint.rust_files([os.path.join(REPO, "rust", "src")]):
+        violations.extend(lint_one(cfg, path))
+    assert violations == [], "rust/src violations: %r" % (violations,)
+
+
+def test_rust_linter_source_is_self_clean():
+    cfg = pallas_lint.Config(LINT_DIR)
+    violations = []
+    for path in pallas_lint.rust_files([os.path.join(LINT_DIR, "src")]):
+        violations.extend(lint_one(cfg, path))
+    assert violations == [], "self-lint violations: %r" % (violations,)
+
+
+def test_cli_exit_codes():
+    assert pallas_lint.main(
+        ["pallas_lint.py", os.path.join(FIXTURES, "clean")]
+        + ["--config-dir", os.path.join(FIXTURES, "config")]) == 0
+    assert pallas_lint.main(
+        ["pallas_lint.py", os.path.join(FIXTURES, "failing")]
+        + ["--config-dir", os.path.join(FIXTURES, "config")]) == 1
+    assert pallas_lint.main(["pallas_lint.py"]) == 2

@@ -157,24 +157,31 @@ impl JobControl {
 
     /// Point-in-time progress snapshot.
     pub fn progress(&self) -> JobProgress {
+        // lint: allow(unwrap) progress/watchers/events sections are
+        // clone/push/retain only; poison means a torn event stream, and
+        // serving one would silently break subscribers — fail fast
         self.progress.lock().unwrap().clone()
     }
     pub(crate) fn update_progress(&self, f: impl FnOnce(&mut JobProgress)) {
+        // lint: allow(unwrap) see progress(): poison ⇒ fail fast
         f(&mut self.progress.lock().unwrap());
     }
 
     pub(crate) fn push_event(&self, ev: JobEvent) {
         {
+            // lint: allow(unwrap) see progress(): poison ⇒ fail fast
             let mut w = self.watchers.lock().unwrap();
             // Dead subscribers (receiver dropped) are pruned on the spot.
             w.senders.retain(|tx| tx.send(ev.clone()).is_ok());
             w.history.push(ev.clone());
         }
+        // lint: allow(unwrap) see progress(): poison ⇒ fail fast
         self.events.lock().unwrap().push(ev);
     }
     /// Drain all recorded events (destructive; order preserved). The
     /// non-destructive fan-out view is [`JobControl::subscribe`].
     pub fn drain_events(&self) -> Vec<JobEvent> {
+        // lint: allow(unwrap) see progress(): poison ⇒ fail fast
         std::mem::take(&mut *self.events.lock().unwrap())
     }
     /// Subscribe to this job's event stream. The receiver first replays
@@ -186,6 +193,7 @@ impl JobControl {
     /// event has been delivered and the control is dropped.
     pub fn subscribe(&self) -> mpsc::Receiver<JobEvent> {
         let (tx, rx) = mpsc::channel();
+        // lint: allow(unwrap) see progress(): poison ⇒ fail fast
         let mut w = self.watchers.lock().unwrap();
         for ev in &w.history {
             // A send to our own just-created receiver cannot fail.
@@ -349,6 +357,9 @@ impl DiffSession {
     /// loop ([`JobEvent::MemGrant`]). Gated jobs are re-evaluated against
     /// the new budget. `bytes` is floored at 1.
     pub fn set_mem_budget(&self, bytes: u64) {
+        // lint: allow(unwrap) a poisoned ledger means a panic landed
+        // mid-admission/release and the grant accounting may be torn;
+        // continuing could overcommit the budget — fail fast instead
         let ledger = self.inner.ledger.lock().unwrap();
         self.inner.mem_budget.store(bytes.max(1), Ordering::Relaxed);
         repartition(&self.inner, &ledger);
@@ -362,6 +373,8 @@ impl DiffSession {
     /// [`DiffSession::mem_budget`] as long as the budget covers at least
     /// one byte per running job (grants are floored at one byte each).
     pub fn mem_grants(&self) -> Vec<(u64, u64)> {
+        // lint: allow(unwrap) ledger poison ⇒ fail fast (see
+        // set_mem_budget)
         let ledger = self.inner.ledger.lock().unwrap();
         ledger
             .running
@@ -372,11 +385,15 @@ impl DiffSession {
 
     /// Number of currently admitted (running) jobs.
     pub fn active_jobs(&self) -> usize {
+        // lint: allow(unwrap) ledger poison ⇒ fail fast (see
+        // set_mem_budget)
         self.inner.ledger.lock().unwrap().running.len()
     }
 
     /// Bytes of the memory budget currently committed to running jobs.
     pub fn committed_bytes(&self) -> u64 {
+        // lint: allow(unwrap) ledger poison ⇒ fail fast (see
+        // set_mem_budget)
         self.inner.ledger.lock().unwrap().committed_bytes
     }
 
@@ -558,6 +575,8 @@ fn run_with_admission(
     let charge =
         (ws.max(1.0) as u64).min(inner.mem_budget.load(Ordering::Relaxed));
     let granted = {
+        // lint: allow(unwrap) ledger poison ⇒ fail fast (see
+        // set_mem_budget)
         let mut ledger = inner.ledger.lock().unwrap();
         let mut announced_gate = false;
         loop {
@@ -589,6 +608,8 @@ fn run_with_admission(
             let (l, _) = inner
                 .cv
                 .wait_timeout(ledger, Duration::from_millis(10))
+                // lint: allow(unwrap) wait_timeout errs only if the
+                // ledger mutex is poisoned ⇒ fail fast
                 .unwrap();
             ledger = l;
         }
@@ -642,6 +663,8 @@ fn run_with_admission(
     // --- release: return the charge, re-partition (surviving jobs'
     // grants re-expand), wake gated jobs ---
     {
+        // lint: allow(unwrap) ledger poison ⇒ fail fast (see
+        // set_mem_budget)
         let mut ledger = inner.ledger.lock().unwrap();
         if let Some(pos) = ledger.running.iter().position(|r| r.id == id) {
             let done = ledger.running.remove(pos);

@@ -92,8 +92,11 @@ impl WorkloadResults {
                 agg(&a.1, |s| s.throughput_rows_per_s)
                     .0
                     .partial_cmp(&agg(&b.1, |s| s.throughput_rows_per_s).0)
+                    // lint: allow(unwrap) agg means over finite stats
+                    // are never NaN
                     .unwrap()
             })
+            // lint: allow(unwrap) fixed_grid is a non-empty built-in
             .unwrap();
         stats
     }
@@ -106,8 +109,11 @@ impl WorkloadResults {
                 agg(&a.1, |s| s.p95_latency)
                     .0
                     .partial_cmp(&agg(&b.1, |s| s.p95_latency).0)
+                    // lint: allow(unwrap) agg means over finite stats
+                    // are never NaN
                     .unwrap()
             })
+            // lint: allow(unwrap) fixed_grid is a non-empty built-in
             .unwrap();
         (cfg, stats)
     }
@@ -129,6 +135,8 @@ fn run_trials(
             let mut w = *wl;
             w.seed = wl.seed.wrapping_add(1000 * t as u64 + 1);
             run_sim_job(cfg, &w, consts)
+                // lint: allow(unwrap) sim jobs over generated workloads
+                // fail only on config bugs; the bench wants the panic
                 .expect("sim job")
                 .stats
         })

@@ -70,7 +70,7 @@ pub fn parse(text: &str) -> Result<TomlDoc, String> {
         let key = line[..eq].trim().to_string();
         let val = parse_value(line[eq + 1..].trim())
             .map_err(|e| format!("line {}: {}", lineno + 1, e))?;
-        doc.get_mut(&section).unwrap().insert(key, val);
+        doc.entry(section.clone()).or_default().insert(key, val);
     }
     Ok(doc)
 }

@@ -128,7 +128,12 @@ impl StrData {
     pub fn get(&self, i: usize) -> &str {
         let lo = self.offsets[i] as usize;
         let hi = self.offsets[i + 1] as usize;
-        // Arena only ever receives &str pushes, so this is valid UTF-8.
+        debug_assert!(std::str::from_utf8(&self.bytes[lo..hi]).is_ok());
+        // SAFETY: the arena is append-only and every entry arrives via
+        // `push(&str)` / `slice` (whole-entry memcpy of already-pushed
+        // entries), so `offsets` always splits `bytes` on the original
+        // `&str` boundaries and `bytes[lo..hi]` is exactly one pushed
+        // string — valid UTF-8 by construction (debug-checked above).
         unsafe { std::str::from_utf8_unchecked(&self.bytes[lo..hi]) }
     }
     /// Byte range of entry `i` in the shared arena.

@@ -91,6 +91,11 @@ impl ReadMeter {
                 cur = self.seq.load(Ordering::Relaxed);
                 continue;
             }
+            // ordering: Acquire on CAS success — taking the write lock
+            // must happen-before this writer's data stores so they
+            // cannot be reordered ahead of the odd seq becoming
+            // visible; Relaxed on failure (we just retry with the
+            // reloaded value).
             match self.seq.compare_exchange_weak(
                 cur,
                 cur + 1,
@@ -101,13 +106,17 @@ impl ReadMeter {
                 Err(now) => cur = now,
             }
         }
-        // Release fence: the data writes below must not become visible
-        // before the odd seq value (crossbeam SeqLock write pattern) —
-        // without it a weakly-ordered CPU could let a reader observe
-        // new bytes under an even seq and pass validation torn.
+        // ordering: Release fence — the data writes below must not
+        // become visible before the odd seq value (crossbeam SeqLock
+        // write pattern); without it a weakly-ordered CPU could let a
+        // reader observe new bytes under an even seq and pass
+        // validation torn.
         std::sync::atomic::fence(Ordering::Release);
         self.bytes.fetch_add(bytes, Ordering::Relaxed);
         self.nanos.fetch_add(elapsed_nanos, Ordering::Relaxed);
+        // ordering: Release — publishes the data stores above; a reader
+        // that Acquire-loads this even value sees both counters fully
+        // written.
         self.seq.store(cur + 2, Ordering::Release);
     }
 
@@ -115,10 +124,18 @@ impl ReadMeter {
     /// of completed `record` calls.
     pub fn snapshot(&self) -> (u64, u64) {
         loop {
+            // ordering: Acquire — pairs with the writer's Release store
+            // of the even seq, so the counter loads below read values
+            // at least as new as that writer's publication.
             let s1 = self.seq.load(Ordering::Acquire);
             if s1 & 1 == 0 {
                 let b = self.bytes.load(Ordering::Relaxed);
                 let n = self.nanos.load(Ordering::Relaxed);
+                // ordering: Acquire fence — orders the counter loads
+                // above before the revalidating seq load below (reader
+                // half of the SeqLock pattern); without it the second
+                // seq load could be satisfied early and a torn read
+                // would pass validation.
                 std::sync::atomic::fence(Ordering::Acquire);
                 if self.seq.load(Ordering::Relaxed) == s1 {
                     return (b, n);
@@ -719,17 +736,35 @@ impl CsvFileSource {
         (self.scan_bytes, self.scan_nanos)
     }
 
+    /// Lock the handle pool, recovering from poisoning instead of
+    /// cascading the panic. The pool is just a cache of open file
+    /// descriptors — a thread that panicked while holding the lock
+    /// cannot have left it logically corrupt, only possibly mid-push —
+    /// so on poison we clear the cached handles (they reopen lazily)
+    /// and carry on. This keeps one panicked worker from turning every
+    /// subsequent batch read into a second panic.
+    fn pool_guard(&self) -> std::sync::MutexGuard<'_, Vec<std::fs::File>> {
+        match self.handles.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => {
+                let mut guard = poisoned.into_inner();
+                guard.clear();
+                guard
+            }
+        }
+    }
+
     /// Check a read handle out of the pool (opening a new one only when
     /// the pool is empty).
     fn checkout_handle(&self) -> Result<std::fs::File, String> {
-        if let Some(f) = self.handles.lock().unwrap().pop() {
+        if let Some(f) = self.pool_guard().pop() {
             return Ok(f);
         }
         std::fs::File::open(&self.path).map_err(|e| format!("open: {e}"))
     }
 
     fn return_handle(&self, f: std::fs::File) {
-        let mut pool = self.handles.lock().unwrap();
+        let mut pool = self.pool_guard();
         if pool.len() < self.handle_cap.load(Ordering::Relaxed) {
             pool.push(f);
         }
@@ -864,7 +899,7 @@ impl TableSource for CsvFileSource {
         self.handle_cap.store(cap, Ordering::Relaxed);
         // Shrinks release surplus handles now instead of leaking them
         // until process exit.
-        let mut pool = self.handles.lock().unwrap();
+        let mut pool = self.pool_guard();
         pool.truncate(cap);
     }
     fn storage_bytes(&self) -> u64 {
@@ -1162,12 +1197,23 @@ mod tests {
         // Writers always record (n, n) pairs; a torn read would observe
         // bytes and nanos from different record() calls and the pair
         // would disagree.
+        // Miri interprets ~1000x slower than native; shrink the loops
+        // there so the interleaving surface survives but the job
+        // finishes. Native keeps the full counts.
+        #[cfg(miri)]
+        const WRITES: u64 = 50;
+        #[cfg(not(miri))]
+        const WRITES: u64 = 2_000;
+        #[cfg(miri)]
+        const READS: u64 = 200;
+        #[cfg(not(miri))]
+        const READS: u64 = 20_000;
         let meter = Arc::new(ReadMeter::default());
         let mut writers = Vec::new();
         for _ in 0..4 {
             let m = Arc::clone(&meter);
             writers.push(std::thread::spawn(move || {
-                for i in 1..=2_000u64 {
+                for i in 1..=WRITES {
                     m.record(i, i);
                 }
             }));
@@ -1175,7 +1221,7 @@ mod tests {
         let reader = {
             let m = Arc::clone(&meter);
             std::thread::spawn(move || {
-                for _ in 0..20_000 {
+                for _ in 0..READS {
                     let (b, n) = m.snapshot();
                     assert_eq!(b, n, "torn meter snapshot: bytes={b} nanos={n}");
                 }
@@ -1185,7 +1231,7 @@ mod tests {
             w.join().unwrap();
         }
         reader.join().unwrap();
-        let total = 4 * (2_000 * 2_001 / 2);
+        let total = 4 * (WRITES * (WRITES + 1) / 2);
         assert_eq!(meter.snapshot(), (total, total));
     }
 

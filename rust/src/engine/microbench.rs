@@ -87,6 +87,8 @@ pub fn calibrate(rows: usize, seed: u64) -> CostConstants {
         ..GenSpec::default()
     };
     let (a, b, _) = generate_pair(&spec);
+    // lint: allow(unwrap) generated pairs share a schema by
+    // construction; alignment cannot fail on them
     let aligned = align_schemas(&a.schema, &b.schema).unwrap();
     let plan = JobPlan::new(aligned, EngineConfig::default());
     let exec: Arc<dyn NumericDeltaExec> = Arc::new(NativeExec);
@@ -100,6 +102,8 @@ pub fn calibrate(rows: usize, seed: u64) -> CostConstants {
     for i in 0..chunks {
         let t = src
             .read_range(i * chunk, chunk)
+            // lint: allow(unwrap) in-memory reads over in-bounds ranges
+            // are infallible
             .expect("in-memory calibration reads are infallible");
         decoded_bytes += t.heap_bytes() as u64;
     }
@@ -110,11 +114,14 @@ pub fn calibrate(rows: usize, seed: u64) -> CostConstants {
     // Full shard Δ (align + numeric + native): measure end-to-end, then
     // attribute by cell counts using a second alignment-only timing.
     let t0 = Instant::now();
+    // lint: allow(unwrap) generated tables always row-align under their
+    // own plan; a failure is a generator bug worth the panic
     let _al = crate::engine::row_align::align_rows(&a, &b, &plan.aligned).unwrap();
     let align_ns = t0.elapsed().as_nanos() as f64;
     let align_ns_per_row = align_ns / (a.nrows() + b.nrows()) as f64;
 
     let t0 = Instant::now();
+    // lint: allow(unwrap) same argument as align_rows above
     let (outcome, _) = process_shard(0, &a, &b, &plan, &exec).unwrap();
     let total_ns = t0.elapsed().as_nanos() as f64;
     let delta_ns = (total_ns - align_ns).max(1.0);

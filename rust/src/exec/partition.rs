@@ -212,6 +212,8 @@ impl<'a> Partitioner<'a> {
             if b_n - pair_hi > batch_rows { pair_hi } else { b_n }
         } else {
             let last = self.a_pos + a_len - 1;
+            // lint: allow(unwrap) the partitioner is only built over
+            // keyed sources (key_at is Some for every row by contract)
             let boundary = self.a.key_at(last).expect("keyed source");
             // Occurrence-bounded cut: if the run continues past the
             // cut, B stops at the same occurrence ordinal so both

@@ -147,6 +147,8 @@ impl Pool {
                 std::thread::Builder::new()
                     .name(format!("sdiff-worker-{id}"))
                     .spawn(move || worker_loop(id, shared))
+                    // lint: allow(unwrap) spawn fails only on OS thread
+                    // exhaustion; no useful degraded mode exists there
                     .expect("spawn worker"),
             );
             self.spawned += 1;
@@ -156,6 +158,8 @@ impl Pool {
     pub fn submit(&mut self, spec: ShardSpec) {
         let q = Queued { spec, submitted_at: mono_secs() };
         {
+            // lint: allow(unwrap) queue sections are VecDeque ops that
+            // cannot panic, so the mutex cannot be poisoned
             let mut queue = self.shared.queue.lock().unwrap();
             queue.push_back(q);
         }
@@ -315,6 +319,7 @@ fn worker_loop(id: usize, shared: Arc<Shared>) {
     loop {
         // Retire if we are above the target worker count and idle.
         let task = {
+            // lint: allow(unwrap) queue poison unreachable (see submit)
             let mut queue = shared.queue.lock().unwrap();
             loop {
                 if shared.shutdown.load(Ordering::Relaxed) == 1 {
@@ -329,6 +334,8 @@ fn worker_loop(id: usize, shared: Arc<Shared>) {
                 let (q, _timeout) = shared
                     .cv
                     .wait_timeout(queue, std::time::Duration::from_millis(25))
+                    // lint: allow(unwrap) errs only on queue poison,
+                    // unreachable (see submit)
                     .unwrap();
                 queue = q;
             }
@@ -359,6 +366,8 @@ fn worker_loop(id: usize, shared: Arc<Shared>) {
             }
             let next_task = if shared.profile.prefetch {
                 let claimed = {
+                    // lint: allow(unwrap) queue poison unreachable (see
+                    // submit)
                     let mut queue = shared.queue.lock().unwrap();
                     if shared.shutdown.load(Ordering::Relaxed) == 0
                         && id < shared.target_workers.load(Ordering::Relaxed)
@@ -416,6 +425,8 @@ fn worker_loop(id: usize, shared: Arc<Shared>) {
             };
             // Send BEFORE decrementing inflight: the scheduler treats
             // "inflight == 0" as "every report is visible in the channel".
+            // lint: allow(unwrap) report_tx sections are a single
+            // channel send and cannot panic, so no poison
             let _ = shared.report_tx.lock().unwrap().send(report);
             shared.inflight.fetch_sub(1, Ordering::Relaxed);
 

@@ -130,12 +130,16 @@ impl CancelSet {
         Arc::new(CancelSet::default())
     }
     pub fn cancel(&self, shard_id: u64) {
+        // lint: allow(unwrap) cancel-set sections are single HashSet
+        // ops that cannot panic, so the mutex cannot be poisoned
         self.inner.lock().unwrap().insert(shard_id);
     }
     pub fn is_cancelled(&self, shard_id: u64) -> bool {
+        // lint: allow(unwrap) poison unreachable (see cancel)
         self.inner.lock().unwrap().contains(&shard_id)
     }
     pub fn clear(&self, shard_id: u64) {
+        // lint: allow(unwrap) poison unreachable (see cancel)
         self.inner.lock().unwrap().remove(&shard_id);
     }
 }
@@ -236,6 +240,9 @@ impl Prefetcher {
             // No companion thread: park the slot in Shutdown so
             // request/consume/drain all no-op instead of waiting on a
             // state transition that will never come.
+            // lint: allow(unwrap) slot-state sections only move the
+            // enum and clone ranges; a poisoned slot means the state
+            // machine is torn mid-transition — fail fast
             *slot.state.lock().unwrap() = SlotState::Shutdown;
         }
         Prefetcher { slot, handle }
@@ -245,6 +252,7 @@ impl Prefetcher {
     /// content; a no-op if `range` is already staged or in flight.
     pub fn request(&self, range: RangeSpec) {
         {
+            // lint: allow(unwrap) slot poison ⇒ fail fast (see new)
             let mut st = self.slot.state.lock().unwrap();
             match &*st {
                 SlotState::Shutdown => return,
@@ -269,12 +277,14 @@ impl Prefetcher {
     /// worker's residual `stall_ns` for a prefetched range).
     fn consume(&self, range: &RangeSpec) -> (Option<Box<StagedRange>>, u64) {
         let t0 = std::time::Instant::now();
+        // lint: allow(unwrap) slot poison ⇒ fail fast (see new)
         let mut st = self.slot.state.lock().unwrap();
         loop {
             match &*st {
                 SlotState::Requested(r) | SlotState::Loading(r)
                     if r == range =>
                 {
+                    // lint: allow(unwrap) cv errs only on slot poison
                     st = self.slot.cv.wait(st).unwrap();
                 }
                 SlotState::Ready(s) if s.range == *range => {
@@ -308,10 +318,12 @@ impl Prefetcher {
     /// charge. After this returns the prefetcher holds zero accounted
     /// bytes (the grant-shrink / OOM-retry path).
     pub fn drain(&self) {
+        // lint: allow(unwrap) slot poison ⇒ fail fast (see new)
         let mut st = self.slot.state.lock().unwrap();
         loop {
             match &*st {
                 SlotState::Loading(_) => {
+                    // lint: allow(unwrap) cv errs only on slot poison
                     st = self.slot.cv.wait(st).unwrap();
                 }
                 SlotState::Shutdown => return,
@@ -329,6 +341,7 @@ impl Prefetcher {
 impl Drop for Prefetcher {
     fn drop(&mut self) {
         {
+            // lint: allow(unwrap) slot poison ⇒ fail fast (see new)
             let mut st = self.slot.state.lock().unwrap();
             *st = SlotState::Shutdown;
         }
@@ -349,6 +362,7 @@ fn prefetch_loop(
     let mut scratch = ReadScratch::default();
     loop {
         let range = {
+            // lint: allow(unwrap) slot poison ⇒ fail fast (see new)
             let mut st = slot.state.lock().unwrap();
             loop {
                 match &*st {
@@ -358,12 +372,14 @@ fn prefetch_loop(
                         *st = SlotState::Loading(r);
                         break r;
                     }
+                    // lint: allow(unwrap) cv errs only on slot poison
                     _ => st = slot.cv.wait(st).unwrap(),
                 }
             }
         };
         let staged = stage(&ctx, &tracker, range, &mut scratch, &gauge);
         {
+            // lint: allow(unwrap) slot poison ⇒ fail fast (see new)
             let mut st = slot.state.lock().unwrap();
             match &*st {
                 SlotState::Shutdown => return,
@@ -672,6 +688,8 @@ pub fn execute_shard_with(
                     // retry once, fully synchronously, so prefetch
                     // never manufactures an OOM the serial path
                     // wouldn't hit.
+                    // lint: allow(unwrap) this arm is guarded by
+                    // `prefetch.is_some()` two lines up
                     prefetch.unwrap().drain();
                     execute_range(
                         ctx,

@@ -96,7 +96,7 @@ pub fn weighted_quantile(samples: &[(f64, f64)], q: f64) -> Option<f64> {
             return Some(*x);
         }
     }
-    Some(v.last().unwrap().0)
+    v.last().map(|p| p.0)
 }
 
 /// Plain mean/CI helpers for the bench harness (95% CI via t≈1.96·SE).

@@ -47,6 +47,8 @@ impl NumericDeltaExec for PjrtHandle {
         let (tx, rx) = channel();
         self.tx
             .lock()
+            // lint: allow(unwrap) tx sections are a single channel send
+            // and cannot panic, so the mutex cannot be poisoned
             .unwrap()
             .send(Request { batch: batch.clone(), resp: tx })
             .map_err(|_| "pjrt service thread gone".to_string())?;

@@ -175,7 +175,11 @@ impl Daemon {
     pub fn run(self) -> Result<DaemonSummary, SchedError> {
         let mut conns: Vec<(JoinHandle<()>, JoinHandle<()>)> = Vec::new();
         loop {
-            if self.shared.shutdown.load(Ordering::SeqCst) {
+            // Relaxed: shutdown/draining/closing are latch flags polled
+            // on sleep/timeout loops; they publish no data (all job
+            // state moves through mutexes/channels) so eventual
+            // visibility is sufficient everywhere they are touched.
+            if self.shared.shutdown.load(Ordering::Relaxed) {
                 break;
             }
             let t0 = Instant::now();
@@ -197,12 +201,17 @@ impl Daemon {
 
         // --- drain ---
         let shared = &self.shared;
-        shared.draining.store(true, Ordering::SeqCst);
+        // Relaxed: a submit racing this flag is handled by the second
+        // drain pass below, not by ordering strength.
+        shared.draining.store(true, Ordering::Relaxed);
         // Two passes: a submit that raced the draining flag may add a
         // monitor/forwarder after the first join sweep; the second pass
         // (after the readers are gone and no submit can race) catches it.
         for _pass in 0..2 {
             if shared.cfg.service.drain == DrainPolicy::Cancel {
+                // lint: allow(unwrap) jobs-registry sections are plain
+                // map ops; a poisoned registry is a torn daemon state
+                // where failing fast beats serving wrong answers
                 let jobs = shared.jobs.lock().unwrap();
                 for entry in jobs.values() {
                     if entry.result_frame.is_none() {
@@ -212,7 +221,7 @@ impl Daemon {
             }
             join_all(&shared.monitors);
             join_all(&shared.forwarders);
-            shared.closing.store(true, Ordering::SeqCst);
+            shared.closing.store(true, Ordering::Relaxed);
         }
         for (reader, writer) in conns {
             let _ = reader.join();
@@ -262,7 +271,11 @@ impl Daemon {
         conns: &mut Vec<(JoinHandle<()>, JoinHandle<()>)>,
     ) {
         let shared = &self.shared;
-        if shared.conn_count.load(Ordering::SeqCst)
+        // Relaxed: conn_count is an approximate admission gauge — the
+        // accept loop is the only incrementer-reader pair that matters
+        // and it is single-threaded; reader-exit decrements may lag a
+        // poll tick, which only delays re-admission.
+        if shared.conn_count.load(Ordering::Relaxed)
             >= shared.cfg.service.max_connections
         {
             let mut s = stream;
@@ -285,6 +298,8 @@ impl Daemon {
 /// concurrently; callers sweep again once pushers are quiesced).
 fn join_all(slot: &Mutex<Vec<JoinHandle<()>>>) {
     loop {
+        // lint: allow(unwrap) slot sections are a bare Vec push/pop and
+        // cannot panic, so the mutex cannot be poisoned
         let handle = slot.lock().unwrap().pop();
         match handle {
             Some(h) => {
@@ -302,7 +317,7 @@ fn spawn_connection(
 ) -> std::io::Result<(JoinHandle<()>, JoinHandle<()>)> {
     stream.set_read_timeout(Some(READ_TICK))?;
     let write_half = stream.try_clone()?;
-    shared.conn_count.fetch_add(1, Ordering::SeqCst);
+    shared.conn_count.fetch_add(1, Ordering::Relaxed);
     shared.connections_served.fetch_add(1, Ordering::Relaxed);
 
     // Writer: single consumer of this connection's outgoing frames, so
@@ -326,7 +341,7 @@ fn spawn_connection(
 
     let reader = std::thread::spawn(move || {
         reader_loop(&shared, stream, out_tx);
-        shared.conn_count.fetch_sub(1, Ordering::SeqCst);
+        shared.conn_count.fetch_sub(1, Ordering::Relaxed);
     });
     Ok((reader, writer))
 }
@@ -350,11 +365,13 @@ fn reader_loop(shared: &Arc<Shared>, stream: TcpStream, out: mpsc::Sender<String
                     .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
             }
             Ok(ReadOutcome::Timeout) => {
-                if shared.closing.load(Ordering::SeqCst) {
+                // Relaxed: drain/idle latches checked once per 200ms
+                // read tick; see the accept loop's rationale.
+                if shared.closing.load(Ordering::Relaxed) {
                     break;
                 }
                 if shared.cfg.service.idle_timeout_secs > 0
-                    && active_subs.load(Ordering::SeqCst) == 0
+                    && active_subs.load(Ordering::Relaxed) == 0
                     && last_activity.elapsed() >= idle_limit
                 {
                     let _ = out.send(encode_err(
@@ -396,7 +413,10 @@ fn handle_frame(
     };
     match req {
         Request::Submit { spec, subscribe } => {
-            if shared.draining.load(Ordering::SeqCst) {
+            // Relaxed: refusing submits during drain is best-effort by
+            // design — the drain's second join pass catches the race, so
+            // flag visibility needs no ordering.
+            if shared.draining.load(Ordering::Relaxed) {
                 let _ = out.send(encode_err(
                     id,
                     &WireError::new(
@@ -427,6 +447,8 @@ fn handle_frame(
             let control = shared
                 .jobs
                 .lock()
+                // lint: allow(unwrap) registry poison ⇒ fail fast (see
+                // drain pass)
                 .unwrap()
                 .get(&job)
                 .map(|e| Arc::clone(&e.control));
@@ -452,12 +474,14 @@ fn handle_frame(
         Request::Health => {
             let body = ObjWriter::new()
                 .bool("healthy", true)
-                .bool("draining", shared.draining.load(Ordering::SeqCst))
+                .bool("draining", shared.draining.load(Ordering::Relaxed))
                 .int("active_jobs", shared.session.active_jobs() as i64)
                 .finish();
             let _ = out.send(encode_ok(id, &body));
         }
         Request::Subscribe { job } => {
+            // lint: allow(unwrap) registry poison ⇒ fail fast (see
+            // drain pass)
             let known = shared.jobs.lock().unwrap().contains_key(&job);
             if known {
                 let _ = out.send(encode_ok(
@@ -477,8 +501,10 @@ fn handle_frame(
                 id,
                 &ObjWriter::new().bool("draining", true).finish(),
             ));
-            shared.draining.store(true, Ordering::SeqCst);
-            shared.shutdown.store(true, Ordering::SeqCst);
+            // Relaxed: latch stores; the accept loop picks them up on
+            // its next 5ms poll.
+            shared.draining.store(true, Ordering::Relaxed);
+            shared.shutdown.store(true, Ordering::Relaxed);
         }
     }
 }
@@ -489,6 +515,7 @@ fn submit_job(shared: &Arc<Shared>, w: &WireJobSpec) -> Result<u64, SchedError> 
     let spec = build_job_spec(&shared.cfg, w)?;
     let mut handle = shared.session.submit(spec)?;
     let job = handle.id();
+    // lint: allow(unwrap) registry poison ⇒ fail fast (see drain pass)
     shared.jobs.lock().unwrap().insert(
         job,
         JobEntry { control: handle.control(), result_frame: None },
@@ -502,6 +529,8 @@ fn submit_job(shared: &Arc<Shared>, w: &WireJobSpec) -> Result<u64, SchedError> 
             .map(|r| (r.report.to_json(), stats_json(&r.stats)));
         let frame = encode_result(job, &outcome);
         {
+            // lint: allow(unwrap) registry poison ⇒ fail fast (see
+            // drain pass)
             let mut jobs = shared_cl.jobs.lock().unwrap();
             if let Some(entry) = jobs.get_mut(&job) {
                 entry.result_frame = Some(frame);
@@ -510,6 +539,8 @@ fn submit_job(shared: &Arc<Shared>, w: &WireJobSpec) -> Result<u64, SchedError> 
         shared_cl.jobs_completed.fetch_add(1, Ordering::Relaxed);
         shared_cl.result_cv.notify_all();
     });
+    // lint: allow(unwrap) monitor-slot sections are a bare Vec
+    // push/pop and cannot panic, so the mutex cannot be poisoned
     shared.monitors.lock().unwrap().push(monitor);
     Ok(job)
 }
@@ -572,11 +603,14 @@ fn spawn_forwarder(
     out: mpsc::Sender<String>,
     active_subs: &Arc<AtomicUsize>,
 ) {
+    // lint: allow(unwrap) registry poison ⇒ fail fast (see drain pass)
     let control = match shared.jobs.lock().unwrap().get(&job) {
         Some(e) => Arc::clone(&e.control),
         None => return,
     };
-    active_subs.fetch_add(1, Ordering::SeqCst);
+    // Relaxed: active_subs is a gauge read by the idle-timeout check;
+    // its only consequence is when an idle connection closes.
+    active_subs.fetch_add(1, Ordering::Relaxed);
     let subs = Arc::clone(active_subs);
     let shared_cl = Arc::clone(shared);
     let handle = std::thread::spawn(move || {
@@ -586,7 +620,7 @@ fn spawn_forwarder(
             let done = ev.kind() == "done";
             if out.send(encode_event(job, &ev)).is_err() {
                 // Client gone; writer is down. Nothing left to stream.
-                subs.fetch_sub(1, Ordering::SeqCst);
+                subs.fetch_sub(1, Ordering::Relaxed);
                 return;
             }
             if done {
@@ -597,6 +631,8 @@ fn spawn_forwarder(
         if saw_done {
             // The Done event precedes the monitor's join returning; wait
             // for the result frame to be recorded, then deliver it.
+            // lint: allow(unwrap) registry poison ⇒ fail fast (see
+            // drain pass)
             let mut jobs = shared_cl.jobs.lock().unwrap();
             loop {
                 if let Some(frame) =
@@ -608,12 +644,16 @@ fn spawn_forwarder(
                 let (guard, _) = shared_cl
                     .result_cv
                     .wait_timeout(jobs, Duration::from_millis(200))
+                    // lint: allow(unwrap) wait_timeout errs only if the
+                    // registry mutex is poisoned ⇒ fail fast
                     .unwrap();
                 jobs = guard;
             }
         }
-        subs.fetch_sub(1, Ordering::SeqCst);
+        subs.fetch_sub(1, Ordering::Relaxed);
     });
+    // lint: allow(unwrap) forwarder-slot critical sections are a bare
+    // Vec push/pop and cannot panic, so the mutex cannot be poisoned
     shared.forwarders.lock().unwrap().push(handle);
 }
 
@@ -665,6 +705,8 @@ fn status_json(shared: &Shared) -> String {
 
     let mut jobs_json = String::from("[");
     {
+        // lint: allow(unwrap) registry poison ⇒ fail fast (see drain
+        // pass)
         let jobs = shared.jobs.lock().unwrap();
         for (i, (id, entry)) in jobs.iter().enumerate() {
             if i > 0 {
@@ -696,8 +738,10 @@ fn status_json(shared: &Shared) -> String {
     jobs_json.push(']');
 
     ObjWriter::new()
-        .bool("draining", shared.draining.load(Ordering::SeqCst))
-        .int("connections", shared.conn_count.load(Ordering::SeqCst) as i64)
+        // Relaxed: status is an observability snapshot; every field is
+        // allowed to be a poll-tick stale.
+        .bool("draining", shared.draining.load(Ordering::Relaxed))
+        .int("connections", shared.conn_count.load(Ordering::Relaxed) as i64)
         .int(
             "jobs_submitted",
             shared.jobs_submitted.load(Ordering::Relaxed) as i64,

@@ -29,12 +29,26 @@ mod imp {
     }
 
     extern "C" fn on_sigint(_signum: i32) {
+        // ordering: SeqCst kept deliberately (allowlisted). This store
+        // runs in async-signal context where the usual happens-before
+        // reasoning is murky; the flag is cold, so the strongest
+        // ordering buys simplicity at no measurable cost.
         INTERRUPTED.store(true, Ordering::SeqCst);
     }
 
     pub(super) fn install() {
         static ONCE: AtomicBool = AtomicBool::new(false);
-        if !ONCE.swap(true, Ordering::SeqCst) {
+        // Relaxed: pure idempotence latch. Nothing is published by
+        // winning the swap — `signal(2)` does its own synchronization —
+        // and double-install would be harmless anyway.
+        if !ONCE.swap(true, Ordering::Relaxed) {
+            // SAFETY: `signal` is the libc prototype declared above;
+            // SIGINT is a valid signal number and `on_sigint` is an
+            // `extern "C" fn(i32)` that only performs an async-signal-
+            // safe atomic store. std links libc on every unix target,
+            // so the symbol resolves. The returned previous disposition
+            // is deliberately discarded (it may be SIG_DFL/SIG_IGN,
+            // not a callable pointer).
             let _ = unsafe { signal(SIGINT, on_sigint) };
         }
     }
@@ -54,11 +68,15 @@ pub fn install_sigint() {
 
 /// Whether SIGINT has fired since [`install_sigint`] (or [`reset`]).
 pub fn interrupted() -> bool {
+    // ordering: SeqCst to pair with the handler's store (allowlisted
+    // file — see lint.toml); the flag is polled at 100ms granularity,
+    // so strength is free.
     INTERRUPTED.load(Ordering::SeqCst)
 }
 
 /// Clear the flag (test support).
 pub fn reset() {
+    // ordering: SeqCst to match the handler/poll pair above.
     INTERRUPTED.store(false, Ordering::SeqCst);
 }
 

@@ -255,7 +255,10 @@ impl SimBackend {
             .running
             .iter()
             .map(|r| r.finish_at)
-            .min_by(|a, b| a.partial_cmp(b).unwrap())
+            // finish_at is clock + a finite service time, but keep the
+            // comparator total so a rogue NaN degrades the pick instead
+            // of panicking mid-simulation.
+            .min_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal))
         else {
             return;
         };

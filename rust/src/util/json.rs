@@ -287,6 +287,8 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
                 // Consume one UTF-8 scalar.
                 let s = std::str::from_utf8(&b[*pos..])
                     .map_err(|_| "invalid utf-8".to_string())?;
+                // lint: allow(unwrap) slice is non-empty (loop guard
+                // `*pos < b.len()`) and just UTF-8 validated
                 let ch = s.chars().next().unwrap();
                 out.push(ch);
                 *pos += ch.len_utf8();

@@ -1,0 +1,11 @@
+// Clean fixture: this file is on the lint.toml [seqcst] allowlist, so
+// SeqCst is legal here — but it still needs an ordering rationale.
+use std::sync::atomic::{AtomicBool, Ordering};
+
+pub static HALT: AtomicBool = AtomicBool::new(false);
+
+pub fn halt() {
+    // ordering: SeqCst — fixture stands in for an async-signal
+    // context where the total order is the point.
+    HALT.store(true, Ordering::SeqCst);
+}

@@ -1,0 +1,20 @@
+// Clean fixture: every literal event kind is listed in events.toml,
+// and non-literal kinds are out of scope for the lint.
+pub struct Log;
+
+impl Log {
+    pub fn event(&self, _kind: &str) {}
+    pub fn str(&self, _key: &str, _val: &str) {}
+}
+
+pub fn count_events(_kind: &str) -> usize {
+    0
+}
+
+pub fn emit(log: &Log, dynamic_kind: &str) {
+    log.event("carve");
+    log.str("ev", "gate");
+    log.str("other_key", "not_an_event");
+    let _ = count_events("gate");
+    log.event(dynamic_kind);
+}

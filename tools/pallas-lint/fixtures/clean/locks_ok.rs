@@ -1,0 +1,31 @@
+// Clean fixture: nested acquisition in increasing rank order
+// (alpha rank 10, then beta rank 20), plus a statement-scoped lock
+// that is released at the `;` before the next acquisition.
+use std::sync::Mutex;
+
+pub struct State {
+    pub alpha: Mutex<Vec<u32>>,
+    pub beta: Mutex<Vec<u32>>,
+}
+
+impl State {
+    pub fn drain(&self) -> usize {
+        let mut moved = 0;
+        if let Ok(mut a) = self.alpha.lock() {
+            if let Ok(mut b) = self.beta.lock() {
+                moved = a.len();
+                b.append(&mut a);
+            }
+        }
+        moved
+    }
+
+    pub fn sizes(&self) -> (usize, usize) {
+        // The lexical scan treats let-bound guards as held for the
+        // rest of the block, so even transient bindings must follow
+        // the rank order: alpha (10) before beta (20).
+        let a_len = self.alpha.lock().map(|a| a.len()).unwrap_or(0);
+        let b_len = self.beta.lock().map(|b| b.len()).unwrap_or(0);
+        (a_len, b_len)
+    }
+}

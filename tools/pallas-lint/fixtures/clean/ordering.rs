@@ -1,0 +1,21 @@
+// Clean fixture: strong orderings justified, Relaxed needs nothing.
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+pub static FLAG: AtomicBool = AtomicBool::new(false);
+pub static COUNT: AtomicUsize = AtomicUsize::new(0);
+
+pub fn publish() {
+    COUNT.fetch_add(1, Ordering::Relaxed);
+    // ordering: Release pairs with the Acquire in `consume` so the
+    // count increment is visible before the flag flips.
+    FLAG.store(true, Ordering::Release);
+}
+
+pub fn consume() -> Option<usize> {
+    // ordering: Acquire pairs with the Release in `publish`.
+    if FLAG.load(Ordering::Acquire) {
+        Some(COUNT.load(Ordering::Relaxed))
+    } else {
+        None
+    }
+}

@@ -1,0 +1,17 @@
+// Clean fixture: every `unsafe` carries a SAFETY comment within the
+// window, including a multi-line block whose marker sits above it.
+pub fn read_first(bytes: &[u8]) -> u8 {
+    assert!(!bytes.is_empty());
+    // SAFETY: the assert above guarantees the slice is non-empty, so
+    // index 0 is in bounds.
+    unsafe { *bytes.get_unchecked(0) }
+}
+
+pub fn as_str(bytes: &[u8]) -> &str {
+    // SAFETY: callers uphold the UTF-8 invariant; this fixture only
+    // exercises the comment-window scan, the longer rationale block
+    // below the marker line must still satisfy the lint because the
+    // window is measured to the bottom of the comment block, not to
+    // the marker line itself.
+    unsafe { std::str::from_utf8_unchecked(bytes) }
+}

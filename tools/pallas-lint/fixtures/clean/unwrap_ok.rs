@@ -1,0 +1,23 @@
+// Clean fixture: unwrap is fine when annotated, or inside cfg(test).
+pub fn head(v: &[i32]) -> i32 {
+    assert!(!v.is_empty());
+    // lint: allow(unwrap) the assert above guarantees non-empty, and
+    // a multi-line reason must also satisfy the window because it is
+    // measured to the bottom of the comment block.
+    *v.first().unwrap()
+}
+
+pub fn parsed(s: &str) -> Option<i64> {
+    s.parse::<i64>().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_works() {
+        assert_eq!(head(&[7, 8]), 7);
+        assert_eq!(parsed("42").unwrap(), 42);
+    }
+}

@@ -1,0 +1,8 @@
+// Failing fixture: unwrap/expect in library code with no annotation.
+pub fn head(v: &[i32]) -> i32 {
+    *v.first().unwrap()
+}
+
+pub fn parsed(s: &str) -> i64 {
+    s.parse::<i64>().expect("not a number")
+}

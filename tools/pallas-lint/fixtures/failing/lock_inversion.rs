@@ -1,0 +1,21 @@
+// Failing fixture: beta (rank 20) acquired before alpha (rank 10) —
+// the classic inversion the hierarchy exists to prevent.
+use std::sync::Mutex;
+
+pub struct State {
+    pub alpha: Mutex<Vec<u32>>,
+    pub beta: Mutex<Vec<u32>>,
+}
+
+impl State {
+    pub fn drain(&self) -> usize {
+        let mut moved = 0;
+        if let Ok(mut b) = self.beta.lock() {
+            if let Ok(mut a) = self.alpha.lock() {
+                moved = a.len();
+                b.append(&mut a);
+            }
+        }
+        moved
+    }
+}

@@ -1,0 +1,4 @@
+// Failing fixture: `unsafe` with no SAFETY comment anywhere nearby.
+pub fn read_first(bytes: &[u8]) -> u8 {
+    unsafe { *bytes.get_unchecked(0) }
+}

@@ -1,0 +1,12 @@
+// Failing fixture: SeqCst outside the allowlist. The ordering
+// rationale below is present so this file produces exactly one
+// violation (the allowlist one), keeping the golden test precise.
+use std::sync::atomic::{AtomicBool, Ordering};
+
+pub static FLAG: AtomicBool = AtomicBool::new(false);
+
+pub fn set() {
+    // ordering: SeqCst requested out of caution, which is exactly
+    // what the allowlist is there to push back on.
+    FLAG.store(true, Ordering::SeqCst);
+}

@@ -1,0 +1,12 @@
+// Failing fixture: Acquire/Release with no ordering rationale.
+use std::sync::atomic::{AtomicBool, Ordering};
+
+pub static READY: AtomicBool = AtomicBool::new(false);
+
+pub fn publish() {
+    READY.store(true, Ordering::Release);
+}
+
+pub fn ready() -> bool {
+    READY.load(Ordering::Acquire)
+}

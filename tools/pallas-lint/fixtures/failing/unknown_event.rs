@@ -1,0 +1,10 @@
+// Failing fixture: "bogus" is not in events.toml.
+pub struct Log;
+
+impl Log {
+    pub fn event(&self, _kind: &str) {}
+}
+
+pub fn emit(log: &Log) {
+    log.event("bogus");
+}

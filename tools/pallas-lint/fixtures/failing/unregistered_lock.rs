@@ -1,0 +1,12 @@
+// Failing fixture: `gamma` is not registered in locks.toml.
+use std::sync::Mutex;
+
+pub struct State {
+    pub gamma: Mutex<Vec<u32>>,
+}
+
+impl State {
+    pub fn len(&self) -> usize {
+        self.gamma.lock().map(|g| g.len()).unwrap_or(0)
+    }
+}

@@ -1,0 +1,1010 @@
+//! pallas-lint: the smartdiff-sched tree's in-house static analysis
+//! suite — a token-level scanner over Rust sources enforcing the
+//! repo-specific correctness contracts that rustc/clippy cannot know
+//! about. `python/pallas_lint.py` is a line-for-line mirror (same
+//! config files, same messages, same exit codes) usable where no Rust
+//! toolchain exists; `python/tests/test_pallas_lint.py` and the CI
+//! `lint` job keep the two honest against the shared fixtures.
+//!
+//! Rule families (see ARCHITECTURE.md "Static analysis & concurrency
+//! audit"):
+//!
+//! * `unsafe-safety` — every `unsafe` carries a `// SAFETY:` comment
+//!   within the 5 preceding lines.
+//! * `atomic-ordering` — every non-Relaxed atomic `Ordering::` use
+//!   carries an `// ordering:` rationale within the 6 preceding lines;
+//!   `Ordering::SeqCst` is additionally forbidden outside the
+//!   `lint.toml [seqcst]` allowlist.
+//! * `unwrap` — `.unwrap()` / `.expect(..)` are banned in non-test
+//!   library code unless annotated `// lint: allow(unwrap) <reason>`.
+//! * `lock-order` — every `.lock()` receiver must be registered in
+//!   `locks.toml`; lexically nested acquisitions must be
+//!   rank-increasing.
+//! * `telemetry-event` — literal event kinds at `.event("…")`,
+//!   `count_events("…")` and `.str("ev", "…")` sites must be listed in
+//!   `events.toml`.
+//!
+//! The scanner blanks string/char-literal contents and comments in
+//! place (same byte length, so offsets stay source columns), records
+//! per-line comment text and a quote-offset → literal-text table, and
+//! the rules run over that blanked view. Annotation windows are
+//! comment-block aware: the window bounds the distance from the token
+//! to the *bottom* of the comment block, and the block itself may
+//! extend further up.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Max lines between an `unsafe` token and the bottom of its
+/// `// SAFETY:` comment block.
+pub const SAFETY_WINDOW: usize = 5;
+/// Max lines between a strong-ordering token and its `// ordering:`
+/// rationale (6: the token is often a few lines into a call).
+pub const ORDERING_WINDOW: usize = 6;
+/// Max lines between an unwrap/expect token and its allow annotation.
+pub const ALLOW_WINDOW: usize = 2;
+
+const STRONG_ORDERINGS: [&str; 4] = ["Acquire", "Release", "AcqRel", "SeqCst"];
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+// --------------------------------------------------------------------
+// toml subset parser (sections, [[array-of-tables]], str/int/str-array
+// values, full-line and trailing comments) — enough for the three
+// config files, NOT a general TOML implementation.
+// --------------------------------------------------------------------
+
+/// A parsed value: string, integer, or a flat list of either.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    List(Vec<TomlValue>),
+}
+
+/// A parsed document: top-level keys, `[section]` tables, and
+/// `[[name]]` arrays-of-tables.
+#[derive(Debug, Default)]
+pub struct TomlDoc {
+    pub root: BTreeMap<String, TomlValue>,
+    pub tables: BTreeMap<String, BTreeMap<String, TomlValue>>,
+    pub arrays: BTreeMap<String, Vec<BTreeMap<String, TomlValue>>>,
+}
+
+enum Target {
+    Root,
+    Table(String),
+    Array(String),
+}
+
+/// Parse the TOML subset. Lines must be pre-joined (see
+/// [`load_multiline_toml`]) so every `key = [..]` array is one line.
+pub fn parse_toml(text: &str) -> Result<TomlDoc, String> {
+    let mut doc = TomlDoc::default();
+    let mut target = Target::Root;
+    for raw in text.lines() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix("[[") {
+            let name = inner
+                .strip_suffix("]]")
+                .ok_or_else(|| format!("bad array-of-tables header: {raw}"))?
+                .trim()
+                .to_string();
+            doc.arrays.entry(name.clone()).or_default().push(BTreeMap::new());
+            target = Target::Array(name);
+        } else if let Some(inner) = line.strip_prefix('[') {
+            let name = inner
+                .strip_suffix(']')
+                .ok_or_else(|| format!("bad section header: {raw}"))?
+                .trim()
+                .to_string();
+            doc.tables.entry(name.clone()).or_default();
+            target = Target::Table(name);
+        } else {
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| format!("expected key = value: {raw}"))?;
+            let v = parse_value(val.trim())?;
+            let k = key.trim().to_string();
+            match &target {
+                Target::Root => {
+                    doc.root.insert(k, v);
+                }
+                Target::Table(name) => {
+                    doc.tables.entry(name.clone()).or_default().insert(k, v);
+                }
+                Target::Array(name) => {
+                    if let Some(last) =
+                        doc.arrays.entry(name.clone()).or_default().last_mut()
+                    {
+                        last.insert(k, v);
+                    }
+                }
+            }
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        if c == '"' {
+            in_str = !in_str;
+        } else if c == '#' && !in_str {
+            return &line[..i];
+        }
+    }
+    line
+}
+
+fn parse_value(val: &str) -> Result<TomlValue, String> {
+    if let Some(inner) = val.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').unwrap_or(inner);
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::List(items));
+    }
+    if let Some(rest) = val.strip_prefix('"') {
+        let body = rest.strip_suffix('"').unwrap_or(rest);
+        return Ok(TomlValue::Str(body.to_string()));
+    }
+    match val.parse::<i64>() {
+        Ok(n) => Ok(TomlValue::Int(n)),
+        Err(_) => Err(format!("bad toml value: {val}")),
+    }
+}
+
+/// Read and parse a config file, joining multi-line arrays first
+/// (events.toml formats its list one entry per line).
+pub fn load_multiline_toml(path: &Path) -> Result<TomlDoc, String> {
+    let raw = fs::read_to_string(path)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut joined: Vec<String> = Vec::new();
+    let mut buf: Option<String> = None;
+    for line in raw.lines() {
+        let stripped = strip_comment(line).to_string();
+        if let Some(acc) = buf.as_mut() {
+            acc.push(' ');
+            acc.push_str(stripped.trim());
+            if stripped.contains(']') {
+                if let Some(full) = buf.take() {
+                    joined.push(full);
+                }
+            }
+            continue;
+        }
+        if stripped.contains("= [") && !stripped.contains(']') {
+            buf = Some(stripped.trim().to_string());
+            continue;
+        }
+        joined.push(line.to_string());
+    }
+    parse_toml(&joined.join("\n"))
+}
+
+// --------------------------------------------------------------------
+// source scanner
+// --------------------------------------------------------------------
+
+/// The blanked view of one source file plus its side tables.
+pub struct Scan {
+    /// Source bytes with string/char-literal contents and comments
+    /// blanked to spaces (newlines kept, so offsets and line numbers
+    /// match the original).
+    pub code: Vec<u8>,
+    /// 1-based line → comment texts starting on that line.
+    pub comments: BTreeMap<usize, Vec<String>>,
+    /// Offset of an opening `"` → the literal's text.
+    pub strings: BTreeMap<usize, String>,
+    /// Byte offset → 1-based line.
+    pub line_of: Vec<usize>,
+    line_spans: Vec<(usize, usize)>,
+}
+
+impl Scan {
+    fn new(
+        code: Vec<u8>,
+        comments: BTreeMap<usize, Vec<String>>,
+        strings: BTreeMap<usize, String>,
+        line_of: Vec<usize>,
+    ) -> Scan {
+        let mut line_spans = Vec::new();
+        let mut start = 0usize;
+        for (i, b) in code.iter().enumerate() {
+            if *b == b'\n' {
+                line_spans.push((start, i));
+                start = i + 1;
+            }
+        }
+        line_spans.push((start, code.len()));
+        Scan { code, comments, strings, line_of, line_spans }
+    }
+
+    /// Whether `line` holds a comment and nothing else.
+    fn comment_only(&self, line: usize) -> bool {
+        if !self.comments.contains_key(&line) {
+            return false;
+        }
+        match self.line_spans.get(line.wrapping_sub(1)) {
+            Some(&(a, b)) => {
+                self.code[a..b].iter().all(|c| c.is_ascii_whitespace())
+            }
+            None => false,
+        }
+    }
+}
+
+fn find_bytes(hay: &[u8], needle: &[u8], start: usize) -> Option<usize> {
+    if needle.is_empty() {
+        return None;
+    }
+    let mut i = start;
+    while i + needle.len() <= hay.len() {
+        if &hay[i..i + needle.len()] == needle {
+            return Some(i);
+        }
+        i += 1;
+    }
+    None
+}
+
+fn slice_text(src: &str, start: usize, end: usize) -> String {
+    if start >= end {
+        return String::new();
+    }
+    src.get(start..end).unwrap_or_default().to_string()
+}
+
+/// Blank strings/comments in place and collect the side tables.
+pub fn scan_source(src: &str) -> Scan {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = b.to_vec();
+    let mut comments: BTreeMap<usize, Vec<String>> = BTreeMap::new();
+    let mut strings: BTreeMap<usize, String> = BTreeMap::new();
+    let mut line_of = vec![1usize; n + 1];
+    let mut ln = 1usize;
+    for (i, byte) in b.iter().enumerate() {
+        line_of[i] = ln;
+        if *byte == b'\n' {
+            ln += 1;
+        }
+    }
+    line_of[n] = ln;
+
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let mut j = i;
+            while j < n && b[j] != b'\n' {
+                j += 1;
+            }
+            comments
+                .entry(line_of[i])
+                .or_default()
+                .push(slice_text(src, i, j));
+            for cell in &mut out[i..j] {
+                *cell = b' ';
+            }
+            i = j;
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1i64;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == b'/' && j + 1 < n && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && j + 1 < n && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            comments
+                .entry(line_of[i])
+                .or_default()
+                .push(slice_text(src, i, j));
+            for cell in &mut out[i..j] {
+                if *cell != b'\n' {
+                    *cell = b' ';
+                }
+            }
+            i = j;
+        } else if c == b'"' {
+            let j = string_end(b, i + 1);
+            let stop = j.saturating_sub(1);
+            strings.insert(i, slice_text(src, i + 1, stop));
+            if stop > i + 1 {
+                for cell in &mut out[i + 1..stop] {
+                    if *cell != b'\n' {
+                        *cell = b' ';
+                    }
+                }
+            }
+            i = j;
+        } else if c == b'r' && raw_string_here(b, i) {
+            let mut hashes = 0usize;
+            let mut j = i + 1;
+            while j < n && b[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            let mut close = vec![b'"'];
+            close.extend(std::iter::repeat(b'#').take(hashes));
+            let end = match find_bytes(b, &close, j + 1) {
+                Some(e) => e + close.len(),
+                None => n,
+            };
+            let stop = end.saturating_sub(1 + hashes);
+            strings.insert(j, slice_text(src, j + 1, stop));
+            if stop > j + 1 {
+                for cell in &mut out[j + 1..stop] {
+                    if *cell != b'\n' {
+                        *cell = b' ';
+                    }
+                }
+            }
+            i = end;
+        } else if c == b'\'' {
+            let j = char_literal_end(b, i);
+            if j > 0 {
+                for cell in &mut out[i + 1..j - 1] {
+                    *cell = b' ';
+                }
+                i = j;
+            } else {
+                i += 1; // lifetime
+            }
+        } else {
+            i += 1;
+        }
+    }
+    Scan::new(out, comments, strings, line_of)
+}
+
+fn raw_string_here(b: &[u8], i: usize) -> bool {
+    if i > 0 && is_ident(b[i - 1]) {
+        return false;
+    }
+    let mut j = i + 1;
+    while j < b.len() && b[j] == b'#' {
+        j += 1;
+    }
+    j < b.len() && b[j] == b'"'
+}
+
+fn string_end(b: &[u8], mut i: usize) -> usize {
+    let n = b.len();
+    while i < n {
+        if b[i] == b'\\' {
+            i += 2;
+        } else if b[i] == b'"' {
+            return i + 1;
+        } else {
+            i += 1;
+        }
+    }
+    n
+}
+
+/// End offset past a char literal starting at `b[i] == '\''`, or 0 if
+/// this quote starts a lifetime.
+fn char_literal_end(b: &[u8], i: usize) -> usize {
+    let n = b.len();
+    if i + 1 >= n {
+        return 0;
+    }
+    if b[i + 1] == b'\\' {
+        let j = i + 2;
+        if j < n && b[j] == b'u' {
+            return match find_bytes(b, &[b'\''], j) {
+                Some(k) => k + 1,
+                None => 0,
+            };
+        }
+        if j + 1 < n && b[j + 1] == b'\'' {
+            return j + 2;
+        }
+        return 0;
+    }
+    if i + 2 < n && b[i + 2] == b'\'' && b[i + 1] != b'\'' {
+        return i + 3;
+    }
+    0
+}
+
+/// Whether `code[i..]` starts with `word` on identifier boundaries.
+pub fn word_at(code: &[u8], i: usize, word: &str) -> bool {
+    let w = word.as_bytes();
+    let end = i + w.len();
+    if end > code.len() || &code[i..end] != w {
+        return false;
+    }
+    if i > 0 && is_ident(code[i - 1]) {
+        return false;
+    }
+    end >= code.len() || !is_ident(code[end])
+}
+
+/// All boundary-respecting offsets of `word` in `code`.
+pub fn find_word(code: &[u8], word: &str) -> Vec<usize> {
+    let mut hits = Vec::new();
+    let mut start = 0usize;
+    while let Some(i) = find_bytes(code, word.as_bytes(), start) {
+        if word_at(code, i, word) {
+            hits.push(i);
+        }
+        start = i + 1;
+    }
+    hits
+}
+
+fn skip_ws(code: &[u8], mut i: usize) -> usize {
+    while i < code.len() && code[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// Offsets of `.name(` sites as `(name_offset, paren_offset)`,
+/// whitespace tolerated around the segments.
+pub fn method_call_sites(code: &[u8], name: &str) -> Vec<(usize, usize)> {
+    let mut hits = Vec::new();
+    for i in find_word(code, name) {
+        let mut j = i as i64 - 1;
+        while j >= 0 && code[j as usize].is_ascii_whitespace() {
+            j -= 1;
+        }
+        if j < 0 || code[j as usize] != b'.' {
+            continue;
+        }
+        let k = skip_ws(code, i + name.len());
+        if k < code.len() && code[k] == b'(' {
+            hits.push((i, k));
+        }
+    }
+    hits
+}
+
+fn dot_before(code: &[u8], i: usize) -> i64 {
+    let mut j = i as i64 - 1;
+    while j >= 0 && code[j as usize].is_ascii_whitespace() {
+        j -= 1;
+    }
+    j
+}
+
+/// Identifier immediately left of the `.` at offset `dot`.
+fn receiver_ident(code: &[u8], dot: i64) -> String {
+    let mut j = dot - 1;
+    while j >= 0 && code[j as usize].is_ascii_whitespace() {
+        j -= 1;
+    }
+    let end = (j + 1) as usize;
+    while j >= 0 && is_ident(code[j as usize]) {
+        j -= 1;
+    }
+    let start = (j + 1) as usize;
+    String::from_utf8_lossy(&code[start..end]).into_owned()
+}
+
+/// `[start, end)` offset ranges of `#[cfg(test)]`-gated items.
+pub fn test_regions(code: &[u8]) -> Vec<(usize, usize)> {
+    let mut regions = Vec::new();
+    let mut start = 0usize;
+    while let Some(i) = find_bytes(code, b"#[cfg(test)]", start) {
+        let Some(j) = find_bytes(code, b"{", i) else {
+            return regions;
+        };
+        let mut depth = 0i64;
+        let mut k = j;
+        while k < code.len() {
+            if code[k] == b'{' {
+                depth += 1;
+            } else if code[k] == b'}' {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            k += 1;
+        }
+        regions.push((i, k + 1));
+        start = k + 1;
+    }
+    regions
+}
+
+fn in_regions(regions: &[(usize, usize)], i: usize) -> bool {
+    regions.iter().any(|&(a, b)| a <= i && i < b)
+}
+
+/// First line to search for an annotation anchored at `line`: the
+/// window bounds the distance to the bottom of the comment block; the
+/// block itself may extend further up.
+fn search_lo(scan: &Scan, line: usize, window: usize) -> usize {
+    let lo = line.saturating_sub(window).max(1);
+    for l in lo..=line {
+        if scan.comment_only(l) {
+            let mut top = l;
+            while top > 1 && scan.comment_only(top - 1) {
+                top -= 1;
+            }
+            return lo.min(top);
+        }
+    }
+    lo
+}
+
+fn comment_body(text: &str) -> &str {
+    text.trim_start_matches(|c| matches!(c, '/' | '!' | '*' | ' ' | '\t'))
+}
+
+fn comment_in_window(scan: &Scan, line: usize, window: usize, needle: &str) -> bool {
+    for l in search_lo(scan, line, window)..=line {
+        if let Some(texts) = scan.comments.get(&l) {
+            for text in texts {
+                if comment_body(text).starts_with(needle) {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+fn allow_annotation(scan: &Scan, line: usize, what: &str) -> bool {
+    let marker = format!("lint: allow({what})");
+    for l in search_lo(scan, line, ALLOW_WINDOW)..=line {
+        if let Some(texts) = scan.comments.get(&l) {
+            for text in texts {
+                let body = comment_body(text);
+                if let Some(reason) = body.strip_prefix(&marker) {
+                    if !reason.trim().is_empty() {
+                        return true;
+                    }
+                }
+            }
+        }
+    }
+    false
+}
+
+// --------------------------------------------------------------------
+// config + rules
+// --------------------------------------------------------------------
+
+/// One declared lock in the hierarchy registry.
+#[derive(Debug, Clone)]
+pub struct LockEntry {
+    pub name: String,
+    pub field: String,
+    pub file: String,
+    pub rank: i64,
+}
+
+/// The three config files, loaded.
+pub struct Config {
+    pub seqcst_allow: Vec<String>,
+    pub unwrap_allow: Vec<String>,
+    pub locks: Vec<LockEntry>,
+    pub events: BTreeSet<String>,
+}
+
+fn str_list(v: Option<&TomlValue>) -> Vec<String> {
+    let mut items = Vec::new();
+    if let Some(TomlValue::List(list)) = v {
+        for it in list {
+            if let TomlValue::Str(s) = it {
+                items.push(s.clone());
+            }
+        }
+    }
+    items
+}
+
+fn str_key(t: &BTreeMap<String, TomlValue>, key: &str) -> Option<String> {
+    match t.get(key) {
+        Some(TomlValue::Str(s)) => Some(s.clone()),
+        _ => None,
+    }
+}
+
+fn int_key(t: &BTreeMap<String, TomlValue>, key: &str) -> Option<i64> {
+    match t.get(key) {
+        Some(TomlValue::Int(n)) => Some(*n),
+        _ => None,
+    }
+}
+
+impl Config {
+    /// Load `lint.toml`, `locks.toml` and `events.toml` from `dir`.
+    pub fn load(dir: &Path) -> Result<Config, String> {
+        let lint = load_multiline_toml(&dir.join("lint.toml"))?;
+        let locks = load_multiline_toml(&dir.join("locks.toml"))?;
+        let events = load_multiline_toml(&dir.join("events.toml"))?;
+        let mut lock_entries = Vec::new();
+        if let Some(list) = locks.arrays.get("lock") {
+            for entry in list {
+                let name = str_key(entry, "name")
+                    .ok_or("locks.toml entry missing `name`")?;
+                let field = str_key(entry, "field")
+                    .ok_or("locks.toml entry missing `field`")?;
+                let rank = int_key(entry, "rank")
+                    .ok_or("locks.toml entry missing `rank`")?;
+                let file = str_key(entry, "file").unwrap_or_default();
+                lock_entries.push(LockEntry { name, field, file, rank });
+            }
+        }
+        Ok(Config {
+            seqcst_allow: str_list(
+                lint.tables.get("seqcst").and_then(|t| t.get("allow")),
+            ),
+            unwrap_allow: str_list(
+                lint.tables.get("unwrap").and_then(|t| t.get("allow")),
+            ),
+            locks: lock_entries,
+            events: str_list(events.root.get("events")).into_iter().collect(),
+        })
+    }
+}
+
+/// One rule violation, ready to print as `path:line: [rule] msg`.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub path: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+fn path_allowed(path: &str, suffixes: &[String]) -> bool {
+    let norm = path.replace('\\', "/");
+    suffixes.iter().any(|s| norm.ends_with(s.as_str()))
+}
+
+fn lock_entry<'a>(
+    locks: &'a [LockEntry],
+    path: &str,
+    recv: &str,
+) -> Option<&'a LockEntry> {
+    let norm = path.replace('\\', "/");
+    locks
+        .iter()
+        .find(|e| e.field == recv && norm.contains(e.file.as_str()))
+}
+
+fn is_let_bound(code: &[u8], i: usize) -> bool {
+    let mut j = i;
+    while j > 0 && !matches!(code[j], b';' | b'{' | b'}') {
+        j -= 1;
+    }
+    let mut k = j;
+    while k < i {
+        if is_ident(code[k]) {
+            let mut end = k;
+            while end < i && is_ident(code[end]) {
+                end += 1;
+            }
+            if &code[k..end] == b"let" {
+                return true;
+            }
+            k = end;
+        } else {
+            k += 1;
+        }
+    }
+    false
+}
+
+/// Run all five rule families over one file.
+pub fn check_file(path: &str, src: &str, cfg: &Config) -> Vec<Violation> {
+    let scan = scan_source(src);
+    let code = &scan.code;
+    let regions = test_regions(code);
+    let mut out: Vec<Violation> = Vec::new();
+
+    let line_at = |offset: usize| scan.line_of[offset.min(scan.line_of.len() - 1)];
+
+    // unsafe-safety --------------------------------------------------
+    for i in find_word(code, "unsafe") {
+        let line = line_at(i);
+        if !comment_in_window(&scan, line, SAFETY_WINDOW, "SAFETY:") {
+            out.push(Violation {
+                path: path.to_string(),
+                line,
+                rule: "unsafe-safety",
+                msg: "`unsafe` without a `// SAFETY:` comment".to_string(),
+            });
+        }
+    }
+
+    // atomic-ordering ------------------------------------------------
+    for i in find_word(code, "Ordering") {
+        let j = i + "Ordering".len();
+        if j + 2 > code.len() || &code[j..j + 2] != b"::" {
+            continue;
+        }
+        let k = j + 2;
+        let mut end = k;
+        while end < code.len() && is_ident(code[end]) {
+            end += 1;
+        }
+        let variant = String::from_utf8_lossy(&code[k..end]).into_owned();
+        if !STRONG_ORDERINGS.contains(&variant.as_str()) {
+            continue;
+        }
+        let line = line_at(i);
+        if variant == "SeqCst" && !path_allowed(path, &cfg.seqcst_allow) {
+            out.push(Violation {
+                path: path.to_string(),
+                line,
+                rule: "atomic-ordering",
+                msg: "`Ordering::SeqCst` outside the lint.toml [seqcst] \
+                      allowlist"
+                    .to_string(),
+            });
+        }
+        if !comment_in_window(&scan, line, ORDERING_WINDOW, "ordering:") {
+            out.push(Violation {
+                path: path.to_string(),
+                line,
+                rule: "atomic-ordering",
+                msg: format!(
+                    "`Ordering::{variant}` without an `// ordering:` rationale"
+                ),
+            });
+        }
+    }
+
+    // unwrap ---------------------------------------------------------
+    if !path_allowed(path, &cfg.unwrap_allow) {
+        for name in ["unwrap", "expect"] {
+            for (i, _paren) in method_call_sites(code, name) {
+                if in_regions(&regions, i) {
+                    continue;
+                }
+                if allow_annotation(&scan, line_at(i), "unwrap") {
+                    continue;
+                }
+                out.push(Violation {
+                    path: path.to_string(),
+                    line: line_at(i),
+                    rule: "unwrap",
+                    msg: format!(
+                        "`.{name}(...)` in library code without \
+                         `// lint: allow(unwrap) <reason>`"
+                    ),
+                });
+            }
+        }
+    }
+
+    // lock-order -----------------------------------------------------
+    let mut sites: BTreeMap<usize, String> = BTreeMap::new();
+    for (i, _paren) in method_call_sites(code, "lock") {
+        if in_regions(&regions, i) {
+            continue;
+        }
+        sites.insert(i, receiver_ident(code, dot_before(code, i)));
+    }
+    // (name, rank, depth, is_let)
+    let mut held: Vec<(String, i64, i64, bool)> = Vec::new();
+    let mut depth = 0i64;
+    for (i, c) in code.iter().enumerate() {
+        match *c {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                held.retain(|h| h.2 <= depth);
+            }
+            b';' => held.retain(|h| h.3 || h.2 != depth),
+            _ => {}
+        }
+        if let Some(recv) = sites.get(&i) {
+            let Some(entry) = lock_entry(&cfg.locks, path, recv) else {
+                out.push(Violation {
+                    path: path.to_string(),
+                    line: line_at(i),
+                    rule: "lock-order",
+                    msg: format!(
+                        "`.lock()` receiver `{recv}` is not in locks.toml"
+                    ),
+                });
+                continue;
+            };
+            for (hname, hrank, _, _) in &held {
+                if entry.rank < *hrank {
+                    out.push(Violation {
+                        path: path.to_string(),
+                        line: line_at(i),
+                        rule: "lock-order",
+                        msg: format!(
+                            "acquires `{}` (rank {}) while holding `{hname}` \
+                             (rank {hrank})",
+                            entry.name, entry.rank
+                        ),
+                    });
+                }
+            }
+            held.push((
+                entry.name.clone(),
+                entry.rank,
+                depth,
+                is_let_bound(code, i),
+            ));
+        }
+    }
+
+    // telemetry-event ------------------------------------------------
+    let mut event_sites: Vec<usize> = Vec::new();
+    for (_i, paren) in method_call_sites(code, "event") {
+        let j = skip_ws(code, paren + 1);
+        if j < code.len() && code[j] == b'"' {
+            event_sites.push(j);
+        }
+    }
+    for i in find_word(code, "count_events") {
+        let mut j = skip_ws(code, i + "count_events".len());
+        if j < code.len() && code[j] == b'(' {
+            j = skip_ws(code, j + 1);
+            if j < code.len() && code[j] == b'"' {
+                event_sites.push(j);
+            }
+        }
+    }
+    for (_i, paren) in method_call_sites(code, "str") {
+        let j = skip_ws(code, paren + 1);
+        if scan.strings.get(&j).map(|s| s.as_str()) != Some("ev") {
+            continue;
+        }
+        let mut k = skip_ws(code, j + 2 + "ev".len());
+        if k < code.len() && code[k] == b',' {
+            k = skip_ws(code, k + 1);
+            if k < code.len() && code[k] == b'"' {
+                event_sites.push(k);
+            }
+        }
+    }
+    for offset in event_sites {
+        if let Some(lit) = scan.strings.get(&offset) {
+            if !cfg.events.contains(lit) {
+                out.push(Violation {
+                    path: path.to_string(),
+                    line: line_at(offset),
+                    rule: "telemetry-event",
+                    msg: format!(
+                        "event kind \"{lit}\" is not in events.toml"
+                    ),
+                });
+            }
+        }
+    }
+
+    out
+}
+
+// --------------------------------------------------------------------
+// driver
+// --------------------------------------------------------------------
+
+/// Expand files/directories into a sorted list of `.rs` files.
+pub fn rust_files(paths: &[String]) -> Vec<PathBuf> {
+    let mut files = Vec::new();
+    for p in paths {
+        let pb = PathBuf::from(p);
+        if pb.is_file() {
+            files.push(pb);
+            continue;
+        }
+        walk(&pb, &mut files);
+    }
+    files.sort();
+    files
+}
+
+fn walk(dir: &Path, files: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else {
+        return;
+    };
+    let mut children: Vec<PathBuf> = entries.flatten().map(|e| e.path()).collect();
+    children.sort();
+    for path in children {
+        if path.is_dir() {
+            walk(&path, files);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            files.push(path);
+        }
+    }
+}
+
+/// Lint every `.rs` file reachable from `paths` with the config in
+/// `config_dir`; returns violations sorted by `(path, line)`.
+pub fn run(config_dir: &Path, paths: &[String]) -> Result<Vec<Violation>, String> {
+    let cfg = Config::load(config_dir)?;
+    let mut violations = Vec::new();
+    for path in rust_files(paths) {
+        let src = fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        let shown = path.display().to_string();
+        violations.extend(check_file(&shown, &src, &cfg));
+    }
+    violations.sort_by_key(|v| (v.path.clone(), v.line));
+    Ok(violations)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toml_subset_round_trip() {
+        let doc = parse_toml(
+            "top = 3\n[sec]\nallow = [\"a.rs\", \"b.rs\"]\n[[lock]]\nname = \"x\"\nrank = 10\n",
+        )
+        .unwrap();
+        assert_eq!(doc.root.get("top"), Some(&TomlValue::Int(3)));
+        let sec = doc.tables.get("sec").unwrap();
+        assert_eq!(
+            sec.get("allow"),
+            Some(&TomlValue::List(vec![
+                TomlValue::Str("a.rs".to_string()),
+                TomlValue::Str("b.rs".to_string()),
+            ]))
+        );
+        let lock = &doc.arrays.get("lock").unwrap()[0];
+        assert_eq!(lock.get("rank"), Some(&TomlValue::Int(10)));
+    }
+
+    #[test]
+    fn scanner_blanks_strings_and_comments() {
+        let scan = scan_source("let x = \"unsafe\"; // unsafe here\n");
+        assert!(find_word(&scan.code, "unsafe").is_empty());
+        assert_eq!(
+            scan.strings.get(&8).map(|s| s.as_str()),
+            Some("unsafe")
+        );
+        assert_eq!(scan.comments.get(&1).map(|v| v.len()), Some(1));
+    }
+
+    #[test]
+    fn scanner_handles_lifetimes_and_char_literals() {
+        let scan = scan_source("fn f<'a>(x: &'a str) -> char { ';' }\n");
+        // The char literal body is blanked; the lifetime is untouched.
+        assert!(!String::from_utf8_lossy(&scan.code).contains("';'"));
+        assert!(String::from_utf8_lossy(&scan.code).contains("'a"));
+    }
+
+    #[test]
+    fn method_sites_require_a_dot() {
+        let code = scan_source("fn lock() {}\nfn f(m: &M) { m.lock(); }\n").code;
+        assert_eq!(method_call_sites(&code, "lock").len(), 1);
+    }
+
+    #[test]
+    fn test_region_detection() {
+        let code =
+            scan_source("fn a() {}\n#[cfg(test)]\nmod t {\n fn b() {}\n}\n")
+                .code;
+        let regions = test_regions(&code);
+        assert_eq!(regions.len(), 1);
+        let b_at = find_word(&code, "b")[0];
+        assert!(in_regions(&regions, b_at));
+        let a_at = find_word(&code, "a")[0];
+        assert!(!in_regions(&regions, a_at));
+    }
+}

@@ -1,0 +1,50 @@
+//! CLI driver: `pallas-lint [--config-dir DIR] PATH...`
+//!
+//! Exit codes: 0 clean, 1 violations found, 2 usage/config error —
+//! identical to the `python/pallas_lint.py` mirror.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut config_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut paths: Vec<String> = Vec::new();
+    let mut argv = std::env::args().skip(1);
+    while let Some(arg) = argv.next() {
+        if arg == "--config-dir" {
+            match argv.next() {
+                Some(dir) => config_dir = PathBuf::from(dir),
+                None => {
+                    eprintln!("pallas-lint: --config-dir needs a value");
+                    return ExitCode::from(2);
+                }
+            }
+        } else if arg == "--help" || arg == "-h" {
+            println!("usage: pallas-lint [--config-dir DIR] PATH...");
+            return ExitCode::SUCCESS;
+        } else {
+            paths.push(arg);
+        }
+    }
+    if paths.is_empty() {
+        eprintln!("usage: pallas-lint [--config-dir DIR] PATH...");
+        return ExitCode::from(2);
+    }
+    match pallas_lint::run(&config_dir, &paths) {
+        Ok(violations) => {
+            for v in &violations {
+                println!("{}:{}: [{}] {}", v.path, v.line, v.rule, v.msg);
+            }
+            if violations.is_empty() {
+                ExitCode::SUCCESS
+            } else {
+                println!("pallas-lint: {} violation(s)", violations.len());
+                ExitCode::from(1)
+            }
+        }
+        Err(err) => {
+            eprintln!("pallas-lint: {err}");
+            ExitCode::from(2)
+        }
+    }
+}

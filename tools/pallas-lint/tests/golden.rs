@@ -1,0 +1,112 @@
+//! Golden tests: every clean fixture lints clean, every failing
+//! fixture trips exactly the rule it was written for, and the crate
+//! plus the main tree stay self-clean under the real configs.
+
+use std::path::{Path, PathBuf};
+
+use pallas_lint::{check_file, run, Config, Violation};
+
+fn crate_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixture_cfg() -> Config {
+    Config::load(&crate_dir().join("fixtures/config"))
+        .expect("fixture config loads")
+}
+
+fn lint_fixture(cfg: &Config, rel: &str) -> Vec<Violation> {
+    let path = crate_dir().join(rel);
+    let src = std::fs::read_to_string(&path).expect("fixture readable");
+    check_file(&path.display().to_string(), &src, cfg)
+}
+
+fn rules(violations: &[Violation]) -> Vec<&'static str> {
+    violations.iter().map(|v| v.rule).collect()
+}
+
+#[test]
+fn clean_fixtures_are_clean() {
+    let cfg = fixture_cfg();
+    for name in [
+        "safety.rs",
+        "ordering.rs",
+        "allowed_seqcst.rs",
+        "unwrap_ok.rs",
+        "locks_ok.rs",
+        "events_ok.rs",
+    ] {
+        let v = lint_fixture(&cfg, &format!("fixtures/clean/{name}"));
+        assert!(v.is_empty(), "{name}: unexpected violations: {v:?}");
+    }
+}
+
+#[test]
+fn missing_safety_trips_unsafe_rule() {
+    let v = lint_fixture(&fixture_cfg(), "fixtures/failing/missing_safety.rs");
+    assert_eq!(rules(&v), ["unsafe-safety"]);
+}
+
+#[test]
+fn seqcst_outside_allowlist_trips_ordering_rule() {
+    let v = lint_fixture(&fixture_cfg(), "fixtures/failing/seqcst_everywhere.rs");
+    assert_eq!(rules(&v), ["atomic-ordering"]);
+    assert!(v[0].msg.contains("allowlist"), "msg: {}", v[0].msg);
+}
+
+#[test]
+fn unjustified_strong_orderings_trip_ordering_rule() {
+    let v =
+        lint_fixture(&fixture_cfg(), "fixtures/failing/unjustified_ordering.rs");
+    assert_eq!(rules(&v), ["atomic-ordering", "atomic-ordering"]);
+    assert!(v.iter().any(|x| x.msg.contains("Release")));
+    assert!(v.iter().any(|x| x.msg.contains("Acquire")));
+}
+
+#[test]
+fn bare_unwrap_and_expect_trip_unwrap_rule() {
+    let v = lint_fixture(&fixture_cfg(), "fixtures/failing/bare_unwrap.rs");
+    assert_eq!(rules(&v), ["unwrap", "unwrap"]);
+}
+
+#[test]
+fn lock_inversion_reports_both_ranks() {
+    let v = lint_fixture(&fixture_cfg(), "fixtures/failing/lock_inversion.rs");
+    assert_eq!(rules(&v), ["lock-order"]);
+    assert_eq!(
+        v[0].msg,
+        "acquires `alpha` (rank 10) while holding `beta` (rank 20)"
+    );
+}
+
+#[test]
+fn unregistered_receiver_trips_lock_rule() {
+    let v = lint_fixture(&fixture_cfg(), "fixtures/failing/unregistered_lock.rs");
+    assert_eq!(rules(&v), ["lock-order"]);
+    assert!(v[0].msg.contains("`gamma`"), "msg: {}", v[0].msg);
+}
+
+#[test]
+fn unknown_event_trips_telemetry_rule() {
+    let v = lint_fixture(&fixture_cfg(), "fixtures/failing/unknown_event.rs");
+    assert_eq!(rules(&v), ["telemetry-event"]);
+    assert!(v[0].msg.contains("\"bogus\""), "msg: {}", v[0].msg);
+}
+
+#[test]
+fn linter_source_is_self_clean() {
+    let src_dir = crate_dir().join("src").display().to_string();
+    let v = run(&crate_dir(), &[src_dir]).expect("self-lint runs");
+    assert!(v.is_empty(), "self-lint violations: {v:?}");
+}
+
+#[test]
+fn main_tree_is_clean_under_real_config() {
+    let tree = crate_dir().join("../../rust/src");
+    if !Path::new(&tree).is_dir() {
+        return;
+    }
+    let v = run(&crate_dir(), &[tree.display().to_string()])
+        .expect("tree lint runs");
+    assert!(v.is_empty(), "rust/src violations: {v:?}");
+}
