@@ -22,6 +22,12 @@ add-range carver must split the pure-surplus run into batch-sized
 a_len=0 shards: gate to dasklike, finish with 0 OOMs, keep peak under
 the cap, and report identically to an uncapped in-memory run.
 
+Scenario 5 (chunk cache): the scenario-1 pair with an aggressive
+straggler threshold so re-execution is common — cache hits must be
+positive, source decodes must drop below the cache-off run, peak
+(including cache-resident bytes) stays under the cap with 0 OOMs, and
+the report matches the cache-off run byte-for-byte.
+
 Run from the repo root after `cargo build --release`:
 
     python3 ci/large_file_smoke.py [path-to-binary]
@@ -85,7 +91,7 @@ def run_diff(binary, pa, pb, cfg_path, backend=None):
     return out.stdout
 
 
-def write_cfg(path, mem_cap, prefetch=None):
+def write_cfg(path, mem_cap, prefetch=None, straggler_factor=None, cache=None):
     with open(path, "w") as f:
         # Root keys (prefetch) must precede the first TOML table.
         if prefetch is not None:
@@ -95,10 +101,13 @@ def write_cfg(path, mem_cap, prefetch=None):
             'mem_cap = "%s"\n'
             "cpu_cap = 2\n"
             "[policy]\n"
-            "b_min = 300\n"
-            "[engine]\n"
-            'delta_path = "native"\n' % mem_cap
+            "b_min = 300\n" % mem_cap
         )
+        if straggler_factor is not None:
+            f.write("straggler_factor = %s\n" % straggler_factor)
+        f.write("[engine]\n" 'delta_path = "native"\n')
+        if cache is not None:
+            f.write("[cache]\nenabled = %s\n" % ("true" if cache else "false"))
 
 
 def assert_capped_stats(stdout, cap_bytes):
@@ -298,6 +307,76 @@ def scenario_prefetch(binary, d):
     )
 
 
+def parse_cache(stdout):
+    """The CLI's chunk-cache counter line."""
+    m = re.search(
+        r"cache: hits=(?P<hits>\d+) misses=(?P<misses>\d+) "
+        r"spills=(?P<spills>\d+) unspills=(?P<unspills>\d+) "
+        r"evicts=(?P<evicts>\d+) source_reads=(?P<reads>\d+)",
+        stdout,
+    )
+    assert m, "cache line not found in output"
+    return {
+        k: int(m.group(k))
+        for k in ("hits", "misses", "spills", "unspills", "evicts", "reads")
+    }
+
+
+def scenario_cache(binary, d):
+    """Scenario 5 (chunk cache): the scenario-1 pair with an aggressive
+    straggler threshold, so re-execution (speculated duplicates and
+    straggler re-splits) re-reads ranges that were already decoded once.
+    With the cache on those re-reads are served from the grant-governed
+    chunk store: the hit count must be positive, the source-decode count
+    must drop below the cache-off run of the same storm, peak accounted
+    RSS — which includes cache-resident bytes — must stay under the cap
+    with 0 OOMs, and the report must be identical to the cache-off run."""
+    pa = os.path.join(d, "a.csv")
+    pb = os.path.join(d, "b.csv")
+    if not os.path.exists(pa):
+        write_csv(pa, 0.0)
+        write_csv(pb, 0.25)
+    on_cfg = os.path.join(d, "cache_on.toml")
+    write_cfg(on_cfg, "10MiB", straggler_factor=1.1, cache=True)
+    off_cfg = os.path.join(d, "cache_off.toml")
+    write_cfg(off_cfg, "10MiB", straggler_factor=1.1, cache=False)
+
+    on = run_diff(binary, pa, pb, on_cfg)
+    peak_mb = assert_capped_stats(on, CAP_BYTES)
+    off = run_diff(binary, pa, pb, off_cfg)
+    assert_capped_stats(off, CAP_BYTES)
+
+    c_on = parse_cache(on)
+    c_off = parse_cache(off)
+    assert c_off["hits"] == 0 and c_off["misses"] == 0, (
+        "cache-off run touched the store: %r" % c_off
+    )
+    assert c_on["hits"] > 0, (
+        "straggler-heavy run produced no cache hits: %r" % c_on
+    )
+    assert c_on["reads"] < c_off["reads"], (
+        "cache did not reduce source decodes: on=%r off=%r" % (c_on, c_off)
+    )
+    assert report_diff(on) == report_diff(off), (
+        "cache-on report differs from cache-off"
+    )
+    print(
+        "cache smoke OK: %d hits / %d misses (%d spills, %d unspills, "
+        "%d evicts), source reads %d < %d cache-off, peak %.1f MB, 0 OOMs, "
+        "reports identical"
+        % (
+            c_on["hits"],
+            c_on["misses"],
+            c_on["spills"],
+            c_on["unspills"],
+            c_on["evicts"],
+            c_on["reads"],
+            c_off["reads"],
+            peak_mb,
+        )
+    )
+
+
 def main():
     binary = sys.argv[1] if len(sys.argv) > 1 else "target/release/smartdiff-sched"
     with tempfile.TemporaryDirectory() as d:
@@ -305,6 +384,7 @@ def main():
         scenario_hot_key(binary, d)
         scenario_prefetch(binary, d)
         scenario_b_surplus(binary, d)
+        scenario_cache(binary, d)
 
 
 if __name__ == "__main__":

@@ -346,6 +346,81 @@ fn main() {
         "prefetch speedup: {:.2}x (reports bit-identical)",
         t_pf_off / t_pf_on
     );
+
+    // -- chunk cache: re-execution-heavy range reads, cold vs hot --
+    // Straggler speculation/splits/retries re-read ranges that were
+    // already decoded once; this family reads the same range set twice
+    // through `CachedSource` and compares the second pass against a
+    // plain re-decode. The tight-cap variant forces evictions so the
+    // second pass exercises the spill/unspill path, and the source
+    // read-op count pins that neither hits nor unspills touch the
+    // source (or its `ReadMeter`).
+    println!("\n== chunk cache: re-executed range reads, cold vs hot ==");
+    use smartdiff_sched::data::chunkstore::{CachedSource, ChunkStore, Side};
+    let step = 10_000usize;
+    let ranges: Vec<(usize, usize)> =
+        (0..pf_rows / step).map(|i| (i * step, step)).collect();
+    let raw = CsvFileSource::open(&pa_path, pfa.schema.clone()).expect("open A");
+    let read_all = |src: &dyn TableSource| {
+        let t0 = Instant::now();
+        for &(o, l) in &ranges {
+            std::hint::black_box(src.read_range(o, l).expect("read").nrows());
+        }
+        t0.elapsed().as_secs_f64()
+    };
+    let base_cold = read_all(&raw);
+    let base_reread = read_all(&raw); // no cache: pass 2 re-decodes
+    let bench_cached = |cap_bytes: u64| {
+        let inner: Arc<dyn TableSource> = Arc::new(
+            CsvFileSource::open(&pa_path, pfa.schema.clone()).expect("open A"),
+        );
+        let store = ChunkStore::new(cap_bytes, None, 1 << 30);
+        let cached =
+            CachedSource::new(Arc::clone(&inner), Arc::clone(&store), Side::A);
+        let cold = read_all(&cached);
+        let hot = read_all(&cached);
+        (cold, hot, store.stats(), inner.meter().ops())
+    };
+    let (c_cold, c_hot, c_stats, c_reads) = bench_cached(1 << 30);
+    let tight_cap = (pfa.heap_bytes() as u64 / 4).max(1);
+    let (t_cold, t_hot, t_stats, t_reads) = bench_cached(tight_cap);
+    assert_eq!(
+        c_reads,
+        ranges.len() as u64,
+        "cache hits must not reach the source"
+    );
+    assert_eq!(
+        t_reads,
+        ranges.len() as u64,
+        "unspills must not reach the source"
+    );
+    println!(
+        "{:>12} {:>10} {:>10} {:>6} {:>8} {:>9} {:>11}",
+        "mode", "pass1 ms", "pass2 ms", "hits", "unspills", "hit rate", "src reads"
+    );
+    let hit_rate = |s: &smartdiff_sched::data::chunkstore::CacheStats| {
+        s.hits as f64 / (s.hits + s.misses).max(1) as f64
+    };
+    println!(
+        "{:>12} {:>10.1} {:>10.1} {:>6} {:>8} {:>9} {:>11}",
+        "no-cache", base_cold * 1e3, base_reread * 1e3, "-", "-", "-",
+        2 * ranges.len()
+    );
+    println!(
+        "{:>12} {:>10.1} {:>10.1} {:>6} {:>8} {:>9.2} {:>11}",
+        "cache", c_cold * 1e3, c_hot * 1e3, c_stats.hits, c_stats.unspills,
+        hit_rate(&c_stats), c_reads
+    );
+    println!(
+        "{:>12} {:>10.1} {:>10.1} {:>6} {:>8} {:>9.2} {:>11}",
+        "cache-tight", t_cold * 1e3, t_hot * 1e3, t_stats.hits,
+        t_stats.unspills, hit_rate(&t_stats), t_reads
+    );
+    println!(
+        "hot-pass speedup vs re-decode: {:.2}x resident, {:.2}x via spill",
+        base_reread / c_hot,
+        base_reread / t_hot
+    );
     std::fs::remove_file(&pa_path).ok();
     std::fs::remove_file(&pb_path).ok();
 
@@ -392,6 +467,22 @@ fn main() {
         .int("stall_ns", pf_stages.stall_ns as i64)
         .int("sched_overhead_ns", r_pf_on.stats.sched_overhead_ns as i64)
         .finish();
+    let cache_json = ObjWriter::new()
+        .int("ranges", ranges.len() as i64)
+        .num("nocache_reread_s", base_reread)
+        .num("cold_s", c_cold)
+        .num("hot_s", c_hot)
+        .num("hot_speedup", base_reread / c_hot)
+        .num("hit_rate", hit_rate(&c_stats))
+        .int("hits", c_stats.hits as i64)
+        .int("misses", c_stats.misses as i64)
+        .int("source_reads", c_reads as i64)
+        .num("tight_hot_s", t_hot)
+        .num("tight_hot_speedup", base_reread / t_hot)
+        .num("tight_hit_rate", hit_rate(&t_stats))
+        .int("tight_spills", t_stats.spills as i64)
+        .int("tight_unspills", t_stats.unspills as i64)
+        .finish();
     let doc = ObjWriter::new()
         .str("bench", "micro_hotpath")
         .int("shard_rows", shard_rows as i64)
@@ -399,6 +490,7 @@ fn main() {
         .raw("stages", &stages_json)
         .raw("skew", &skew_json)
         .raw("prefetch", &prefetch_json)
+        .raw("cache", &cache_json)
         .finish();
     let path = std::env::var("MICRO_HOTPATH_JSON")
         .unwrap_or_else(|_| "micro_hotpath.json".into());

@@ -122,6 +122,17 @@ impl JobBuilder {
         self.cfg.prefetch = on;
         self
     }
+    /// Columnar chunk cache: decoded ranges persist (in memory while the
+    /// grant has headroom, spilled to disk on eviction) so a hot range
+    /// decodes once per job (default on). Cached bytes are charged
+    /// against the job's grant via a carve-out, so peak accounted RSS
+    /// including cache residency never exceeds the grant. Only
+    /// file-backed sources are cached; reports are bit-identical either
+    /// way.
+    pub fn cache(mut self, on: bool) -> Self {
+        self.cfg.cache.enabled = on;
+        self
+    }
 
     // --- comparator tolerances ---
 
@@ -234,6 +245,7 @@ mod tests {
             .atol(1e-6)
             .b_min(100)
             .prefetch(false)
+            .cache(false)
             .telemetry("x.jsonl")
             .seed(9)
             .build()
@@ -243,6 +255,7 @@ mod tests {
         assert_eq!(cfg.engine.atol, 1e-6);
         assert_eq!(cfg.policy.b_min, 100);
         assert!(!cfg.prefetch);
+        assert!(!cfg.cache.enabled);
         assert_eq!(cfg.telemetry_path.as_deref(), Some("x.jsonl"));
         assert_eq!(cfg.seed, 9);
         assert_eq!(job.rows(), 100);

@@ -160,6 +160,15 @@ pub struct JobProgress {
     pub peak_rss_bytes: u64,
     /// Applied (b, k) changes so far.
     pub reconfigs: u64,
+    /// Chunk-cache lookups served from cache so far (0 with the cache
+    /// off or an in-memory source).
+    pub cache_hits: u64,
+    /// Chunk-cache lookups that fell through to the source so far.
+    pub cache_misses: u64,
+    /// Cache-resident chunk bytes right now. Charged against the job's
+    /// grant (a carve-out ledger) and already included in `rss_bytes`;
+    /// broken out so residency is observable.
+    pub cache_resident_bytes: u64,
     /// Executing backend name ("inmem" / "dasklike"); empty before the
     /// job is admitted.
     pub backend: String,

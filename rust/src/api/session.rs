@@ -48,6 +48,7 @@ use crate::api::builder::JobSpec;
 use crate::api::error::SchedError;
 use crate::api::events::{JobEvent, JobProgress, JobState};
 use crate::config::{BackendChoice, Caps, PolicyKind};
+use crate::data::chunkstore::{CachedSource, ChunkStore, Side};
 use crate::engine::delta::JobPlan;
 use crate::engine::schema_align::align_schemas;
 use crate::exec::backend::{Backend, JobContext};
@@ -702,13 +703,51 @@ fn execute_admitted(
         other => other,
     };
 
-    let ctx = JobContext::new(
-        Arc::clone(a),
-        Arc::clone(b),
-        plan,
-        exec,
-        cfg.caps.mem_cap_bytes,
-    );
+    // Chunk cache: wrap file-backed sources so a decoded range persists
+    // (resident, or spilled on eviction) and re-executions of the same
+    // range skip the source read + decode entirely. One store serves
+    // both sides; its capacity starts at 0 and the pool carves the real
+    // cap out of the job's grant before any worker runs
+    // (shrink-before-grow), so cached bytes always stay inside the
+    // grant. Sources that are already in memory opt out via
+    // `supports_chunk_cache`.
+    let mut src_a = Arc::clone(a);
+    let mut src_b = Arc::clone(b);
+    let mut store = None;
+    if cfg.cache.enabled
+        && (src_a.supports_chunk_cache() || src_b.supports_chunk_cache())
+    {
+        let spill_base = if cfg.cache.spill_dir.is_empty() {
+            None
+        } else {
+            Some(std::path::PathBuf::from(&cfg.cache.spill_dir))
+        };
+        let s = ChunkStore::new(0, spill_base, cfg.cache.max_disk_bytes);
+        if src_a.supports_chunk_cache() {
+            src_a = Arc::new(CachedSource::new(src_a, Arc::clone(&s), Side::A));
+        }
+        if src_b.supports_chunk_cache() {
+            src_b = Arc::new(CachedSource::new(src_b, Arc::clone(&s), Side::B));
+        }
+        store = Some(s);
+    }
+    let ctx = match store {
+        Some(s) => JobContext::with_chunk_store(
+            Arc::clone(&src_a),
+            Arc::clone(&src_b),
+            plan,
+            exec,
+            cfg.caps.mem_cap_bytes,
+            s,
+        ),
+        None => JobContext::new(
+            Arc::clone(&src_a),
+            Arc::clone(&src_b),
+            plan,
+            exec,
+            cfg.caps.mem_cap_bytes,
+        ),
+    };
     let k0 = (cfg.caps.cpu_cap / 4).max(cfg.policy.k_min);
     let mut backend: Box<dyn Backend> = match choice {
         BackendChoice::InMem => {
@@ -751,7 +790,13 @@ fn execute_admitted(
         consts: crate::engine::microbench::CostConstants::default(),
         control: Some(Arc::clone(control)),
     };
-    drive(backend.as_mut(), a.as_ref(), b.as_ref(), policy.as_mut(), &mut inputs)
+    drive(
+        backend.as_mut(),
+        src_a.as_ref(),
+        src_b.as_ref(),
+        policy.as_mut(),
+        &mut inputs,
+    )
 }
 
 #[cfg(test)]

@@ -240,6 +240,34 @@ impl Default for ServiceConfig {
     }
 }
 
+/// `[cache]` section: the per-job columnar chunk cache (decode once,
+/// serve hot ranges from a grant-governed buffer pool, spill to disk on
+/// eviction). Only file-backed sources are cached; in-memory tables are
+/// already resident and bypass the store entirely.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheConfig {
+    /// Master switch. Off = every range decodes from the source each
+    /// time it is (re-)executed, exactly as before the cache existed.
+    pub enabled: bool,
+    /// Directory for spilled chunk files; each job creates (and removes
+    /// on completion) a unique subdirectory. Empty = the OS temp dir.
+    pub spill_dir: String,
+    /// Cap on total spilled bytes per job. Evictions past the cap drop
+    /// the chunk instead of spilling (it will re-decode on next touch);
+    /// 0 disables spilling entirely.
+    pub max_disk_bytes: u64,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            enabled: true,
+            spill_dir: String::new(),
+            max_disk_bytes: 4 * bytes::GB,
+        }
+    }
+}
+
 /// Top-level scheduler configuration.
 #[derive(Debug, Clone)]
 pub struct SchedulerConfig {
@@ -262,6 +290,8 @@ pub struct SchedulerConfig {
     /// Network daemon knobs (`[service]`); only the `daemon` subcommand
     /// reads them.
     pub service: ServiceConfig,
+    /// Chunk-cache knobs (`[cache]`).
+    pub cache: CacheConfig,
 }
 
 impl Default for SchedulerConfig {
@@ -278,6 +308,7 @@ impl Default for SchedulerConfig {
             preflight_max_rows: 1_000_000,
             preflight_fraction: 0.01,
             service: ServiceConfig::default(),
+            cache: CacheConfig::default(),
         }
     }
 }
@@ -480,6 +511,27 @@ fn apply_key(
         "service.idle_timeout_secs" => {
             cfg.service.idle_timeout_secs = i(val)? as u64
         }
+        "cache.enabled" => {
+            cfg.cache.enabled = val
+                .as_bool()
+                .ok_or_else(|| SchedError::invalid(key, "expected bool"))?
+        }
+        "cache.spill_dir" => {
+            cfg.cache.spill_dir = val
+                .as_str()
+                .ok_or_else(|| SchedError::invalid(key, "expected string"))?
+                .into()
+        }
+        "cache.max_disk" => {
+            cfg.cache.max_disk_bytes = match val {
+                V::Str(s) => bytes::parse(s)
+                    .map_err(|m| SchedError::invalid(key, m))?,
+                other => other
+                    .as_i64()
+                    .map(|x| x as u64)
+                    .ok_or_else(|| SchedError::invalid(key, "expected size"))?,
+            }
+        }
         "service.drain" => {
             cfg.service.drain = DrainPolicy::parse(
                 val.as_str()
@@ -622,6 +674,28 @@ mod tests {
         assert_eq!(err.field(), Some("service.drain"));
         assert!(DrainPolicy::parse("await").is_ok());
         assert_eq!(DrainPolicy::Cancel.name(), "cancel");
+    }
+
+    #[test]
+    fn cache_section_loads() {
+        let cfg = SchedulerConfig::from_toml_str(
+            r#"
+            [cache]
+            enabled = false
+            spill_dir = "/tmp/sdc"
+            max_disk = "256MB"
+            "#,
+        )
+        .unwrap();
+        assert!(!cfg.cache.enabled);
+        assert_eq!(cfg.cache.spill_dir, "/tmp/sdc");
+        assert_eq!(cfg.cache.max_disk_bytes, 256_000_000);
+
+        let d = SchedulerConfig::default();
+        assert!(d.cache.enabled, "cache defaults on");
+        assert!(d.cache.spill_dir.is_empty());
+        assert_eq!(d.cache.max_disk_bytes, 4 * bytes::GB);
+        assert!(SchedulerConfig::from_toml_str("[cache]\nenabled = 3").is_err());
     }
 
     #[test]

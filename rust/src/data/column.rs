@@ -23,6 +23,16 @@ impl Bitmap {
     pub fn new_unset(len: usize) -> Self {
         Bitmap { words: vec![0u64; len.div_ceil(64)], len }
     }
+    /// Rebuild a bitmap from backing words (the inverse of [`words`](
+    /// Self::words); chunk-file decode). Word count must cover `len`
+    /// bits; stray bits past `len` are cleared so equality with the
+    /// originally-encoded bitmap is exact.
+    pub fn from_words(words: Vec<u64>, len: usize) -> Self {
+        assert!(words.len() == len.div_ceil(64), "bitmap word count/len mismatch");
+        let mut b = Bitmap { words, len };
+        b.trim_tail();
+        b
+    }
     fn trim_tail(&mut self) {
         let tail = self.len % 64;
         if tail != 0 {

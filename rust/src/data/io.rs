@@ -78,10 +78,15 @@ pub struct ReadMeter {
     seq: AtomicU64,
     bytes: AtomicU64,
     nanos: AtomicU64,
+    /// Completed `record` calls — one per source range read. Outside the
+    /// seqlock pair: it is a plain monotone counter (cache hit/miss
+    /// deltas), never divided against `bytes`/`nanos`.
+    ops: AtomicU64,
 }
 
 impl ReadMeter {
     pub fn record(&self, bytes: u64, elapsed_nanos: u64) {
+        self.ops.fetch_add(1, Ordering::Relaxed);
         // Writer lock: CAS the seqlock word from even to odd. Contention
         // is one CAS per batch read, so the spin is nearly always free.
         let mut cur = self.seq.load(Ordering::Relaxed);
@@ -147,6 +152,12 @@ impl ReadMeter {
 
     pub fn bytes(&self) -> u64 {
         self.snapshot().0
+    }
+
+    /// Number of metered source reads so far. With the chunk cache on,
+    /// the delta over a job is its true decode count (hits never meter).
+    pub fn ops(&self) -> u64 {
+        self.ops.load(Ordering::Relaxed)
     }
 
     /// Effective bandwidth in bytes/sec (None until something was read).
@@ -245,6 +256,14 @@ pub trait TableSource: Send + Sync {
     fn resident_bytes(&self) -> u64;
     /// Read metering for B̂_read estimation.
     fn meter(&self) -> &ReadMeter;
+    /// True when re-reading a range is expensive enough that the chunk
+    /// cache should sit in front of this source (file-backed decode).
+    /// In-memory sources answer false — a "cache" of an in-RAM table
+    /// would only duplicate bytes — and so does the cache wrapper
+    /// itself, which prevents double-wrapping.
+    fn supports_chunk_cache(&self) -> bool {
+        false
+    }
 }
 
 /// In-memory source.
@@ -821,6 +840,11 @@ impl TableSource for CsvFileSource {
     }
     fn nrows(&self) -> usize {
         self.row_offsets.len() - 1
+    }
+    fn supports_chunk_cache(&self) -> bool {
+        // Every range read is a seek + CSV parse; re-executions benefit
+        // from serving the decoded chunk instead.
+        true
     }
     fn read_range(&self, offset: usize, len: usize) -> Result<Table, SchedError> {
         let mut scratch = ReadScratch::default();

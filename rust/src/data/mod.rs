@@ -1,6 +1,7 @@
 //! Data substrate: columnar tables, schemas, workload generators and
 //! metered table sources (DESIGN.md systems S1–S4).
 
+pub mod chunkstore;
 pub mod column;
 pub mod generator;
 pub mod io;

@@ -6,6 +6,7 @@
 
 use std::sync::Arc;
 
+use crate::data::chunkstore::{CacheStats, ChunkStore, Side};
 use crate::data::io::TableSource;
 use crate::engine::comparators::NumericDeltaExec;
 use crate::engine::delta::{JobPlan, ShardMemStats};
@@ -205,6 +206,13 @@ pub struct JobContext {
     /// Baseline resident bytes (source tables etc.) counted against the
     /// cap in addition to per-batch buffers.
     pub base_rss_bytes: u64,
+    /// The job's chunk cache, when `a`/`b` are wrapped in
+    /// [`CachedSource`](crate::data::chunkstore::CachedSource) (None
+    /// with the cache off or for in-memory sources). The pool carves its
+    /// residency budget out of the grant and re-caps it on every grant
+    /// change; the scheduler reads its gauges for the envelope term and
+    /// split hints.
+    pub chunk_store: Option<Arc<ChunkStore>>,
 }
 
 impl JobContext {
@@ -223,6 +231,28 @@ impl JobContext {
             exec,
             mem_cap_bytes,
             base_rss_bytes: base,
+            chunk_store: None,
+        })
+    }
+
+    /// `new`, but with a chunk store attached (sources already wrapped).
+    pub fn with_chunk_store(
+        a: Arc<dyn TableSource>,
+        b: Arc<dyn TableSource>,
+        plan: JobPlan,
+        exec: Arc<dyn NumericDeltaExec>,
+        mem_cap_bytes: u64,
+        store: Arc<ChunkStore>,
+    ) -> Arc<Self> {
+        let base = a.resident_bytes() + b.resident_bytes();
+        Arc::new(JobContext {
+            a,
+            b,
+            plan: Arc::new(plan),
+            exec,
+            mem_cap_bytes,
+            base_rss_bytes: base,
+            chunk_store: Some(store),
         })
     }
 }
@@ -281,6 +311,26 @@ pub trait Backend {
     /// per worker when it does).
     fn prefetch_active(&self) -> bool {
         false
+    }
+    /// Chunk-cache counters and gauges (all zero when no cache is
+    /// attached). `resident_bytes` is already part of `current_rss` —
+    /// the scheduler subtracts it from the Eq. 4 memory allowance so
+    /// batch buffers and cached chunks share the grant honestly, and it
+    /// is never added on top.
+    fn cache_stats(&self) -> CacheStats {
+        CacheStats::default()
+    }
+    /// Cache-aware straggler-split hint: the row count of the longest
+    /// cache-resident strict prefix of `side`'s range, if any. The
+    /// scheduler cuts a straggler there so the re-executed left half is
+    /// a pure cache hit instead of a fresh decode.
+    fn cache_split_hint(
+        &self,
+        _side: Side,
+        _offset: usize,
+        _len: usize,
+    ) -> Option<usize> {
+        None
     }
 }
 

@@ -134,4 +134,15 @@ impl Backend for DaskLikeBackend {
     fn prefetch_active(&self) -> bool {
         self.pool.prefetch_active()
     }
+    fn cache_stats(&self) -> crate::data::chunkstore::CacheStats {
+        self.pool.cache_stats()
+    }
+    fn cache_split_hint(
+        &self,
+        side: crate::data::chunkstore::Side,
+        offset: usize,
+        len: usize,
+    ) -> Option<usize> {
+        self.pool.cache_split_hint(side, offset, len)
+    }
 }

@@ -13,6 +13,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+use crate::data::chunkstore::{CacheStats, Side};
 use crate::data::io::ReadScratch;
 use crate::exec::backend::{BatchReport, JobContext, ShardSpec};
 use crate::engine::delta::ShardScratch;
@@ -134,6 +135,9 @@ impl Pool {
         // worker count (k concurrent readers, k handles).
         pool.shared.ctx.a.set_read_parallelism(initial_workers.max(1));
         pool.shared.ctx.b.set_read_parallelism(initial_workers.max(1));
+        // Apply the budget through the single split rule so the chunk
+        // cache's carve-out is in place before any worker runs.
+        pool.apply_mem_budget(initial_workers.max(1));
         pool.ensure_spawned(initial_workers);
         pool
     }
@@ -216,12 +220,26 @@ impl Pool {
     /// n_workers). Single source of truth for the split rule — both
     /// `set_workers` and `set_mem_budget` route through here.
     fn apply_mem_budget(&self, k: usize) {
-        let budget = self
+        let headroom = self
             .shared
             .mem_budget
             .load(Ordering::Relaxed)
             .saturating_sub(self.shared.ctx.base_rss_bytes)
             .max(1);
+        // When a chunk store is attached it gets a fixed quarter of the
+        // grant headroom; batch ledgers split the rest. The store cap is
+        // applied FIRST — set_cap synchronously evicts (spills) down to
+        // the new carve-out, so on a grant shrink cached bytes yield
+        // before any worker could grow into the freed space, and peak
+        // accounted RSS (batch + cache) stays ≤ grant by construction.
+        let budget = match &self.shared.ctx.chunk_store {
+            Some(store) => {
+                let cache_cap = headroom / 4;
+                store.set_cap(cache_cap);
+                (headroom - cache_cap).max(1)
+            }
+            None => headroom,
+        };
         if self.shared.profile.per_worker_memory {
             for t in &self.shared.worker_trackers {
                 t.set_cap(budget / k.max(1) as u64);
@@ -267,6 +285,29 @@ impl Pool {
     pub fn prefetch_active(&self) -> bool {
         self.shared.profile.prefetch
     }
+    /// Chunk-cache counters/gauges (zeroed when no store is attached).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.shared
+            .ctx
+            .chunk_store
+            .as_ref()
+            .map(|s| s.stats())
+            .unwrap_or_default()
+    }
+    /// Longest cache-resident strict prefix of a side's range (the
+    /// scheduler's straggler-split cut preference).
+    pub fn cache_split_hint(
+        &self,
+        side: Side,
+        offset: usize,
+        len: usize,
+    ) -> Option<usize> {
+        self.shared
+            .ctx
+            .chunk_store
+            .as_ref()
+            .and_then(|s| s.split_hint(side, offset, len))
+    }
 
     /// Job-level accounted RSS: base tables + live batch buffers + idle
     /// per-worker scratch reservations (warmed `ShardScratch` that stays
@@ -283,7 +324,17 @@ impl Pool {
             .iter()
             .map(|s| s.load(Ordering::Relaxed))
             .sum();
-        self.shared.ctx.base_rss_bytes + batch + idle
+        // Cache-resident chunk bytes live on their own ledger (the
+        // carve-out), not in the batch trackers — add them so accounted
+        // RSS covers everything the job pins.
+        let cached: u64 = self
+            .shared
+            .ctx
+            .chunk_store
+            .as_ref()
+            .map(|s| s.memory_bytes())
+            .unwrap_or(0);
+        self.shared.ctx.base_rss_bytes + batch + idle + cached
     }
 
     pub fn utilization_sample(&mut self, cpu_cap: usize) -> f64 {

@@ -139,6 +139,16 @@ fn print_result(r: &smartdiff_sched::sched::scheduler::JobResult) {
         st.overlap_ratio(),
         s.sched_overhead_ns as f64 / 1e9
     );
+    println!(
+        "cache: hits={} misses={} spills={} unspills={} evicts={} \
+         source_reads={}",
+        s.cache_hits,
+        s.cache_misses,
+        s.cache_spills,
+        s.cache_unspills,
+        s.cache_evicts,
+        s.source_reads
+    );
     println!("report: {}", r.report.to_json());
 }
 
@@ -474,6 +484,7 @@ fn cmd_submit(args: &Args) -> Result<(), String> {
         backend: args.get("backend").map(str::to_string),
         b_min: args.get_usize("b-min")?,
         prefetch: None,
+        cache: None,
     };
     let detach = args.flag("detach");
     let mut client = ServiceClient::connect(addr)?;

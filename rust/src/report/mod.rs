@@ -135,6 +135,20 @@ impl TelemetryLog {
         self.events.iter().filter(|(k, _, _)| k == kind).count()
     }
 
+    /// Final cumulative total carried by the last event of `kind` with a
+    /// `total=N` detail — the chunk-cache counters (`chunk_hit`,
+    /// `chunk_spill`, …) log cumulative values, so the last record is
+    /// the job-level figure. None if the kind never fired (e.g. the
+    /// cache was off or the log predates it).
+    pub fn last_event_total(&self, kind: &str) -> Option<u64> {
+        self.events
+            .iter()
+            .rev()
+            .find(|(k, _, _)| k == kind)
+            .and_then(|(_, d, _)| d.strip_prefix("total="))
+            .and_then(|v| v.parse().ok())
+    }
+
     /// Summed pipeline-stage nanoseconds over accepted batches:
     /// `(read, decode, align, diff, stall)`. All zero for logs written
     /// before stage-level telemetry existed.
@@ -225,6 +239,21 @@ pub fn analyze(log: &TelemetryLog) -> String {
             .map(|(_, d, _)| d.as_str())
             .unwrap_or("-")
     ));
+    let cache_seen = log.count_events("chunk_hit")
+        + log.count_events("chunk_miss")
+        + log.count_events("chunk_spill")
+        + log.count_events("chunk_unspill")
+        + log.count_events("chunk_evict");
+    if cache_seen > 0 {
+        out.push_str(&format!(
+            "cache: hits={} misses={} spills={} unspills={} evicts={}\n",
+            log.last_event_total("chunk_hit").unwrap_or(0),
+            log.last_event_total("chunk_miss").unwrap_or(0),
+            log.last_event_total("chunk_spill").unwrap_or(0),
+            log.last_event_total("chunk_unspill").unwrap_or(0),
+            log.last_event_total("chunk_evict").unwrap_or(0),
+        ));
+    }
     let (read, decode, align, diff, stall) = log.stage_totals();
     if read + decode + align + diff + stall > 0 {
         out.push_str(&format!(
@@ -368,6 +397,29 @@ mod tests {
         let report = analyze(&log);
         assert!(report.contains("overlap=0.75"), "{report}");
         assert!(report.contains("sched_overhead: 0.0080s"), "{report}");
+    }
+
+    #[test]
+    fn cache_counters_rederive_from_cumulative_events() {
+        let lines = [
+            r#"{"ev":"chunk_miss","detail":"total=4","t":1}"#,
+            r#"{"ev":"chunk_hit","detail":"total=2","t":2}"#,
+            r#"{"ev":"chunk_hit","detail":"total=9","t":3}"#,
+            r#"{"ev":"chunk_spill","detail":"total=1","t":3}"#,
+        ];
+        let log = TelemetryLog::parse_str(&lines.join("\n")).unwrap();
+        // Cumulative: the *last* record carries the job-level figure.
+        assert_eq!(log.last_event_total("chunk_hit"), Some(9));
+        assert_eq!(log.last_event_total("chunk_miss"), Some(4));
+        assert_eq!(log.last_event_total("chunk_evict"), None);
+        let report = analyze(&log);
+        assert!(
+            report.contains("cache: hits=9 misses=4 spills=1"),
+            "{report}"
+        );
+        // A cache-off log renders no cache line at all.
+        let off = TelemetryLog::parse_str(&demo_log()).unwrap();
+        assert!(!analyze(&off).contains("cache:"));
     }
 
     #[test]

@@ -66,6 +66,23 @@ pub struct JobStats {
     /// memory-grant drain pauses are counted separately and surface in
     /// telemetry as `mem_pause` events).
     pub backpressure_pauses: u64,
+    /// Chunk-cache lookups served without touching the source (resident
+    /// hits). 0 with the cache off.
+    pub cache_hits: u64,
+    /// Chunk-cache lookups that fell through to a source read.
+    pub cache_misses: u64,
+    /// Chunks written to spill files (eviction under grant pressure or
+    /// direct spill of an over-carve-out chunk).
+    pub cache_spills: u64,
+    /// Spilled chunks decoded back on a later hit.
+    pub cache_unspills: u64,
+    /// Chunks pushed out of cache residency.
+    pub cache_evicts: u64,
+    /// Metered source range reads over the job (the true decode count —
+    /// `ReadMeter::ops` delta). With the cache on and re-execution
+    /// present, this is strictly below the cache-off count; cache hits
+    /// never meter.
+    pub source_reads: u64,
     /// Batch size in force when the job finished.
     pub final_b: usize,
     /// Worker count in force when the job finished.
@@ -156,18 +173,32 @@ impl Coverage {
 /// `b_len >= 2`), which bisect on the B side instead: every carved row
 /// is pure Added, so any positional B cut is safe, and the right half
 /// resumes at its source occurrence base.
+///
+/// `hint` is the chunk cache's preferred left-half row count (the
+/// length of the longest cache-resident strict prefix of the bisected
+/// side, from `Backend::cache_split_hint`): cutting there makes the
+/// re-executed left half a pure cache hit instead of a fresh decode.
+/// Out-of-range hints fall back to the midpoint bisection, so the cut
+/// rule (occurrence-bounded B boundary re-derivation) is identical
+/// either way and the merged report cannot depend on cache state.
 fn split_spec(
     a: &dyn TableSource,
     b: &dyn TableSource,
     spec: ShardSpec,
+    hint: Option<usize>,
 ) -> (ShardSpec, ShardSpec, bool) {
     let keyed = a.nrows() > 0
         && a.key_at(0).is_some()
         && b.nrows() > 0
         && b.key_at(0).is_some();
+    // A usable hint leaves at least one row on each side of the cut.
+    let pick = |len: usize| match hint {
+        Some(h) if h >= 1 && h < len => h,
+        _ => (len / 2).max(1),
+    };
     if spec.a_len == 0 {
         debug_assert!(spec.b_len >= 2, "detector splits only b_len >= 2 carves");
-        let half = (spec.b_len / 2).max(1);
+        let half = pick(spec.b_len);
         let b_mid = spec.b_offset + half;
         let in_run = keyed && b.key_at(b_mid - 1).is_some()
             && b.key_at(b_mid - 1) == b.key_at(b_mid);
@@ -182,7 +213,7 @@ fn split_spec(
         return (left, right, in_run);
     }
     debug_assert!(spec.a_len >= 2, "detector splits only a_len >= 2 shards");
-    let half = (spec.a_len / 2).max(1);
+    let half = pick(spec.a_len);
     let cut = spec.a_offset + half;
     let a_end = spec.a_offset + spec.a_len;
     let b_end = spec.b_offset + spec.b_len;
@@ -365,6 +396,12 @@ pub fn drive(
         splits_in_run: 0,
         carved_shards: 0,
         backpressure_pauses: 0,
+        cache_hits: 0,
+        cache_misses: 0,
+        cache_spills: 0,
+        cache_unspills: 0,
+        cache_evicts: 0,
+        source_reads: 0,
         final_b: b_cur,
         final_k: k_cur,
         gate: inputs.gate,
@@ -373,6 +410,11 @@ pub fn drive(
         sched_overhead_ns: 0,
         useful_work_ns: 0,
     };
+    // Baseline for the job's true decode count: `ReadMeter::ops` is
+    // process-cumulative per source, so the job's source reads are the
+    // delta from here (cache hits never meter, so with the cache on and
+    // re-execution present this lands strictly below the cache-off run).
+    let read_ops0 = a.meter().ops() + b.meter().ops();
     let mut completed: u64 = 0;
     let mut t_first_submit: Option<f64> = None;
     let mut t_last_finish: f64 = 0.0;
@@ -419,6 +461,14 @@ pub fn drive(
     loop {
         let iter_t0 = std::time::Instant::now();
         let mut wait_ns: u64 = 0;
+        // Chunk-cache gauge snapshot for this round: resident chunk
+        // bytes share the grant with batch buffers, so every safe-b
+        // computation below prunes against the allowance net of them
+        // (all-zero — and bit-identical to the historical envelope —
+        // when no cache is attached).
+        let cache_now = backend.cache_stats();
+        let mem_for_batches =
+            mem_allow.saturating_sub(cache_now.resident_bytes);
         // --- session bridge: cancellation + CPU-share re-partitioning ---
         if let Some(c) = &inputs.control {
             if !cancelled && c.cancel_requested() {
@@ -480,7 +530,7 @@ pub fn drive(
                     // the shrunken grant (overshoot would otherwise be
                     // guaranteed before the policy's next step).
                     let safe_b = mem_model
-                        .safe_b_max(k_cur, pol.eta, mem_allow)
+                        .safe_b_max(k_cur, pol.eta, mem_for_batches)
                         .max(pol.b_min);
                     if b_cur > safe_b {
                         let b_from = b_cur;
@@ -688,9 +738,36 @@ pub fn drive(
                     p.staged_bytes = staged_now;
                     p.peak_rss_bytes = stats.peak_rss_bytes;
                     p.reconfigs = stats.reconfigs;
+                    p.cache_hits = cache_now.hits;
+                    p.cache_misses = cache_now.misses;
+                    p.cache_resident_bytes = cache_now.resident_bytes;
                 });
             }
         }
+
+        // --- chunk-cache telemetry: one event per kind per round the
+        // counter moved, with the cumulative total as detail (per-lookup
+        // events would dominate the log on chunked backends). All
+        // counters stay zero with the cache off, so cache-off telemetry
+        // is byte-identical to the historical stream. ---
+        for (kind, total, seen) in [
+            ("chunk_hit", cache_now.hits, stats.cache_hits),
+            ("chunk_miss", cache_now.misses, stats.cache_misses),
+            ("chunk_spill", cache_now.spills, stats.cache_spills),
+            ("chunk_unspill", cache_now.unspills, stats.cache_unspills),
+            ("chunk_evict", cache_now.evicts, stats.cache_evicts),
+        ] {
+            if total > seen {
+                inputs
+                    .telemetry
+                    .event(kind, &format!("total={total}"), now);
+            }
+        }
+        stats.cache_hits = cache_now.hits;
+        stats.cache_misses = cache_now.misses;
+        stats.cache_spills = cache_now.spills;
+        stats.cache_unspills = cache_now.unspills;
+        stats.cache_evicts = cache_now.evicts;
 
         // --- control signals (EWMA-smoothed rolling p95s, §II) ---
         let util = backend.utilization_sample(caps.cpu_cap);
@@ -718,7 +795,7 @@ pub fn drive(
         // --- policy step, pruned by the envelope (Eq. 4, continuous) ---
         if !aborted && completed > 0 && !reports.is_empty() {
             env.b_max_safe = mem_model
-                .safe_b_max(k_cur, pol.eta, mem_allow)
+                .safe_b_max(k_cur, pol.eta, mem_for_batches)
                 .max(pol.b_min);
             let step = policy.step(&signals, &env);
             actions_total += 1;
@@ -732,7 +809,7 @@ pub fn drive(
                 // has re-partitioned the grant mid-job, the grant binds
                 // every policy (legacy solo runs never take this path).
                 let safe_b = mem_model
-                    .safe_b_max(nk, pol.eta, mem_allow)
+                    .safe_b_max(nk, pol.eta, mem_for_batches)
                     .max(pol.b_min);
                 if nb > safe_b {
                     nb = safe_b;
@@ -797,8 +874,25 @@ pub fn drive(
                         // Occurrence-indexed boundaries make every
                         // straggler shard with >= 2 A rows splittable —
                         // including a shard spanned by one key run, the
-                        // case run snapping had to skip.
-                        let (mut l, mut rgt, in_run) = split_spec(a, b, spec);
+                        // case run snapping had to skip. When the chunk
+                        // cache already holds a strict prefix of the
+                        // bisected side, cut there: the left half
+                        // re-executes as a pure cache hit.
+                        let hint = if spec.a_len > 0 {
+                            backend.cache_split_hint(
+                                crate::data::chunkstore::Side::A,
+                                spec.a_offset,
+                                spec.a_len,
+                            )
+                        } else {
+                            backend.cache_split_hint(
+                                crate::data::chunkstore::Side::B,
+                                spec.b_offset,
+                                spec.b_len,
+                            )
+                        };
+                        let (mut l, mut rgt, in_run) =
+                            split_spec(a, b, spec, hint);
                         stats.splits += 1;
                         if in_run {
                             stats.splits_in_run += 1;
@@ -876,6 +970,16 @@ pub fn drive(
     };
     stats.peak_rss_bytes = stats.peak_rss_bytes.max(base_rss as u64);
     stats.sched_overhead_ns = sched_ns_total;
+    // Final cache counters (the loop's last snapshot may predate the
+    // last completions) and the job's true decode count.
+    let cache_final = backend.cache_stats();
+    stats.cache_hits = cache_final.hits;
+    stats.cache_misses = cache_final.misses;
+    stats.cache_spills = cache_final.spills;
+    stats.cache_unspills = cache_final.unspills;
+    stats.cache_evicts = cache_final.evicts;
+    stats.source_reads =
+        (a.meter().ops() + b.meter().ops()).saturating_sub(read_ops0);
 
     inputs.telemetry.summary(&report.to_json());
     inputs.telemetry.flush();
@@ -1055,7 +1159,7 @@ mod tests {
             a_occ_base: 0,
             b_occ_base: 0,
         };
-        let (l, r, in_run) = split_spec(&a, &b, spec);
+        let (l, r, in_run) = split_spec(&a, &b, spec, None);
         assert!(in_run, "cut at a row 3 is inside the run of 7s");
         assert_eq!(l.a_len + r.a_len, 6);
         assert_eq!(l.b_len + r.b_len, 6);
@@ -1077,7 +1181,7 @@ mod tests {
             a_occ_base: 0,
             b_occ_base: 0,
         };
-        let (l, r, in_run) = split_spec(&one_run_a, &one_run_b, spec);
+        let (l, r, in_run) = split_spec(&one_run_a, &one_run_b, spec, None);
         assert!(in_run);
         assert_eq!((l.a_len, l.b_len), (2, 2));
         assert_eq!((r.a_offset, r.a_len), (2, 2));
@@ -1100,7 +1204,7 @@ mod tests {
             a_occ_base: 0,
             b_occ_base: 0,
         };
-        let (l, r, _) = split_spec(&sa, &sb, spec);
+        let (l, r, _) = split_spec(&sa, &sb, spec, None);
         assert_eq!(l.a_len + r.a_len, 400);
         assert_eq!(l.b_len + r.b_len, 410);
         assert_eq!(r.a_offset, l.a_offset + l.a_len);

@@ -238,6 +238,8 @@ pub struct WireJobSpec {
     pub b_min: Option<usize>,
     /// Prefetch override.
     pub prefetch: Option<bool>,
+    /// Chunk-cache override (decode-once columnar cache with spill).
+    pub cache: Option<bool>,
 }
 
 /// A decoded request verb with its arguments.
@@ -309,6 +311,9 @@ pub fn encode_request(frame: &RequestFrame) -> String {
             if let Some(p) = spec.prefetch {
                 w = w.bool("prefetch", p);
             }
+            if let Some(c) = spec.cache {
+                w = w.bool("cache", c);
+            }
             w.finish()
         }
         Request::Cancel { job } => {
@@ -340,6 +345,7 @@ pub fn decode_request(line: &str) -> Result<RequestFrame, ProtocolError> {
                 backend: opt_string(&v, "backend")?,
                 b_min: opt_usize(&v, "b_min")?,
                 prefetch: opt_bool(&v, "prefetch")?,
+                cache: opt_bool(&v, "cache")?,
             };
             let subscribe = opt_bool(&v, "subscribe")?.unwrap_or(false);
             Request::Submit { spec, subscribe }

@@ -561,6 +561,9 @@ fn build_job_spec(
     if let Some(p) = w.prefetch {
         cfg.prefetch = p;
     }
+    if let Some(c) = w.cache {
+        cfg.cache.enabled = c;
+    }
     cfg.seed = w.seed;
     let (a, b): (Arc<dyn TableSource>, Arc<dyn TableSource>) =
         match (w.rows, &w.csv_a, &w.csv_b) {
@@ -683,6 +686,12 @@ fn stats_json(s: &JobStats) -> String {
         .int("carved_shards", s.carved_shards as i64)
         .int("batches", s.batches as i64)
         .int("sched_overhead_ns", s.sched_overhead_ns as i64)
+        .int("cache_hits", s.cache_hits as i64)
+        .int("cache_misses", s.cache_misses as i64)
+        .int("cache_spills", s.cache_spills as i64)
+        .int("cache_unspills", s.cache_unspills as i64)
+        .int("cache_evicts", s.cache_evicts as i64)
+        .int("source_reads", s.source_reads as i64)
         .finish()
 }
 
@@ -723,6 +732,9 @@ fn status_json(shared: &Shared) -> String {
                 .int("staged_bytes", p.staged_bytes as i64)
                 .int("peak_rss_bytes", p.peak_rss_bytes as i64)
                 .int("reconfigs", p.reconfigs as i64)
+                .int("cache_hits", p.cache_hits as i64)
+                .int("cache_misses", p.cache_misses as i64)
+                .int("cache_resident_bytes", p.cache_resident_bytes as i64)
                 .str("backend", &p.backend)
                 .finish();
             jobs_json.push_str(

@@ -598,6 +598,207 @@ fn grant_shrink_mid_flight_drains_staged_slot_and_stays_under_cap() {
 }
 
 #[test]
+fn cache_on_off_matrix_reports_bit_identical() {
+    // The chunk cache is an execution-cost change only: serving a range
+    // from a resident (or unspilled) chunk instead of re-decoding the
+    // source must not alter a single report byte. Matrix: cache on/off
+    // × both backends × prefetch on/off, on the file-backed source that
+    // actually engages the store.
+    let spec = GenSpec {
+        rows: 8_000,
+        extra_cols: 3,
+        change_rate: 0.06,
+        add_rate: 0.02,
+        remove_rate: 0.02,
+        seed: 57,
+        ..GenSpec::default()
+    };
+    let (a, b, _) = generate_pair(&spec);
+    let dir = std::env::temp_dir();
+    let pa = dir.join(format!("sdiff_det_cache_a_{}.csv", std::process::id()));
+    let pb = dir.join(format!("sdiff_det_cache_b_{}.csv", std::process::id()));
+    write_csv(&a, &pa).unwrap();
+    write_csv(&b, &pb).unwrap();
+    let run = |backend: BackendChoice, prefetch: bool, cache: bool| {
+        let mut c = cfg(backend, PolicyKind::Fixed { b: 600, k: 2 }, 100);
+        c.caps.cpu_cap = 4;
+        c.prefetch = prefetch;
+        c.cache.enabled = cache;
+        let sa = CsvFileSource::open(&pa, a.schema.clone()).unwrap();
+        let sb = CsvFileSource::open(&pb, b.schema.clone()).unwrap();
+        run_job(&c, Arc::new(sa), Arc::new(sb)).expect("csv job")
+    };
+    let reference = run(BackendChoice::InMem, false, false);
+    for backend in [BackendChoice::InMem, BackendChoice::DaskLike] {
+        for prefetch in [false, true] {
+            let off = run(backend, prefetch, false);
+            let on = run(backend, prefetch, true);
+            assert_eq!(
+                on.report.to_json(),
+                off.report.to_json(),
+                "cache changed the report at backend={backend:?} \
+                 prefetch={prefetch}"
+            );
+            assert!(
+                reference.report.same_diff(&on.report),
+                "diff differs from reference at backend={backend:?} \
+                 prefetch={prefetch}"
+            );
+            assert_eq!(on.stats.ooms, 0);
+            assert_eq!(
+                off.stats.cache_hits + off.stats.cache_misses,
+                0,
+                "cache-off run must not touch the store"
+            );
+            assert!(
+                on.stats.cache_misses > 0,
+                "cache-on run must consult the store \
+                 (backend={backend:?} prefetch={prefetch})"
+            );
+        }
+    }
+    std::fs::remove_file(&pa).ok();
+    std::fs::remove_file(&pb).ok();
+}
+
+/// File-backed source with an artificial per-read delay: keeps a job in
+/// flight long enough for mid-job budget shrinks to land, while still
+/// advertising chunk-cache support so the store stays engaged.
+struct SlowCsv {
+    inner: CsvFileSource,
+    delay: std::time::Duration,
+}
+
+impl TableSource for SlowCsv {
+    fn schema(&self) -> &Schema {
+        self.inner.schema()
+    }
+    fn nrows(&self) -> usize {
+        self.inner.nrows()
+    }
+    fn read_range(
+        &self,
+        offset: usize,
+        len: usize,
+    ) -> Result<Table, SchedError> {
+        std::thread::sleep(self.delay);
+        self.inner.read_range(offset, len)
+    }
+    fn key_at(&self, row: usize) -> Option<i64> {
+        self.inner.key_at(row)
+    }
+    fn occ_at(&self, row: usize) -> u32 {
+        self.inner.occ_at(row)
+    }
+    fn storage_bytes(&self) -> u64 {
+        self.inner.storage_bytes()
+    }
+    fn resident_bytes(&self) -> u64 {
+        self.inner.resident_bytes()
+    }
+    fn meter(&self) -> &ReadMeter {
+        self.inner.meter()
+    }
+    fn supports_chunk_cache(&self) -> bool {
+        self.inner.supports_chunk_cache()
+    }
+}
+
+#[test]
+fn eviction_fuzz_random_grant_shrinks_stay_safe() {
+    // Eviction fuzz: random session-budget shrinks land mid-job while
+    // the chunk store holds resident chunks. Every shrink re-carves the
+    // store's capacity (shrink-before-grow: the store evicts/spills
+    // synchronously before worker budgets re-expand), so the job must
+    // finish every time with 0 accounted OOMs, peak accounted RSS —
+    // which includes cache-resident bytes — never past the original
+    // grant, and the exact cache-off report (spilled chunks reload
+    // byte-exactly or the diff would drift).
+    let spec = GenSpec {
+        rows: 10_000,
+        extra_cols: 3,
+        change_rate: 0.05,
+        seed: 61,
+        ..GenSpec::default()
+    };
+    let (a, b, _) = generate_pair(&spec);
+    let dir = std::env::temp_dir();
+    let pa = dir.join(format!("sdiff_fuzz_a_{}.csv", std::process::id()));
+    let pb = dir.join(format!("sdiff_fuzz_b_{}.csv", std::process::id()));
+    write_csv(&a, &pa).unwrap();
+    write_csv(&b, &pb).unwrap();
+    let reference = run_job(
+        &cfg(BackendChoice::InMem, PolicyKind::Adaptive, 100),
+        Arc::new(InMemorySource::new(a.clone())),
+        Arc::new(InMemorySource::new(b.clone())),
+    )
+    .expect("reference job")
+    .report;
+
+    let open_slow = |path: &std::path::Path, schema: &Schema| SlowCsv {
+        inner: CsvFileSource::open(path, schema.clone()).unwrap(),
+        delay: std::time::Duration::from_millis(1),
+    };
+    let base = {
+        let sa = open_slow(&pa, &a.schema);
+        let sb = open_slow(&pb, &b.schema);
+        sa.resident_bytes() + sb.resident_bytes()
+    };
+    let heap = a.heap_bytes() as u64 + b.heap_bytes() as u64;
+    let initial = base + 2 * heap;
+
+    forall("random grant shrinks with a live chunk store", 3, |rng| {
+        let session =
+            DiffSession::new(Caps { mem_cap_bytes: initial, cpu_cap: 2 });
+        let job = JobBuilder::new(
+            Arc::new(open_slow(&pa, &a.schema)),
+            Arc::new(open_slow(&pb, &b.schema)),
+        )
+        .delta_path(DeltaPath::Native)
+        .backend(BackendChoice::InMem)
+        .b_min(100)
+        .prefetch(true)
+        .cache(true)
+        .build()
+        .unwrap();
+        let mut h = session.submit(job).unwrap();
+        // Random shrink schedule: progressively tighter budgets, down to
+        // a cache carve far below the decoded working set (forcing
+        // evictions and spills while batches are still in flight).
+        for step in 0..4u64 {
+            std::thread::sleep(std::time::Duration::from_millis(
+                5 + rng.range_usize(0, 10) as u64,
+            ));
+            let div = 3 + step * 2 + rng.range_usize(0, 3) as u64;
+            session.set_mem_budget(base + heap / div);
+        }
+        let r = h.join().expect("job survives random grant shrinks");
+        prop_assert!(r.stats.ooms == 0, "shrinks must evict/spill, not OOM");
+        prop_assert!(
+            r.stats.peak_rss_bytes <= initial,
+            "peak accounted RSS {} (incl. cache-resident bytes) exceeds \
+             the grant {initial}",
+            r.stats.peak_rss_bytes
+        );
+        prop_assert!(
+            r.stats.cache_misses > 0,
+            "the store must have been engaged"
+        );
+        prop_assert!(
+            reference.same_diff(&r.report),
+            "report differs after random grant shrinks \
+             (hits={} unspills={} evicts={})",
+            r.stats.cache_hits,
+            r.stats.cache_unspills,
+            r.stats.cache_evicts
+        );
+        Ok(())
+    });
+    std::fs::remove_file(&pa).ok();
+    std::fs::remove_file(&pb).ok();
+}
+
+#[test]
 fn repeated_runs_identical() {
     forall("same seed same report", 4, |rng| {
         let spec = random_spec(rng);
